@@ -1,0 +1,38 @@
+"""Shared benchmark helpers: timing, allocation tracking, CSV emission.
+
+Output contract (one row per measurement):  ``name,us_per_call,derived``
+where ``derived`` carries the benchmark-specific figure of merit
+(improvement %, MB allocated, makespan error, …).
+"""
+from __future__ import annotations
+
+import time
+import tracemalloc
+from typing import Any, Callable, Tuple
+
+
+def time_call(fn: Callable[[], Any], repeats: int = 1) -> Tuple[float, Any]:
+    """Best-of-N wall time in seconds (and the last return value)."""
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def alloc_call(fn: Callable[[], Any]) -> Tuple[float, float, Any]:
+    """(total_allocated_MB, peak_MB, result) — the paper's heap-usage axis,
+    re-based from JVM GC logs to tracemalloc for Python."""
+    tracemalloc.start()
+    tracemalloc.reset_peak()
+    before, _ = tracemalloc.get_traced_memory()
+    out = fn()
+    after, peak = tracemalloc.get_traced_memory()
+    tracemalloc.stop()
+    return (after - before) / 1e6, peak / 1e6, out
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")

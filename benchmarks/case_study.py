@@ -1,0 +1,74 @@
+"""Figures 6 & 7 reproduction: workflow makespan vs Eq.(2), and the eCDF.
+
+Figure 6 — single DAG activation across virtualization configs (none/V/C/N)
+× placement (I/II/III) × payload (1 B / 1 GB); simulated makespan must match
+the theoretical Eq.(2) value (abs err reported, asserted < 1 µs).
+
+Figure 7 — 20 activations with Exp(mean 2.564 s) inter-arrivals; we report
+eCDF quantiles per configuration and check the paper's qualitative claims:
+placement I suffers co-location contention; II ≡ III at negligible payload;
+virtualization overhead right-shifts every curve.
+"""
+from __future__ import annotations
+
+from repro.core.case_study import (PAYLOAD_BIG, PAYLOAD_SMALL, run_case_study)
+
+from ._util import emit, time_call
+
+
+def run_fig6() -> None:
+    worst = 0.0
+    for overhead_on, label in ((False, "none"), (True, None)):
+        for virt in ("V", "C", "N"):
+            tag = label or virt
+            for pl in ("I", "II", "III"):
+                for payload, pname in ((PAYLOAD_SMALL, "1B"), (PAYLOAD_BIG, "1GB")):
+                    secs, r = time_call(lambda: run_case_study(
+                        virt=virt, placement=pl, payload=payload,
+                        activations=1, overhead_on=overhead_on))
+                    err = abs(r.makespans[0] - r.theoretical)
+                    worst = max(worst, err)
+                    emit(f"case_study/fig6/{tag}/{pl}/{pname}", secs * 1e6,
+                         f"makespan_s={r.makespans[0]:.4f};eq2_s={r.theoretical:.4f};"
+                         f"abs_err={err:.2e}")
+            if label:                       # "none" edge case: V suffices
+                break
+    assert worst < 1e-6, f"Eq.(2) mismatch: {worst}"
+    emit("case_study/fig6/validation", 0.0, f"max_abs_err={worst:.2e};PASS")
+
+
+def run_fig7(activations: int = 20, seed: int = 42) -> None:
+    claims = {}
+    for overhead_on, virt in ((False, "V"), (True, "V"), (True, "C"), (True, "N")):
+        tag = "none" if not overhead_on else virt
+        for pl in ("I", "II", "III"):
+            for payload, pname in ((PAYLOAD_SMALL, "1B"), (PAYLOAD_BIG, "1GB")):
+                secs, r = time_call(lambda: run_case_study(
+                    virt=virt, placement=pl, payload=payload, seed=seed,
+                    activations=activations, overhead_on=overhead_on))
+                ms = sorted(r.makespans)
+                med = ms[len(ms) // 2]
+                claims[(tag, pl, pname)] = med
+                emit(f"case_study/fig7/{tag}/{pl}/{pname}", secs * 1e6,
+                     f"min={ms[0]:.2f};p50={med:.2f};p90={ms[int(0.9*len(ms))]:.2f};"
+                     f"max={ms[-1]:.2f}")
+    # paper's qualitative checks
+    ok_contention = claims[("none", "I", "1B")] > claims[("none", "II", "1B")]
+    # II and III coincide up to the (negligible) 1-byte transfer time — the
+    # paper shifts one curve "for presentation purposes only"; µs tolerance.
+    ok_ii_iii = abs(claims[("none", "II", "1B")] - claims[("none", "III", "1B")]) < 1e-6
+    ok_overhead = claims[("N", "II", "1B")] > claims[("V", "II", "1B")] > claims[("none", "II", "1B")]
+    ok_bigpayload = claims[("none", "III", "1GB")] > claims[("none", "II", "1GB")]
+    emit("case_study/fig7/claims", 0.0,
+         f"placementI_contention={ok_contention};II_eq_III_smallpayload={ok_ii_iii};"
+         f"overhead_shift={ok_overhead};III_gt_II_bigpayload={ok_bigpayload}")
+    assert ok_contention and ok_ii_iii and ok_overhead and ok_bigpayload
+
+
+def run(quick: bool = False) -> None:
+    run_fig6()
+    run_fig7(activations=10 if quick else 20)
+
+
+if __name__ == "__main__":
+    run()

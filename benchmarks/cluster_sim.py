@@ -1,0 +1,46 @@
+"""E7 — the paper's case-study methodology transplanted to ML fleets.
+
+Sweeps MTBF × checkpoint-interval × straggler policy for a 1024-node
+synchronous training fleet whose per-step cost comes from roofline terms
+(§Roofline), reporting goodput. This is the "estimate the deadline before
+deploying" exercise of paper §6, for training runs instead of DAGs.
+"""
+from __future__ import annotations
+
+from repro.core.cluster import FleetConfig, StepCost, simulate_training_run
+
+from ._util import emit, time_call
+
+# Representative step costs (seconds) — llama3-405b-class on 256 chips,
+# filled from the dry-run roofline table when available.
+DEFAULT_COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                        overlap_collective=0.6)
+
+
+def run(quick: bool = False) -> None:
+    steps = 500 if quick else 5000
+    nodes = 256 if quick else 1024
+    for mtbf_h in (2_000.0, 500.0, 100.0):
+        for ckpt_every in (50, 200, 1000):
+            cfg = FleetConfig(n_nodes=nodes, n_spares=nodes // 32,
+                              mtbf_hours_node=mtbf_h,
+                              ckpt_every_steps=ckpt_every, seed=11)
+            secs, st = time_call(lambda: simulate_training_run(
+                DEFAULT_COST, cfg, total_steps=steps))
+            emit(f"cluster_sim/mtbf{mtbf_h:.0f}h/ckpt{ckpt_every}", secs * 1e6,
+                 f"goodput={st.goodput:.3f};failures={st.failures};"
+                 f"lost_steps={st.lost_steps:.0f};evictions={st.evictions};"
+                 f"wall_h={st.wallclock_s/3600:.2f}")
+    # straggler policy on/off comparison (chronic degradations present)
+    for evict, label in ((1.6, "evict"), (1e9, "noevict")):
+        cfg = FleetConfig(n_nodes=nodes, n_spares=nodes // 32,
+                          straggler_evict_factor=evict, straggler_sigma=0.15,
+                          degrade_mtbf_hours=100.0, seed=11)
+        secs, st = time_call(lambda: simulate_training_run(
+            DEFAULT_COST, cfg, total_steps=steps))
+        emit(f"cluster_sim/straggler/{label}", secs * 1e6,
+             f"goodput={st.goodput:.3f};evictions={st.evictions}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""E5 — dry-run + roofline table from the results/dryrun artifacts.
+
+Reads every ``results/dryrun/*.json`` produced by ``repro.launch.dryrun``
+and emits the roofline rows (one per arch × shape × mesh), the dominant
+bottleneck, MODEL_FLOPS ratios, and the memory analyses. Also regenerates
+EXPERIMENTS.md's §Dry-run / §Roofline tables via --write-md.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+from ._util import emit
+
+RESULTS = pathlib.Path("results/dryrun")
+
+
+def load_records(tag=""):
+    recs = []
+    for p in sorted(RESULTS.glob("*.json")):
+        r = json.loads(p.read_text())
+        if (r.get("tag") or "") == tag:
+            recs.append(r)
+    return recs
+
+
+def run(quick: bool = False) -> None:
+    recs = load_records()
+    if not recs:
+        emit("dryrun_report/missing", 0.0,
+             "run `python -m repro.launch.dryrun --arch all --shape all "
+             "--mesh both` first")
+        return
+    n_multi = sum(1 for r in recs if r["mesh"] == "multi")
+    emit("dryrun_report/coverage", 0.0,
+         f"cells={len(recs)};multi_pod_cells={n_multi}")
+    for r in recs:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        mem = r.get("memory") or {}
+        emit(f"dryrun/{r['arch']}/{r['shape']}/{r['mesh']}",
+             rl["step_time_lower_bound_s"] * 1e6,
+             f"dom={rl['dominant']};compute_s={rl['compute_s']:.4f};"
+             f"memory_s={rl['memory_s']:.4f};collective_s={rl['collective_s']:.4f};"
+             f"mfu_ub={rl.get('mfu_upper_bound', 0):.4f};"
+             f"model_flops_ratio={rl.get('model_flops_ratio', 0):.3f};"
+             f"analytic_hbm_gb={r['analytic_hbm']['total_gb']:.1f};"
+             f"compile_s={r.get('full_compile_s', 0):.0f}")
+
+
+def markdown_table(recs):
+    rows = ["| arch | shape | mesh | compute s | memory s | collective s | "
+            "dominant | MF/HLO | MFU≤ | HBM GB (analytic) |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        rl = r.get("roofline")
+        if not rl:
+            continue
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+            f"| {rl['collective_s']:.3f} | {rl['dominant'].replace('_s','')} "
+            f"| {rl.get('model_flops_ratio', 0):.2f} "
+            f"| {rl.get('mfu_upper_bound', 0):.3f} "
+            f"| {r['analytic_hbm']['total_gb']:.1f} |")
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    run()

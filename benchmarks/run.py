@@ -1,0 +1,56 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark harness.
+
+  python -m benchmarks.run [--quick] [--only consolidation,case_study,...]
+
+Benchmarks (paper artifact → module):
+  Table 2   → consolidation      (6G vs 7G vs vec run-time + allocation)
+  Figure 6  → case_study         (single-activation makespan vs Eq.(2))
+  Figure 7  → case_study         (20-activation eCDF + qualitative claims)
+  §4.4      → engine_micro       (event-queue data structures)
+  beyond    → vec_speedup        (vectorized Algorithm 1 vs OO)
+  §6→ML     → cluster_sim        (fleet goodput vs MTBF/ckpt/stragglers)
+  roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="reduced sizes")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated subset of benchmark names")
+    args = ap.parse_args()
+
+    from . import case_study, cluster_sim, consolidation, engine_micro, vec_speedup
+    suites = {
+        "engine_micro": engine_micro.run,
+        "case_study": case_study.run,
+        "consolidation": consolidation.run,
+        "vec_speedup": vec_speedup.run,
+        "cluster_sim": cluster_sim.run,
+    }
+    try:
+        from . import dryrun_report
+        suites["dryrun_report"] = dryrun_report.run
+    except ImportError:
+        pass
+
+    chosen = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
+    print("name,us_per_call,derived")
+    t0 = time.perf_counter()
+    for name in chosen:
+        if name not in suites:
+            print(f"# unknown benchmark: {name}", file=sys.stderr)
+            continue
+        print(f"# --- {name} ---")
+        suites[name](quick=args.quick)
+    print(f"# total benchmark time: {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == '__main__':
+    main()

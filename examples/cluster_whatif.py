@@ -1,0 +1,57 @@
+"""Fleet what-if analysis: the paper's case-study methodology for ML runs.
+
+  PYTHONPATH=src python examples/cluster_whatif.py \
+      [--from-dryrun results/dryrun/llama3_405b__train_4k__single.json]
+
+Loads a dry-run roofline record (or a representative default), builds the
+per-step StepCost, and sweeps checkpoint cadence × MTBF × straggler policy
+on a 1024-node fleet — answering "what goodput should we expect, and which
+knob matters?" before touching hardware.
+"""
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.core.cluster import FleetConfig, StepCost, simulate_training_run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--from-dryrun", default=None)
+    ap.add_argument("--nodes", type=int, default=1024)
+    ap.add_argument("--steps", type=int, default=2000)
+    args = ap.parse_args()
+
+    if args.from_dryrun:
+        rec = json.loads(pathlib.Path(args.from_dryrun).read_text())
+        rl = rec["roofline"]
+        cost = StepCost(compute_s=rl["compute_s"], memory_s=rl["memory_s"],
+                        collective_s=rl["collective_s"],
+                        overlap_collective=0.6)
+        print(f"step cost from {rec['arch']}×{rec['shape']}: "
+              f"{cost.step_seconds():.3f}s/step")
+    else:
+        cost = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                        overlap_collective=0.6)
+
+    print(f"{'mtbf[h]':>8s} {'ckpt':>6s} {'evict':>6s} {'goodput':>8s} "
+          f"{'fail':>5s} {'lost':>6s} {'wall[h]':>8s}")
+    for mtbf in (2000.0, 500.0, 100.0):
+        for ckpt in (50, 200, 1000):
+            for evict in (True, False):
+                cfg = FleetConfig(
+                    n_nodes=args.nodes, n_spares=args.nodes // 32,
+                    mtbf_hours_node=mtbf, ckpt_every_steps=ckpt,
+                    straggler_evict_factor=1.6 if evict else 1e9,
+                    degrade_mtbf_hours=400.0, seed=11)
+                st = simulate_training_run(cost, cfg, total_steps=args.steps)
+                print(f"{mtbf:8.0f} {ckpt:6d} {str(evict):>6s} "
+                      f"{st.goodput:8.3f} {st.failures:5d} "
+                      f"{st.lost_steps:6.0f} {st.wallclock_s/3600:8.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""End-to-end training driver: ~100M-param model, fault-tolerant loop.
+
+  PYTHONPATH=src python examples/train_fault_tolerant.py \
+      --steps 200 --size 20m --fail-at 40,90 --workdir /tmp/run1
+
+Sizes: 2m (default demo, fast on 1 CPU core), 20m, 100m (the brief's
+end-to-end target — a few hundred steps; budget several CPU-hours on this
+container, minutes on one real TPU host).
+
+Demonstrates: checkpoint/restart on injected failures (bit-identical to an
+uninterrupted run), async checkpointing, deterministic resumable data.
+"""
+import argparse
+import dataclasses
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs.base import ArchConfig
+from repro.train import TrainConfig, train
+
+SIZES = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab) → ~params
+    "2m": (2, 128, 4, 2, 384, 2048),          # ~2.2M
+    "20m": (6, 384, 8, 4, 1152, 8192),        # ~22M
+    "100m": (12, 640, 10, 5, 2560, 32768),    # ~103M
+}
+
+
+def make_arch(size: str) -> ArchConfig:
+    L, D, H, K, F, V = SIZES[size]
+    return ArchConfig(name=f"lm_{size}", family="dense", n_layers=L,
+                      d_model=D, n_heads=H, n_kv_heads=K, d_ff=F, vocab=V,
+                      head_dim=D // H, scan_layers=False, remat="none",
+                      dtype="float32")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--size", default="2m", choices=sorted(SIZES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--fail-at", default="", help="comma-separated steps")
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    args = ap.parse_args()
+
+    arch = make_arch(args.size)
+    fails = {int(s) for s in args.fail_at.split(",") if s.strip()}
+    print(f"arch={arch.name}: ~{arch.param_count()/1e6:.1f}M params; "
+          f"steps={args.steps} failures at {sorted(fails) or 'none'}")
+
+    losses = []
+
+    def on_step(step, loss):
+        losses.append(loss)
+        if step % 10 == 0:
+            print(f"  step {step:4d}  loss {loss:.4f}")
+
+    r = train(arch, TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every),
+              args.workdir, failure_at=fails, on_step=on_step)
+    print(f"done: {r.final_step} steps, {r.restarts} restarts, "
+          f"loss {r.losses[0]:.3f} -> {r.losses[-1]:.3f}, "
+          f"{r.steps_per_sec:.2f} steps/s")
+
+
+if __name__ == "__main__":
+    main()

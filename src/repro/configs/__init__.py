@@ -1,0 +1,4 @@
+# One <arch>.py per assigned architecture (+ tiny reduced variants + the
+# paper's own simulation scenario configs live in repro.core.case_study).
+from .base import (ARCH_IDS, SHAPES, ArchConfig, MoEConfig, ShapeConfig,
+                   applicable_shapes, load_arch, load_tiny)

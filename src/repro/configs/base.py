@@ -1,0 +1,159 @@
+"""Architecture configuration schema + the shape grid.
+
+One ``ArchConfig`` per assigned architecture lives in
+``repro/configs/<id>.py`` (exact public-literature configs) alongside a
+``tiny()`` reduced variant of the same family for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    every: int = 1                 # MoE FFN on layers where i % every == rem
+    rem: int = 0
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                    # dense | ssm | moe | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int                   # 0 for attention-free (rwkv uses its own)
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0              # 0 => d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    causal: bool = True            # False => encoder-only (no decode shapes)
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    moe: Optional[MoEConfig] = None
+    # hybrid (jamba): mixer per layer position within a repeating block
+    block_pattern: Tuple[str, ...] = ()     # e.g. ("m","m","m","m","a","m","m","m")
+    # ssm / mamba / rwkv dims
+    d_state: int = 16
+    d_conv: int = 4
+    # modality frontend stub: "none" | "audio" | "vision"
+    frontend: str = "none"
+    n_patches: int = 256           # vision stub prefix length
+    # runtime knobs (hillclimb surface)
+    dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: str = "full"            # none | full | dots (checkpoint policy)
+    use_pallas: bool = False       # TPU-only fast path; CPU uses XLA ref
+    zero3: bool = True             # shard params/opt over the data axis (FSDP)
+    pad_q_heads: int = 0           # pad attention Q heads to this count with
+                                   # structurally-zero heads (function-
+                                   # preserving) so heads divide the model
+                                   # axis — §Perf lever for 36/40-head archs
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def param_count(self) -> int:
+        """Exact parameter count (mirrors models/*.py init structure)."""
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        H, K, hd = self.n_heads, self.n_kv_heads, self.hd
+        N = self.d_state
+        emb = V * D * (1 if self.tie_embeddings else 2)
+        if self.frontend == "vision":
+            emb += self.n_patches * D                        # patch_pos
+        total = emb + D                                      # final_norm
+        lora_r = 32
+        for i in range(L):
+            mixer = self.block_pattern[i % len(self.block_pattern)] \
+                if self.block_pattern else ("r" if self.family == "ssm" else "a")
+            if mixer == "a":
+                total += D * hd * (H + 2 * K) + H * hd * D
+                if self.qk_norm:
+                    total += 2 * hd
+            elif mixer == "m":                               # mamba block
+                d_in = 2 * D
+                dt_rank = max(1, D // 16)
+                total += (D * 2 * d_in                       # w_in
+                          + self.d_conv * d_in + d_in        # conv + bias
+                          + d_in * dt_rank + dt_rank * d_in + d_in  # dt
+                          + 2 * d_in * N                     # w_B, w_C
+                          + d_in * N + d_in                  # A_log, D_skip
+                          + d_in * D)                        # w_out
+            elif mixer == "r":                               # rwkv6 time-mix
+                HN = H * hd
+                total += (6 * D                              # mix_base
+                          + D * 5 * lora_r + 5 * lora_r * D  # lora A/B
+                          + 4 * D * HN + HN * D              # r,k,v,g,o
+                          + HN                               # w0
+                          + D * 64 + 64 * HN                 # decay lora
+                          + HN + HN)                         # u + ln_x
+            if self.family == "ssm":                          # channel mix
+                total += 2 * D + D * F + F * D + D * D
+            elif self.moe is not None and i % self.moe.every == self.moe.rem:
+                total += D * self.moe.n_experts + self.moe.n_experts * 3 * D * F
+            else:
+                total += 3 * D * F                           # swiglu
+            total += 2 * D                                   # norms
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top-k of experts)."""
+        if self.moe is None:
+            return self.param_count()
+        D, F, L = self.d_model, self.d_ff, self.n_layers
+        inactive = 0
+        for i in range(L):
+            if i % self.moe.every == self.moe.rem:
+                inactive += (self.moe.n_experts - self.moe.top_k) * 3 * D * F
+        return self.param_count() - inactive
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                      # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "starcoder2_7b", "qwen3_8b", "llama3_405b", "granite_20b", "rwkv6_7b",
+    "hubert_xlarge", "moonshot_v1_16b_a3b", "llama4_scout_17b_a16e",
+    "jamba_v0_1_52b", "internvl2_2b",
+]
+
+
+def applicable_shapes(cfg: ArchConfig) -> list:
+    """The brief's skip rules (documented in DESIGN.md §4)."""
+    out = ["train_4k", "prefill_32k"]
+    if cfg.causal:
+        out.append("decode_32k")
+        subquadratic = cfg.family in ("ssm", "hybrid")
+        if subquadratic:
+            out.append("long_500k")
+    return out
+
+
+def load_arch(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.CONFIG
+
+
+def load_tiny(arch_id: str) -> ArchConfig:
+    mod = importlib.import_module(f"repro.configs.{arch_id}")
+    return mod.tiny()

@@ -1,0 +1,14 @@
+"""Granite-20B-Code [arXiv:2405.04324; hf] — dense, MQA (kv=1), llama-arch."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite_20b", family="dense", n_layers=52, d_model=6144,
+    n_heads=48, n_kv_heads=1, d_ff=24576, vocab=49152, head_dim=128,
+    rope_theta=1e4,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=1, head_dim=16,
+        d_ff=128, vocab=512, scan_layers=False, remat="none")

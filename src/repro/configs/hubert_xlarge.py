@@ -1,0 +1,16 @@
+"""HuBERT X-Large [arXiv:2106.07447; unverified] — encoder-only audio
+backbone (conv frontend stubbed: input_specs feeds frame embeddings);
+vocab=504 masked-prediction codebook."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert_xlarge", family="audio", n_layers=48, d_model=1280,
+    n_heads=16, n_kv_heads=16, d_ff=5120, vocab=504, head_dim=80,
+    causal=False, frontend="audio",
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=64, scan_layers=False, remat="none")

@@ -1,0 +1,15 @@
+"""InternVL2-2B [arXiv:2404.16821; hf] — InternLM2-1.8B backbone + InternViT
+frontend (stubbed: input_specs feeds precomputed patch embeddings)."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2_2b", family="vlm", n_layers=24, d_model=2048,
+    n_heads=16, n_kv_heads=8, d_ff=8192, vocab=92553, head_dim=128,
+    rope_theta=1e6, frontend="vision", n_patches=256,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, n_patches=16, scan_layers=False, remat="none")

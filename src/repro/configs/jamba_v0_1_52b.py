@@ -1,0 +1,18 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887; hf] — hybrid Mamba+attention 1:7
+(attn at offset 4 of each 8-layer block), MoE 16e top-2 on odd layers."""
+import dataclasses
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="jamba_v0_1_52b", family="hybrid", n_layers=32, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=14336, vocab=65536, head_dim=128,
+    moe=MoEConfig(n_experts=16, top_k=2, every=2, rem=1),
+    block_pattern=("m", "m", "m", "m", "a", "m", "m", "m"),
+    d_state=16, d_conv=4,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=8, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=96, vocab=512, moe=MoEConfig(n_experts=4, top_k=2, every=2, rem=1),
+        d_state=4, scan_layers=False, remat="none")

@@ -1,0 +1,14 @@
+"""Llama-3.1-405B [arXiv:2407.21783; unverified] — dense, GQA kv=8, 128k vocab."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama3_405b", family="dense", n_layers=126, d_model=16384,
+    n_heads=128, n_kv_heads=8, d_ff=53248, vocab=128256, head_dim=128,
+    rope_theta=5e5,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=3, d_model=128, n_heads=8, n_kv_heads=2, head_dim=16,
+        d_ff=256, vocab=512, scan_layers=False, remat="none")

@@ -1,0 +1,18 @@
+"""Llama-4-Scout-17B-16E [hf:meta-llama; unverified] — MoE 16e top-1.
+Modeled with full attention (released chunked-attention iRoPE variant out of
+scope) and without the shared expert — both noted in DESIGN.md."""
+import dataclasses
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4_scout_17b_a16e", family="moe", n_layers=48, d_model=5120,
+    n_heads=40, n_kv_heads=8, d_ff=8192, vocab=202048, head_dim=128,
+    rope_theta=5e5,
+    moe=MoEConfig(n_experts=16, top_k=1, capacity_factor=1.25),
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=96, vocab=512, moe=MoEConfig(n_experts=4, top_k=1),
+        scan_layers=False, remat="none")

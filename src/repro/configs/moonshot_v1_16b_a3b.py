@@ -1,0 +1,16 @@
+"""Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B] — MoE 64e top-6,
+d_ff=1408 per expert (no shared expert modeled — see DESIGN.md)."""
+import dataclasses
+from .base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="moonshot_v1_16b_a3b", family="moe", n_layers=48, d_model=2048,
+    n_heads=16, n_kv_heads=16, d_ff=1408, vocab=163840, head_dim=128,
+    moe=MoEConfig(n_experts=64, top_k=6, capacity_factor=1.25),
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=96, vocab=512, moe=MoEConfig(n_experts=8, top_k=2),
+        scan_layers=False, remat="none")

@@ -1,0 +1,14 @@
+"""Qwen3-8B [hf:Qwen/Qwen3-8B] — dense, GQA kv=8, qk_norm."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3_8b", family="dense", n_layers=36, d_model=4096,
+    n_heads=32, n_kv_heads=8, d_ff=12288, vocab=151936, head_dim=128,
+    qk_norm=True, rope_theta=1e6,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+        d_ff=128, vocab=512, scan_layers=False, remat="none")

@@ -1,0 +1,14 @@
+"""RWKV-6 "Finch" 7B [arXiv:2404.05892; hf] — attention-free, data-dependent
+decay; 64 wkv heads of size 64."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6_7b", family="ssm", n_layers=32, d_model=4096,
+    n_heads=64, n_kv_heads=64, d_ff=14336, vocab=65536, head_dim=64,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+        d_ff=128, vocab=512, scan_layers=False, remat="none")

@@ -1,0 +1,14 @@
+"""StarCoder2-7B [arXiv:2402.19173; hf] — dense, GQA kv=4, RoPE."""
+import dataclasses
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="starcoder2_7b", family="dense", n_layers=32, d_model=4608,
+    n_heads=36, n_kv_heads=4, d_ff=18432, vocab=49152, head_dim=128,
+    rope_theta=1e5,
+)
+
+def tiny() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=96, n_heads=6, n_kv_heads=2, head_dim=16,
+        d_ff=192, vocab=512, scan_layers=False, remat="none")

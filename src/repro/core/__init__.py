@@ -1,0 +1,16 @@
+# The paper's primary contribution — CloudSim 7G re-engineered core, in
+# Python/JAX: unified entities (C1), selection policies (C2), heap engine +
+# Algorithm-1 scheduler (C3), virtualization overhead + network (C4), power
+# consolidation (C5 workloads), case study (C6), plus the beyond-paper
+# vectorized engine and the ML-fleet cluster layer.
+from .engine import SimEntity, Simulation
+from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
+from .entities import (Cloudlet, CloudletStatus, Container, CoreAttributes,
+                       GuestEntity, Host, HostEntity, Vm, VirtualEntity)
+from .scheduler import (CloudletScheduler, CloudletSchedulerSpaceShared,
+                        CloudletSchedulerTimeShared)
+from .selection import (FirstFit, MaximumScore, MinimumScore, RandomSelection,
+                        SelectionPolicy)
+from .network import NetworkTopology, Packet, theoretical_makespan
+from .workflow import NetworkCloudlet, Stage, StageKind, chain_dag, generic_dag
+from .datacenter import Broker, Datacenter

@@ -1,0 +1,125 @@
+"""The paper's §6 case study, as a reusable scenario builder.
+
+Datacenter: 4 homogeneous hosts, 2 racks, ToR switches + 1 aggregate switch
+(Figure 5a). Workflow: 2-task chain T0 → T1 (Figure 5c). Virtualization
+configurations (Figure 5b): V = VM on host, C = container on host,
+N = container nested in VM (7G nesting, C1).  Parameters per Table 3.
+
+Placement configurations:
+  I   — T0,T1 co-located on one guest (0 hops),
+  II  — same rack, different hosts (1 hop  = 2 links),
+  III — different racks (2 hops = 4 links).
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from .datacenter import Broker, Datacenter
+from .engine import Simulation
+from .entities import Container, GuestEntity, Host, Vm
+from .network import NetworkTopology, theoretical_makespan
+from .scheduler import CloudletSchedulerTimeShared
+from .workflow import NetworkCloudlet, chain_dag
+
+# Table 3 constants
+MIPS = 7800.0                     # m7g.medium: 2.6 GHz × IPC 3 (Eq. 1)
+BW = 1e9                          # 1 Gb/s everywhere
+O_V, O_C = 5.0, 3.0               # virtualization overheads (s)
+L_TASK = 10000.0                  # MI per task
+PAYLOAD_SMALL = 1.0               # 1 byte
+PAYLOAD_BIG = 1e9                 # 1 GB
+ARRIVAL_RATE = 1.0 / 2.564        # Exp(2.564) mean inter-arrival
+
+
+@dataclass
+class CaseStudyResult:
+    makespans: List[float]
+    theoretical: float
+    virt: str
+    placement: str
+    payload: float
+
+
+def _mk_guest(virt: str, overhead_on: bool) -> Tuple[GuestEntity, Optional[Vm]]:
+    """Build one guest of configuration V/C/N; returns (leaf_guest, outer_vm)."""
+    ov = (O_V if overhead_on else 0.0)
+    oc = (O_C if overhead_on else 0.0)
+    if virt == "V":
+        return Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=MIPS,
+                  ram=4096, bw=BW, virt_overhead=ov), None
+    if virt == "C":
+        return Container(CloudletSchedulerTimeShared(), num_pes=1, mips=MIPS,
+                         ram=2048, bw=BW, virt_overhead=oc), None
+    if virt == "N":   # container nested inside a VM: O_N = O_V + O_C (C4)
+        outer = Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=MIPS,
+                   ram=4096, bw=BW, virt_overhead=ov)
+        inner = Container(CloudletSchedulerTimeShared(), num_pes=1, mips=MIPS,
+                          ram=2048, bw=BW, virt_overhead=oc)
+        return inner, outer
+    raise ValueError(virt)
+
+
+def build_datacenter(sim: Simulation) -> Tuple[Datacenter, List[Host]]:
+    hosts = [Host(num_pes=4, mips=MIPS, ram=65536, bw=BW, guest_scheduler="time",
+                  name=f"h{i}") for i in range(4)]
+    topo = NetworkTopology(link_bw=BW)
+    topo.add_rack(0, hosts[:2])
+    topo.add_rack(1, hosts[2:])
+    dc = Datacenter(sim, hosts, topology=topo)
+    return dc, hosts
+
+
+PLACEMENTS = {"I": (0, 0), "II": (0, 1), "III": (0, 2)}   # host idx for T0, T1
+
+
+def run_case_study(*, virt: str = "V", placement: str = "II",
+                   payload: float = PAYLOAD_BIG, activations: int = 1,
+                   overhead_on: bool = True, seed: int = 42) -> CaseStudyResult:
+    """Simulate the case study; return per-activation makespans + Eq.(2) value."""
+    sim = Simulation()
+    dc, hosts = build_datacenter(sim)
+    broker = Broker(sim, dc)
+
+    h0, h1 = PLACEMENTS[placement]
+    guests: List[GuestEntity] = []
+    for hidx in ((h0,) if placement == "I" else (h0, h1)):
+        leaf, outer = _mk_guest(virt, overhead_on)
+        if outer is not None:
+            broker.add_guest(outer, on_host=hosts[hidx])
+            broker.add_guest(leaf, on_guest=outer)
+        else:
+            broker.add_guest(leaf, on_host=hosts[hidx])
+        guests.append(leaf)
+    g0 = guests[0]
+    g1 = guests[0] if placement == "I" else guests[1]
+
+    rng = random.Random(seed)
+    t = 0.0
+    dags: List[List[NetworkCloudlet]] = []
+    for a in range(activations):
+        if a > 0:
+            t += rng.expovariate(ARRIVAL_RATE)
+        dag = chain_dag([L_TASK, L_TASK], payload)
+        for cl in dag:
+            cl.activation_id = a
+            cl.submit_time = t
+        broker.submit(dag[0], g0, at=t)
+        broker.submit(dag[1], g1, at=t)
+        dags.append(dag)
+
+    sim.run()
+
+    makespans = []
+    for dag in dags:
+        start = min(cl.submit_time for cl in dag)
+        end = max(cl.finish_time for cl in dag)
+        assert end >= 0, "workflow did not complete"
+        makespans.append(end - start)
+
+    hops = {"I": 0, "II": 1, "III": 2}[placement]
+    ov = {"V": O_V, "C": O_C, "N": O_V + O_C}[virt] if overhead_on else 0.0
+    theo = theoretical_makespan([L_TASK, L_TASK], MIPS, ov, hops, payload, BW)
+    return CaseStudyResult(makespans, theo, virt, placement, payload)

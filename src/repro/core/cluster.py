@@ -1,0 +1,266 @@
+"""ML-fleet cluster simulation — the paper's machinery aimed at TPU fleets.
+
+This is the integration layer promised in DESIGN.md §2.3: CloudSim 7G's
+nouns keep their semantics, the datacenter becomes a TPU fleet:
+
+  Host  → node (tray of chips)     Guest    → job replica / slice
+  Cloudlet → one training step     overhead → pod-boundary (DCN) penalty
+  Selection policies → straggler eviction + spare placement (C2, reused)
+
+Step durations come from the **dry-run roofline terms** (compute/memory/
+collective seconds per §Roofline) — so what-if questions about checkpoint
+cadence, MTBF, straggler policy and elastic rescale are answerable *before*
+touching hardware, which is exactly the paper's value proposition.
+
+Scales to thousands of nodes: per-step straggler sampling is vectorized
+(numpy), the event engine only sees one event per step + failure/repair
+events (the 7G heap queue keeps this O(log n)).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from .engine import SimEntity, Simulation
+from .events import Event, Tag
+from .selection import MaximumScore, MinimumScore
+
+
+@dataclass
+class ChipSpec:
+    """TPU v5e (the framework's roofline constants)."""
+    peak_flops: float = 197e12          # bf16 FLOP/s
+    hbm_bw: float = 819e9               # B/s
+    ici_bw: float = 50e9                # B/s per link
+    hbm_bytes: float = 16e9
+
+
+@dataclass
+class StepCost:
+    """Roofline terms for one training step on the chosen (arch, mesh)."""
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    overlap_collective: float = 0.0     # fraction of collective hidden (0..1)
+
+    def step_seconds(self) -> float:
+        # compute and memory phases overlap on-chip (roofline max); the
+        # un-hidden fraction of collectives serializes.
+        return max(self.compute_s, self.memory_s) + \
+            self.collective_s * (1.0 - self.overlap_collective)
+
+
+@dataclass
+class FleetConfig:
+    n_nodes: int = 1024                 # active nodes (data-parallel workers)
+    n_spares: int = 32
+    chips_per_node: int = 8
+    mtbf_hours_node: float = 5000.0     # per-node mean time between failures
+    repair_hours: float = 2.0
+    ckpt_every_steps: int = 200
+    ckpt_write_s: float = 30.0          # async-shadowed fraction excluded
+    restart_s: float = 180.0            # reschedule + restore + recompile
+    straggler_sigma: float = 0.08       # lognormal sigma of per-node slowdown
+    straggler_evict_factor: float = 1.6 # evict if node slower than this ×median
+    straggler_window: int = 20          # consecutive slow steps before evict
+    degrade_mtbf_hours: float = 800.0   # chronic-straggler onset (thermal,
+    degrade_factor: float = 2.5         #   ECC retry, flaky ICI link, …)
+    elastic: bool = True                # continue at reduced DP width if no spare
+    min_nodes_frac: float = 0.75        # below this fraction, stall instead
+    pod_boundary_overhead_s: float = 0.0  # C4: extra per-step DCN penalty
+    seed: int = 0
+
+
+@dataclass
+class RunStats:
+    wallclock_s: float = 0.0
+    steps_done: int = 0
+    failures: int = 0
+    evictions: int = 0
+    restarts: int = 0
+    lost_steps: float = 0.0
+    stall_s: float = 0.0
+    ckpt_s: float = 0.0
+    ideal_s: float = 0.0
+
+    @property
+    def goodput(self) -> float:
+        """Unique-useful-step-seconds / wall-clock (1.0 = zero overhead:
+        no stragglers, failures, checkpoint stalls, or re-execution)."""
+        return self.ideal_s / self.wallclock_s if self.wallclock_s else 0.0
+
+
+class FleetSim(SimEntity):
+    """Synchronous-training fleet: one event per step; failures by MTBF."""
+
+    def __init__(self, sim: Simulation, cost: StepCost, cfg: FleetConfig,
+                 total_steps: int):
+        super().__init__(sim, "fleet")
+        self.cost = cost
+        self.cfg = cfg
+        self.total_steps = total_steps
+        self.rng = np.random.default_rng(cfg.seed)
+        n = cfg.n_nodes + cfg.n_spares
+        self.node_ok = np.ones(n, dtype=bool)
+        self.node_active = np.zeros(n, dtype=bool)
+        self.node_active[: cfg.n_nodes] = True
+        # Persistent per-node speed bias (hardware diversity) + per-step jitter.
+        self.node_bias = np.exp(self.rng.normal(0.0, cfg.straggler_sigma / 2, n))
+        self.slow_count = np.zeros(n, dtype=int)
+        self.stats = RunStats()
+        self.step = 0
+        self.last_ckpt_step = 0
+        self._gen = 0            # step-chain generation; failures invalidate
+                                 # the in-flight step event (no forked chains)
+        base = cost.step_seconds() + cfg.pod_boundary_overhead_s
+        self.base_step_s = base
+        self.stats.ideal_s = 0.0
+
+    # -- scheduling ---------------------------------------------------------
+    def start(self) -> None:
+        self._schedule_failures()
+        self.sim.schedule(0.0, Tag.STEP_DONE, self, data=("begin", self._gen))
+
+    def _schedule_failures(self) -> None:
+        """Pre-draw failure + degradation times for every node (exp MTBF)."""
+        mtbf_s = self.cfg.mtbf_hours_node * 3600.0
+        deg_s = self.cfg.degrade_mtbf_hours * 3600.0
+        for nid in range(len(self.node_ok)):
+            self.sim.schedule(float(self.rng.exponential(mtbf_s)),
+                              Tag.NODE_FAILURE, self, data=nid)
+            self.sim.schedule(float(self.rng.exponential(deg_s)),
+                              Tag.ELASTIC_RESIZE, self, data=("degrade", nid))
+
+    # -- step execution ------------------------------------------------------
+    def _active_ids(self) -> np.ndarray:
+        return np.nonzero(self.node_active & self.node_ok)[0]
+
+    def _run_one_step(self) -> None:
+        ids = self._active_ids()
+        n_active = len(ids)
+        if n_active < self.cfg.min_nodes_frac * self.cfg.n_nodes:
+            # stall until repair — counted, retried on recovery
+            self.stats.stall_s += 60.0
+            self.sim.schedule_in(60.0, Tag.STEP_DONE, self, data=("retry", self._gen))
+            return
+        # Vectorized straggler sampling: sync step = slowest participant.
+        jitter = np.exp(self.rng.normal(0.0, self.cfg.straggler_sigma, n_active))
+        slowdown = self.node_bias[ids] * jitter
+        # Elastic rescale keeps the global batch: at reduced DP width each
+        # step's wall time stretches by nominal/active.
+        width_penalty = self.cfg.n_nodes / n_active
+        step_s = self.base_step_s * float(np.max(slowdown)) * max(width_penalty, 1.0)
+        # straggler bookkeeping (C2: eviction via unified selection policy)
+        med = float(np.median(slowdown))
+        slow = slowdown > self.cfg.straggler_evict_factor * med
+        self.slow_count[ids[slow]] += 1
+        self.slow_count[ids[~slow]] = 0
+        self.sim.schedule_in(step_s, Tag.STEP_DONE, self, data=("done", self._gen))
+
+    def _maybe_evict_stragglers(self, now: float) -> None:
+        ids = self._active_ids()
+        chronic = [int(i) for i in ids if self.slow_count[i] >= self.cfg.straggler_window]
+        if not chronic:
+            return
+        worst = MaximumScore(lambda i: float(self.node_bias[i])).select(chronic)
+        self._replace_node(worst, now, evict=True)
+
+    def _replace_node(self, nid: int, now: float, *, evict: bool) -> None:
+        self.node_active[nid] = False
+        self.slow_count[nid] = 0
+        if evict:
+            self.node_ok[nid] = False
+            self.stats.evictions += 1
+            self.sim.schedule(now + self.cfg.repair_hours * 3600.0,
+                              Tag.NODE_RECOVER, self, data=nid)
+        spare_pool = np.nonzero(self.node_ok & ~self.node_active)[0]
+        if len(spare_pool):
+            best = MinimumScore(lambda i: float(self.node_bias[i])).select(
+                [int(i) for i in spare_pool])
+            self.node_active[best] = True
+        elif not self.cfg.elastic:
+            self.stats.stall_s += self.cfg.repair_hours * 3600.0
+
+    # -- event dispatch ---------------------------------------------------------
+    def process_event(self, ev: Event) -> None:
+        now = ev.time
+        if ev.tag is Tag.NODE_FAILURE:
+            nid = ev.data
+            if not self.node_ok[nid]:
+                return
+            was_active = bool(self.node_active[nid])
+            self.node_ok[nid] = False
+            self.stats.failures += 1
+            self.sim.schedule(now + self.cfg.repair_hours * 3600.0,
+                              Tag.NODE_RECOVER, self, data=nid)
+            if was_active:
+                self._gen += 1                 # kill the in-flight step chain
+                self._replace_node(nid, now, evict=False)
+                # lose progress since last checkpoint + pay restart
+                lost = self.step - self.last_ckpt_step
+                self.stats.lost_steps += lost
+                self.stats.restarts += 1
+                self.step = self.last_ckpt_step
+                self.stats.stall_s += self.cfg.restart_s
+                self.sim.schedule_in(self.cfg.restart_s, Tag.STEP_DONE, self,
+                                     data=("retry", self._gen))
+            return
+        if ev.tag is Tag.ELASTIC_RESIZE and isinstance(ev.data, tuple) \
+                and ev.data[0] == "degrade":
+            nid = ev.data[1]
+            if self.node_ok[nid]:
+                self.node_bias[nid] *= self.cfg.degrade_factor  # chronic straggler
+            deg_s = self.cfg.degrade_mtbf_hours * 3600.0
+            self.sim.schedule(now + float(self.rng.exponential(deg_s)),
+                              Tag.ELASTIC_RESIZE, self, data=("degrade", nid))
+            return
+        if ev.tag is Tag.NODE_RECOVER:
+            nid = ev.data
+            self.node_ok[nid] = True
+            self.node_bias[nid] = float(np.exp(
+                self.rng.normal(0.0, self.cfg.straggler_sigma / 2)))
+            mtbf_s = self.cfg.mtbf_hours_node * 3600.0
+            self.sim.schedule(now + float(self.rng.exponential(mtbf_s)),
+                              Tag.NODE_FAILURE, self, data=nid)
+            if (self.node_active.sum() < self.cfg.n_nodes):
+                self.node_active[nid] = True
+            return
+        if ev.tag is Tag.STEP_DONE:
+            kind, gen = ev.data
+            if gen != self._gen:
+                return                          # stale chain (pre-failure)
+            if kind == "done":
+                self.step += 1
+                self.stats.steps_done = self.step
+                self._maybe_evict_stragglers(now)
+                if self.step - self.last_ckpt_step >= self.cfg.ckpt_every_steps:
+                    self.last_ckpt_step = self.step
+                    self.stats.ckpt_s += self.cfg.ckpt_write_s
+                    self.sim.schedule_in(self.cfg.ckpt_write_s, Tag.STEP_DONE,
+                                         self, data=("retry", self._gen))
+                    return
+            if self.step >= self.total_steps:
+                self.stats.wallclock_s = now
+                self.sim.terminate()
+                return
+            self._run_one_step()
+
+
+def simulate_training_run(cost: StepCost, cfg: FleetConfig,
+                          total_steps: int = 2000, *,
+                          max_wallclock_s: float = 30 * 86400.0) -> RunStats:
+    """``max_wallclock_s`` bounds pathological scenarios (e.g. equilibrium
+    node availability mtbf/(mtbf+repair) below ``min_nodes_frac`` stalls the
+    fleet forever — a finding the simulator should report, not hang on)."""
+    sim = Simulation()
+    fleet = FleetSim(sim, cost, cfg, total_steps)
+    end = sim.run(until=max_wallclock_s)
+    if fleet.stats.wallclock_s == 0.0:
+        fleet.stats.wallclock_s = end
+    fleet.stats.steps_done = fleet.step
+    # Unique useful work only: re-executed (post-restart) steps don't count.
+    fleet.stats.ideal_s = fleet.step * fleet.base_step_s
+    return fleet.stats

@@ -1,0 +1,162 @@
+"""Datacenter + Broker orchestration on top of the event kernel.
+
+A ``Datacenter`` owns host entities, places guests through the **unified
+selection policy** (C2), drives Algorithm-1 processing updates, and routes
+workflow packets through the ``NetworkTopology`` (C4 overhead applied at
+guest endpoints). The ``Broker`` submits inventories (guests + cloudlets)
+and records completions — the paper's §4.2 walk-through.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .engine import SimEntity, Simulation
+from .entities import Cloudlet, GuestEntity, HostEntity
+from .events import Event, Tag
+from .network import NetworkTopology, Packet
+from .selection import FirstFit, SelectionPolicy
+from .workflow import NetworkCloudlet
+
+
+class Datacenter(SimEntity):
+    def __init__(self, sim: Simulation, hosts: Sequence[HostEntity], *,
+                 placement: Optional[SelectionPolicy] = None,
+                 topology: Optional[NetworkTopology] = None,
+                 name: str = "dc"):
+        super().__init__(sim, name)
+        self.hosts = list(hosts)
+        self.placement = placement or FirstFit()
+        self.topology = topology
+        self.cloudlet_registry: Dict[int, Cloudlet] = {}
+        self._next_update_time = float("inf")
+        self.broker: Optional["Broker"] = None
+
+    # -- guest placement (C2: same policy object as migration uses) -----------
+    def create_guest(self, g: GuestEntity, *, on_host: Optional[HostEntity] = None,
+                     on_guest: Optional[GuestEntity] = None) -> bool:
+        """Place guest ``g``; nested placement when ``on_guest`` is given (C1)."""
+        if on_guest is not None:
+            ok = on_guest.try_allocate(g)       # nested virtualization path
+        elif on_host is not None:
+            ok = on_host.try_allocate(g)
+        else:
+            host = self.placement.select(self.hosts, lambda h: h.suitable_for(g))
+            ok = host is not None and host.try_allocate(g)
+        if ok:
+            g.scheduler.on_finish(self._cloudlet_finished)
+        return ok
+
+    # -- cloudlet paths ----------------------------------------------------------
+    def submit_cloudlet(self, cl: Cloudlet, guest: GuestEntity) -> None:
+        # Bring every scheduler's previous_time up to `now` *before* admitting
+        # new work — otherwise the newcomer would earn the whole elapsed
+        # window as retroactive progress (classic CloudSim update-then-submit
+        # ordering).
+        self._update_processing()
+        self.cloudlet_registry[cl.id] = cl
+        if isinstance(cl, NetworkCloudlet):
+            cl.attach_transport(self._send_packet)
+        guest.submit(cl, self.sim.clock)
+        self._update_processing()
+
+    def _cloudlet_finished(self, cl: Cloudlet, now: float) -> None:
+        if isinstance(cl, NetworkCloudlet):
+            cl.check_deadline(now)
+        if self.broker is not None:
+            self.sim.schedule(now, Tag.CLOUDLET_RETURN, self.broker,
+                              src=self, data=cl)
+
+    # -- packet transport ----------------------------------------------------------
+    def _send_packet(self, pkt: Packet, now: float) -> None:
+        dst_cl = self.cloudlet_registry.get(pkt.dst_cloudlet)
+        if dst_cl is None or dst_cl.guest is None:
+            raise RuntimeError(f"packet to unknown cloudlet {pkt.dst_cloudlet}")
+        pkt.dst_guest = dst_cl.guest
+        if self.topology is None or pkt.src_guest is None:
+            delay = 0.0
+        else:
+            delay = self.topology.transfer_delay(pkt.src_guest, dst_cl.guest,
+                                                 pkt.payload_bytes)
+        self.sim.schedule(now + delay, Tag.PKT_ARRIVE, self, data=pkt)
+
+    # -- processing updates -----------------------------------------------------------
+    def _update_processing(self) -> None:
+        now = self.sim.clock
+        nxt = float("inf")
+        for h in self.hosts:
+            t = h.update_guests_processing(now)
+            nxt = min(nxt, t)
+        if nxt < float("inf") and (nxt < self._next_update_time
+                                   or self._next_update_time <= now):
+            self._next_update_time = max(nxt, now)
+            self.sim.schedule(self._next_update_time, Tag.SCHED_UPDATE, self)
+
+    # -- event dispatch ------------------------------------------------------------------
+    def process_event(self, ev: Event) -> None:
+        if ev.tag is Tag.SCHED_UPDATE:
+            if not math.isclose(ev.time, self._next_update_time, abs_tol=1e-9):
+                return                              # superseded (stale) update
+            self._next_update_time = float("inf")
+            self._update_processing()
+        elif ev.tag is Tag.CLOUDLET_SUBMIT:
+            cl, guest = ev.data
+            self.submit_cloudlet(cl, guest)
+        elif ev.tag is Tag.PKT_ARRIVE:
+            pkt: Packet = ev.data
+            dst_cl = self.cloudlet_registry[pkt.dst_cloudlet]
+            dst_cl.deliver(pkt, ev.time)
+            self._update_processing()
+        elif ev.tag is Tag.GUEST_CREATE:
+            g, on_host, on_guest = ev.data
+            ok = self.create_guest(g, on_host=on_host, on_guest=on_guest)
+            if self.broker is not None:
+                self.sim.schedule(ev.time, Tag.VM_CREATE_ACK, self.broker,
+                                  src=self, data=(g, ok))
+
+
+@dataclass
+class Submission:
+    """One unit of broker work: a cloudlet bound to a guest at a given time."""
+    cloudlet: Cloudlet
+    guest: GuestEntity
+    at: float = 0.0
+
+
+class Broker(SimEntity):
+    """Submits guests + cloudlets; collects returns (paper §4.2)."""
+
+    def __init__(self, sim: Simulation, dc: Datacenter, name: str = "broker"):
+        super().__init__(sim, name)
+        self.dc = dc
+        dc.broker = self
+        self.pending_guests: List[Tuple[GuestEntity, Optional[HostEntity],
+                                        Optional[GuestEntity]]] = []
+        self.submissions: List[Submission] = []
+        self.completed: List[Cloudlet] = []
+        self.failed_placements: List[GuestEntity] = []
+
+    def add_guest(self, g: GuestEntity, *, on_host: Optional[HostEntity] = None,
+                  on_guest: Optional[GuestEntity] = None) -> None:
+        self.pending_guests.append((g, on_host, on_guest))
+
+    def submit(self, cl: Cloudlet, guest: GuestEntity, at: float = 0.0) -> None:
+        self.submissions.append(Submission(cl, guest, at))
+
+    def start(self) -> None:
+        for g, oh, og in self.pending_guests:
+            self.sim.schedule(0.0, Tag.GUEST_CREATE, self.dc, src=self,
+                              data=(g, oh, og))
+        for sub in self.submissions:
+            self.sim.schedule(sub.at, Tag.CLOUDLET_SUBMIT, self.dc, src=self,
+                              data=(sub.cloudlet, sub.guest))
+
+    def process_event(self, ev: Event) -> None:
+        if ev.tag is Tag.CLOUDLET_RETURN:
+            self.completed.append(ev.data)
+        elif ev.tag is Tag.VM_CREATE_ACK:
+            g, ok = ev.data
+            if not ok:
+                self.failed_placements.append(g)

@@ -1,0 +1,78 @@
+"""CloudSim 7G-style simulation engine: heap event queue, enum tags.
+
+Single-threaded discrete-event kernel (the paper removed ``synchronized``
+from ≤6G precisely because the engine is single-threaded — §4.4 item 2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+from .events import Event, EventQueue, HeapEventQueue, Tag
+
+
+class SimEntity:
+    """Base class for simulated actors (datacenters, brokers, cluster managers)."""
+
+    def __init__(self, sim: "Simulation", name: str):
+        self.sim = sim
+        self.name = name
+        sim.register(self)
+
+    def start(self) -> None:
+        """Called once when the simulation begins."""
+
+    def process_event(self, ev: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class Simulation:
+    """The discrete-event kernel.
+
+    ``queue_cls`` is injectable so benchmarks can run the *same* scenario on
+    the 7G heap queue and the ≤6G linked-list queue (paper Table 2 axis).
+    """
+
+    def __init__(self, queue_cls: type = HeapEventQueue):
+        self.queue: EventQueue = queue_cls()
+        self.clock = 0.0
+        self.entities: List[SimEntity] = []
+        self._terminated = False
+        self.events_processed = 0
+
+    # -- entity management ----------------------------------------------------
+    def register(self, ent: SimEntity) -> None:
+        self.entities.append(ent)
+
+    # -- scheduling -------------------------------------------------------------
+    def schedule(self, time: float, tag: Any, dst: SimEntity, *,
+                 src: Optional[SimEntity] = None, data: Any = None,
+                 priority: int = 0) -> Event:
+        assert time >= self.clock - 1e-12, (
+            f"cannot schedule into the past: {time} < {self.clock}")
+        ev = Event(time=max(time, self.clock), tag=tag, src=src, dst=dst,
+                   data=data, priority=priority)
+        self.queue.push(ev)
+        return ev
+
+    def schedule_in(self, delay: float, tag: Any, dst: SimEntity, **kw) -> Event:
+        return self.schedule(self.clock + delay, tag, dst, **kw)
+
+    # -- main loop ----------------------------------------------------------------
+    def run(self, until: float = float("inf")) -> float:
+        for e in self.entities:
+            e.start()
+        while self.queue and not self._terminated:
+            ev = self.queue.pop()
+            if ev.time > until:
+                self.clock = until
+                break
+            self.clock = ev.time
+            if ev.tag is Tag.SIM_END:
+                break
+            if ev.dst is not None:
+                ev.dst.process_event(ev)
+            self.events_processed += 1
+        return self.clock
+
+    def terminate(self) -> None:
+        self._terminated = True

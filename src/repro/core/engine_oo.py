@@ -1,0 +1,105 @@
+"""CloudSim ≤6G-style baseline — the *pre-refactoring* code patterns.
+
+This module deliberately re-creates the mechanical inefficiencies the paper's
+§4.4 removed, so benchmarks can reproduce the 6G→7G comparison (Table 2)
+honestly: **decision logic is identical** to the 7G path (it delegates to the
+same ``ConsolidationManager`` routines), only the call/data patterns differ.
+
+Emulated ≤6G patterns (paper §4.4 item numbers):
+  (1) O(n) sorted-linked-list future-event queue .......... LinkedListEventQueue
+  (2) size()-counting instead of isEmpty() ................ ``len(queue) > 0``
+  (3) string "+" concatenation logging on hot paths ....... ``_log_legacy``
+  (5) boxed numerics in history structures ................ ``Boxed`` wrapper
+  (7) no caching of derived values: uid strings and per-VM
+      required-MIPS recomputed on every call .............. ``uid_legacy``,
+                                                             ``demand_recompute``
+
+Java-only items (``synchronized`` removal, JDK upgrade) have no Python
+analogue and are *not* emulated — noted in DESIGN.md.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from .events import Event, LinkedListEventQueue, Tag
+from .engine import SimEntity, Simulation
+from .power import ConsolidationManager, PowerHost, TraceVm
+
+
+class Boxed:
+    """Emulates Java autoboxing (Double): one heap object per numeric value."""
+
+    __slots__ = ("v",)
+
+    def __init__(self, v: float):
+        self.v = v
+
+    def unbox(self) -> float:
+        return self.v
+
+
+def uid_legacy(user_id: int, vm_id: int) -> str:
+    # ≤6G rebuilt the uid string on *every* call (paper §4.4 item 7).
+    return str(user_id) + "-" + str(vm_id)
+
+
+class LegacyConsolidationManager(ConsolidationManager):
+    """Same decisions as ConsolidationManager; ≤6G call/data patterns."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._log: List[str] = []
+        self._boxed_histories: dict = {h.id: [] for h in self.hosts}
+
+    def host_util(self, h: PowerHost, t: float) -> float:
+        # item 7: recompute each VM's demand from scratch, re-deriving the
+        # trace index and rebuilding uids as ≤6G did on every invocation.
+        # (Arithmetic order/association matches ConsolidationManager.host_util
+        # exactly so 6g/7g decisions are bit-identical.)
+        demand = 0.0
+        for vm in sorted(h.guests, key=lambda g: g.id):
+            _ = uid_legacy(0, vm.id)                       # discarded, like 6G
+            k = min(int(t / vm.interval), len(vm.trace) - 1) if vm.trace else 0
+            u = vm.trace[k] if vm.trace else 0.0
+            demand += u * (vm.caps.num_pes * vm.caps.mips)
+        cap = h.caps.num_pes * h.caps.mips                 # recomputed too
+        return min(demand / cap, 1.0) if cap else 0.0
+
+    def record_step(self, t: float) -> None:
+        self.now = t
+        for vm in self.vms:
+            vm.util_history.append(vm.utilization(t))
+        for h in self.hosts:
+            u = self.host_util(h, t)
+            # item 5: boxed history values; item 3: string "+" logging.
+            hist = self._boxed_histories[h.id]
+            hist.append(Boxed(u))
+            if len(hist) > 30:
+                hist.pop(0)                               # ArrayList-style shift
+            h.record_utilization(u, self.interval)
+            self._log.append("host " + str(h.id) + " util " + str(u)
+                             + " at t=" + str(t))
+
+
+class LegacySimulation(Simulation):
+    """6G-flavoured kernel: linked-list queue + size()-based emptiness test."""
+
+    def __init__(self):
+        super().__init__(queue_cls=LinkedListEventQueue)
+
+    def run(self, until: float = float("inf")) -> float:
+        for e in self.entities:
+            e.start()
+        # item 2: `len(...) > 0` walks the entire list each iteration.
+        while len(self.queue) > 0 and not self._terminated:
+            ev = self.queue.pop()
+            if ev.time > until:
+                self.clock = until
+                break
+            self.clock = ev.time
+            if ev.tag is Tag.SIM_END:
+                break
+            if ev.dst is not None:
+                ev.dst.process_event(ev)
+            self.events_processed += 1
+        return self.clock

@@ -1,0 +1,294 @@
+"""Unified entity model — CloudSim 7G contribution C1.
+
+The paper's key design change: *guest* entities (things that execute
+cloudlets — VMs, containers) and *host* entities (things that host guests —
+physical hosts, and VMs when nesting) are expressed against two small
+interfaces, ``GuestEntity`` and ``HostEntity``, with ``VirtualEntity`` the
+combination of the two.  This removes the copy-pasted ``ContainerVm`` /
+``ContainerHost`` / ``ContainerDatacenter`` class families of ≤6G and makes
+**nested virtualization** (containers in VMs, VMs in VMs) a first-class
+configuration instead of a fork.
+
+Python translation: interfaces become small ABCs; ``CoreAttributes`` is the
+shared capacity record.  The per-entity *virtualization overhead* (paper
+contribution C4) lives on ``GuestEntity`` and composes along the nesting
+stack: ``O_N = O_V + O_C``.
+"""
+from __future__ import annotations
+
+import abc
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+_ids = itertools.count()
+
+
+def _next_id() -> int:
+    return next(_ids)
+
+
+class CloudletStatus(enum.Enum):
+    CREATED = enum.auto()
+    QUEUED = enum.auto()
+    INEXEC = enum.auto()
+    PAUSED = enum.auto()
+    SUCCESS = enum.auto()
+    FAILED = enum.auto()
+    CANCELED = enum.auto()
+
+
+@dataclass
+class Cloudlet:
+    """A unit of work: ``length`` millions of instructions over ``pes`` PEs.
+
+    7G merged the old ``ResCloudlet`` bookkeeping class into ``Cloudlet``
+    (paper §4.6) — hence the in-object execution state below.
+    """
+
+    length: float                       # MI (millions of instructions)
+    pes: int = 1
+    id: int = field(default_factory=_next_id)
+    user_id: int = -1
+    status: CloudletStatus = CloudletStatus.CREATED
+    # Execution bookkeeping (was ResCloudlet in ≤6G).
+    length_so_far: float = 0.0          # MI executed so far
+    submit_time: float = 0.0
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    guest: Optional["GuestEntity"] = None
+
+    # -- Handler 1 (Algorithm 1 line 4): how one scheduler tick advances me.
+    def update_progress(self, time_span: float, alloc_mips: float, now: float) -> None:
+        self.length_so_far += time_span * alloc_mips
+
+    def wants_cpu(self, now: float) -> bool:
+        """Does this cloudlet currently consume CPU share? (False while a
+        networked cloudlet blocks on RECV — it must not steal time-shared
+        capacity from running peers.)"""
+        return True
+
+    # -- Handler 2 (Algorithm 1 line 7): am I done?
+    def is_finished(self) -> bool:
+        return self.length_so_far >= self.length - 1e-9
+
+    # -- Handler for next-event estimation (Algorithm 1 line 18).
+    def estimate_finish(self, now: float, alloc_mips: float) -> float:
+        if alloc_mips <= 0.0:
+            return float("inf")
+        return now + max(self.length - self.length_so_far, 0.0) / alloc_mips
+
+    @property
+    def remaining(self) -> float:
+        return max(self.length - self.length_so_far, 0.0)
+
+
+@dataclass
+class CoreAttributes:
+    """Capacity record shared by host and guest entities (paper interface #3)."""
+
+    num_pes: int = 1
+    mips: float = 1000.0                # per-PE MIPS
+    ram: float = 1024.0                 # MB
+    bw: float = 1e9                     # bits/s
+
+    @property
+    def total_mips(self) -> float:
+        return self.num_pes * self.mips
+
+
+class GuestEntity(abc.ABC):
+    """An entity that executes cloudlets via a ``CloudletScheduler``.
+
+    Implementations in ≤6G: ``Vm`` and (copy-pasted) ``Container``.  In 7G a
+    single interface covers both — and this module's ``Vm``/``Container``
+    differ only in defaults.
+    """
+
+    def __init__(self, caps: CoreAttributes, scheduler, *, virt_overhead: float = 0.0,
+                 name: str = "guest"):
+        self.id = _next_id()
+        self.name = f"{name}-{self.id}"
+        self.caps = caps
+        self.scheduler = scheduler
+        self.virt_overhead = float(virt_overhead)   # seconds per network use (C4)
+        self.host: Optional[HostEntity] = None
+        self.in_migration = False
+        scheduler.attach(self)
+
+    # -- capacity -----------------------------------------------------------
+    @property
+    def requested_mips(self) -> float:
+        return self.caps.total_mips
+
+    # -- virtualization overhead (C4): composes along the nesting stack -----
+    def stack_overhead(self) -> float:
+        o = self.virt_overhead
+        h = self.host
+        if isinstance(h, GuestEntity):
+            o += h.stack_overhead()
+        return o
+
+    # -- processing ---------------------------------------------------------
+    def update_processing(self, now: float, mips_share: Sequence[float]) -> float:
+        """Advance my cloudlets; return absolute time of my next event (inf if none)."""
+        return self.scheduler.update_processing(now, mips_share)
+
+    def submit(self, cl: Cloudlet, now: float) -> None:
+        cl.guest = self
+        self.scheduler.submit(cl, now)
+
+    @property
+    def uid(self) -> str:
+        # 7G caches the uid; ≤6G rebuilt the string on every call (§4.4 item 7).
+        try:
+            return self._uid
+        except AttributeError:
+            self._uid = f"{self.user_id if hasattr(self, 'user_id') else 0}-{self.id}"
+            return self._uid
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name}>"
+
+
+class HostEntity(abc.ABC):
+    """An entity that hosts guest entities (allocation/provisioning/scheduling).
+
+    Implementations: physical ``Host``; and any ``VirtualEntity`` when nested
+    virtualization is in play.
+    """
+
+    def __init__(self, caps: CoreAttributes, *, guest_scheduler: str = "space",
+                 name: str = "host"):
+        self.id = _next_id()
+        self.name = f"{name}-{self.id}"
+        self.caps = caps
+        self.guest_scheduler = guest_scheduler      # "space" | "time"
+        self.guests: List[GuestEntity] = []
+        self.active = True
+        self._alloc_mips = 0.0
+        self._alloc_ram = 0.0
+        self._alloc_bw = 0.0
+
+    # -- provisioning --------------------------------------------------------
+    def suitable_for(self, g: GuestEntity) -> bool:
+        if not self.active:
+            return False
+        fits_ram = self._alloc_ram + g.caps.ram <= self.caps.ram + 1e-9
+        fits_bw = self._alloc_bw + g.caps.bw <= self.caps.bw + 1e-9
+        if self.guest_scheduler == "space":
+            fits_mips = self._alloc_mips + g.requested_mips <= self.caps.total_mips + 1e-9
+        else:                                        # time-shared: oversubscribable
+            fits_mips = g.caps.mips <= self.caps.mips + 1e-9
+        return fits_ram and fits_bw and fits_mips
+
+    def try_allocate(self, g: GuestEntity) -> bool:
+        if not self.suitable_for(g):
+            return False
+        self.guests.append(g)
+        g.host = self
+        self._alloc_mips += g.requested_mips
+        self._alloc_ram += g.caps.ram
+        self._alloc_bw += g.caps.bw
+        return True
+
+    def deallocate(self, g: GuestEntity) -> None:
+        if g in self.guests:
+            self.guests.remove(g)
+            self._alloc_mips -= g.requested_mips
+            self._alloc_ram -= g.caps.ram
+            self._alloc_bw -= g.caps.bw
+            g.host = None
+
+    # -- mips shares ---------------------------------------------------------
+    def mips_share_for(self, g: GuestEntity) -> List[float]:
+        """Per-PE MIPS currently granted to guest ``g``."""
+        if self.guest_scheduler == "space":
+            return [g.caps.mips] * g.caps.num_pes
+        # time-shared: capacity scaled down when oversubscribed
+        demand = sum(x.requested_mips for x in self.guests)
+        cap = self.caps.total_mips
+        scale = min(1.0, cap / demand) if demand > 0 else 1.0
+        return [g.caps.mips * scale] * g.caps.num_pes
+
+    # -- processing ----------------------------------------------------------
+    def update_guests_processing(self, now: float) -> float:
+        """Advance all hosted guests; return earliest next event time."""
+        nxt = float("inf")
+        for g in self.guests:
+            t = g.update_processing(now, self.mips_share_for(g))
+            if t < nxt:
+                nxt = t
+        return nxt
+
+    @property
+    def utilization(self) -> float:
+        """Fraction of host MIPS currently demanded by guests' running work."""
+        cap = self.caps.total_mips
+        if cap <= 0:
+            return 0.0
+        used = sum(g.scheduler.current_mips_demand() for g in self.guests)
+        return min(1.0, used / cap)
+
+    def __repr__(self):
+        return f"<{type(self).__name__} {self.name} guests={len(self.guests)}>"
+
+
+class VirtualEntity(GuestEntity, HostEntity):
+    """Simultaneously a guest and a host — enables nested virtualization (C1/3).
+
+    A ``VirtualEntity`` executes its own cloudlets *and* hosts inner guests;
+    its inner guests' shares are carved out of whatever the outer host grants.
+    """
+
+    def __init__(self, caps: CoreAttributes, scheduler, *, virt_overhead: float = 0.0,
+                 guest_scheduler: str = "time", name: str = "vnode"):
+        GuestEntity.__init__(self, caps, scheduler, virt_overhead=virt_overhead, name=name)
+        # HostEntity.__init__ would clobber id/name/caps; inline its state:
+        self.guest_scheduler = guest_scheduler
+        self.guests = []
+        self.active = True
+        self._alloc_mips = 0.0
+        self._alloc_ram = 0.0
+        self._alloc_bw = 0.0
+
+    def update_processing(self, now: float, mips_share: Sequence[float]) -> float:
+        # Scale nested guests by my own granted share (nested time-sharing).
+        granted = sum(mips_share)
+        nxt = self.scheduler.update_processing(now, mips_share)
+        for g in self.guests:
+            share = self.mips_share_for(g)
+            if granted < self.caps.total_mips - 1e-9 and self.caps.total_mips > 0:
+                scale = granted / self.caps.total_mips
+                share = [s * scale for s in share]
+            t = g.update_processing(now, share)
+            nxt = min(nxt, t)
+        return nxt
+
+
+class Host(HostEntity):
+    """A physical machine."""
+
+    def __init__(self, num_pes=8, mips=2500.0, ram=32768.0, bw=1e9,
+                 guest_scheduler="space", name="host"):
+        super().__init__(CoreAttributes(num_pes, mips, ram, bw),
+                         guest_scheduler=guest_scheduler, name=name)
+
+
+class Vm(VirtualEntity):
+    """A virtual machine (guest; may itself host containers — 7G nesting)."""
+
+    def __init__(self, scheduler, num_pes=1, mips=1000.0, ram=2048.0, bw=1e9,
+                 virt_overhead=0.0, name="vm"):
+        super().__init__(CoreAttributes(num_pes, mips, ram, bw), scheduler,
+                         virt_overhead=virt_overhead, name=name)
+
+
+class Container(GuestEntity):
+    """A container (guest). Identical mechanics to Vm — the 7G unification."""
+
+    def __init__(self, scheduler, num_pes=1, mips=1000.0, ram=512.0, bw=1e9,
+                 virt_overhead=0.0, name="ctr"):
+        super().__init__(CoreAttributes(num_pes, mips, ram, bw), scheduler,
+                         virt_overhead=virt_overhead, name=name)

@@ -1,0 +1,175 @@
+"""Discrete-event primitives: tags, events, and event queues.
+
+CloudSim 7G change set reproduced here (paper §4.4, §4.5):
+  * event tags as an ``Enum`` (7G) instead of bare integers/strings (≤6G),
+    preventing cross-module tag collisions;
+  * the simulation engine's future-event queue as a binary heap with
+    O(log n) push/pop (7G, ``HeapEventQueue``) replacing the custom
+    sorted linked list with O(n) insertion (≤6G, ``LinkedListEventQueue``).
+
+Both queue implementations are kept so benchmarks can compare them
+(paper Table 2 direction); they expose an identical interface and produce
+identical pop orders (stable FIFO within equal timestamps).
+"""
+from __future__ import annotations
+
+import enum
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+
+class Tag(enum.Enum):
+    """Event tags (CloudSim 7G uses Java ``Enum`` for collision-free tags)."""
+
+    # Core simulation control
+    SIM_START = enum.auto()
+    SIM_END = enum.auto()
+    SCHED_UPDATE = enum.auto()          # periodic processing update
+    # Broker / datacenter interactions
+    VM_CREATE = enum.auto()
+    VM_CREATE_ACK = enum.auto()
+    VM_DESTROY = enum.auto()
+    VM_MIGRATE = enum.auto()
+    VM_MIGRATE_ACK = enum.auto()
+    GUEST_CREATE = enum.auto()          # unified guest (VM or container) creation
+    CLOUDLET_SUBMIT = enum.auto()
+    CLOUDLET_RETURN = enum.auto()
+    CLOUDLET_PAUSE = enum.auto()
+    CLOUDLET_RESUME = enum.auto()
+    # Networking (NetworkCloudSim rewrite)
+    PKT_SEND = enum.auto()
+    PKT_FORWARD = enum.auto()
+    PKT_ARRIVE = enum.auto()
+    # Power / consolidation
+    HOST_POWER_ON = enum.auto()
+    HOST_POWER_OFF = enum.auto()
+    CONSOLIDATE = enum.auto()
+    # Cluster (ML-fleet) layer
+    NODE_FAILURE = enum.auto()
+    NODE_RECOVER = enum.auto()
+    CKPT_SAVE = enum.auto()
+    CKPT_RESTORE = enum.auto()
+    STEP_DONE = enum.auto()
+    ELASTIC_RESIZE = enum.auto()
+
+
+@dataclass(order=False)
+class Event:
+    """A discrete event.
+
+    Ordering is (time, priority, serial): FIFO among events with equal
+    timestamps and priorities — this matches CloudSim's deterministic
+    dispatch and makes heap vs. linked-list pop orders identical.
+    """
+
+    time: float
+    tag: Any                      # Tag for 7G; str/int tolerated for 6G-style
+    src: Optional[Any] = None
+    dst: Optional[Any] = None
+    data: Any = None
+    priority: int = 0
+    serial: int = field(default=-1)
+
+    def sort_key(self):
+        return (self.time, self.priority, self.serial)
+
+
+class EventQueue:
+    """Interface shared by both queue implementations."""
+
+    def push(self, ev: Event) -> None:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def pop(self) -> Event:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def peek(self) -> Optional[Event]:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __len__(self) -> int:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __bool__(self) -> bool:
+        return len(self) > 0
+
+
+class HeapEventQueue(EventQueue):
+    """CloudSim 7G future-event queue: binary heap, O(log n) push/pop."""
+
+    def __init__(self):
+        self._heap: list[tuple[tuple[float, int, int], Event]] = []
+        self._serial = itertools.count()
+
+    def push(self, ev: Event) -> None:
+        if ev.serial < 0:
+            ev.serial = next(self._serial)
+        heapq.heappush(self._heap, (ev.sort_key(), ev))
+
+    def pop(self) -> Event:
+        return heapq.heappop(self._heap)[1]
+
+    def peek(self) -> Optional[Event]:
+        return self._heap[0][1] if self._heap else None
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+
+class _Node:
+    __slots__ = ("ev", "nxt")
+
+    def __init__(self, ev, nxt=None):
+        self.ev = ev
+        self.nxt = nxt
+
+
+class LinkedListEventQueue(EventQueue):
+    """CloudSim ≤6G-style future-event queue.
+
+    Sorted singly-linked list with O(n) insertion (walk to position) and a
+    deliberately size-by-count ``__len__`` — reproducing two of the paper's
+    §4.4 findings (custom linked list for dispatch; ``size()`` vs
+    ``isEmpty()``). Used only as the 6G baseline in benchmarks.
+    """
+
+    def __init__(self):
+        self._head: Optional[_Node] = None
+        self._serial = itertools.count()
+
+    def push(self, ev: Event) -> None:
+        if ev.serial < 0:
+            ev.serial = next(self._serial)
+        key = ev.sort_key()
+        node = _Node(ev)
+        if self._head is None or key < self._head.ev.sort_key():
+            node.nxt = self._head
+            self._head = node
+            return
+        cur = self._head
+        while cur.nxt is not None and cur.nxt.ev.sort_key() <= key:
+            cur = cur.nxt
+        node.nxt = cur.nxt
+        cur.nxt = node
+
+    def pop(self) -> Event:
+        if self._head is None:
+            raise IndexError("pop from empty event queue")
+        node = self._head
+        self._head = node.nxt
+        return node.ev
+
+    def peek(self) -> Optional[Event]:
+        return self._head.ev if self._head else None
+
+    def is_empty(self) -> bool:
+        return self._head is None
+
+    def __len__(self) -> int:
+        # Intentionally O(n): the 6G pattern the paper replaces with isEmpty().
+        n, cur = 0, self._head
+        while cur is not None:
+            n += 1
+            cur = cur.nxt
+        return n

@@ -1,0 +1,117 @@
+"""Network model + virtualization overhead — paper contributions C4 and the
+NetworkCloudSim rewrite (§4.5).
+
+Topology: hosts attach to Top-of-Rack (ToR) switches; ToRs attach to an
+aggregate switch (the paper's Figure 5a tree). Packet transport is
+store-and-forward per *link*: every link traversal costs
+``payload_bits / link_bw`` (+ optional switch latency).  With the case-study
+topology this reproduces the paper's numbers exactly:
+
+  placement II (same rack):   host→ToR→host          = 2 links → 16 s / GB
+  placement III (cross rack): host→ToR→Agg→ToR→host  = 4 links → 32 s / GB
+
+i.e. the paper's ``networkHops ⋅ Σ_{i∈T} payload/bw`` with hops ∈ {1,2}.
+
+Virtualization overhead (C4): each *guest* endpoint adds its composed
+nesting-stack overhead (``O_N = O_V + O_C``) once per network use — sender
+and receiver each pay, matching Eq. (2)'s ``Σ_i ρ·O_α`` term.  Physical
+switches add none (paper §6: "physical components like switches remain
+unaffected").
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .entities import GuestEntity, HostEntity
+
+
+@dataclass
+class Packet:
+    src_cloudlet: int
+    dst_cloudlet: int
+    payload_bytes: float
+    src_guest: Optional[GuestEntity] = None
+    dst_guest: Optional[GuestEntity] = None
+    sent_at: float = 0.0
+
+
+@dataclass
+class Switch:
+    name: str
+    bw: float = 1e9                    # bits/s per port
+    latency: float = 0.0               # fixed per-traversal switching latency
+    level: int = 0                     # 0 = ToR, 1 = aggregate
+
+
+class NetworkTopology:
+    """Tree topology: rack → ToR switch → aggregate switch.
+
+    ≤6G required poking ``Switch`` member variables directly (paper §4.5);
+    here racks/links are declared through this one builder object.
+    """
+
+    def __init__(self, link_bw: float = 1e9, switch_latency: float = 0.0):
+        self.link_bw = link_bw
+        self.switch_latency = switch_latency
+        self.rack_of: Dict[int, int] = {}          # host id -> rack index
+        self.tor: Dict[int, Switch] = {}           # rack index -> ToR switch
+        self.agg = Switch("agg", bw=link_bw, latency=switch_latency, level=1)
+
+    def add_rack(self, rack: int, hosts: List[HostEntity]) -> None:
+        self.tor.setdefault(rack, Switch(f"tor-{rack}", bw=self.link_bw,
+                                         latency=self.switch_latency, level=0))
+        for h in hosts:
+            self.rack_of[h.id] = rack
+
+    # -- path computation ----------------------------------------------------
+    def path_links(self, src_host: HostEntity, dst_host: HostEntity) -> int:
+        """Number of store-and-forward link traversals between two hosts."""
+        if src_host.id == dst_host.id:
+            return 0
+        if self.rack_of.get(src_host.id) == self.rack_of.get(dst_host.id):
+            return 2                               # host→ToR→host
+        return 4                                   # host→ToR→Agg→ToR→host
+
+    def switches_on_path(self, src_host: HostEntity, dst_host: HostEntity) -> List[Switch]:
+        if src_host.id == dst_host.id:
+            return []
+        r1, r2 = self.rack_of.get(src_host.id), self.rack_of.get(dst_host.id)
+        if r1 == r2:
+            return [self.tor[r1]]
+        return [self.tor[r1], self.agg, self.tor[r2]]
+
+    # -- delays ----------------------------------------------------------------
+    @staticmethod
+    def _physical_host(g: GuestEntity) -> HostEntity:
+        e = g
+        while isinstance(e, GuestEntity) and e.host is not None:
+            e = e.host
+        return e  # type: ignore[return-value]
+
+    def transfer_delay(self, src: GuestEntity, dst: GuestEntity,
+                       payload_bytes: float) -> float:
+        """End-to-end packet delay including virtualization overhead (C4)."""
+        hs, hd = self._physical_host(src), self._physical_host(dst)
+        links = self.path_links(hs, hd)
+        if links == 0:
+            return 0.0                              # co-located: ρ = 0 in Eq.(2)
+        bw = min(self.link_bw, src.caps.bw, dst.caps.bw)
+        per_link = payload_bytes * 8.0 / bw
+        switch_lat = sum(s.latency for s in self.switches_on_path(hs, hd))
+        overhead = src.stack_overhead() + dst.stack_overhead()
+        return links * per_link + switch_lat + overhead
+
+
+def theoretical_makespan(lengths_mi: List[float], mips: float, overhead: float,
+                         network_hops: int, payload_bytes: float,
+                         bw: float) -> float:
+    """Paper Eq. (2): the case-study's analytic makespan for a task chain.
+
+    M_α = Σ_i (L_i/mips_α + ρ·O_α) + networkHops · Σ_i (payload/bw_α),
+    ρ = 1 iff networkHops > 0.
+    """
+    rho = 1.0 if network_hops > 0 else 0.0
+    compute = sum(l / mips + rho * overhead for l in lengths_mi)
+    transfer = network_hops * sum(payload_bytes * 8.0 / bw for _ in lengths_mi)
+    return compute + transfer

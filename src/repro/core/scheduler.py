@@ -1,0 +1,189 @@
+"""CloudletScheduler — paper Algorithm 1, with the three handler hooks.
+
+The 7G refinement (paper §4.5): the scheduling life-cycle is a *template*
+in the abstract class; extensions customize behaviour only through three
+handlers instead of re-implementing the whole loop:
+
+  handler 1 — per-cloudlet progress update   (``Cloudlet.update_progress``)
+  handler 2 — per-cloudlet stop condition    (``Cloudlet.is_finished``)
+  handler 3 — unpause policy                 (``CloudletScheduler.unpause_cloudlets``)
+
+Because handlers 1–2 live on the *cloudlet*, heterogeneous cloudlet types
+(plain + networked) coexist in one scheduler — the property the paper calls
+out as impossible in ≤6G.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from .entities import Cloudlet, CloudletStatus
+
+
+class CloudletScheduler:
+    """Template scheduler implementing Algorithm 1 of the paper."""
+
+    def __init__(self):
+        self.exec_list: List[Cloudlet] = []
+        self.wait_list: List[Cloudlet] = []
+        self.paused_list: List[Cloudlet] = []
+        self.finished: List[Cloudlet] = []
+        self.previous_time = 0.0
+        self.mips_share: Sequence[float] = ()
+        self.guest = None
+        self._finished_callbacks = []
+
+    def attach(self, guest) -> None:
+        self.guest = guest
+
+    def on_finish(self, cb) -> None:
+        self._finished_callbacks.append(cb)
+
+    # -- submission -----------------------------------------------------------
+    def submit(self, cl: Cloudlet, now: float) -> None:
+        cl.submit_time = now
+        if self.admit_immediately(cl):
+            cl.status = CloudletStatus.INEXEC
+            cl.start_time = now
+            self.exec_list.append(cl)
+        else:
+            cl.status = CloudletStatus.QUEUED
+            self.wait_list.append(cl)
+
+    def admit_immediately(self, cl: Cloudlet) -> bool:  # pragma: no cover - abstract-ish
+        raise NotImplementedError
+
+    # -- per-cloudlet MIPS allocation (line 3) ---------------------------------
+    def allocated_mips_for(self, cl: Cloudlet, now: float) -> float:
+        raise NotImplementedError
+
+    # -- handler 3 (line 14) ---------------------------------------------------
+    def unpause_cloudlets(self, wait_list: List[Cloudlet]) -> List[Cloudlet]:
+        """Default: nothing to unpause (time-shared runs everything already)."""
+        return []
+
+    # -- Algorithm 1 -----------------------------------------------------------
+    def update_processing(self, now: float, mips_share: Sequence[float]) -> float:
+        """Advance execution; return absolute next-event time (inf if idle).
+
+        Deviation note: the paper's pseudocode returns 0 when idle; we return
+        +inf so callers can ``min()`` across schedulers without special-casing.
+        """
+        self.mips_share = mips_share
+        time_span = now - self.previous_time                      # line 1
+        self.previous_time = now
+        for cl in list(self.exec_list):                           # lines 2-9
+            alloc = self.allocated_mips_for(cl, now)
+            cl.update_progress(time_span, alloc, now)             # handler 1
+            # (called even for time_span == 0 so stage machinery — SEND
+            #  emission, satisfied RECVs — can advance on wake-up events)
+        newly_done = [cl for cl in self.exec_list if cl.is_finished()]  # handler 2
+        for cl in newly_done:
+            self.exec_list.remove(cl)
+            cl.status = CloudletStatus.SUCCESS
+            cl.finish_time = now
+            self.finished.append(cl)
+            for cb in self._finished_callbacks:
+                cb(cl, now)
+        if not self.exec_list and not self.wait_list:             # lines 11-13
+            return float("inf")
+        unpaused = self.unpause_cloudlets(self.wait_list)         # lines 14-16
+        for cl in unpaused:
+            self.wait_list.remove(cl)
+            cl.status = CloudletStatus.INEXEC
+            if cl.start_time < 0:
+                cl.start_time = now
+            self.exec_list.append(cl)
+        next_event = float("inf")                                 # lines 17-23
+        for cl in self.exec_list:
+            alloc = self.allocated_mips_for(cl, now)
+            est = cl.estimate_finish(now, alloc)
+            if est < next_event:
+                next_event = est
+        return next_event
+
+    # -- introspection ---------------------------------------------------------
+    def current_mips_demand(self) -> float:
+        """MIPS the running cloudlets are consuming right now."""
+        return sum(self.allocated_mips_for(cl, self.previous_time)
+                   for cl in self.exec_list)
+
+    @property
+    def is_idle(self) -> bool:
+        return not self.exec_list and not self.wait_list
+
+
+class CloudletSchedulerTimeShared(CloudletScheduler):
+    """Time-shared: all submitted cloudlets run at once, capacity split evenly.
+
+    CloudSim semantics: per-PE capacity = total granted MIPS / max(#requested
+    PEs, #granted PEs); a cloudlet with ``pes`` PEs progresses at
+    ``pes × capacity``. No wait list, no unpausing (handler 3 unused —
+    exactly as the paper notes for ``CloudletSchedulerTimeShared``).
+    """
+
+    def admit_immediately(self, cl: Cloudlet) -> bool:
+        return True
+
+    def allocated_mips_for(self, cl: Cloudlet, now: float) -> float:
+        granted = sum(self.mips_share)
+        if granted <= 0 or not cl.wants_cpu(now):
+            return 0.0
+        active = [c for c in self.exec_list if c.wants_cpu(now)]
+        if not active:
+            return 0.0
+        requested_pes = sum(c.pes for c in active)
+        capacity = granted / max(requested_pes, len(self.mips_share))
+        return capacity * cl.pes
+
+    def current_mips_demand(self) -> float:
+        g = self.guest
+        if g is None:
+            return 0.0
+        now = self.previous_time
+        active_pes = sum(c.pes for c in self.exec_list if c.wants_cpu(now))
+        return min(active_pes * g.caps.mips, g.caps.total_mips)
+
+
+class CloudletSchedulerSpaceShared(CloudletScheduler):
+    """Space-shared: cloudlets own PEs exclusively; excess demand queues.
+
+    Handler 3 (unpause) admits waiting cloudlets whenever PEs free up — the
+    customization point the paper highlights.
+    """
+
+    def _used_pes(self) -> int:
+        return sum(c.pes for c in self.exec_list)
+
+    def _free_pes(self) -> int:
+        total = len(self.mips_share) if self.mips_share else (
+            self.guest.caps.num_pes if self.guest else 0)
+        return total - self._used_pes()
+
+    def admit_immediately(self, cl: Cloudlet) -> bool:
+        # Strict FIFO: never jump ahead of already-waiting cloudlets.
+        if self.wait_list:
+            return False
+        total = self.guest.caps.num_pes if self.guest else 1
+        return self._used_pes() + cl.pes <= total
+
+    def allocated_mips_for(self, cl: Cloudlet, now: float) -> float:
+        if not self.mips_share:
+            return (self.guest.caps.mips if self.guest else 0.0) * cl.pes
+        per_pe = sum(self.mips_share) / len(self.mips_share)
+        return per_pe * cl.pes
+
+    def unpause_cloudlets(self, wait_list: List[Cloudlet]) -> List[Cloudlet]:
+        free = self._free_pes()
+        out: List[Cloudlet] = []
+        for cl in wait_list:                       # strict FIFO admission:
+            if cl.pes > free:                      # head-of-line blocks queue
+                break
+            out.append(cl)
+            free -= cl.pes
+        return out
+
+    def current_mips_demand(self) -> float:
+        g = self.guest
+        if g is None:
+            return 0.0
+        return min(self._used_pes(), g.caps.num_pes) * g.caps.mips

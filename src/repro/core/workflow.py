@@ -1,0 +1,172 @@
+"""Workflow applications — networked cloudlets (NetworkCloudSim, rewritten).
+
+A ``NetworkCloudlet`` is a sequence of stages (paper §2, §4.5):
+
+  EXEC(length MI)   — compute, like a traditional cloudlet stage;
+  SEND(peer, bytes) — emit a payload to a peer cloudlet (non-blocking);
+  RECV(peer)        — block until the peer's payload arrives.
+
+7G fixes reproduced here (paper §4.5): stages are defined in **MI** (not
+milliseconds) so they obey the same execution model as plain cloudlets;
+payload sizes are **converted to bits** for transmission time; deadlines are
+actually *checked* (``deadline``/``missed_deadline``); and the whole thing is
+driven through Algorithm 1's handler methods rather than a forked scheduler —
+so plain and networked cloudlets coexist in one ``CloudletScheduler``.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+from .entities import Cloudlet, CloudletStatus
+from .network import Packet
+
+
+class StageKind(enum.Enum):
+    EXEC = enum.auto()
+    SEND = enum.auto()
+    RECV = enum.auto()
+
+
+@dataclass
+class Stage:
+    kind: StageKind
+    length: float = 0.0            # MI, for EXEC
+    peer: int = -1                 # peer cloudlet id, for SEND/RECV
+    payload_bytes: float = 0.0     # for SEND
+    done: bool = False
+
+
+class NetworkCloudlet(Cloudlet):
+    """Cloudlet composed of EXEC/SEND/RECV stages.
+
+    Implements Algorithm 1's handler methods only — the scheduling loop
+    itself is untouched (the 7G template property).
+    """
+
+    def __init__(self, stages: List[Stage], pes: int = 1, *,
+                 deadline: float = float("inf"), user_id: int = -1):
+        total = sum(s.length for s in stages if s.kind == StageKind.EXEC)
+        super().__init__(length=total, pes=pes, user_id=user_id)
+        self.stages = stages
+        self.stage_idx = 0
+        self.deadline = deadline
+        self.missed_deadline = False
+        self.send_fn: Optional[Callable[[Packet, float], None]] = None
+        self._arrived: Dict[int, bool] = {}      # peer id -> payload arrived
+        self.activation_id = -1                  # which DAG activation I belong to
+
+    # -- wiring ----------------------------------------------------------------
+    def attach_transport(self, send_fn: Callable[[Packet, float], None]) -> None:
+        self.send_fn = send_fn
+
+    def deliver(self, pkt: Packet, now: float) -> None:
+        """Called by the datacenter when a packet for me arrives."""
+        self._arrived[pkt.src_cloudlet] = True
+
+    # -- helpers ----------------------------------------------------------------
+    def _stage(self) -> Optional[Stage]:
+        return self.stages[self.stage_idx] if self.stage_idx < len(self.stages) else None
+
+    def _advance_nonblocking(self, now: float) -> None:
+        """Complete SEND stages and satisfied RECVs without consuming compute."""
+        while (st := self._stage()) is not None:
+            if st.kind == StageKind.SEND:
+                if self.send_fn is None:
+                    raise RuntimeError("NetworkCloudlet used without transport")
+                self.send_fn(Packet(src_cloudlet=self.id, dst_cloudlet=st.peer,
+                                    payload_bytes=st.payload_bytes,
+                                    src_guest=self.guest, sent_at=now), now)
+                st.done = True
+                self.stage_idx += 1
+            elif st.kind == StageKind.RECV and self._arrived.get(st.peer, False):
+                st.done = True
+                self.stage_idx += 1
+            else:
+                break
+
+    # -- CPU demand: blocked (RECV) / instant (SEND) stages consume no share.
+    def wants_cpu(self, now: float) -> bool:
+        st = self._stage()
+        return st is not None and st.kind == StageKind.EXEC
+
+    # -- handler 1: progress update ----------------------------------------------
+    def update_progress(self, time_span: float, alloc_mips: float, now: float) -> None:
+        # NOTE: progress applies only to the stage that was active at window
+        # start; a RECV satisfied by a packet *at* ``now`` unblocks after the
+        # window, never retroactively earning the waited time as compute.
+        st = self._stage()
+        if st is not None and st.kind == StageKind.EXEC:
+            before = sum(s.length for s in self.stages[: self.stage_idx]
+                         if s.kind == StageKind.EXEC)
+            executed_in_stage = self.length_so_far - before
+            grow = time_span * alloc_mips
+            room = st.length - executed_in_stage
+            step = min(grow, room)
+            self.length_so_far += step
+            if step >= room - 1e-9:
+                st.done = True
+                self.stage_idx += 1
+        self._advance_nonblocking(now)
+
+    # -- handler 2: stop condition ---------------------------------------------
+    def is_finished(self) -> bool:
+        done = self.stage_idx >= len(self.stages)
+        if done and self.finish_time < 0:
+            pass
+        return done
+
+    # -- next-event estimation ----------------------------------------------------
+    def estimate_finish(self, now: float, alloc_mips: float) -> float:
+        st = self._stage()
+        if st is None:
+            return now
+        if st.kind == StageKind.RECV:
+            return float("inf")                 # woken by packet arrival event
+        if st.kind == StageKind.SEND:
+            return now                          # resolves immediately on update
+        if alloc_mips <= 0:
+            return float("inf")
+        before = sum(s.length for s in self.stages[: self.stage_idx]
+                     if s.kind == StageKind.EXEC)
+        executed_in_stage = self.length_so_far - before
+        # Remaining EXEC work from here to the next blocking stage.
+        remaining = st.length - executed_in_stage
+        return now + max(remaining, 0.0) / alloc_mips
+
+    def check_deadline(self, now: float) -> None:
+        if now - self.submit_time > self.deadline:
+            self.missed_deadline = True
+
+
+# ---------------------------------------------------------------------------
+# DAG construction helpers (the case study's T0 → T1 chain, and general DAGs)
+# ---------------------------------------------------------------------------
+
+def chain_dag(lengths_mi: List[float], payload_bytes: float,
+              deadline: float = float("inf")) -> List[NetworkCloudlet]:
+    """Build a linear DAG T0 → T1 → … with one payload per edge."""
+    cls: List[NetworkCloudlet] = []
+    for L in lengths_mi:
+        cls.append(NetworkCloudlet([Stage(StageKind.EXEC, length=L)],
+                                   deadline=deadline))
+    for up, down in zip(cls[:-1], cls[1:]):
+        up.stages.append(Stage(StageKind.SEND, peer=down.id,
+                               payload_bytes=payload_bytes))
+        up.length = sum(s.length for s in up.stages if s.kind == StageKind.EXEC)
+        down.stages.insert(0, Stage(StageKind.RECV, peer=up.id))
+    return cls
+
+
+def generic_dag(nodes: List[float], edges: List[tuple],
+                payload_bytes: float) -> List[NetworkCloudlet]:
+    """Build a DAG from (src_idx, dst_idx) edges; each node is an EXEC length."""
+    cls = [NetworkCloudlet([Stage(StageKind.EXEC, length=L)]) for L in nodes]
+    for s_i, d_i in edges:
+        cls[s_i].stages.append(Stage(StageKind.SEND, peer=cls[d_i].id,
+                                     payload_bytes=payload_bytes))
+        cls[d_i].stages.insert(0, Stage(StageKind.RECV, peer=cls[s_i].id))
+    for c in cls:
+        c.length = sum(s.length for s in c.stages if s.kind == StageKind.EXEC)
+    return cls

@@ -1,0 +1,67 @@
+"""Activation sharding constraints (MaxText-style).
+
+Without explicit constraints, GSPMD's propagation can pick pathological
+layouts (e.g. batch-replicated fp32 activation all-reduces for ZeRO-sharded
+weights — observed on the first dry-run of this repo). Model code therefore
+pins the layout of key activations via ``constrain(x, logical_axes)``.
+
+The mesh+rules context is set around tracing (``use_act_sharding``);
+``constrain`` is a no-op when no context is active, so model code runs
+unchanged on a single device.
+
+Activation logical axes (defaults; §Perf overrides per experiment):
+  act_batch → ("pod","data")   act_heads/act_kv_heads/act_mlp/act_experts/
+  act_seq   → None                act_vocab → "model"
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from .sharding import resolve_spec
+
+ACT_RULES_BASE: Dict[str, Any] = {
+    "act_batch": ("pod", "data"),
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "act_vocab": "model",
+    "act_group": ("pod", "data"),     # MoE dispatch groups
+    None: None,
+}
+
+_tls = threading.local()
+
+
+def _ctx() -> Optional[Tuple[Mesh, Dict[str, Any]]]:
+    return getattr(_tls, "ctx", None)
+
+
+@contextlib.contextmanager
+def use_act_sharding(mesh: Mesh, overrides: Optional[Dict[str, Any]] = None):
+    rules = dict(ACT_RULES_BASE)
+    if overrides:
+        rules.update({k: v for k, v in overrides.items()
+                      if k.startswith("act_")})
+    prev = _ctx()
+    _tls.ctx = (mesh, rules)
+    try:
+        yield
+    finally:
+        _tls.ctx = prev
+
+
+def constrain(x: jax.Array, logical: Tuple) -> jax.Array:
+    ctx = _ctx()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = resolve_spec(x.shape, tuple(logical), mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

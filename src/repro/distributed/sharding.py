@@ -1,0 +1,142 @@
+"""Logical-axis → mesh sharding resolution.
+
+Model code annotates every parameter with *logical* axis names
+(see ``Model.specs()``); this module maps them onto mesh axes with
+divisibility-aware fallback (a dim that doesn't divide its mesh axis is
+replicated rather than erroring — e.g. kv_heads=8 on a 16-way model axis)
+and first-come-first-served conflict resolution (one mesh axis at most once
+per tensor).
+
+Default rules (MaxText-style 2D sharding):
+  tensor-parallel axes  : vocab / q_heads / kv_heads / mlp / experts → "model"
+  ZeRO-3 (FSDP) axis    : embed → "data" (cfg.zero3; optimizer state and
+                          params shard over data; XLA inserts the
+                          all-gather / reduce-scatter pairs)
+  batch                 : ("pod", "data")
+Rules are a plain dict — the §Perf hillclimb overrides them per experiment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+LOGICAL_RULES_BASE: Dict[str, Any] = {
+    "vocab": "model",
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    "embed": "data",          # ZeRO-3/FSDP; dropped when cfg.zero3=False
+    "embed_tok": None,        # token table: vocab-sharded only (gather-safe)
+    "embed_out": "model",
+    "layers": None,
+    "state": None,
+    "conv": None,
+    None: None,
+}
+
+
+def rules_for(cfg, overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    rules = dict(LOGICAL_RULES_BASE)
+    if not getattr(cfg, "zero3", True):
+        rules["embed"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def _present(mesh: Mesh, axis):
+    """Drop mesh axes absent from this mesh (e.g. 'pod' on a single pod)."""
+    if axis is None:
+        return None
+    axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+    axes = tuple(a for a in axes if a in mesh.shape)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def resolve_spec(shape: Tuple[int, ...], logical: Tuple, mesh: Mesh,
+                 rules: Dict[str, Any]) -> P:
+    """Logical axes + concrete shape → PartitionSpec (divisibility-aware)."""
+    used = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        axis = _present(mesh, rules.get(name))
+        ok = axis is not None
+        if ok:
+            axes = axis if isinstance(axis, (tuple, list)) else (axis,)
+            ok = all(a not in used for a in axes) \
+                and dim % _axis_size(mesh, axis) == 0 and dim > 0
+        if ok:
+            out.append(axis)
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def shard_tree(tree_shapes, tree_logical, mesh: Mesh, rules) -> Any:
+    """ShapeDtypeStruct tree + logical tree → NamedSharding tree."""
+    def one(sds, logical):
+        spec = resolve_spec(sds.shape, tuple(logical), mesh, rules)
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, tree_shapes, tree_logical,
+                        is_leaf=lambda v: isinstance(v, jax.ShapeDtypeStruct))
+
+
+def batch_axes(mesh: Mesh):
+    """Mesh axes used for the data-parallel batch dimension."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Shard dim0 (batch) over pod×data when divisible, else replicate."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    if axes and shape[0] % size == 0 and shape[0] > 0:
+        return P(axes, *([None] * (len(shape) - 1)))
+    return P(*([None] * len(shape)))
+
+
+def cache_spec(shape: Tuple[int, ...], kind: str, mesh: Mesh,
+               stacked: bool) -> P:
+    """Decode-cache sharding. Layout (maybe-stacked leading 'layers' dim):
+       attn k/v: [B, S, K, hd] — batch→pod×data; K→model if divisible,
+       else S→model (context-parallel cache; the §Perf baseline/lever).
+       mamba/rwkv states: batch→pod×data; channel dim→model if divisible."""
+    lead = (None,) if stacked else ()
+    body = shape[1:] if stacked else shape
+    axes = batch_axes(mesh)
+    dp = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    b = axes if (axes and body[0] % dp == 0 and body[0] > 0) else None
+    model = mesh.shape.get("model", 1)
+    if kind == "attn_kv" and len(body) == 4:
+        _, S, K, _ = body
+        if K % model == 0 and model > 1:
+            return P(*lead, b, None, "model", None)
+        if S % model == 0 and model > 1:
+            return P(*lead, b, "model", None, None)
+        return P(*lead, b, None, None, None)
+    # state-ish tensors: try to shard the largest non-batch dim over model
+    rest = [None] * (len(body) - 1)
+    if len(body) >= 2:
+        sizes = list(body[1:])
+        order = sorted(range(len(sizes)), key=lambda i: -sizes[i])
+        for i in order:
+            if sizes[i] % model == 0 and model > 1:
+                rest[i] = "model"
+                break
+    return P(*lead, b, *rest)

@@ -1,0 +1,122 @@
+"""Flash attention forward — Pallas TPU kernel with explicit VMEM tiling.
+
+Schedule: grid (batch, q_heads, q_blocks, k_blocks); the k_blocks axis is
+minor-most, so on TPU the kernel revisits the same output tile sequentially
+while VMEM scratch (running max ``m``, denominator ``l``, accumulator
+``acc``) carries the online softmax across k blocks — the classic
+flash-attention recurrence, blocked for the MXU (tiles are multiples of
+128 on the contracting/lane dims).
+
+GQA needs no KV duplication in HBM: the k/v BlockSpec index_map folds the
+query head onto its kv head (``h → h // group``).
+
+Memory behaviour vs the XLA path: no [S_q, S_kv] score tensor ever touches
+HBM — per-tile traffic is q + k + v + out only. This is the §Perf lever for
+the memory-dominated attention cells (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  n_k: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, hd]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+        v = v_ref[0, 0].astype(jnp.float32)                  # [bk, hd]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [bq, bk]
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 0)
+            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                           (block_q, block_k), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        # rows that are fully masked keep p==exp(NEG_INF-NEG_INF)=1 → zero them
+        p = jnp.where((s <= NEG_INF)[:, :], 0.0, p) if causal else p
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+        m_ref[...] = m_new
+
+    if causal:
+        # skip blocks strictly above the diagonal
+        @pl.when(kj * block_k <= qi * block_q + block_q - 1)
+        def _():
+            _compute()
+    else:
+        _compute()
+
+    @pl.when(kj == n_k - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False) -> jax.Array:
+    """q: [B, H, Sq, hd]; k, v: [B, K, Skv, hd] with H = K·G. → [B, H, Sq, hd].
+
+    TPU is the target; ``interpret=True`` executes the same kernel body on
+    CPU for validation (tests sweep shapes/dtypes against ref.py).
+    """
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0
+    group = H // K
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Skv)
+    assert Sq % block_q == 0 and Skv % block_k == 0
+    n_q, n_k = Sq // block_q, Skv // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                               block_q=block_q, block_k=block_k, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, i, j: (b, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),        # m
+            pltpu.VMEM((block_q,), jnp.float32),        # l
+            pltpu.VMEM((block_q, hd), jnp.float32),     # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

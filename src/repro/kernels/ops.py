@@ -1,0 +1,32 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+The model stack calls these when ``cfg.use_pallas`` (TPU); on CPU they run
+in interpret mode (tests) or the models fall back to the XLA reference path.
+Layout adapters live here so kernels keep their natural [B, H, S, N] tiling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention
+from .rwkv6_scan import wkv6
+
+
+def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool = True, interpret: bool = False) -> jax.Array:
+    """Model layout adapter: q [B,S,H,hd], k/v [B,S,K,hd] → [B,S,H,hd]."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)
+
+
+def wkv6_op(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+            u: jax.Array, *, interpret: bool = False):
+    """Model layout adapter: r/k/v/logw [B,S,H,N], u [H,N] →
+    (y [B,S,H,N], state [B,H,N,N])."""
+    tr = lambda t: t.transpose(0, 2, 1, 3)
+    y, state = wkv6(tr(r), tr(k), tr(v), tr(logw), u, interpret=interpret)
+    return y.transpose(0, 2, 1, 3), state

@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jax.Array:
+    """q: [B,H,Sq,hd]; k,v: [B,K,Skv,hd]; plain softmax attention."""
+    B, H, Sq, hd = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    group = H // K
+    kf = jnp.repeat(k.astype(jnp.float32), group, axis=1)
+    vf = jnp.repeat(v.astype(jnp.float32), group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf)
+    s = s / math.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Skv), bool), k=Skv - Sq)
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vf)
+    return out.astype(q.dtype)
+
+
+def wkv6_ref(r, k, v, logw, u, state=None):
+    """RWKV-6 WKV oracle. r,k,v,logw: [B,H,S,N]; u: [H,N];
+    state: [B,H,N,N] (None ⇒ zeros). Returns (y [B,H,S,N], state_out)."""
+    B, H, S, N = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                  # [B,H,N]
+        out = jnp.einsum("bhn,bhnm->bhm", rt, s) + \
+            jnp.einsum("bhn,bhn,bhm->bhm", rt, u[None] * kt, vt)
+        s = s * wt[..., None] + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return s, out
+
+    xs = tuple(t.transpose(2, 0, 1, 3) for t in (rf, kf, vf, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 2, 0, 3).astype(r.dtype), state

@@ -1,0 +1,103 @@
+"""RWKV-6 WKV — Pallas TPU kernel (chunked data-dependent-decay scan).
+
+Grid (batch, heads, chunks); the chunk axis is minor-most so the [N, N]
+fp32 state matrix lives in VMEM scratch across chunk steps of one (b, h)
+pair. Per chunk (L = chunk length, N = head size):
+
+  cl      = cumsum(log w)                        (within-chunk log decay)
+  intra   = ((r∘e^{cl_prev}) @ (k∘e^{-cl})ᵀ ⊙ strict-lower) @ v
+          + (Σ_n r·u·k) ∘ v                       (the diag-u bonus)
+  inter   = (r∘e^{cl_prev}) @ S
+  S_next  = e^{cl_L} ∘ S + (k∘e^{cl_L - cl})ᵀ @ v
+
+Identical math to models/rwkv6._wkv_chunked (the XLA path) and validated
+against kernels/ref.wkv6_ref (the exact sequential oracle). The matmuls are
+[L,N]×[N,L] / [L,L]×[L,N] — MXU-shaped for L = N = 64-128 tiles; no [L,L]
+matrix ever reaches HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+CLAMP = 30.0
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, y_ref, s_out_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    r = r_ref[0, 0].astype(jnp.float32)            # [L, N]
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)               # [N]
+
+    cl = jnp.cumsum(lw, axis=0)                    # [L, N]
+    cl_prev = cl - lw
+    r_t = r * jnp.exp(cl_prev)
+    k_t = k * jnp.exp(-jnp.maximum(cl, -CLAMP))
+    a = jax.lax.dot_general(r_t, k_t, (((1,), (1,)), ((), ())))   # [L, L]
+    ti = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    tj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    a = jnp.where(ti > tj, a, 0.0)                 # strict lower triangle
+    bonus = jnp.sum(r * u[None, :] * k, axis=1)    # [L]
+    y = a @ v + bonus[:, None] * v + r_t @ state_ref[...]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    decay_all = jnp.exp(cl[-1])                    # [N]
+    k_s = k * jnp.exp(cl[-1][None, :] - cl)
+    state_ref[...] = state_ref[...] * decay_all[:, None] + \
+        jax.lax.dot_general(k_s, v, (((0,), (0,)), ((), ())))
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0, 0] = state_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,
+         u: jax.Array, *, chunk: int = DEFAULT_CHUNK,
+         interpret: bool = False):
+    """r,k,v,logw: [B, H, S, N]; u: [H, N] → (y [B,H,S,N], state [B,H,N,N]).
+
+    Fresh-sequence variant (zero initial state) — the decode path keeps its
+    state in the serving cache and uses the single-step XLA update instead.
+    """
+    B, H, S, N = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad sequences to a chunk multiple"
+    n_chunks = S // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, N), lambda b, h, c: (h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, chunk, N), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1, N, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, N), r.dtype),
+            jax.ShapeDtypeStruct((B, H, N, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u)
+    return y, state

@@ -1,0 +1,206 @@
+"""Roofline-term extraction from compiled dry-run artifacts (TPU v5e target).
+
+  compute_term    = HLO_FLOPs  / (chips × 197e12 FLOP/s)
+  memory_term     = HLO_bytes  / (chips × 819e9 B/s)
+  collective_term = coll_bytes / (chips × 50e9 B/s)
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()``; collective bytes
+from walking the post-SPMD HLO text (operand sizes of all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute, async
+``-start`` counted once). Shapes in the per-device program are *shards*, so
+parsed sums are per-device; global = ×chips.
+
+``cost_analysis`` counts ``while``-loop bodies ONCE (verified empirically),
+so scanned-layer programs under-report. The dry-run therefore compiles
+depth-1 and depth-2 *unrolled* variants of every cell and extrapolates
+linearly in depth — exact for homogeneous stacks (the intercept carries
+embedding/head/optimizer-fixed cost). See EXPERIMENTS.md §Method.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\(?[a-z][^=]*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(?:\[(\d+),(\d+)\]|\{\{([0-9, ]+)\})")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if not m:
+        return 1
+    if m.group(2) is not None:
+        return int(m.group(2))                 # iota form [n_groups, size]
+    return len(m.group(3).split(","))          # explicit first group
+
+
+def collective_bytes_per_device(hlo_text: str) -> Dict[str, float]:
+    """Per-device collective bytes by kind, parsed from scheduled HLO.
+
+    Result types are parsed (scheduled HLO names operands without types);
+    result == operand size for all-reduce / all-to-all / collective-permute;
+    all-gather's result is the gathered (received) bytes; reduce-scatter's
+    result is one shard, so it is scaled by the replica-group size to
+    recover operand bytes. Async ``-start`` ops counted once (``-done``
+    never matches: its operand is the start op, not a collective call)."""
+    out: Dict[str, float] = {k: 0.0 for k in
+                             ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(2)
+        result_types = m.group(1)
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(result_types))
+        if kind == "reduce-scatter":
+            total *= _group_size(line)
+        out[kind] += total
+    out["total"] = sum(out.values())
+    return out
+
+
+def cost_of(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def memory_of(compiled) -> Optional[Dict[str, float]]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return None
+    if ma is None:
+        return None
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "temp_size_in_bytes",
+            "alias_size_in_bytes", "host_temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if out:
+        out["per_device_total"] = (out.get("argument_size_in_bytes", 0.0)
+                                   - out.get("alias_size_in_bytes", 0.0)
+                                   + out.get("output_size_in_bytes", 0.0)
+                                   + out.get("temp_size_in_bytes", 0.0))
+    return out or None
+
+
+def extrapolate(cost1: Dict[str, float], cost2: Dict[str, float],
+                n_groups: int) -> Dict[str, float]:
+    """Linear-in-depth: cost(L) = a + b·L from L=1,2 super-block compiles."""
+    out = {}
+    for k in cost1:
+        b = cost2[k] - cost1[k]
+        a = cost1[k] - b
+        out[k] = a + b * n_groups
+    return out
+
+
+def roofline_terms(flops_global: float, bytes_global: float,
+                   coll_bytes_global: float, chips: int) -> Dict[str, float]:
+    compute = flops_global / (chips * PEAK_FLOPS)
+    memory = bytes_global / (chips * HBM_BW)
+    collective = coll_bytes_global / (chips * LINK_BW)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["dominant"] = dom
+    terms["step_time_lower_bound_s"] = max(compute, memory) + collective
+    return terms
+
+
+def analytic_hbm_model(cfg, shape, mesh_shape: Dict[str, int],
+                       optimizer: str = "adamw") -> Dict[str, float]:
+    """Per-device HBM estimate (bytes) from first principles.
+
+    Reported alongside ``memory_analysis`` because the CPU backend's
+    ``temp_size_in_bytes`` over-approximates badly: CPU buffer assignment
+    barely reuses transients (verified: two unrolled layers report ~2× one
+    layer even under full remat), so it reflects *sum* of transients, not
+    the TPU peak. Params/opt/grads/residual terms below are exact given the
+    sharding rules; transients are a small multiple of one block's working
+    set by construction (remat + scanned layers).
+    """
+    model = mesh_shape.get("model", 1)
+    data = mesh_shape.get("data", 1) * mesh_shape.get("pod", 1)
+    chips = max(model * data, 1)
+    P = cfg.param_count()
+    p_shard = model * (data if cfg.zero3 else 1)
+    params_b = 2.0 * P / p_shard
+    tokens_dev = shape.global_batch * shape.seq_len / max(data, 1)
+    out = {"params": params_b}
+    if shape.kind == "train":
+        out["opt_state"] = (8.0 if optimizer == "adamw" else 1.0) * P / p_shard
+        out["grads"] = 4.0 * P / p_shard                  # fp32 transient
+        out["residuals"] = cfg.n_layers * tokens_dev * cfg.d_model * 2.0
+        out["logits"] = tokens_dev * cfg.vocab / model * 4.0
+        out["block_transient"] = 6.0 * tokens_dev * max(cfg.d_ff, 2 * cfg.d_model) \
+            / model * 2.0
+    elif shape.kind == "prefill":
+        out["block_transient"] = 8.0 * tokens_dev * max(cfg.d_ff, 2 * cfg.d_model) \
+            / model * 2.0
+        out["logits"] = tokens_dev * cfg.vocab / model * 2.0
+    else:  # decode: KV/state cache dominates
+        n_attn = sum(1 for c in (cfg.block_pattern or "a" * 1)
+                     if c == "a") * (cfg.n_layers // max(len(cfg.block_pattern), 1)) \
+            if cfg.block_pattern else cfg.n_layers
+        if cfg.family == "ssm":
+            n_attn = 0
+        kv_heads_shard = model if cfg.n_kv_heads % model == 0 else 1
+        seq_shard = model if (kv_heads_shard == 1 and
+                              shape.seq_len % model == 0) else 1
+        cache = (2.0 * n_attn * shape.global_batch * shape.seq_len *
+                 cfg.n_kv_heads * cfg.hd * 2.0 /
+                 max(data if shape.global_batch % data == 0 else 1, 1) /
+                 max(kv_heads_shard * seq_shard, 1))
+        if cfg.family in ("ssm", "hybrid"):
+            n_state = cfg.n_layers - n_attn
+            cache += n_state * shape.global_batch * 2 * cfg.d_model * \
+                max(cfg.d_state, cfg.hd if cfg.family == "ssm" else cfg.d_state) * 4.0
+        out["cache"] = cache
+    out["total"] = sum(out.values())
+    out["total_gb"] = out["total"] / 1e9
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """MFU-convention useful FLOPs: 6·N_active·tokens (train) or 2·N_active·
+    tokens (fwd-only); attention score/value FLOPs excluded (standard)."""
+    n_active = cfg.active_param_count()
+    # exclude embedding table lookups (gather, not matmul); the unembed
+    # projection IS a matmul — keep it. tok embed rows = vocab·d once.
+    n_active -= cfg.vocab * cfg.d_model
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    factor = 6.0 if shape.kind == "train" else 2.0
+    return factor * n_active * tokens

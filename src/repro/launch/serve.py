@@ -1,0 +1,47 @@
+"""Serving launcher (continuous batching, slot-based KV cache).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6_7b --tiny \
+      --prompts "1,2,3;4,5" --max-new 16
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--prompts", default="1,2,3;4,5,6",
+                    help="';'-separated prompts of ','-separated token ids")
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=256)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--ckpt", default=None, help="restore params from dir")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs.base import load_arch, load_tiny
+    from repro.models.model import build
+    from repro.serve import ServeConfig, ServeEngine
+
+    cfg = load_tiny(args.arch) if args.tiny else load_arch(args.arch)
+    model = build(cfg, seq_impl="scan")
+    params = model.init(jax.random.PRNGKey(0))
+    if args.ckpt:
+        from repro.checkpoint import CheckpointManager
+        state = {"params": params}
+        state, step, _ = CheckpointManager(args.ckpt).restore(state)
+        params = state["params"]
+        print(f"restored step {step} from {args.ckpt}")
+    eng = ServeEngine(cfg, params, ServeConfig(batch_size=args.batch_size,
+                                               max_seq=args.max_seq,
+                                               max_new_tokens=args.max_new))
+    prompts = [[int(t) for t in p.split(",") if t.strip()]
+               for p in args.prompts.split(";")]
+    for p, out in zip(prompts, eng.generate(prompts)):
+        print(f"{p} -> {out}")
+
+
+if __name__ == "__main__":
+    main()

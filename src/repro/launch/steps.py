@@ -1,0 +1,192 @@
+"""Step builders: abstract inputs + sharded jitted train/prefill/serve steps.
+
+Everything here works on ``ShapeDtypeStruct``s (no allocation) so the same
+builders serve the 512-device dry-run and real (tiny) runs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.distributed.sharding import (batch_spec, cache_spec, resolve_spec,
+                                        rules_for, shard_tree)
+from repro.models.model import Model, build
+from repro.optim import Optimizer, clip_by_global_norm, make_optimizer
+
+SDS = jax.ShapeDtypeStruct
+
+
+# --------------------------------------------------------------------------
+# abstract trees
+# --------------------------------------------------------------------------
+
+def abstract_params(model: Model, param_dtype: Optional[str] = None):
+    """ShapeDtypeStruct tree of model.init (optionally re-typed, e.g. bf16
+    storage for the dry-run's memory realism)."""
+    tree = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    if param_dtype is not None:
+        dt = jnp.dtype(param_dtype)
+        tree = jax.tree.map(
+            lambda s: SDS(s.shape, dt if s.dtype == jnp.float32 else s.dtype),
+            tree)
+    return tree
+
+
+def param_shardings(model: Model, params_abs, mesh: Mesh, rules) -> Any:
+    return shard_tree(params_abs, model.specs(), mesh, rules)
+
+
+def opt_shardings(opt: Optimizer, params_abs, p_shardings, mesh: Mesh):
+    """Optimizer-state shardings derived from param shardings."""
+    state_abs = jax.eval_shape(opt.init, params_abs)
+    repl = NamedSharding(mesh, P())
+
+    flat_p, _ = jax.tree.flatten(params_abs)
+    flat_s, _ = jax.tree.flatten(p_shardings)
+    by_shape = {}
+    for sds, sh in zip(flat_p, flat_s):
+        by_shape.setdefault(sds.shape, sh)
+
+    def one(s: SDS):
+        if s.shape in by_shape:                       # m/v: same as param
+            return by_shape[s.shape]
+        # adafactor factored moments: match a param shape prefix/suffix
+        for shape, sh in by_shape.items():
+            if len(shape) >= 2 and s.shape == shape[:-1]:
+                return NamedSharding(mesh, P(*sh.spec[: len(s.shape)]))
+            if len(shape) >= 2 and s.shape == shape[:-2] + shape[-1:]:
+                spec = list(sh.spec[: len(shape)])
+                del spec[-2]
+                return NamedSharding(mesh, P(*spec))
+        return repl
+    return jax.tree.map(one, state_abs)
+
+
+# --------------------------------------------------------------------------
+# inputs
+# --------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh
+                ) -> Dict[str, Any]:
+    """Abstract model inputs (+ shardings attached) for one shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+
+    def tok(shp, dtype=jnp.int32):
+        return SDS(shp, dtype, sharding=NamedSharding(mesh, batch_spec(shp, mesh)))
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio":
+            batch = {"frames": tok((B, S, cfg.d_model), dt),
+                     "labels": tok((B, S))}
+        elif cfg.frontend == "vision":
+            s_text = S - cfg.n_patches
+            batch = {"tokens": tok((B, s_text)),
+                     "patches": tok((B, cfg.n_patches, cfg.d_model), dt),
+                     "labels": tok((B, s_text))}
+        else:
+            batch = {"tokens": tok((B, S)), "labels": tok((B, S))}
+        if shape.kind == "prefill":
+            batch.pop("labels")
+        return batch
+    # decode: one new token against an S-long cache
+    return {"tokens": tok((B, 1)),
+            "cache_index": SDS((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))}
+
+
+def cache_abstract(model: Model, batch_size: int, max_seq: int, mesh: Mesh):
+    """Abstract cache tree with shardings (see sharding.cache_spec)."""
+    cache = jax.eval_shape(lambda: model.init_cache(batch_size, max_seq))
+    stacked = model.cfg.scan_layers
+
+    def annotate(path, s: SDS):
+        key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        kind = "attn_kv" if key in ("k", "v") else "state"
+        spec = cache_spec(s.shape, kind, mesh, stacked)
+        return SDS(s.shape, s.dtype, sharding=NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map_with_path(annotate, cache)
+
+
+# --------------------------------------------------------------------------
+# steps
+# --------------------------------------------------------------------------
+
+def make_train_step(model: Model, opt: Optimizer, *, lr: float = 3e-4,
+                    clip: float = 1.0):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch):
+        logits, _ = model.apply(params, batch)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    def serve_step(params, cache, batch):
+        logits, cache = model.apply(params, {"tokens": batch["tokens"]},
+                                    cache=cache,
+                                    cache_index=batch["cache_index"])
+        return logits, cache
+    return serve_step
+
+
+# --------------------------------------------------------------------------
+# the full bundle for one (arch × shape × mesh) cell
+# --------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh: Mesh, *,
+               rule_overrides=None, optimizer: str = "adamw",
+               moe_impl: str = "onehot", param_dtype: str = "bfloat16",
+               seq_impl: str = "chunked_cost") -> Tuple[Any, Tuple]:
+    """Returns (jitted_fn, abstract_args) ready for .lower(*args).
+
+    ``seq_impl`` defaults to the dry-run cost variant (compile-cheap,
+    FLOP-faithful to the TPU kernel target); real runs pass "chunked"/"scan".
+    """
+    from repro.distributed.act import use_act_sharding
+
+    model = build(cfg, moe_impl=moe_impl, seq_impl=seq_impl)
+    rules = rules_for(cfg, rule_overrides)
+    params_abs = abstract_params(model, param_dtype)
+    p_sh = param_shardings(model, params_abs, mesh, rules)
+    params_abs = jax.tree.map(lambda s, sh: SDS(s.shape, s.dtype, sharding=sh),
+                              params_abs, p_sh)
+    batch = input_specs(cfg, shape, mesh)
+
+    def under_act(fn):
+        """Trace-time activation-sharding context (see distributed/act.py)."""
+        @functools.wraps(fn)
+        def wrapped(*a):
+            with use_act_sharding(mesh, rule_overrides):
+                return fn(*a)
+        return wrapped
+
+    if shape.kind == "train":
+        opt = make_optimizer(optimizer)
+        o_sh = opt_shardings(opt, params_abs, p_sh, mesh)
+        opt_abs = jax.tree.map(lambda s, sh: SDS(s.shape, s.dtype, sharding=sh),
+                               jax.eval_shape(opt.init, params_abs), o_sh)
+        fn = jax.jit(under_act(make_train_step(model, opt)),
+                     donate_argnums=(0, 1))
+        return fn, (params_abs, opt_abs, batch)
+    if shape.kind == "prefill":
+        fn = jax.jit(under_act(make_prefill_step(model)))
+        return fn, (params_abs, batch)
+    # decode
+    cache_abs = cache_abstract(model, shape.global_batch, shape.seq_len, mesh)
+    fn = jax.jit(under_act(make_serve_step(model)), donate_argnums=(1,))
+    return fn, (params_abs, cache_abs, batch)

@@ -1,0 +1,43 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3_8b --tiny \
+      --steps 50 --workdir /tmp/run --fail-at 20
+
+Full-config multi-pod launches use the same code path via the dry-run's
+mesh/sharding builders (launch/steps.py) on real TPU backends; on this CPU
+container only tiny variants execute for real (full configs compile-only —
+see launch/dryrun.py).
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--tiny", action="store_true",
+                    help="use the reduced smoke config (CPU-executable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--workdir", default="/tmp/repro_train")
+    ap.add_argument("--fail-at", default="")
+    args = ap.parse_args()
+
+    from repro.configs.base import load_arch, load_tiny
+    from repro.train import TrainConfig, train
+
+    cfg = load_tiny(args.arch) if args.tiny else load_arch(args.arch)
+    fails = {int(s) for s in args.fail_at.split(",") if s.strip()}
+    r = train(cfg, TrainConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                               lr=args.lr, optimizer=args.optimizer),
+              args.workdir, failure_at=fails,
+              on_step=lambda s, l: s % 10 == 0 and print(f"step {s}: {l:.4f}"))
+    print(f"final: step={r.final_step} restarts={r.restarts} "
+          f"loss={r.losses[-1]:.4f} {r.steps_per_sec:.2f} steps/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,264 @@
+"""Core transformer building blocks (pure-function JAX, param pytrees).
+
+Conventions:
+  * params are nested dicts of arrays; a parallel tree of *logical axis*
+    tuples (see ``specs`` functions) drives sharding via
+    ``repro.distributed.sharding``.
+  * logical axes: "embed" (d_model), "vocab", "q_heads", "kv_heads",
+    "head_dim", "mlp", "experts", "layers", "state", "conv".
+  * attention over long KV is computed in statically-unrolled KV chunks with
+    an online softmax (flash-attention schedule in pure XLA) — bounds the
+    S_q×S_kv score buffer AND keeps FLOPs visible to ``cost_analysis`` (an
+    inner ``lax.scan`` would hide them; see EXPERIMENTS.md §Method).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act import constrain
+
+Params = Dict[str, Any]
+
+# KV chunk size for blocked attention (also the Pallas kernel's macro-tile).
+ATTN_CHUNK = 4096
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# --------------------------------------------------------------------------
+# norms / rope
+# --------------------------------------------------------------------------
+
+def rms_norm_init(d: int) -> Params:
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(p: Params, x: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"]).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs          # [..., S, half]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]  # [..., S, 1, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA / MQA / MHA; optional qk-norm; causal or bidirectional)
+# --------------------------------------------------------------------------
+
+def padded_heads(cfg: ArchConfig) -> int:
+    return max(cfg.n_heads, cfg.pad_q_heads or 0)
+
+
+def attention_init(rng, cfg: ArchConfig) -> Params:
+    D, H, K, hd = cfg.d_model, padded_heads(cfg), cfg.n_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = 1.0 / math.sqrt(D)
+    wq = jax.random.normal(k1, (D, H, hd), jnp.float32) * s
+    wo = jax.random.normal(k4, (H, hd, D), jnp.float32) * (1.0 / math.sqrt(H * hd))
+    if H > cfg.n_heads:
+        # padding heads are structurally zero: identical function, dense
+        # sharding (see ArchConfig.pad_q_heads). Padding is PER KV-GROUP
+        # (layout h = k*G_pad + g) so real heads keep their kv assignment.
+        assert H % K == 0 and cfg.n_heads % K == 0
+        g_pad, g_real = H // K, cfg.n_heads // K
+        mask = ((jnp.arange(H) % g_pad) < g_real).astype(jnp.float32)
+        wq = wq * mask[None, :, None]
+        wo = wo * mask[:, None, None]
+    p = {
+        "wq": wq,
+        "wk": jax.random.normal(k2, (D, K, hd), jnp.float32) * s,
+        "wv": jax.random.normal(k3, (D, K, hd), jnp.float32) * s,
+        "wo": wo,
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd)
+        p["k_norm"] = rms_norm_init(hd)
+    return p
+
+
+def attention_specs(cfg: ArchConfig) -> Params:
+    p = {
+        "wq": ("embed", "q_heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("q_heads", "head_dim", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": (None,)}
+        p["k_norm"] = {"scale": (None,)}
+    return p
+
+
+def _online_attn(q, k, v, *, causal: bool, q_offset, chunk: int):
+    """Blocked attention with online softmax over KV chunks.
+
+    q: [B,Sq,H,hd]  k,v: [B,Skv,K,hd]  (H = K·G)
+    q_offset: absolute position of q[0] — scalar, or [B] for per-row decode
+    positions (continuous batching). Statically unrolled KV chunks.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd) * (1.0 / math.sqrt(hd))
+    acc = jnp.zeros((B, Sq, K, G, hd), jnp.float32)
+    m = jnp.full((B, Sq, K, G), -jnp.inf, jnp.float32)
+    l = jnp.zeros((B, Sq, K, G), jnp.float32)
+    n_chunks = max(1, (Skv + chunk - 1) // chunk)
+    for ci in range(n_chunks):
+        lo = ci * chunk
+        hi = min(lo + chunk, Skv)
+        kc = k[:, lo:hi].astype(jnp.float32)
+        vc = v[:, lo:hi].astype(jnp.float32)
+        s = jnp.einsum("bqkgh,bskh->bqkgs", qg.astype(jnp.float32), kc)
+        if causal:
+            off = jnp.asarray(q_offset)
+            off = off[:, None] if off.ndim == 1 else off[None, None]
+            qpos = off + jnp.arange(Sq)[None, :]                   # [B|1, Sq]
+            kpos = lo + jnp.arange(hi - lo)
+            mask = qpos[:, :, None] >= kpos[None, None, :]         # [B|1,Sq,Sc]
+            s = jnp.where(mask[:, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(jnp.isfinite(s), p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bqkgs,bskh->bqkgh", p, vc)
+        m = m_new
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                    positions: jax.Array, causal: bool,
+                    cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    cache_index: Optional[jax.Array] = None,
+                    ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: [B,S,D] → [B,S,D]. With ``cache`` (k,v of [B,S_max,K,hd]) performs
+    incremental decode: writes new kv at ``cache_index`` and attends to the
+    full cache prefix."""
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", "act_kv_heads", None))
+    v = constrain(v, ("act_batch", "act_seq", "act_kv_heads", None))
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        idx = jnp.asarray(cache_index)
+        if idx.ndim == 0:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, idx, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, idx, 0, 0))
+        else:
+            # per-row positions (continuous batching): vmapped row updates
+            upd = jax.vmap(lambda c, new, i: jax.lax.dynamic_update_slice(
+                c, new, (i, 0, 0)))
+            ck = upd(ck, k.astype(ck.dtype), idx)
+            cv = upd(cv, v.astype(cv.dtype), idx)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        q_offset = idx            # scalar or [B]; masks stale slots away
+    else:
+        q_offset = 0
+    # decode (Sq==1): scores are tiny, use large chunks to limit HLO size
+    chunk = ATTN_CHUNK if q.shape[1] > 1 else 65536
+    out = _online_attn(q, k, v, causal=causal or cache is not None,
+                       q_offset=q_offset, chunk=chunk)
+    out = constrain(out, ("act_batch", "act_seq", "act_heads", None))
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(dt), p["wo"].astype(dt))
+    return constrain(y, ("act_batch", "act_seq", "act_embed")), new_cache
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(rng, cfg: ArchConfig) -> Params:
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "w_gate": jax.random.normal(k1, (D, F), jnp.float32) / math.sqrt(D),
+        "w_up": jax.random.normal(k2, (D, F), jnp.float32) / math.sqrt(D),
+        "w_down": jax.random.normal(k3, (F, D), jnp.float32) / math.sqrt(F),
+    }
+
+
+def mlp_specs(cfg: ArchConfig) -> Params:
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def mlp_apply(p: Params, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"].astype(dt))
+    g = constrain(g, ("act_batch", "act_seq", "act_mlp"))
+    u = constrain(u, ("act_batch", "act_seq", "act_mlp"))
+    y = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+    return constrain(y, ("act_batch", "act_seq", "act_embed"))
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+
+def embed_init(rng, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(rng)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["head"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab),
+                                      jnp.float32) / math.sqrt(cfg.d_model)
+    if cfg.frontend == "vision":
+        p["patch_pos"] = jnp.zeros((cfg.n_patches, cfg.d_model), jnp.float32)
+    return p
+
+
+def embed_specs(cfg: ArchConfig) -> Params:
+    # tok table: vocab-sharded only — data-sharding D as well makes the
+    # token gather unpartitionable (observed "involuntary full remat" SPMD
+    # warning on the multi-pod mesh); 'embed_tok' maps to None.
+    p = {"tok": ("vocab", "embed_tok")}
+    if not cfg.tie_embeddings:
+        p["head"] = ("embed", "vocab")
+    if cfg.frontend == "vision":
+        p["patch_pos"] = (None, "embed")
+    return p
+
+
+def embed_apply(p: Params, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    return p["tok"].astype(dtype_of(cfg))[tokens]
+
+
+def head_apply(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    w = p["tok"].T if cfg.tie_embeddings else p["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype))
+    return constrain(logits, ("act_batch", "act_seq", "act_vocab"))

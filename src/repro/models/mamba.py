@@ -1,0 +1,177 @@
+"""Mamba (S6) block — selective state-space mixer used by Jamba's "m" layers.
+
+Per channel c (of d_inner) and state n (of d_state):
+  h_t = exp(Δ_t·A)∘h_{t-1} + Δ_t·B_t·x_t ;   y_t = C_t·h_t + D∘x_t
+with input-dependent Δ (softplus), B, C (the selectivity), causal depthwise
+conv front, and SiLU gate z.
+
+Implementations:
+  * "chunked"      — exact: within-chunk associative_scan (stable, parallel,
+                     FLOP-visible); default for real execution.
+  * "chunked_cost" — dry-run cost model: cumsum/exp form, HLO-cheap and
+                     FLOP-faithful to a TPU kernel's sequential chunk scan,
+                     numerically clamped (never used for real runs).
+  * "scan"         — exact sequential lax.scan oracle (tests, decode).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act import constrain
+
+Params = Dict[str, Any]
+
+MAMBA_CHUNK = 64
+DT_RANK_DIV = 16      # dt_rank = d_model / 16 (mamba default ceil(D/16))
+
+
+def mamba_init(rng, cfg: ArchConfig) -> Params:
+    D, N = cfg.d_model, cfg.d_state
+    d_in = 2 * D
+    dt_rank = max(1, D // DT_RANK_DIV)
+    ks = jax.random.split(rng, 8)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "w_in": jax.random.normal(ks[0], (D, 2 * d_in), jnp.float32) * s,
+        "conv": jax.random.normal(ks[1], (cfg.d_conv, d_in), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d_in,), jnp.float32),
+        "w_dt": jax.random.normal(ks[2], (d_in, dt_rank), jnp.float32) * s,
+        "w_dt_up": jax.random.normal(ks[3], (dt_rank, d_in), jnp.float32) * 0.1,
+        "dt_bias": jnp.zeros((d_in,), jnp.float32) + math.log(math.e - 1),
+        "w_B": jax.random.normal(ks[4], (d_in, N), jnp.float32) * s,
+        "w_C": jax.random.normal(ks[5], (d_in, N), jnp.float32) * s,
+        "A_log": jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32),
+                                  (d_in, 1))),
+        "D_skip": jnp.ones((d_in,), jnp.float32),
+        "w_out": jax.random.normal(ks[6], (d_in, D), jnp.float32) / math.sqrt(d_in),
+    }
+
+
+def mamba_specs(cfg: ArchConfig) -> Params:
+    return {
+        "w_in": ("embed", "mlp"), "conv": (None, "mlp"), "conv_b": ("mlp",),
+        "w_dt": ("mlp", None), "w_dt_up": (None, "mlp"), "dt_bias": ("mlp",),
+        "w_B": ("mlp", None), "w_C": ("mlp", None),
+        "A_log": ("mlp", "state"), "D_skip": ("mlp",),
+        "w_out": ("mlp", "embed"),
+    }
+
+
+def _ssm_chunked(u, loga, C, chunk: int, h0):
+    """u: [B,S,di,N] inputs (Δ·B·x);  loga: [B,S,di,N] log decay (≤0);
+    C: [B,S,N];  h0: [B,di,N].  Returns (y [B,S,di], h_out).
+
+    Within a chunk the linear recurrence h_t = a_t·h_{t-1} + u_t is solved
+    with ``associative_scan`` over (a, b) pairs — exact and stable (only
+    products of a ≤ 1 appear; no e^{-cl} division, which silently zeroed
+    *fresh* contributions under strong decay — a bug this replaced). The
+    scan unrolls to log-depth elementwise HLO, so its FLOPs stay visible
+    to ``cost_analysis`` (unlike a ``lax.scan`` loop).
+    """
+    B, S, di, N = u.shape
+    y = jnp.zeros((B, S, di), jnp.float32)
+    h = h0
+    n_chunks = max(1, (S + chunk - 1) // chunk)
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min((ci + 1) * chunk, S)
+        uc, lac, Cc = u[:, lo:hi], loga[:, lo:hi], C[:, lo:hi]
+        a = jnp.exp(lac)                                     # [B,L,di,N] ≤ 1
+        A, Bk = jax.lax.associative_scan(combine, (a, uc), axis=1)
+        hs = A * h[:, None] + Bk                             # [B,L,di,N]
+        y = y.at[:, lo:hi].set(jnp.einsum("bldn,bln->bld", hs, Cc))
+        h = hs[:, -1]
+    return y, h
+
+
+def _ssm_chunked_cost(u, loga, C, chunk: int, h0):
+    """Dry-run cost variant: cumsum/exp form (clamped). Numerically unsafe
+    under strong decay (fresh contributions vanish past the clamp) but
+    HLO-cheap to compile and FLOP-faithful to a TPU kernel's sequential
+    in-register chunk scan — which is what the cost analysis should price.
+    Never used for real execution (build paths select "chunked"/"scan")."""
+    B, S, di, N = u.shape
+    y = jnp.zeros((B, S, di), jnp.float32)
+    h = h0
+    n_chunks = max(1, (S + chunk - 1) // chunk)
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min((ci + 1) * chunk, S)
+        uc, lac, Cc = u[:, lo:hi], loga[:, lo:hi], C[:, lo:hi]
+        cl = jnp.cumsum(lac, axis=1)
+        u_sc = uc * jnp.exp(jnp.minimum(-cl, 30.0))
+        hs = jnp.exp(cl) * (h[:, None] + jnp.cumsum(u_sc, axis=1))
+        y = y.at[:, lo:hi].set(jnp.einsum("bldn,bln->bld", hs, Cc))
+        h = hs[:, -1]
+    return y, h
+
+
+def _ssm_scan(u, loga, C, h0):
+    B, S, di, N = u.shape
+
+    def step(h, inp):
+        ut, lat, Ct = inp
+        h = jnp.exp(lat) * h + ut
+        return h, jnp.einsum("bdn,bn->bd", h, Ct)
+
+    xs = (u.transpose(1, 0, 2, 3), loga.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2), h
+
+
+def mamba_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+                state: Tuple[jax.Array, jax.Array] = None,
+                impl: str = "chunked"
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x: [B,S,D] → [B,S,D]. state = (conv_tail [B,d_conv-1,di], h [B,di,N])."""
+    B, S, D = x.shape
+    N, dc = cfg.d_state, cfg.d_conv
+    d_in = 2 * D
+    dt = x.dtype
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(dt))
+    xz = constrain(xz, ("act_batch", "act_seq", "act_mlp"))
+    xi, z = jnp.split(xz, 2, axis=-1)                         # [B,S,di] each
+    if state is None:
+        conv_tail = jnp.zeros((B, dc - 1, d_in), dt)
+        h0 = jnp.zeros((B, d_in, N), jnp.float32)
+    else:
+        conv_tail, h0 = state
+    # causal depthwise conv (statically unrolled over d_conv taps)
+    xpad = jnp.concatenate([conv_tail.astype(dt), xi], axis=1)  # [B,S+dc-1,di]
+    conv = p["conv"].astype(dt)
+    xc = sum(xpad[:, i: i + S] * conv[i] for i in range(dc)) + p["conv_b"].astype(dt)
+    xc = jax.nn.silu(xc)
+    new_conv_tail = xpad[:, S:]                                # last dc-1 inputs
+    # selective SSM parameters
+    dt_lo = jnp.einsum("bsd,dr->bsr", xc, p["w_dt"].astype(dt))
+    delta = jax.nn.softplus(jnp.einsum("bsr,rd->bsd", dt_lo,
+                                       p["w_dt_up"].astype(dt)).astype(jnp.float32)
+                            + p["dt_bias"])                    # [B,S,di] fp32
+    Bt = jnp.einsum("bsd,dn->bsn", xc, p["w_B"].astype(dt)).astype(jnp.float32)
+    Ct = jnp.einsum("bsd,dn->bsn", xc, p["w_C"].astype(dt)).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])                                   # [di,N] (<0)
+    loga = delta[..., None] * A[None, None]                    # [B,S,di,N]
+    u = (delta * xc.astype(jnp.float32))[..., None] * Bt[:, :, None, :]
+    if impl == "chunked" and S > 1:
+        chunk = max(MAMBA_CHUNK, S // 32)   # bounded unrolled-block count
+        y, h = _ssm_chunked(u, loga, Ct, chunk, h0)
+    elif impl == "chunked_cost" and S > 1:
+        chunk = max(MAMBA_CHUNK, S // 32)
+        y, h = _ssm_chunked_cost(u, loga, Ct, chunk, h0)
+    else:
+        y, h = _ssm_scan(u, loga, Ct, h0)
+    y = y + p["D_skip"] * xc.astype(jnp.float32)
+    y = (y.astype(dt)) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(dt))
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    return out, (new_conv_tail, h)

@@ -1,0 +1,348 @@
+"""Unified model builder: ``Model(cfg)`` covers all 10 assigned families.
+
+A model is a stack of (mixer, ffn) blocks over token/frame/patch embeddings:
+
+  family   mixer per layer          ffn per layer
+  dense    attn                     swiglu mlp
+  moe      attn                     MoE (every/rem per config)
+  ssm      rwkv6 time-mix           rwkv6 channel-mix
+  hybrid   jamba pattern m/a        mlp | MoE on odd layers
+  audio    attn (bidirectional)     mlp           (encoder-only, frame stub)
+  vlm      attn                     mlp           (patch-embed prefix stub)
+
+The layer stack is grouped into homogeneous *super-blocks* of
+``len(block_pattern)`` layers (1 for non-hybrid archs) and scanned with
+``lax.scan`` over stacked params (`cfg.scan_layers`), keeping HLO size and
+compile time depth-independent; `cfg.remat` wraps each super-block in
+``jax.checkpoint``. The dry-run's cost extrapolation compiles depth-1/2
+*unrolled* variants (see EXPERIMENTS.md §Method).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act import constrain
+from . import layers as L
+from . import mamba as M
+from . import moe as X
+from . import rwkv6 as R
+
+Params = Dict[str, Any]
+
+
+# --------------------------------------------------------------------------
+# RWKV channel-mix (the ssm family's ffn)
+# --------------------------------------------------------------------------
+
+def cm_init(rng, cfg: ArchConfig) -> Params:
+    import math
+    D, F = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "mix_k": jnp.zeros((D,), jnp.float32) + 0.5,
+        "mix_r": jnp.zeros((D,), jnp.float32) + 0.5,
+        "wk": jax.random.normal(k1, (D, F), jnp.float32) / math.sqrt(D),
+        "wv": jax.random.normal(k2, (F, D), jnp.float32) / math.sqrt(F),
+        "wr": jax.random.normal(k3, (D, D), jnp.float32) / math.sqrt(D),
+    }
+
+
+def cm_specs(cfg: ArchConfig) -> Params:
+    return {"mix_k": ("embed",), "mix_r": ("embed",),
+            "wk": ("embed", "mlp"), "wv": ("mlp", "embed"),
+            "wr": ("embed", "embed_out")}
+
+
+def cm_apply(p: Params, cfg: ArchConfig, x, x_last=None):
+    dt = x.dtype
+    B, S, D = x.shape
+    prev = jnp.concatenate(
+        [jnp.zeros((B, 1, D), dt) if x_last is None else x_last.astype(dt),
+         x[:, :-1]], axis=1)
+    xk = x + (prev - x) * p["mix_k"].astype(dt)
+    xr = x + (prev - x) * p["mix_r"].astype(dt)
+    k = jnp.square(jax.nn.relu(jnp.einsum("bsd,df->bsf", xk, p["wk"].astype(dt))))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"].astype(dt)))
+    return r * kv, x[:, -1:]
+
+
+# --------------------------------------------------------------------------
+# Model
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    moe_impl: str = "onehot"        # "onehot" | "sort"  (§Perf lever)
+    seq_impl: str = "chunked"       # "chunked" (exact assoc-scan) | "scan"
+                                    # | "chunked_cost" (dry-run FLOP model;
+                                    #   mamba only — rwkv maps it to chunked)
+
+    # -- block pattern -------------------------------------------------------
+    def pattern(self) -> List[Tuple[str, str]]:
+        """[(mixer, ffn)] for one super-block."""
+        cfg = self.cfg
+        if cfg.family == "ssm":
+            return [("rwkv", "cm")]
+        mixers = list(cfg.block_pattern) or ["a"]
+        out = []
+        for i, mx in enumerate(mixers):
+            if cfg.moe is not None and i % cfg.moe.every == cfg.moe.rem:
+                ffn = "moe"
+            else:
+                ffn = "mlp"
+            out.append(("attn" if mx == "a" else "mamba", ffn))
+        return out
+
+    @property
+    def n_groups(self) -> int:
+        pat = len(self.pattern())
+        assert self.cfg.n_layers % pat == 0
+        return self.cfg.n_layers // pat
+
+    # -- init ------------------------------------------------------------------
+    def _init_one(self, rng, mixer: str, ffn: str) -> Params:
+        cfg = self.cfg
+        k1, k2 = jax.random.split(rng)
+        mix = {"attn": L.attention_init, "mamba": M.mamba_init,
+               "rwkv": R.rwkv_init}[mixer](k1, cfg)
+        f = {"mlp": L.mlp_init, "moe": X.moe_init, "cm": cm_init}[ffn](k2, cfg)
+        return {"norm1": L.rms_norm_init(cfg.d_model), "mixer": mix,
+                "norm2": L.rms_norm_init(cfg.d_model), "ffn": f}
+
+    def init(self, rng) -> Params:
+        cfg = self.cfg
+        pat = self.pattern()
+        rngs = jax.random.split(rng, self.n_groups * len(pat) + 2)
+        blocks = []
+        for pos, (mx, ffn) in enumerate(pat):
+            per_group = [self._init_one(rngs[g * len(pat) + pos], mx, ffn)
+                         for g in range(self.n_groups)]
+            if cfg.scan_layers:
+                blocks.append(jax.tree.map(lambda *xs: jnp.stack(xs), *per_group))
+            else:
+                blocks.append(per_group)
+        return {"embed": L.embed_init(rngs[-2], cfg),
+                "blocks": blocks,
+                "final_norm": L.rms_norm_init(cfg.d_model)}
+
+    def specs(self) -> Params:
+        """Logical-axis tree mirroring init() (stacked ⇒ leading 'layers')."""
+        cfg = self.cfg
+        out_blocks = []
+        for mx, ffn in self.pattern():
+            mix = {"attn": L.attention_specs, "mamba": M.mamba_specs,
+                   "rwkv": R.rwkv_specs}[mx](cfg)
+            f = {"mlp": L.mlp_specs, "moe": X.moe_specs, "cm": cm_specs}[ffn](cfg)
+            blk = {"norm1": {"scale": (None,)}, "mixer": mix,
+                   "norm2": {"scale": (None,)}, "ffn": f}
+            if cfg.scan_layers:
+                blk = jax.tree.map(lambda sp: ("layers",) + tuple(sp), blk,
+                                   is_leaf=lambda v: isinstance(v, tuple))
+            else:
+                blk = [blk] * self.n_groups
+            out_blocks.append(blk)
+        return {"embed": L.embed_specs(cfg), "blocks": out_blocks,
+                "final_norm": {"scale": (None,)}}
+
+    # -- one super-block ----------------------------------------------------------
+    def _block(self, p: Params, x, *, pos_idx: int, positions, cache,
+               cache_index):
+        cfg = self.cfg
+        mx, ffn = self.pattern()[pos_idx]
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        h = L.rms_norm(p["norm1"], x, cfg.norm_eps)
+        new_cache = None
+        if mx == "attn":
+            h, new_cache = L.attention_apply(
+                p["mixer"], cfg, h, positions=positions, causal=cfg.causal,
+                cache=None if cache is None else (cache["k"], cache["v"]),
+                cache_index=cache_index)
+            if new_cache is not None:
+                new_cache = {"k": new_cache[0], "v": new_cache[1]}
+        elif mx == "mamba":
+            st = None if cache is None else (cache["conv"], cache["h"])
+            h, st = M.mamba_apply(p["mixer"], cfg, h, state=st,
+                                  impl=self.seq_impl)
+            if cache is not None:
+                new_cache = {"conv": st[0], "h": st[1]}
+        elif mx == "rwkv":
+            st = None if cache is None else (cache["x_tm"], cache["wkv"])
+            h, st = R.rwkv_apply(p["mixer"], cfg, h, state=st, impl=self.seq_impl)
+            if cache is not None:
+                new_cache = {"x_tm": st[0], "wkv": st[1]}
+        x = x + h
+        f = L.rms_norm(p["norm2"], x, cfg.norm_eps)
+        if ffn == "mlp":
+            f = L.mlp_apply(p["ffn"], f)
+        elif ffn == "moe":
+            f = X.moe_apply(p["ffn"], cfg, f, impl=self.moe_impl)
+        elif ffn == "cm":
+            x_last = None if cache is None else cache["x_cm"]
+            f, x_last = cm_apply(p["ffn"], cfg, f, x_last)
+            if new_cache is not None:
+                new_cache["x_cm"] = x_last
+        return x + f, new_cache
+
+    def _super_block(self, group_params: List[Params], x, *, positions,
+                     group_cache, cache_index):
+        new_caches = []
+        for pos_idx, p in enumerate(group_params):
+            c = None if group_cache is None else group_cache[pos_idx]
+            x, nc = self._block(p, x, pos_idx=pos_idx, positions=positions,
+                                cache=c, cache_index=cache_index)
+            new_caches.append(nc)
+        return x, (new_caches if group_cache is not None else None)
+
+    # -- full forward -----------------------------------------------------------
+    def _stack(self, params: Params, x, *, positions, cache, cache_index):
+        cfg = self.cfg
+        pat = self.pattern()
+        remat_policy = {"none": None, "full": None,
+                        "dots": jax.checkpoint_policies.checkpoint_dots}[cfg.remat]
+
+        def sb(gp, x_, gc):
+            return self._super_block(gp, x_, positions=positions,
+                                     group_cache=gc, cache_index=cache_index)
+
+        if cfg.remat != "none":
+            sb = jax.checkpoint(sb, policy=remat_policy,
+                                static_argnums=())
+        if cfg.scan_layers:
+            def body(carry, xs):
+                x_, = carry
+                gp = [xs[f"b{i}"] for i in range(len(pat))]
+                gc = None if cache is None else [xs[f"c{i}"] for i in range(len(pat))]
+                x_, nc = sb(gp, x_, gc)
+                out = {} if nc is None else {f"c{i}": nc[i] for i in range(len(pat))}
+                return (x_,), out
+            xs = {f"b{i}": params["blocks"][i] for i in range(len(pat))}
+            if cache is not None:
+                xs.update({f"c{i}": cache[i] for i in range(len(pat))})
+            (x,), new_cache = jax.lax.scan(body, (x,), xs)
+            if cache is not None:
+                new_cache = [new_cache[f"c{i}"] for i in range(len(pat))]
+            else:
+                new_cache = None
+        else:
+            new_cache = [] if cache is not None else None
+            for g in range(self.n_groups):
+                gp = [params["blocks"][i][g] for i in range(len(pat))]
+                gc = None if cache is None else [cache[i][g] for i in range(len(pat))]
+                x, nc = sb(gp, x, gc)
+                if cache is not None:
+                    new_cache.append(nc)
+            if cache is not None:
+                # regroup [group][pos] -> [pos][group]
+                new_cache = [[new_cache[g][i] for g in range(self.n_groups)]
+                             for i in range(len(pat))]
+        return x, new_cache
+
+    def apply(self, params: Params, batch: Dict[str, jax.Array], *,
+              cache=None, cache_index=None) -> Tuple[jax.Array, Any]:
+        """Returns (logits [B,S,V], new_cache)."""
+        cfg = self.cfg
+        if cfg.frontend == "audio":
+            x = batch["frames"].astype(L.dtype_of(cfg))     # stub frontend
+            positions = jnp.arange(x.shape[1])
+        elif cfg.frontend == "vision" and "patches" in batch:
+            # patch-embed prefix (stub frontend); works with or without a
+            # cache (vision prefill writes the prefix through the cache)
+            tok = L.embed_apply(params["embed"], cfg, batch["tokens"])
+            patches = batch["patches"].astype(tok.dtype) + \
+                params["embed"]["patch_pos"].astype(tok.dtype)
+            x = jnp.concatenate([patches, tok], axis=1)
+            if cache_index is None:
+                positions = jnp.arange(x.shape[1])
+            else:
+                idx = jnp.asarray(cache_index)
+                positions = (idx[:, None] if idx.ndim == 1 else idx) \
+                    + jnp.arange(x.shape[1])
+        else:
+            x = L.embed_apply(params["embed"], cfg, batch["tokens"])
+            if cache_index is None:
+                positions = jnp.arange(x.shape[1])
+            else:
+                idx = jnp.asarray(cache_index)
+                positions = (idx[:, None] if idx.ndim == 1 else idx) \
+                    + jnp.arange(x.shape[1])
+        x = constrain(x, ("act_batch", "act_seq", "act_embed"))
+        x, new_cache = self._stack(params, x, positions=positions,
+                                   cache=cache, cache_index=cache_index)
+        x = L.rms_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = L.head_apply(params["embed"], cfg, x)
+        return logits, new_cache
+
+    # -- losses / steps -----------------------------------------------------------
+    def loss(self, params: Params, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        logits, _ = self.apply(params, batch)
+        labels = batch["labels"]
+        if cfg.frontend == "vision":
+            logits = logits[:, -labels.shape[1]:]           # text positions only
+        # Streamed cross-entropy: never materializes log_softmax [B,S,V] in
+        # fp32 — logsumexp + label gather fuse into per-element passes
+        # (the fp32 [B,S,V] copy dominated dry-run temp memory otherwise).
+        m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+        shifted = logits - m
+        lse = jnp.log(jnp.sum(jnp.exp(shifted.astype(jnp.float32)), axis=-1)) \
+            + m[..., 0].astype(jnp.float32)
+        picked = jnp.take_along_axis(logits, labels[..., None],
+                                     axis=-1)[..., 0].astype(jnp.float32)
+        nll = lse - picked
+        mask = batch.get("mask", jnp.ones_like(nll))
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # -- decode cache -----------------------------------------------------------
+    def init_cache(self, batch_size: int, max_seq: int) -> Any:
+        cfg = self.cfg
+        assert cfg.causal, "encoder-only archs have no decode step"
+        pat = self.pattern()
+        G = self.n_groups
+        caches = []
+        for mx, ffn in pat:
+            if mx == "attn":
+                shp = (batch_size, max_seq, cfg.n_kv_heads, cfg.hd)
+                c = {"k": jnp.zeros(shp, jnp.bfloat16),
+                     "v": jnp.zeros(shp, jnp.bfloat16)}
+            elif mx == "mamba":
+                c = {"conv": jnp.zeros((batch_size, cfg.d_conv - 1,
+                                        2 * cfg.d_model), jnp.bfloat16),
+                     "h": jnp.zeros((batch_size, 2 * cfg.d_model, cfg.d_state),
+                                    jnp.float32)}
+            else:  # rwkv
+                c = {"x_tm": jnp.zeros((batch_size, 1, cfg.d_model), jnp.bfloat16),
+                     "wkv": jnp.zeros((batch_size, cfg.n_heads, cfg.hd, cfg.hd),
+                                      jnp.float32)}
+            if ffn == "cm":
+                c["x_cm"] = jnp.zeros((batch_size, 1, cfg.d_model), jnp.bfloat16)
+            if cfg.scan_layers:
+                c = jax.tree.map(lambda a: jnp.broadcast_to(a, (G,) + a.shape), c)
+            else:
+                c = [c] * G
+            caches.append(c)
+        return caches
+
+    @property
+    def cache_batch_axis(self) -> int:
+        """Batch axis position in cache leaves (1 when layer-stacked)."""
+        return 1 if self.cfg.scan_layers else 0
+
+    def serve_step(self, params: Params, cache, tokens: jax.Array,
+                   cache_index) -> Tuple[jax.Array, Any]:
+        """One decode step: tokens [B,1] → (logits [B,1,V], new_cache).
+        ``cache_index``: scalar, or [B] per-slot positions."""
+        logits, new_cache = self.apply(params, {"tokens": tokens},
+                                       cache=cache, cache_index=cache_index)
+        return logits, new_cache
+
+
+def build(cfg: ArchConfig, **kw) -> Model:
+    return Model(cfg, **kw)

@@ -1,0 +1,153 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-based dispatch (baseline)
+and a sort-based dispatch (beyond-paper hillclimb alternative).
+
+Baseline ("onehot"): top-k routing, per-group capacity C = ⌈k·cf·S_g/E⌉,
+dispatch/combine via one-hot einsums. SPMD-friendly (resharding between the
+token-sharded and expert-sharded einsums lowers to all-to-all), but pays the
+classic GShard dispatch-einsum tax (~2·E·C·D extra FLOPs per group) and
+materializes a [S_g, E, C] mask per group — both visible in the roofline and
+attacked in §Perf.
+
+Alternative ("sort"): argsort tokens by expert, gather into [E, C, D]
+buffers, grouped einsum, scatter back. Same math (capacity drops included);
+no one-hot einsum FLOPs.
+
+Routing math (both paths): softmax over E, take top-k, renormalize the k
+gates to sum 1. Tokens over capacity are *dropped* (contribute zero — their
+residual stream passes through), the standard capacity-factor semantics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act import constrain
+
+Params = Dict[str, Any]
+
+import os
+MOE_GROUP = int(os.environ.get("REPRO_MOE_GROUP", "1024"))   # tokens/group
+# (GShard-style; env-overridable — the dispatch-tax §Perf lever: one-hot
+# mask bytes and dispatch-einsum FLOPs both scale ∝ group size)
+
+
+def moe_init(rng, cfg: ArchConfig) -> Params:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return {
+        "router": jax.random.normal(k1, (D, E), jnp.float32) / math.sqrt(D),
+        "w_gate": jax.random.normal(k2, (E, D, F), jnp.float32) / math.sqrt(D),
+        "w_up": jax.random.normal(k3, (E, D, F), jnp.float32) / math.sqrt(D),
+        "w_down": jax.random.normal(k4, (E, F, D), jnp.float32) / math.sqrt(F),
+    }
+
+
+def moe_specs(cfg: ArchConfig) -> Params:
+    return {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+
+
+def _routing(p: Params, xg: jax.Array, cfg: ArchConfig):
+    """xg: [G, S, D] → (weights [G,S,k], experts [G,S,k])."""
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(xg.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    topw, topi = jax.lax.top_k(probs, cfg.moe.top_k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    return topw, topi
+
+
+def _capacity(cfg: ArchConfig, s_g: int) -> int:
+    E, k, cf = cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.capacity_factor
+    return max(4, int(math.ceil(k * cf * s_g / E)))
+
+
+def moe_apply_onehot(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: [B,S,D]. Baseline GShard one-hot dispatch."""
+    B, S, D = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    s_g = min(MOE_GROUP, B * S)
+    assert (B * S) % s_g == 0, "token count must divide the MoE group size"
+    G = (B * S) // s_g
+    C = _capacity(cfg, s_g)
+    xg = constrain(x.reshape(G, s_g, D), ("act_group", None, None))
+    topw, topi = _routing(p, xg, cfg)                             # [G,s,k]
+    # position of each (token, choice) within its expert queue
+    onehot_e = jax.nn.one_hot(topi, E, dtype=jnp.float32)         # [G,s,k,E]
+    # priority: choice-major then token order (GShard's flattened cumsum)
+    flat = onehot_e.transpose(0, 2, 1, 3).reshape(G, k * s_g, E)  # [G,k*s,E]
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                    # rank in queue
+    pos = pos_flat.reshape(G, k, s_g, E).transpose(0, 2, 1, 3)    # [G,s,k,E]
+    pos = jnp.sum(pos * onehot_e, axis=-1)                        # [G,s,k]
+    keep = pos < C
+    gate = topw * keep                                            # dropped → 0
+    onehot_c = jax.nn.one_hot(pos, C, dtype=jnp.float32)          # [G,s,k,C]
+    # dispatch mask [G,s,E,C] (the tax), combine with gates
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot_e, onehot_c * keep[..., None])
+    combine = jnp.einsum("gske,gskc,gsk->gsec", onehot_e, onehot_c, gate)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)   # [G,E,C,D]
+    xe = constrain(xe, ("act_group", "act_experts", None, None))
+    h = _expert_ffn(p, xe)                                            # [G,E,C,D]
+    h = constrain(h, ("act_group", "act_experts", None, None))
+    out = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), h)
+    return out.reshape(B, S, D)
+
+
+def moe_apply_sort(p: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """x: [B,S,D]. Sort-based dispatch (no one-hot einsum FLOPs)."""
+    B, S, D = x.shape
+    E, k = cfg.moe.n_experts, cfg.moe.top_k
+    s_g = min(MOE_GROUP, B * S)
+    assert (B * S) % s_g == 0, "token count must divide the MoE group size"
+    G = (B * S) // s_g
+    C = _capacity(cfg, s_g)
+    xg = x.reshape(G, s_g, D)
+    topw, topi = _routing(p, xg, cfg)                             # [G,s,k]
+
+    def per_group(xg1, topi1, topw1):
+        # flatten (token, choice) pairs; choice-major order matches onehot path
+        e_flat = topi1.T.reshape(-1)                              # [k*s]
+        w_flat = topw1.T.reshape(-1)
+        t_flat = jnp.tile(jnp.arange(s_g), (k,))                  # token ids
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        pos_in_e = jnp.arange(k * s_g) - jnp.searchsorted(
+            e_sorted, e_sorted, side="left")                      # rank in expert
+        keep = pos_in_e < C
+        slot = jnp.where(keep, e_sorted * C + pos_in_e, E * C)    # overflow bin
+        buf = jnp.zeros((E * C + 1, D), xg1.dtype)
+        buf = buf.at[slot].set(xg1[t_flat[order]])
+        h = _expert_ffn(p, buf[: E * C].reshape(1, E, C, D))[0]   # [E,C,D]
+        h_flat = jnp.concatenate([h.reshape(E * C, D),
+                                  jnp.zeros((1, D), h.dtype)])
+        y_sorted = h_flat[slot] * w_flat[order][:, None]
+        y = jnp.zeros((s_g, D), xg1.dtype).at[t_flat[order]].add(
+            y_sorted.astype(xg1.dtype))
+        return y
+
+    out = jax.vmap(per_group)(xg, topi, topw)
+    return out.reshape(B, S, D)
+
+
+def _expert_ffn(p: Params, xe: jax.Array) -> jax.Array:
+    """xe: [G,E,C,D] → [G,E,C,D] (SwiGLU per expert)."""
+    dt = xe.dtype
+    g = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(dt))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(dt))
+    return jnp.einsum("gecf,efd->gecd", jax.nn.silu(g) * u, p["w_down"].astype(dt))
+
+
+def moe_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+              impl: str = "onehot") -> jax.Array:
+    if impl == "onehot":
+        return moe_apply_onehot(p, cfg, x)
+    if impl == "sort":
+        return moe_apply_sort(p, cfg, x)
+    raise ValueError(impl)

@@ -1,0 +1,184 @@
+"""RWKV-6 "Finch" time-mix block — data-dependent decay linear attention.
+
+Recurrence per head (head size N): S_t = diag(w_t)·S_{t-1} + k_tᵀv_t,
+y_t = r_t·(S_{t-1} + diag(u)·k_tᵀv_t), with w_t = exp(-exp(ω(x_t))) the
+*data-dependent* per-channel decay (the Finch contribution) and token-shift
+ddlerp mixing (LoRA-modulated interpolation with x_{t-1}).
+
+Two sequence implementations (cfg-independent, chosen per call):
+  * "chunked" — FLA-style intra-chunk factorized matmuls
+      Ã[t,j] = (r_t∘e^{cl_{t-1}})·(k_j∘e^{-cl_j}) with strict-lower mask,
+    inter-chunk state carried exactly; statically unrolled over chunks so
+    every FLOP is visible to ``cost_analysis`` (the dry-run path, and the
+    Pallas kernel's schedule).
+  * "scan" — exact sequential ``lax.scan`` oracle (tests, tiny real runs).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act import constrain
+
+Params = Dict[str, Any]
+
+LORA_R = 32           # decay/mix LoRA rank (official 6.x uses 32 for 7B)
+RWKV_CHUNK = 64
+
+
+def rwkv_init(rng, cfg: ArchConfig) -> Params:
+    D = cfg.d_model
+    H, N = cfg.n_heads, cfg.hd
+    ks = jax.random.split(rng, 12)
+    s = 1.0 / math.sqrt(D)
+    return {
+        # ddlerp token-shift: base mixes + one shared LoRA trunk (5 targets)
+        "mix_base": jnp.zeros((6, D), jnp.float32) + 0.5,   # x,w,k,v,r,g
+        "lora_A": jax.random.normal(ks[0], (D, 5 * LORA_R), jnp.float32) * s,
+        "lora_B": jax.random.normal(ks[1], (5, LORA_R, D), jnp.float32) * 0.01,
+        # projections
+        "wr": jax.random.normal(ks[2], (D, H, N), jnp.float32) * s,
+        "wk": jax.random.normal(ks[3], (D, H, N), jnp.float32) * s,
+        "wv": jax.random.normal(ks[4], (D, H, N), jnp.float32) * s,
+        "wg": jax.random.normal(ks[5], (D, H, N), jnp.float32) * s,
+        "wo": jax.random.normal(ks[6], (H, N, D), jnp.float32) / math.sqrt(D),
+        # decay: ω(x) = w0 + tanh(x̃ @ dA) @ dB  (per channel)
+        "w0": jnp.zeros((H, N), jnp.float32) - 4.0,
+        "decay_A": jax.random.normal(ks[7], (D, 64), jnp.float32) * s,
+        "decay_B": jax.random.normal(ks[8], (64, H * N), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[9], (H, N), jnp.float32) * 0.1,  # bonus
+        "ln_x": {"scale": jnp.ones((H * N,), jnp.float32)},        # group norm
+    }
+
+
+def rwkv_specs(cfg: ArchConfig) -> Params:
+    return {
+        "mix_base": (None, "embed"),
+        "lora_A": ("embed", None),
+        "lora_B": (None, None, "embed"),
+        "wr": ("embed", "q_heads", "head_dim"),
+        "wk": ("embed", "q_heads", "head_dim"),
+        "wv": ("embed", "q_heads", "head_dim"),
+        "wg": ("embed", "q_heads", "head_dim"),
+        "wo": ("q_heads", "head_dim", "embed"),
+        "w0": ("q_heads", "head_dim"),
+        "decay_A": ("embed", None),
+        "decay_B": (None, "q_heads"),
+        "u": ("q_heads", "head_dim"),
+        "ln_x": {"scale": (None,)},
+    }
+
+
+def _ddlerp(p: Params, x: jax.Array, x_prev: jax.Array):
+    """Finch token-shift: returns the 5 mixed streams (w,k,v,r,g)."""
+    dt = x.dtype
+    xx = x_prev - x
+    xxx = x + xx * p["mix_base"][0].astype(dt)
+    trunk = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["lora_A"].astype(dt)))
+    trunk = trunk.reshape(*trunk.shape[:-1], 5, LORA_R)
+    delta = jnp.einsum("bsir,ird->bsid", trunk, p["lora_B"].astype(dt))
+    mixes = p["mix_base"][1:].astype(dt)                      # [5, D]
+    return [x + xx * (mixes[i] + delta[..., i, :]) for i in range(5)]
+
+
+def _proj_heads(x, w):
+    return jnp.einsum("bsd,dhn->bshn", x, w.astype(x.dtype))
+
+
+def _wkv_chunked(r, k, v, logw, u, state, chunk: int):
+    """r,k,v: [B,S,H,N]; logw: [B,S,H,N] (log decay ≤ 0); state: [B,H,N,N].
+
+    Returns (y [B,S,H,N], state_out). Statically unrolled chunks; fp32 core.
+    """
+    B, S, H, N = r.shape
+    r, k, v = (t.astype(jnp.float32) for t in (r, k, v))
+    logw = logw.astype(jnp.float32)
+    y = jnp.zeros((B, S, H, N), jnp.float32)
+    n_chunks = max(1, (S + chunk - 1) // chunk)
+    for ci in range(n_chunks):
+        lo, hi = ci * chunk, min((ci + 1) * chunk, S)
+        L = hi - lo
+        rc, kc, vc = r[:, lo:hi], k[:, lo:hi], v[:, lo:hi]
+        lw = logw[:, lo:hi]
+        cl = jnp.cumsum(lw, axis=1)                            # [B,L,H,N]
+        cl_prev = cl - lw                                      # cl_{t-1}
+        r_t = rc * jnp.exp(cl_prev)                            # r̃
+        k_t = kc * jnp.exp(-jnp.maximum(cl, -30.0))            # k̃ (clamped)
+        A = jnp.einsum("bthn,bjhn->bhtj", r_t, k_t)            # [B,H,L,L]
+        mask = jnp.tril(jnp.ones((L, L), bool), k=-1)          # strict lower
+        A = jnp.where(mask[None, None], A, 0.0)
+        bonus = jnp.einsum("bthn,bthn->bth", rc * u[None, None], kc)
+        y_intra = jnp.einsum("bhtj,bjhn->bthn", A, vc) + bonus[..., None] * vc
+        y_inter = jnp.einsum("bthn,bhnm->bthm", r_t, state)
+        y = y.at[:, lo:hi].set(y_intra + y_inter)
+        # carry state: S' = diag(e^{cl_L}) S + Σ_j (k_j ∘ e^{cl_L - cl_j}) v_jᵀ
+        decay_all = jnp.exp(cl[:, -1])                         # [B,H,N] (k-dim)
+        k_s = kc * jnp.exp(cl[:, -1:, :, :] - cl)
+        state = state * decay_all[..., None] \
+            + jnp.einsum("bjhn,bjhm->bhnm", k_s, vc)
+    return y, state
+
+
+def _wkv_scan(r, k, v, logw, u, state):
+    """Exact sequential oracle."""
+    B, S, H, N = r.shape
+    r, k, v = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                   # [B,H,N]…
+        out = jnp.einsum("bhn,bhnm->bhm", rt, s) + \
+            jnp.einsum("bhn,bhn,bhm->bhm", rt, u[None] * kt, vt)
+        s = s * wt[..., None] + jnp.einsum("bhn,bhm->bhnm", kt, vt)
+        return s, out
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3), state
+
+
+def rwkv_apply(p: Params, cfg: ArchConfig, x: jax.Array, *,
+               state: Tuple[jax.Array, jax.Array] = None,
+               impl: str = "chunked"
+               ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """x: [B,S,D] → [B,S,D].  state = (x_last [B,1,D], S [B,H,N,N]) for
+    incremental decode; None ⇒ zeros (fresh sequence)."""
+    B, S, D = x.shape
+    H, N = cfg.n_heads, cfg.hd
+    dt = x.dtype
+    if state is None:
+        x_last = jnp.zeros((B, 1, D), dt)
+        wkv_state = jnp.zeros((B, H, N, N), jnp.float32)
+    else:
+        x_last, wkv_state = state
+    x_prev = jnp.concatenate([x_last, x[:, :-1]], axis=1)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, x_prev)
+    r = constrain(_proj_heads(xr, p["wr"]), ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(_proj_heads(xk, p["wk"]), ("act_batch", "act_seq", "act_heads", None))
+    v = constrain(_proj_heads(xv, p["wv"]), ("act_batch", "act_seq", "act_heads", None))
+    g = jax.nn.silu(_proj_heads(xg, p["wg"]))
+    dec = jnp.tanh(jnp.einsum("bsd,dr->bsr", xw, p["decay_A"].astype(dt)))
+    omega = p["w0"].reshape(-1).astype(jnp.float32) + \
+        jnp.einsum("bsr,rz->bsz", dec.astype(jnp.float32), p["decay_B"])
+    logw = -jnp.exp(omega).reshape(B, S, H, N)                  # log decay ≤ 0
+    u = p["u"].astype(jnp.float32)
+    if impl in ("chunked", "chunked_cost") and S > 1:
+        # chunk scales with S: bounded unrolled-block count (compile time)
+        chunk = max(RWKV_CHUNK, S // 64)
+        y, wkv_state = _wkv_chunked(r, k, v, logw, u, wkv_state, chunk)
+    else:
+        y, wkv_state = _wkv_scan(r, k, v, logw, u, wkv_state)
+    # per-head group norm, gate, out-proj
+    y = y.reshape(B, S, H * N)
+    mean = jnp.mean(y.reshape(B, S, H, N), axis=-1, keepdims=True)
+    var = jnp.var(y.reshape(B, S, H, N), axis=-1, keepdims=True)
+    y = ((y.reshape(B, S, H, N) - mean) * jax.lax.rsqrt(var + 64e-5)).reshape(B, S, H * N)
+    y = (y * p["ln_x"]["scale"]).astype(dt).reshape(B, S, H, N)
+    y = y * g
+    out = jnp.einsum("bshn,hnd->bsd", y, p["wo"].astype(dt))
+    out = constrain(out, ("act_batch", "act_seq", "act_embed"))
+    return out, (x[:, -1:], wkv_state)

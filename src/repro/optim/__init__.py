@@ -1,0 +1,4 @@
+from .optimizers import (AdamWState, adamw_init, adamw_update, adafactor_init,
+                         adafactor_update, clip_by_global_norm, cosine_schedule,
+                         Optimizer, make_optimizer)
+from .compression import compress_int8, decompress_int8, ErrorFeedbackState

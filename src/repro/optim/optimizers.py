@@ -1,0 +1,138 @@
+"""Optimizers as pure pytree transforms (no external deps).
+
+AdamW (fp32 m/v — the memory-dominant choice whose ZeRO-3 sharding the
+dry-run exercises) and Adafactor (factored second moment — the fallback for
+HBM-tight cells like llama3-405b on a single 256-chip pod; see
+EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g32
+        v = b2 * v + (1 - b2) * g32 * g32
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any          # row second-moment (or full v for <2D tensors)
+    vc: Any          # col second-moment (or None sentinel zeros)
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    def vr(p):
+        return jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p) \
+            else jnp.zeros(p.shape, jnp.float32)
+
+    def vc(p):
+        return jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32) \
+            if _factored(p) else jnp.zeros((1,), jnp.float32)
+
+    return AdafactorState(step=jnp.zeros((), jnp.int32),
+                          vr=jax.tree.map(vr, params),
+                          vc=jax.tree.map(vc, params))
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay=0.8, eps=1e-30, weight_decay=0.0):
+    step = state.step + 1
+    b2 = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+    def upd(g, vr, vc, p):
+        g32 = g.astype(jnp.float32)
+        g2 = g32 * g32 + eps
+        if _factored(p):
+            vr = b2 * vr + (1 - b2) * jnp.mean(g2, axis=-1)
+            vc = b2 * vc + (1 - b2) * jnp.mean(g2, axis=-2)
+            denom = jnp.sqrt(vr[..., None] * vc[..., None, :]
+                             / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                    keepdims=True)[..., None], eps))
+        else:
+            vr = b2 * vr + (1 - b2) * g2
+            denom = jnp.sqrt(vr)
+        u = g32 / jnp.maximum(denom, eps)
+        u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc
+
+    out = jax.tree.map(upd, grads, state.vr, state.vc, params)
+    first = lambda i: jax.tree.map(lambda o: o[i], out,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    return first(0), AdafactorState(step=step, vr=first(1), vc=first(2))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = s / jnp.maximum(warmup, 1)
+        prog = jnp.clip((s - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable            # (grads, state, params, lr) -> (params, state)
+
+
+def make_optimizer(name: str = "adamw", *, weight_decay: float = 0.1) -> Optimizer:
+    if name == "adamw":
+        return Optimizer(
+            "adamw", adamw_init,
+            lambda g, s, p, lr: adamw_update(g, s, p, lr=lr,
+                                             weight_decay=weight_decay))
+    if name == "adafactor":
+        return Optimizer(
+            "adafactor", adafactor_init,
+            lambda g, s, p, lr: adafactor_update(g, s, p, lr=lr,
+                                                 weight_decay=weight_decay))
+    raise ValueError(name)

@@ -1,0 +1,132 @@
+"""Batched serving engine: slot-based continuous batching with a KV cache.
+
+A fixed pool of ``batch_size`` slots decodes in lockstep (one jitted step
+per token across all slots). Each slot tracks its OWN cache position
+(vectorized ``cache_index``), so a freed slot restarts a new request at
+position 0: its fresh keys progressively overwrite the previous occupant's
+entries and the per-row causal mask makes any stale suffix unreachable.
+Recurrent state (RWKV/Mamba) is zeroed on admission instead (cache
+surgery on the slot's batch row).
+
+Prompt prefill is streamed through the same step (simple + correct; a
+production variant batches prefill separately).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model, build
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    batch_size: int = 4
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    eos_token: int = -1            # -1 ⇒ run to max_new_tokens
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    request_id: int = -1
+    pos: int = 0                   # this slot's next cache position
+    remaining: int = 0
+    out: List[int] = dataclasses.field(default_factory=list)
+    prompt: List[int] = dataclasses.field(default_factory=list)
+    last_token: int = 0
+    active: bool = False
+
+
+class ServeEngine:
+    def __init__(self, arch: ArchConfig, params, cfg: ServeConfig):
+        assert arch.causal, "encoder-only archs are not served autoregressively"
+        self.arch = arch
+        self.cfg = cfg
+        self.model: Model = build(arch, seq_impl="scan")
+        self.params = params
+        self.cache = self.model.init_cache(cfg.batch_size, cfg.max_seq)
+        self.slots = [_Slot() for _ in range(cfg.batch_size)]
+
+        def step(params, cache, tokens, index_vec):
+            logits, cache = self.model.apply(params, {"tokens": tokens},
+                                             cache=cache,
+                                             cache_index=index_vec)
+            return logits[:, -1], cache
+
+        self._step = jax.jit(step)
+
+    def _zero_slot_state(self, i: int) -> None:
+        """Zero recurrent (non-KV) state for slot ``i`` on admission."""
+        axis = self.model.cache_batch_axis
+
+        def zero(path, leaf):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            if key in ("k", "v"):
+                return leaf                     # positions handle staleness
+            idx = (slice(None),) * axis + (i,)
+            return leaf.at[idx].set(0)
+
+        self.cache = jax.tree_util.tree_map_with_path(zero, self.cache)
+
+    def generate(self, prompts: Sequence[Sequence[int]]) -> List[List[int]]:
+        cfg = self.cfg
+        queue = list(enumerate(prompts))
+        results: Dict[int, List[int]] = {}
+        B = cfg.batch_size
+        tokens = np.zeros((B, 1), np.int32)
+        index = np.zeros((B,), np.int32)
+
+        def admit(i: int):
+            s = self.slots[i]
+            if not queue:
+                s.active = False
+                return
+            rid, prompt = queue.pop(0)
+            s.request_id = rid
+            s.prompt = list(prompt)
+            s.out = []
+            s.remaining = cfg.max_new_tokens
+            s.pos = 0
+            s.active = True
+            self._zero_slot_state(i)
+
+        for i in range(B):
+            admit(i)
+
+        while any(s.active for s in self.slots):
+            for i, s in enumerate(self.slots):
+                if not s.active:
+                    tokens[i, 0] = 0
+                    index[i] = min(s.pos, cfg.max_seq - 1)
+                elif s.pos < len(s.prompt):
+                    tokens[i, 0] = s.prompt[s.pos]
+                    index[i] = s.pos
+                else:
+                    tokens[i, 0] = s.last_token
+                    index[i] = s.pos
+            logits, self.cache = self._step(self.params, self.cache,
+                                            jnp.asarray(tokens),
+                                            jnp.asarray(index))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, s in enumerate(self.slots):
+                if not s.active:
+                    continue
+                s.pos += 1
+                if s.pos < len(s.prompt):
+                    continue                     # still prefilling
+                tok = int(nxt[i])
+                s.out.append(tok)
+                s.last_token = tok
+                s.remaining -= 1
+                if (s.remaining <= 0 or tok == cfg.eos_token
+                        or s.pos >= cfg.max_seq - 1):
+                    results[s.request_id] = s.out
+                    admit(i)                     # continuous batching
+        return [results.get(i, []) for i in range(len(prompts))]

@@ -1,0 +1,1 @@
+from .loop import SimulatedFailure, TrainConfig, TrainResult, train

@@ -1,0 +1,49 @@
+"""Explicit-collective data-parallel step via shard_map, with optional int8
+error-feedback gradient compression on the reduction axis.
+
+pjit hides gradient reductions inside XLA; cross-pod (DCN) reductions are
+the one place where *changing the bytes on the wire* pays, so this variant
+makes the all-reduce explicit (``shard_map`` + ``psum``) and quantizes
+per-tensor to int8 with an error-feedback residual (optim/compression.py):
+4× fewer DCN bytes for <1e-3 relative gradient error per step, unbiased in
+the long run. Used for the 'pod' axis of the production mesh; intra-pod
+(ICI) reductions stay exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+from repro.optim import clip_by_global_norm
+from repro.optim.compression import ErrorFeedbackState, compressed_psum, ef_init
+
+
+def make_dp_train_step(model, opt, mesh: Mesh, *, axis: str = "data",
+                       lr: float = 1e-3, clip: float = 1.0,
+                       compress: bool = True):
+    """Returns (step_fn, ef_init_fn). Params replicated over ``axis``;
+    batch row-sharded; gradients reduced with (compressed) psum."""
+
+    def local_step(params, opt_state, batch, ef):
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        if compress:
+            grads, ef = compressed_psum(grads, ef, axis)
+        else:
+            grads = jax.lax.pmean(grads, axis)
+        loss = jax.lax.pmean(loss, axis)
+        grads, _ = clip_by_global_norm(grads, clip)
+        params, opt_state = opt.update(grads, opt_state, params, lr)
+        return params, opt_state, loss, ef
+
+    pspec = P()                               # replicated params/opt/ef
+    bspec = jax.tree.map(lambda _: P(axis), {"tokens": 0, "labels": 0})
+    step = shard_map(local_step, mesh=mesh,
+                     in_specs=(pspec, pspec, bspec, pspec),
+                     out_specs=(pspec, pspec, pspec, pspec),
+                     check_rep=False)
+    return jax.jit(step), ef_init

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run single-device (the dry-run's 512-device XLA flag is set only in
+# its own subprocess — see test_dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,68 @@
+"""ML-fleet cluster simulation tests (the paper's machinery at TPU scale)."""
+import pytest
+
+from repro.core.cluster import (FleetConfig, StepCost, simulate_training_run)
+
+COST = StepCost(compute_s=1.0, memory_s=0.4, collective_s=0.3,
+                overlap_collective=0.5)
+
+
+def _run(**kw):
+    base = dict(n_nodes=128, n_spares=8, seed=5, degrade_mtbf_hours=1e9,
+                straggler_sigma=0.05)
+    base.update(kw)
+    return simulate_training_run(COST, FleetConfig(**base), total_steps=300)
+
+
+def test_goodput_bounded():
+    st = _run()
+    assert 0.0 < st.goodput <= 1.0
+    assert st.steps_done == 300
+
+
+def test_failures_reduce_goodput():
+    healthy = _run(mtbf_hours_node=1e9)
+    flaky = _run(mtbf_hours_node=20.0)   # availability 0.91 > min_nodes_frac
+    assert flaky.failures > 0
+    assert flaky.goodput < healthy.goodput
+    assert flaky.lost_steps > 0 or flaky.stall_s > 0
+
+
+def test_checkpoint_interval_bounds_lost_work():
+    # Invariant: work lost per failure can never exceed the ckpt interval.
+    # (Direct rare-vs-often comparison is ill-posed: changing the interval
+    # shifts wallclock, so the failure *realizations* differ.)
+    for every in (10, 50, 250):
+        st = _run(mtbf_hours_node=10.0, ckpt_every_steps=every)
+        assert st.failures > 0
+        assert st.lost_steps <= st.failures * every
+
+
+def test_straggler_eviction_helps():
+    kw = dict(degrade_mtbf_hours=15.0, straggler_sigma=0.1,
+              mtbf_hours_node=1e9)
+    evict = _run(straggler_evict_factor=1.5, **kw)
+    tolerate = _run(straggler_evict_factor=1e9, **kw)
+    assert evict.evictions > 0
+    assert evict.goodput > tolerate.goodput
+
+
+def test_step_cost_roofline_composition():
+    c = StepCost(compute_s=2.0, memory_s=1.0, collective_s=1.0,
+                 overlap_collective=0.75)
+    # max(compute, memory) + unhidden collectives
+    assert c.step_seconds() == pytest.approx(2.0 + 0.25)
+
+
+def test_unsustainable_fleet_stalls_out_bounded():
+    """Availability mtbf/(mtbf+repair) < min_nodes_frac ⇒ the run cannot
+    finish; the simulator reports it (bounded by max_wallclock_s) instead
+    of hanging."""
+    from repro.core.cluster import simulate_training_run, FleetConfig
+    st = simulate_training_run(
+        COST, FleetConfig(n_nodes=64, n_spares=0, mtbf_hours_node=3.0,
+                          repair_hours=2.0, min_nodes_frac=0.75,
+                          degrade_mtbf_hours=1e9, seed=1),
+        total_steps=10_000, max_wallclock_s=6 * 3600.0)
+    assert st.steps_done < 10_000
+    assert st.stall_s > 0

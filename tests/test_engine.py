@@ -1,0 +1,143 @@
+"""Engine-level tests: event queues, Algorithm-1 schedulers, vec engine."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import Simulation
+from repro.core.datacenter import Broker, Datacenter
+from repro.core.entities import Cloudlet, Host, Vm
+from repro.core.events import (Event, HeapEventQueue, LinkedListEventQueue, Tag)
+from repro.core.scheduler import (CloudletSchedulerSpaceShared,
+                                  CloudletSchedulerTimeShared)
+from repro.core.vec_scheduler import simulate_batch
+
+
+# -- event queues -------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.floats(0, 1e6, allow_nan=False),
+                          st.integers(0, 3)), max_size=200))
+@settings(max_examples=50, deadline=None)
+def test_queue_pop_order_property(items):
+    """Both queues pop in (time, priority, insertion) order — identically."""
+    heap, ll = HeapEventQueue(), LinkedListEventQueue()
+    for t, pr in items:
+        heap.push(Event(time=t, tag="x", priority=pr))
+        ll.push(Event(time=t, tag="x", priority=pr))
+    out_h = [heap.pop().sort_key() for _ in range(len(items))]
+    out_l = [ll.pop().sort_key() for _ in range(len(items))]
+    assert out_h == sorted(out_h)
+    assert out_h == out_l
+
+
+def test_linkedlist_len_counts():
+    q = LinkedListEventQueue()
+    for i in range(5):
+        q.push(Event(time=float(i), tag="x"))
+    assert len(q) == 5 and not q.is_empty()
+
+
+# -- scheduler semantics (analytic) --------------------------------------------
+
+def _run_one_vm(scheduler, cloudlets, mips=1000.0, pes=2):
+    sim = Simulation()
+    host = Host(num_pes=pes, mips=mips, ram=1e6, bw=1e9)
+    dc = Datacenter(sim, [host])
+    broker = Broker(sim, dc)
+    vm = Vm(scheduler, num_pes=pes, mips=mips, ram=1024, bw=1e9)
+    broker.add_guest(vm, on_host=host)
+    for cl, at in cloudlets:
+        broker.submit(cl, vm, at=at)
+    sim.run()
+    return [cl for cl, _ in cloudlets]
+
+
+def test_time_shared_two_cloudlets_split_capacity():
+    # 2 PEs à 1000 MIPS; two 1-PE cloudlets of 1000 MI each run concurrently
+    # at full speed (enough PEs) → both finish at t=1.
+    cls = [(Cloudlet(length=1000.0, pes=1), 0.0),
+           (Cloudlet(length=1000.0, pes=1), 0.0)]
+    done = _run_one_vm(CloudletSchedulerTimeShared(), cls)
+    assert all(abs(c.finish_time - 1.0) < 1e-9 for c in done)
+
+
+def test_time_shared_oversubscribed():
+    # 4 × 1-PE cloudlets on 2 PEs: capacity split → finish at t=2.
+    cls = [(Cloudlet(length=1000.0, pes=1), 0.0) for _ in range(4)]
+    done = _run_one_vm(CloudletSchedulerTimeShared(), cls)
+    assert all(abs(c.finish_time - 2.0) < 1e-9 for c in done)
+
+
+def test_space_shared_queueing_fifo():
+    # CloudSim semantics: a cloudlet's length is processed at capacity×pes,
+    # so a 1000-MI 2-PE cloudlet on 2×1000 MIPS takes 0.5 s; the second
+    # (queued — both PEs busy) finishes at 1.0 s.
+    cls = [(Cloudlet(length=1000.0, pes=2), 0.0),
+           (Cloudlet(length=1000.0, pes=2), 0.0)]
+    done = _run_one_vm(CloudletSchedulerSpaceShared(), cls)
+    assert abs(done[0].finish_time - 0.5) < 1e-9
+    assert abs(done[1].finish_time - 1.0) < 1e-9
+
+
+def test_space_shared_head_of_line_blocks():
+    # 1-PE guest; head needs 2 PEs → it can never run, nor can later ones.
+    sim = Simulation()
+    host = Host(num_pes=1, mips=1000.0, ram=1e6, bw=1e9)
+    dc = Datacenter(sim, [host])
+    broker = Broker(sim, dc)
+    vm = Vm(CloudletSchedulerSpaceShared(), num_pes=1, mips=1000.0,
+            ram=64, bw=1e9)
+    broker.add_guest(vm, on_host=host)
+    blocked = Cloudlet(length=100.0, pes=2)
+    behind = Cloudlet(length=100.0, pes=1)
+    broker.submit(blocked, vm, at=0.0)
+    broker.submit(behind, vm, at=0.0)
+    sim.run(until=10.0)
+    assert blocked.finish_time < 0 and behind.finish_time < 0
+
+
+def test_retroactive_progress_bug_absent():
+    """A cloudlet submitted at t>0 must not earn the elapsed window."""
+    cls = [(Cloudlet(length=1000.0, pes=1), 0.0),
+           (Cloudlet(length=1000.0, pes=1), 0.9)]
+    done = _run_one_vm(CloudletSchedulerTimeShared(), cls)
+    assert done[1].finish_time >= 0.9 + 1000.0 / 2000.0  # can't be instant
+
+
+# -- vectorized scheduler vs OO engine (property) --------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["time", "space"]))
+@settings(max_examples=15, deadline=None)
+def test_vec_scheduler_matches_oo(seed, mode):
+    rng = np.random.default_rng(seed)
+    G, C = 2, 5
+    length = np.where(rng.random((G, C)) < 0.8,
+                      rng.integers(100, 5000, (G, C)).astype(float), 0.0)
+    pes = rng.integers(1, 3, (G, C)).astype(float)
+    submit = np.where(length > 0, np.round(rng.random((G, C)) * 10, 3), 1e18)
+    gmips = rng.integers(500, 2000, G).astype(float)
+    gpes = rng.integers(1, 5, G).astype(float)
+    vec = simulate_batch(length, pes, submit, gmips, gpes, mode)
+
+    sim = Simulation()
+    hosts = [Host(num_pes=int(gpes[g]), mips=float(gmips[g]), ram=1e9, bw=1e9)
+             for g in range(G)]
+    dc = Datacenter(sim, hosts)
+    broker = Broker(sim, dc)
+    guests, cls = [], {}
+    for g in range(G):
+        sch = (CloudletSchedulerTimeShared() if mode == "time"
+               else CloudletSchedulerSpaceShared())
+        vm = Vm(sch, num_pes=int(gpes[g]), mips=float(gmips[g]),
+                ram=1024, bw=1e9)
+        broker.add_guest(vm, on_host=hosts[g])
+        guests.append(vm)
+    for t, g, c in sorted((submit[g, c], g, c) for g in range(G)
+                          for c in range(C) if length[g, c] > 0):
+        cl = Cloudlet(length=float(length[g, c]), pes=int(pes[g, c]))
+        cls[(g, c)] = cl
+        broker.submit(cl, guests[g], at=float(t))
+    sim.run()
+    for (g, c), cl in cls.items():
+        oo = cl.finish_time if cl.finish_time >= 0 else np.inf
+        assert np.isclose(vec[g, c], oo, rtol=1e-9, atol=1e-9) or \
+            (np.isinf(vec[g, c]) and np.isinf(oo))

@@ -1,0 +1,98 @@
+"""Network model + workflow tests: Eq.(2) property, nesting, deadlines."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.case_study import (O_C, O_V, PAYLOAD_BIG, PAYLOAD_SMALL,
+                                   run_case_study)
+from repro.core.entities import Container, Host, Vm
+from repro.core.network import NetworkTopology, theoretical_makespan
+from repro.core.scheduler import CloudletSchedulerTimeShared
+from repro.core.workflow import Stage, StageKind, NetworkCloudlet, chain_dag
+
+
+# -- Eq.(2) exact reproduction (paper Figure 6) ---------------------------------
+
+@pytest.mark.parametrize("virt", ["V", "C", "N"])
+@pytest.mark.parametrize("placement", ["I", "II", "III"])
+@pytest.mark.parametrize("payload", [PAYLOAD_SMALL, PAYLOAD_BIG])
+def test_single_activation_matches_eq2(virt, placement, payload):
+    r = run_case_study(virt=virt, placement=placement, payload=payload,
+                       activations=1)
+    assert abs(r.makespans[0] - r.theoretical) < 1e-6
+
+
+def test_overhead_disabled_edge_case():
+    r = run_case_study(virt="V", placement="III", payload=PAYLOAD_BIG,
+                       overhead_on=False)
+    # 2.564 + 2 hops × 16 s  (paper §6)
+    assert abs(r.makespans[0] - (10000 / 7800 * 2 + 32.0)) < 1e-6
+
+
+# -- Eq.(2) as a property over random parameters ---------------------------------
+
+@given(payload=st.floats(1.0, 2e9), overhead=st.floats(0.0, 10.0),
+       length=st.floats(100.0, 1e6))
+@settings(max_examples=20, deadline=None)
+def test_eq2_property(payload, overhead, length):
+    """Simulated chain makespan equals Eq.(2) for arbitrary parameters."""
+    import repro.core.case_study as cs
+    old_l = cs.L_TASK
+    try:
+        cs.L_TASK = length
+        for placement, hops in (("I", 0), ("II", 1), ("III", 2)):
+            r = cs.run_case_study(virt="V", placement=placement,
+                                  payload=payload, activations=1)
+            theo = theoretical_makespan([length, length], cs.MIPS,
+                                        cs.O_V, hops, payload, cs.BW)
+            assert abs(r.makespans[0] - theo) < 1e-6 * max(theo, 1.0)
+    finally:
+        cs.L_TASK = old_l
+
+
+# -- nesting / overhead composition -----------------------------------------------
+
+def test_nested_overhead_composes():
+    vm = Vm(CloudletSchedulerTimeShared(), virt_overhead=5.0)
+    ctr = Container(CloudletSchedulerTimeShared(), virt_overhead=3.0)
+    host = Host(num_pes=8, mips=10000, ram=1e6, bw=1e9, guest_scheduler="time")
+    assert host.try_allocate(vm)
+    assert vm.try_allocate(ctr)                  # nested virtualization (C1)
+    assert ctr.stack_overhead() == pytest.approx(8.0)     # O_N = O_V + O_C
+    assert vm.stack_overhead() == pytest.approx(5.0)
+
+
+def test_topology_link_counts():
+    topo = NetworkTopology(link_bw=1e9)
+    hosts = [Host() for _ in range(4)]
+    topo.add_rack(0, hosts[:2])
+    topo.add_rack(1, hosts[2:])
+    assert topo.path_links(hosts[0], hosts[0]) == 0
+    assert topo.path_links(hosts[0], hosts[1]) == 2       # same rack
+    assert topo.path_links(hosts[0], hosts[2]) == 4       # cross rack
+    assert len(topo.switches_on_path(hosts[0], hosts[3])) == 3
+
+
+def test_deadline_checked():
+    """7G fixes ≤6G's unchecked deadlines (paper §4.5)."""
+    r = run_case_study(virt="N", placement="III", payload=PAYLOAD_BIG,
+                       activations=1)
+    dag = chain_dag([100.0, 100.0], 1.0, deadline=1e-9)
+    cl = dag[0]
+    cl.submit_time = 0.0
+    cl.check_deadline(10.0)
+    assert cl.missed_deadline
+
+
+def test_fig7_contention_claims():
+    """Paper Figure 7: co-location contention; II ≡ III at tiny payloads."""
+    r1 = run_case_study(virt="V", placement="I", payload=PAYLOAD_SMALL,
+                        activations=20, overhead_on=False)
+    r2 = run_case_study(virt="V", placement="II", payload=PAYLOAD_SMALL,
+                        activations=20, overhead_on=False)
+    r3 = run_case_study(virt="V", placement="III", payload=PAYLOAD_SMALL,
+                        activations=20, overhead_on=False)
+    med = lambda xs: sorted(xs)[len(xs) // 2]
+    assert med(r1.makespans) > med(r2.makespans)          # contention
+    assert abs(med(r2.makespans) - med(r3.makespans)) < 1e-6

@@ -1,0 +1,88 @@
+"""Unified selection policies (C2) + power/consolidation module tests."""
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.consolidation_sim import run_consolidation
+from repro.core.power import (ALGORITHMS, detect_iqr, detect_lr, detect_lrr,
+                              detect_mad, detect_thr)
+from repro.core.selection import (FirstFit, MaximumScore, MinimumScore,
+                                  RandomSelection)
+
+
+# -- selection invariants ---------------------------------------------------------
+
+@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_minmax_score_invariant(xs):
+    lo = MinimumScore(lambda x: x).select(xs)
+    hi = MaximumScore(lambda x: x).select(xs)
+    assert lo == min(xs) and hi == max(xs)
+
+
+@given(st.lists(st.integers(-100, 100), min_size=1, max_size=50))
+@settings(max_examples=50, deadline=None)
+def test_filter_respected(xs):
+    sel = MinimumScore(lambda x: x).select(xs, lambda x: x % 2 == 0)
+    evens = [x for x in xs if x % 2 == 0]
+    assert sel == (min(evens) if evens else None)
+
+
+def test_empty_pool_returns_none():
+    assert FirstFit().select([]) is None
+    assert RandomSelection(0).select([1, 2, 3], lambda x: x > 99) is None
+
+
+def test_random_selection_deterministic_per_seed():
+    a = [RandomSelection(7).select(list(range(100))) for _ in range(3)]
+    b = [RandomSelection(7).select(list(range(100))) for _ in range(3)]
+    assert a == b
+
+
+# -- overload detectors -------------------------------------------------------------
+
+def test_thr_boundary():
+    assert not detect_thr([], 0.8)
+    assert detect_thr([], 0.80001)
+
+
+def test_adaptive_detectors_fallback_to_thr_with_short_history():
+    for det in (detect_iqr, detect_mad, detect_lrr):
+        assert det([0.5] * 3, 0.9) == detect_thr([0.5] * 3, 0.9)
+
+
+def test_iqr_lowers_threshold_with_volatile_history():
+    calm = [0.5 + 0.001 * (i % 2) for i in range(20)]
+    wild = [0.1 if i % 2 else 0.9 for i in range(20)]
+    # volatile history → lower threshold → same util more likely overloaded
+    assert not detect_iqr(calm, 0.85)
+    assert detect_iqr(wild, 0.85)
+
+
+def test_lr_predicts_trend():
+    # safety 1.2 × one-step-ahead prediction ≥ 1.0 ⇒ overloaded
+    rising = [0.065 * i for i in range(15)]         # predicts ≈ 0.98 → 1.17
+    flat = [0.3] * 15
+    assert detect_lr(rising, rising[-1])
+    assert not detect_lr(flat, 0.3)
+
+
+# -- consolidation: engines agree; consolidation saves energy ------------------------
+
+@pytest.mark.parametrize("algo", ALGORITHMS)
+def test_engines_agree(algo):
+    rs = {}
+    for eng in ("6g", "7g", "vec"):
+        rs[eng] = run_consolidation(eng, algo, n_hosts=20, n_vms=40,
+                                    n_samples=48)
+    assert rs["6g"].energy_kwh == pytest.approx(rs["7g"].energy_kwh, abs=1e-12)
+    assert rs["7g"].energy_kwh == pytest.approx(rs["vec"].energy_kwh, abs=1e-12)
+    assert rs["6g"].migrations == rs["7g"].migrations == rs["vec"].migrations
+
+
+def test_consolidation_saves_energy_vs_dvfs():
+    dvfs = run_consolidation("7g", "Dvfs", n_hosts=20, n_vms=40, n_samples=48)
+    thr = run_consolidation("7g", "ThrMu", n_hosts=20, n_vms=40, n_samples=48)
+    assert thr.energy_kwh < dvfs.energy_kwh
+    assert thr.final_active_hosts < dvfs.final_active_hosts

@@ -1,0 +1,182 @@
+"""Substrate tests: data pipeline, checkpointing, optimizers, compression,
+fault-tolerant training, serving."""
+import os
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import load_tiny
+from repro.data import DataConfig, TokenPipeline
+from repro.models.model import build
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         compress_int8, cosine_schedule, decompress_int8,
+                         make_optimizer)
+from repro.serve import ServeConfig, ServeEngine
+from repro.train import SimulatedFailure, TrainConfig, train
+
+
+# -- data pipeline -----------------------------------------------------------
+
+def test_pipeline_deterministic_and_resumable():
+    cfg = DataConfig(vocab=512, seq_len=16, global_batch=8, seed=3)
+    p1, p2 = TokenPipeline(cfg), TokenPipeline(cfg)
+    for step in (0, 5, 1000):
+        a, b = p1.batch(step), p2.batch(step)
+        assert np.array_equal(a["tokens"], b["tokens"])
+    # resume = just ask for the same step again
+    assert np.array_equal(p1.batch(7)["tokens"], p1.batch(7)["tokens"])
+
+
+def test_pipeline_shards_disjoint_and_cover():
+    base = DataConfig(vocab=512, seq_len=16, global_batch=8, seed=3)
+    whole = TokenPipeline(base).batch(4)["tokens"]
+    # NOTE: shard batches are independently generated slices; we assert
+    # shard determinism and shape, not concatenation identity.
+    parts = [TokenPipeline(DataConfig(vocab=512, seq_len=16, global_batch=8,
+                                      seed=3, n_shards=4, shard=i)).batch(4)
+             for i in range(4)]
+    assert all(p["tokens"].shape == (2, 16) for p in parts)
+    a0 = TokenPipeline(DataConfig(vocab=512, seq_len=16, global_batch=8,
+                                  seed=3, n_shards=4, shard=0)).batch(4)
+    assert np.array_equal(parts[0]["tokens"], a0["tokens"])
+    assert not np.array_equal(parts[0]["tokens"], parts[1]["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    p = TokenPipeline(DataConfig(vocab=64, seq_len=8, global_batch=2))
+    b = p.batch(0)
+    assert np.array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+# -- checkpoint manager --------------------------------------------------------
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 3), x), "b": [jnp.arange(5), jnp.zeros(())]}
+
+
+def test_checkpoint_roundtrip_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        m = CheckpointManager(d, keep=2)
+        for s in (5, 10, 15):
+            m.save(_tree(float(s)), s)
+        assert m.latest_step() == 15
+        assert m.all_steps() == [10, 15]          # keep=2 gc'd step 5
+        restored, step, _ = m.restore(_tree())
+        assert step == 15
+        assert float(restored["a"][0, 0]) == 15.0
+
+
+def test_checkpoint_atomicity_ignores_torn_dirs():
+    with tempfile.TemporaryDirectory() as d:
+        m = CheckpointManager(d)
+        m.save(_tree(1.0), 1)
+        torn = os.path.join(d, "step_99")
+        os.makedirs(torn)                          # no meta/arrays => torn
+        assert m.latest_step() == 1
+        r, s, _ = m.restore(_tree())
+        assert s == 1
+
+
+def test_checkpoint_async():
+    with tempfile.TemporaryDirectory() as d:
+        m = CheckpointManager(d)
+        m.save(_tree(2.0), 2, blocking=False)
+        m.wait()
+        assert m.latest_step() == 2
+
+
+# -- optimizers -------------------------------------------------------------------
+
+def test_adamw_first_step_is_signlike():
+    params = {"w": jnp.array([1.0, -1.0, 2.0])}
+    grads = {"w": jnp.array([0.5, -0.5, 0.1])}
+    st_ = adamw_init(params)
+    new, st2 = adamw_update(grads, st_, params, lr=0.1, weight_decay=0.0)
+    # bias-corrected first step ≈ lr·sign(g)
+    np.testing.assert_allclose(np.asarray(params["w"] - new["w"]),
+                               0.1 * np.sign(np.asarray(grads["w"])),
+                               rtol=1e-4)
+    assert int(st2.step) == 1
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 3.0)}
+    clipped, gn = clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(np.sqrt(90.0))
+    total = float(jnp.linalg.norm(clipped["a"]))
+    assert total == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adafactor_runs_and_shapes():
+    opt = make_optimizer("adafactor")
+    params = {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+    st_ = opt.init(params)
+    g = jax.tree.map(jnp.ones_like, params)
+    new, st2 = opt.update(g, st_, params, 0.01)
+    assert new["w"].shape == (8, 4)
+    assert st2.vr["w"].shape == (8,) and st2.vc["w"].shape == (4,)
+
+
+def test_cosine_schedule_endpoints():
+    s = cosine_schedule(1.0, warmup=10, total=110)
+    assert float(s(0)) == 0.0
+    assert float(s(10)) == pytest.approx(1.0)
+    assert float(s(110)) == pytest.approx(0.0, abs=1e-6)
+
+
+# -- compression --------------------------------------------------------------------
+
+@given(st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_int8_roundtrip_error_bound(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.01, 10))
+    q, scale = compress_int8(x)
+    back = decompress_int8(q, scale)
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-9
+
+
+# -- fault-tolerant training ------------------------------------------------------------
+
+def test_training_with_failures_is_bitidentical():
+    arch = load_tiny("qwen3_8b")
+    with tempfile.TemporaryDirectory() as d1, tempfile.TemporaryDirectory() as d2:
+        clean = train(arch, TrainConfig(steps=12, ckpt_every=4,
+                                        async_ckpt=False), d1)
+        failed = train(arch, TrainConfig(steps=12, ckpt_every=4,
+                                         async_ckpt=False), d2,
+                       failure_at={6, 9})
+        assert failed.restarts == 2
+        for a, b in zip(jax.tree.leaves(clean.params),
+                        jax.tree.leaves(failed.params)):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_training_loss_decreases():
+    arch = load_tiny("granite_20b")
+    with tempfile.TemporaryDirectory() as d:
+        r = train(arch, TrainConfig(steps=20, ckpt_every=50), d)
+        assert r.losses[-1] < r.losses[0]
+
+
+# -- serving -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id", ["qwen3_8b", "rwkv6_7b"])
+def test_serve_batch_invariance(arch_id):
+    arch = load_tiny(arch_id)
+    model = build(arch, seq_impl="scan")
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = [[1, 2, 3], [4, 5], [6], [7, 8, 9]]
+    outs = {}
+    for bs in (1, 3):
+        eng = ServeEngine(arch, params, ServeConfig(batch_size=bs, max_seq=64,
+                                                    max_new_tokens=6))
+        outs[bs] = eng.generate(prompts)
+    assert outs[1] == outs[3]
+    assert all(len(o) == 6 for o in outs[1])
