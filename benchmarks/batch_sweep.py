@@ -1,0 +1,140 @@
+"""Substrate benchmark: Monte-Carlo fleet sweep, OO loop vs one vmap call.
+
+The workload is the ISSUE-1 acceptance scenario: a 256-point what-if sweep
+(MTBF × checkpoint-cadence × seeds) over a synchronous-training fleet.  The
+OO engine runs one Python event loop per scenario; the vec backend runs the
+whole batch inside a single jit-compiled ``lax.while_loop`` under ``vmap``
+(``core.vec_cluster``), in three flavours:
+
+  * ``vec``        — exact mode (f64, bit-identical to OO on deterministic
+                     configs),
+  * ``vec_fast``   — f32 loop (same statistics, higher throughput),
+  * ``vec_pallas`` — exact mode with the fused Pallas next-event reduction
+                     (interpret mode on CPU — records the TPU-lowering
+                     path's overhead honestly).
+
+Writes ``BENCH_substrate.json`` at the repo root so the perf trajectory of
+the substrate is recorded PR over PR; also emits the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.backend import get_backend
+from repro.core.cluster import FleetConfig, FleetSim, StepCost
+
+from ._util import emit
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_substrate.json"
+
+COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                overlap_collective=0.6)
+
+
+def _sweep_axes(b: int):
+    """MTBF × ckpt-cadence × seed grid with b total points."""
+    mtbfs = np.array([2000.0, 500.0, 100.0, 50.0])
+    ckpts = np.array([50, 100, 200, 1000])
+    reps = b // (len(mtbfs) * len(ckpts))
+    mt = np.repeat(mtbfs, len(ckpts) * reps)[:b]
+    ck = np.tile(np.repeat(ckpts, reps), len(mtbfs))[:b]
+    seeds = np.tile(np.arange(max(reps, 1)), b)[:b]
+    return mt, ck, seeds
+
+
+def _fleet_cfg(n_nodes: int) -> FleetConfig:
+    # Eviction/degradation off: the sweep studies MTBF × ckpt cadence, and
+    # the vec engine then statically prunes the straggler-tracking subgraph.
+    return FleetConfig(n_nodes=n_nodes, n_spares=max(n_nodes // 16, 2),
+                       straggler_sigma=0.08, repair_hours=2.0,
+                       degrade_mtbf_hours=1e9, straggler_evict_factor=1e9)
+
+
+def _oo_sweep(cfg, steps, mt, ck, seeds):
+    """Loop the OO FleetSim over every scenario point, counting engine
+    events (the heap queue's dispatch count) for the events/sec axis."""
+    from dataclasses import replace
+    backend = get_backend("oo")
+    goodputs, events = [], 0
+    t0 = time.perf_counter()
+    for i in range(len(seeds)):
+        c = replace(cfg, seed=int(seeds[i]), mtbf_hours_node=float(mt[i]),
+                    ckpt_every_steps=int(ck[i]))
+        sim = backend.make_simulation()
+        fleet = FleetSim(sim, COST, c, steps)
+        end = sim.run(until=30 * 86400.0)
+        goodputs_val = (fleet.step * fleet.base_step_s /
+                        (fleet.stats.wallclock_s or end))
+        goodputs.append(goodputs_val)
+        events += sim.events_processed
+    wall = time.perf_counter() - t0
+    return wall, events, np.asarray(goodputs)
+
+
+def _vec_sweep(cfg, steps, mt, ck, seeds, **kw):
+    from repro.core.vec_cluster import simulate_fleet_batch
+    run = lambda s: simulate_fleet_batch(COST, cfg, steps, seeds=s,
+                                         mtbf_hours=mt, ckpt_every=ck, **kw)
+    t0 = time.perf_counter()
+    run(seeds + 1)                         # compile + one execution
+    cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    out = run(seeds)
+    wall = time.perf_counter() - t0
+    # The cold call compiles AND executes once; report compilation alone.
+    compile_s = max(cold - wall, 0.0)
+    return wall, compile_s, int(out["iterations"].sum()), out["goodput"]
+
+
+def run(quick: bool = False) -> dict:
+    b = 64 if quick else 256
+    steps = 200 if quick else 1000
+    n_nodes = 64
+    cfg = _fleet_cfg(n_nodes)
+    mt, ck, seeds = _sweep_axes(b)
+
+    oo_wall, oo_events, oo_good = _oo_sweep(cfg, steps, mt, ck, seeds)
+    flavours = {}
+    for name, kw in (("vec", {}),
+                     ("vec_fast", dict(precision="fast")),
+                     ("vec_pallas", dict(use_pallas=True))):
+        wall, compile_s, iters, good = _vec_sweep(cfg, steps, mt, ck,
+                                                  seeds, **kw)
+        flavours[name] = dict(
+            wall_s=round(wall, 4), compile_s=round(compile_s, 4),
+            events=iters, events_per_s=round(iters / wall, 1),
+            goodput_mean=round(float(good.mean()), 5),
+            speedup_vs_oo=round(oo_wall / wall, 2))
+        emit(f"batch_sweep/{name}", wall / b * 1e6,
+             f"wall_s={wall:.2f};compile_s={compile_s:.2f};"
+             f"speedup_vs_oo={oo_wall / wall:.1f}x;"
+             f"goodput={good.mean():.4f}")
+
+    rel = abs(flavours["vec"]["goodput_mean"] - oo_good.mean()) \
+        / max(oo_good.mean(), 1e-12)
+    record = dict(
+        benchmark="batch_sweep",
+        config=dict(scenarios=b, total_steps=steps, n_nodes=n_nodes,
+                    n_spares=cfg.n_spares, quick=quick,
+                    sweep="mtbf_hours × ckpt_every × seed"),
+        oo=dict(wall_s=round(oo_wall, 4), events=oo_events,
+                events_per_s=round(oo_events / oo_wall, 1),
+                goodput_mean=round(float(oo_good.mean()), 5)),
+        **flavours,
+        validation=dict(goodput_rel_diff_vec_vs_oo=round(float(rel), 5)))
+    emit("batch_sweep/oo_loop", oo_wall / b * 1e6,
+         f"wall_s={oo_wall:.2f};events_per_s={oo_events / oo_wall:.0f};"
+         f"goodput={oo_good.mean():.4f}")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("batch_sweep/record", 0.0, f"written={OUT_PATH.name};"
+         f"vec_speedup={flavours['vec']['speedup_vs_oo']}x;"
+         f"vec_fast_speedup={flavours['vec_fast']['speedup_vs_oo']}x")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -40,6 +40,19 @@ def run(quick: bool = False) -> None:
             DEFAULT_COST, cfg, total_steps=steps))
         emit(f"cluster_sim/straggler/{label}", secs * 1e6,
              f"goodput={st.goodput:.3f};evictions={st.evictions}")
+    # backend parity spot-check: the same scenario through the vec backend
+    # (deterministic config ⇒ exact agreement; cf. tests/test_vec_cluster.py)
+    cfg = FleetConfig(n_nodes=nodes, n_spares=nodes // 32,
+                      straggler_sigma=0.0, mtbf_hours_node=1e9,
+                      degrade_mtbf_hours=1e9, seed=11)
+    _, st_oo = time_call(lambda: simulate_training_run(
+        DEFAULT_COST, cfg, total_steps=min(steps, 500)))
+    secs_v, st_vec = time_call(lambda: simulate_training_run(
+        DEFAULT_COST, cfg, total_steps=min(steps, 500), backend="vec"))
+    assert st_vec.wallclock_s == st_oo.wallclock_s, "vec/oo divergence"
+    emit("cluster_sim/backend_parity", secs_v * 1e6,
+         f"oo_goodput={st_oo.goodput:.4f};vec_goodput={st_vec.goodput:.4f};"
+         f"exact_match={st_vec.wallclock_s == st_oo.wallclock_s}")
 
 
 if __name__ == "__main__":

@@ -1,16 +1,20 @@
 """Table 2 reproduction: run-time + allocation, CloudSim 6G vs 7G (vs vec).
 
 Five consolidation algorithms (Dvfs, MadMmt, ThrMu, IqrRs, LrrMc) on a
-PlanetLab-like trace workload; each runs on the 6G-style baseline engine,
-the 7G re-engineered engine, and the beyond-paper vectorized manager.
-Decisions are asserted identical, so timing/allocation differences are
-purely mechanical — the paper's experimental design.
+PlanetLab-like trace workload; each runs on every registered backend via
+the SimBackend substrate (``legacy`` = the ≤6G baseline mechanics, ``oo`` =
+the re-engineered 7G engine, ``vec`` = the JAX SoA manager).  Decisions are
+asserted identical, so timing/allocation differences are purely
+mechanical — the paper's experimental design.
 """
 from __future__ import annotations
 
-from repro.core.consolidation_sim import ALGORITHMS, run_consolidation
+from repro.core.backend import run_scenario
+from repro.core.consolidation_sim import ALGORITHMS
 
 from ._util import alloc_call, emit, time_call
+
+ENGINES = ("legacy", "oo", "vec")
 
 
 def run(quick: bool = False) -> dict:
@@ -19,11 +23,12 @@ def run(quick: bool = False) -> dict:
     results = {}
     for algo in ALGORITHMS:
         row = {}
-        for eng in ("6g", "7g", "vec"):
-            secs, res = time_call(lambda e=eng: run_consolidation(
-                e, algo, n_hosts=n_hosts, n_vms=n_vms, n_samples=n_samples))
-            alloc_mb, peak_mb, res2 = alloc_call(lambda e=eng: run_consolidation(
-                e, algo, n_hosts=n_hosts, n_vms=n_vms, n_samples=n_samples))
+        for eng in ENGINES:
+            call = lambda e=eng: run_scenario(
+                "consolidation", backend=e, algo=algo, n_hosts=n_hosts,
+                n_vms=n_vms, n_samples=n_samples)
+            secs, res = time_call(call)
+            alloc_mb, peak_mb, res2 = alloc_call(call)
             assert res.migrations == res2.migrations
             row[eng] = dict(secs=secs, alloc_mb=alloc_mb, peak_mb=peak_mb,
                             energy=res.energy_kwh, migrations=res.migrations)
@@ -31,10 +36,12 @@ def run(quick: bool = False) -> dict:
                  f"alloc_mb={alloc_mb:.1f};peak_mb={peak_mb:.1f};"
                  f"energy_kwh={res.energy_kwh:.2f};migrations={res.migrations}")
         # decision identity across engines (benchmark fairness, cf. tests)
-        assert row["6g"]["migrations"] == row["7g"]["migrations"] == row["vec"]["migrations"], algo
-        rt_impr = 100.0 * (1 - row["7g"]["secs"] / row["6g"]["secs"])
-        mem_impr = 100.0 * (1 - row["7g"]["alloc_mb"] / max(row["6g"]["alloc_mb"], 1e-9))
-        vec_impr = 100.0 * (1 - row["vec"]["secs"] / row["6g"]["secs"])
+        assert row["legacy"]["migrations"] == row["oo"]["migrations"] \
+            == row["vec"]["migrations"], algo
+        rt_impr = 100.0 * (1 - row["oo"]["secs"] / row["legacy"]["secs"])
+        mem_impr = 100.0 * (1 - row["oo"]["alloc_mb"]
+                            / max(row["legacy"]["alloc_mb"], 1e-9))
+        vec_impr = 100.0 * (1 - row["vec"]["secs"] / row["legacy"]["secs"])
         emit(f"consolidation/{algo}/improvement", 0.0,
              f"runtime_7g_vs_6g_pct={rt_impr:.1f};alloc_7g_vs_6g_pct={mem_impr:.1f};"
              f"runtime_vec_vs_6g_pct={vec_impr:.1f}")

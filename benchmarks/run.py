@@ -10,6 +10,7 @@ Benchmarks (paper artifact → module):
   §4.4      → engine_micro       (event-queue data structures)
   beyond    → vec_speedup        (vectorized Algorithm 1 vs OO)
   §6→ML     → cluster_sim        (fleet goodput vs MTBF/ckpt/stragglers)
+  beyond    → batch_sweep        (vmap fleet sweep vs OO loop → BENCH_substrate.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 """
 from __future__ import annotations
@@ -26,13 +27,15 @@ def main() -> None:
                     help="comma-separated subset of benchmark names")
     args = ap.parse_args()
 
-    from . import case_study, cluster_sim, consolidation, engine_micro, vec_speedup
+    from . import (batch_sweep, case_study, cluster_sim, consolidation,
+                   engine_micro, vec_speedup)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
         "consolidation": consolidation.run,
         "vec_speedup": vec_speedup.run,
         "cluster_sim": cluster_sim.run,
+        "batch_sweep": batch_sweep.run,
     }
     try:
         from . import dryrun_report

@@ -1,10 +1,13 @@
 """Beyond-paper: vectorized Algorithm 1 (JAX SoA) vs the OO scheduler.
 
 Throughput of complete time-shared simulations at growing guest×cloudlet
-scale. The OO engine walks Python objects per event; the vectorized engine
+scale, with both engines selected through the SimBackend substrate's
+``cloudlet_batch`` scenario (identical contract: finish times [G, C]).
+The OO engine walks Python objects per event; the vectorized engine
 advances all guests in fused masked-array passes inside one
 ``lax.while_loop`` (compiled once, reused across problem instances of the
-same shape).
+same shape); ``vec+pallas`` additionally routes the next-event reduction
+through the fused Pallas min/argmin kernel (interpret mode on CPU).
 """
 from __future__ import annotations
 
@@ -12,57 +15,44 @@ import time
 
 import numpy as np
 
-from repro.core.datacenter import Broker, Datacenter
-from repro.core.engine import Simulation
-from repro.core.entities import Cloudlet, Host, Vm
-from repro.core.scheduler import CloudletSchedulerTimeShared
-from repro.core.vec_scheduler import simulate_batch
+from repro.core.backend import run_scenario
 
 from ._util import emit
 
 
-def _oo_run(length, pes, submit, gmips, gpes) -> float:
-    G, C = length.shape
-    sim = Simulation()
-    hosts = [Host(num_pes=int(gpes[g]), mips=float(gmips[g]), ram=1e9, bw=1e9)
-             for g in range(G)]
-    dc = Datacenter(sim, hosts)
-    broker = Broker(sim, dc)
-    guests = []
-    for g in range(G):
-        vm = Vm(CloudletSchedulerTimeShared(), num_pes=int(gpes[g]),
-                mips=float(gmips[g]), ram=1024, bw=1e9)
-        broker.add_guest(vm, on_host=hosts[g])
-        guests.append(vm)
-    for g in range(G):
-        for c in range(C):
-            if length[g, c] > 0:
-                broker.submit(Cloudlet(length=float(length[g, c]),
-                                       pes=int(pes[g, c])),
-                              guests[g], at=float(submit[g, c]))
+def _time_backend(backend: str, warmup: bool = False, **kw):
+    """Returns (seconds, finish-times result) for one cloudlet_batch run."""
+    if warmup:                              # compile outside the clock
+        run_scenario("cloudlet_batch", backend=backend, **kw)
     t0 = time.perf_counter()
-    sim.run()
-    return time.perf_counter() - t0
+    out = run_scenario("cloudlet_batch", backend=backend, **kw)
+    return time.perf_counter() - t0, out
 
 
 def run(quick: bool = False) -> None:
     rng = np.random.default_rng(0)
     shapes = [(16, 16), (64, 32)] if quick else [(16, 16), (64, 32), (256, 64)]
     for G, C in shapes:
-        length = rng.integers(100, 5000, (G, C)).astype(float)
-        pes = np.ones((G, C))
-        submit = np.round(rng.random((G, C)) * 100, 3)
-        gmips = rng.integers(500, 2000, G).astype(float)
-        gpes = rng.integers(1, 5, G).astype(float)
-        # warm-up (compile)
-        simulate_batch(length, pes, submit, gmips, gpes, "time")
-        t0 = time.perf_counter()
-        simulate_batch(length, pes, submit, gmips, gpes, "time")
-        t_vec = time.perf_counter() - t0
-        t_oo = _oo_run(length, pes, submit, gmips, gpes)
+        kw = dict(length=rng.integers(100, 5000, (G, C)).astype(float),
+                  pes=np.ones((G, C)),
+                  submit=np.round(rng.random((G, C)) * 100, 3),
+                  guest_mips=rng.integers(500, 2000, G).astype(float),
+                  guest_pes=rng.integers(1, 5, G).astype(float),
+                  mode="time")
+        t_vec, out_vec = _time_backend("vec", warmup=True, **kw)
+        t_oo, out_oo = _time_backend("oo", **kw)
+        finite = np.isfinite(out_vec)
+        assert np.allclose(out_vec[finite], np.asarray(out_oo)[finite],
+                           rtol=1e-9), "engines disagree"
         n_cl = G * C
         emit(f"vec_speedup/{G}x{C}", t_vec / n_cl * 1e6,
              f"oo_us_per_cl={t_oo / n_cl * 1e6:.2f};speedup={t_oo / t_vec:.1f}x")
+        if G <= 64:     # pallas interpret mode: record the lowering path
+            t_pal, out_pal = _time_backend("vec", warmup=True,
+                                           use_pallas=True, **kw)
+            assert np.array_equal(np.asarray(out_pal), np.asarray(out_vec))
+            emit(f"vec_speedup/{G}x{C}/pallas", t_pal / n_cl * 1e6,
+                 f"vs_jnp={t_pal / t_vec:.1f}x_slower_on_cpu_interpret")
 
 
 if __name__ == "__main__":

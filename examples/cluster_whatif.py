@@ -23,6 +23,9 @@ def main():
     ap.add_argument("--from-dryrun", default=None)
     ap.add_argument("--nodes", type=int, default=1024)
     ap.add_argument("--steps", type=int, default=2000)
+    ap.add_argument("--backend", choices=["oo", "legacy", "vec"], default="oo",
+                    help="engine flavour (vec = batched jit/vmap sweep: the "
+                         "whole grid runs as one compiled call)")
     args = ap.parse_args()
 
     if args.from_dryrun:
@@ -39,18 +42,45 @@ def main():
 
     print(f"{'mtbf[h]':>8s} {'ckpt':>6s} {'evict':>6s} {'goodput':>8s} "
           f"{'fail':>5s} {'lost':>6s} {'wall[h]':>8s}")
-    for mtbf in (2000.0, 500.0, 100.0):
-        for ckpt in (50, 200, 1000):
-            for evict in (True, False):
-                cfg = FleetConfig(
-                    n_nodes=args.nodes, n_spares=args.nodes // 32,
-                    mtbf_hours_node=mtbf, ckpt_every_steps=ckpt,
-                    straggler_evict_factor=1.6 if evict else 1e9,
-                    degrade_mtbf_hours=400.0, seed=11)
-                st = simulate_training_run(cost, cfg, total_steps=args.steps)
-                print(f"{mtbf:8.0f} {ckpt:6d} {str(evict):>6s} "
-                      f"{st.goodput:8.3f} {st.failures:5d} "
-                      f"{st.lost_steps:6.0f} {st.wallclock_s/3600:8.2f}")
+    grid = [(mtbf, ckpt, evict)
+            for mtbf in (2000.0, 500.0, 100.0)
+            for ckpt in (50, 200, 1000)
+            for evict in (True, False)]
+
+    def show(mtbf, ckpt, evict, goodput, failures, lost, wall_s):
+        print(f"{mtbf:8.0f} {ckpt:6d} {str(evict):>6s} {goodput:8.3f} "
+              f"{failures:5d} {lost:6.0f} {wall_s/3600:8.2f}")
+
+    if args.backend == "vec":
+        # One compiled vmap call per eviction policy (a static axis); the
+        # mtbf × ckpt grid is a batch axis inside each call.
+        import numpy as np
+        from repro.core.vec_cluster import simulate_fleet_batch
+        for evict in (True, False):
+            pts = [(m, c) for m, c, e in grid if e is evict]
+            cfg = FleetConfig(
+                n_nodes=args.nodes, n_spares=args.nodes // 32,
+                straggler_evict_factor=1.6 if evict else 1e9,
+                degrade_mtbf_hours=400.0, seed=11)
+            out = simulate_fleet_batch(
+                cost, cfg, args.steps, seeds=[11] * len(pts),
+                mtbf_hours=np.array([m for m, _ in pts]),
+                ckpt_every=np.array([c for _, c in pts]))
+            for i, (m, c) in enumerate(pts):
+                show(m, c, evict, out["goodput"][i],
+                     int(out["failures"][i]), out["lost_steps"][i],
+                     out["wallclock_s"][i])
+    else:
+        for mtbf, ckpt, evict in grid:
+            cfg = FleetConfig(
+                n_nodes=args.nodes, n_spares=args.nodes // 32,
+                mtbf_hours_node=mtbf, ckpt_every_steps=ckpt,
+                straggler_evict_factor=1.6 if evict else 1e9,
+                degrade_mtbf_hours=400.0, seed=11)
+            st = simulate_training_run(cost, cfg, total_steps=args.steps,
+                                       backend=args.backend)
+            show(mtbf, ckpt, evict, st.goodput, st.failures,
+                 st.lost_steps, st.wallclock_s)
 
 
 if __name__ == "__main__":

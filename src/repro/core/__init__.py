@@ -2,7 +2,10 @@
 # Python/JAX: unified entities (C1), selection policies (C2), heap engine +
 # Algorithm-1 scheduler (C3), virtualization overhead + network (C4), power
 # consolidation (C5 workloads), case study (C6), plus the beyond-paper
-# vectorized engine and the ML-fleet cluster layer.
+# vectorized engines and the ML-fleet cluster layer — all selected through
+# the standardized SimBackend substrate (see ARCHITECTURE.md).
+from .backend import (BackendError, ScenarioUnsupported, SimBackend,
+                      available_backends, get_backend, run_scenario)
 from .engine import SimEntity, Simulation
 from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
 from .entities import (Cloudlet, CloudletStatus, Container, CoreAttributes,

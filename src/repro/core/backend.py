@@ -1,0 +1,178 @@
+"""SimBackend — the standardized engine-selection substrate.
+
+CloudSim 7G's core contribution is a re-engineered internal architecture with
+*standardized interfaces* so multiple extensions run in one simulated
+environment (paper §4).  This module is that interface for the repo's three
+engine flavours, which previously each had hand-rolled three-way dispatch
+(``consolidation_sim``'s ``_MANAGERS``/``_SIMS`` dicts, ``cluster``'s
+OO-only path, per-benchmark engine loops):
+
+  ``legacy``  ≤6G mechanics — O(n) linked-list queue, boxed histories,
+              uncached recomputation (benchmark baseline; alias ``6g``).
+  ``oo``      the 7G re-engineered object kernel — heap queue, cached
+              paths (the reference semantics; alias ``7g``).
+  ``vec``     beyond-paper structure-of-arrays engines — JAX ``jit``/``vmap``
+              batched paths (``vec_scheduler``, ``vec_cluster``,
+              consolidation-vec) with optional Pallas next-event fusion.
+
+Two registries:
+
+  * **backends** — ``get_backend(name)`` → :class:`SimBackend` (accepts the
+    ``6g``/``7g`` aliases everywhere a backend name is taken);
+  * **scenarios** — scenario kinds (``"consolidation"``, ``"fleet"``,
+    ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``) registered by
+    their home modules via the :func:`scenario` decorator, keyed per backend.
+
+The single entry point is ``run_scenario(kind, backend=..., **params)`` (or
+``SimBackend.run_scenario``): modules and benchmarks select engines through
+it instead of dispatching by hand.  A backend without an implementation for
+a scenario raises :class:`ScenarioUnsupported` (e.g. the network case study
+has no vectorized path).
+
+Scenario-provider modules are imported lazily on first dispatch so that
+importing :mod:`repro.core` stays light and free of cycles.
+"""
+from __future__ import annotations
+
+import importlib
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterable, List, Tuple
+
+from .engine import Simulation
+from .engine_oo import LegacySimulation
+
+
+class BackendError(LookupError):
+    """Unknown backend or scenario kind."""
+
+
+class ScenarioUnsupported(BackendError):
+    """The scenario kind exists but the chosen backend has no path for it."""
+
+
+@dataclass(frozen=True)
+class SimBackend:
+    """One engine flavour: how to build its kernel and run scenarios on it.
+
+    ``simulation_cls`` builds the discrete-event kernel for OO-style
+    scenarios; vectorized scenarios may never instantiate it (their "engine"
+    is a compiled ``lax.while_loop``) — it is still provided so mixed
+    scenarios can drive residual event-loop parts.
+    """
+
+    name: str
+    simulation_cls: type
+    description: str
+    vectorized: bool = False
+
+    def make_simulation(self) -> Simulation:
+        return self.simulation_cls()
+
+    def run_scenario(self, kind: str, **params: Any) -> Any:
+        """Run one scenario kind on this backend — the substrate's single
+        entry point."""
+        return _scenario_handler(kind, self.name)(self, **params)
+
+
+# -- backend registry ---------------------------------------------------------
+
+_BACKENDS: Dict[str, SimBackend] = {}
+_ALIASES: Dict[str, str] = {"6g": "legacy", "7g": "oo", "jax": "vec"}
+
+
+def register_backend(backend: SimBackend) -> SimBackend:
+    _BACKENDS[backend.name] = backend
+    return backend
+
+
+def canonical_name(name: str) -> str:
+    return _ALIASES.get(name.lower(), name.lower())
+
+
+def get_backend(name: str) -> SimBackend:
+    try:
+        return _BACKENDS[canonical_name(name)]
+    except KeyError:
+        raise BackendError(
+            f"unknown backend {name!r}; available: {available_backends()} "
+            f"(aliases: {_ALIASES})") from None
+
+
+def available_backends() -> List[str]:
+    return sorted(_BACKENDS)
+
+
+register_backend(SimBackend(
+    "legacy", LegacySimulation,
+    "CloudSim ≤6G mechanics: O(n) linked-list queue, boxed histories, "
+    "uncached recomputation (benchmark baseline)"))
+register_backend(SimBackend(
+    "oo", Simulation,
+    "CloudSim 7G re-engineered object kernel: heap queue, cached paths "
+    "(reference semantics)"))
+register_backend(SimBackend(
+    "vec", Simulation,
+    "Structure-of-arrays JAX engines under jit/vmap (batched fast path; "
+    "optional Pallas next-event fusion)", vectorized=True))
+
+
+# -- scenario registry --------------------------------------------------------
+
+# kind -> backend name -> handler(backend, **params)
+_SCENARIOS: Dict[str, Dict[str, Callable[..., Any]]] = {}
+
+# Modules that register scenario handlers on import (lazy, cycle-free).
+_SCENARIO_MODULES: Tuple[str, ...] = (
+    "repro.core.consolidation_sim",
+    "repro.core.cluster",
+    "repro.core.vec_cluster",
+    "repro.core.case_study",
+    "repro.core.vec_scheduler",
+)
+_loaded = False
+
+
+def scenario(kind: str, backends: Iterable[str] = ("*",)):
+    """Decorator: register ``fn(backend, **params)`` as the implementation of
+    ``kind`` for the given backends (``"*"`` = any backend)."""
+    names = tuple(backends)
+
+    def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+        table = _SCENARIOS.setdefault(kind, {})
+        for b in names:
+            table[b if b == "*" else canonical_name(b)] = fn
+        return fn
+    return deco
+
+
+def _load_scenarios() -> None:
+    global _loaded
+    if _loaded:
+        return
+    _loaded = True
+    for mod in _SCENARIO_MODULES:
+        importlib.import_module(mod)
+
+
+def scenario_kinds() -> List[str]:
+    _load_scenarios()
+    return sorted(_SCENARIOS)
+
+
+def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
+    _load_scenarios()
+    table = _SCENARIOS.get(kind)
+    if table is None:
+        raise BackendError(
+            f"unknown scenario kind {kind!r}; known: {scenario_kinds()}")
+    handler = table.get(backend_name, table.get("*"))
+    if handler is None:
+        raise ScenarioUnsupported(
+            f"scenario {kind!r} has no {backend_name!r} implementation "
+            f"(available on: {sorted(table)})")
+    return handler
+
+
+def run_scenario(kind: str, *, backend: str = "oo", **params: Any) -> Any:
+    """Module-level convenience: ``get_backend(backend).run_scenario(...)``."""
+    return get_backend(backend).run_scenario(kind, **params)

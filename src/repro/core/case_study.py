@@ -17,6 +17,7 @@ import random
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
+from .backend import SimBackend, get_backend, scenario
 from .datacenter import Broker, Datacenter
 from .engine import Simulation
 from .entities import Container, GuestEntity, Host, Vm
@@ -75,11 +76,29 @@ def build_datacenter(sim: Simulation) -> Tuple[Datacenter, List[Host]]:
 PLACEMENTS = {"I": (0, 0), "II": (0, 1), "III": (0, 2)}   # host idx for T0, T1
 
 
-def run_case_study(*, virt: str = "V", placement: str = "II",
-                   payload: float = PAYLOAD_BIG, activations: int = 1,
-                   overhead_on: bool = True, seed: int = 42) -> CaseStudyResult:
-    """Simulate the case study; return per-activation makespans + Eq.(2) value."""
-    sim = Simulation()
+@scenario("case_study", backends=("legacy", "oo"))
+def _case_study_scenario(backend: SimBackend, **kw) -> "CaseStudyResult":
+    # The network/workflow case study has no vectorized path (DAG + packet
+    # routing is event-driven); backend selection picks the kernel flavour.
+    return _run_case_study_on(backend.make_simulation(), **kw)
+
+
+def run_case_study(*, backend: str = "oo", virt: str = "V",
+                   placement: str = "II", payload: float = PAYLOAD_BIG,
+                   activations: int = 1, overhead_on: bool = True,
+                   seed: int = 42) -> CaseStudyResult:
+    """Simulate the case study; return per-activation makespans + Eq.(2)
+    value. Engine selection goes through the SimBackend substrate (``vec``
+    raises ScenarioUnsupported — there is no vectorized network path)."""
+    return get_backend(backend).run_scenario(
+        "case_study", virt=virt, placement=placement, payload=payload,
+        activations=activations, overhead_on=overhead_on, seed=seed)
+
+
+def _run_case_study_on(sim: Simulation, *, virt: str = "V",
+                       placement: str = "II", payload: float = PAYLOAD_BIG,
+                       activations: int = 1, overhead_on: bool = True,
+                       seed: int = 42) -> CaseStudyResult:
     dc, hosts = build_datacenter(sim)
     broker = Broker(sim, dc)
 

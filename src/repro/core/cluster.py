@@ -24,6 +24,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .backend import SimBackend, get_backend, scenario
 from .engine import SimEntity, Simulation
 from .events import Event, Tag
 from .selection import MaximumScore, MinimumScore
@@ -220,13 +221,21 @@ class FleetSim(SimEntity):
         if ev.tag is Tag.NODE_RECOVER:
             nid = ev.data
             self.node_ok[nid] = True
+            self.slow_count[nid] = 0        # fresh hardware: no straggler debt
             self.node_bias[nid] = float(np.exp(
                 self.rng.normal(0.0, self.cfg.straggler_sigma / 2)))
             mtbf_s = self.cfg.mtbf_hours_node * 3600.0
             self.sim.schedule(now + float(self.rng.exponential(mtbf_s)),
                               Tag.NODE_FAILURE, self, data=nid)
-            if (self.node_active.sum() < self.cfg.n_nodes):
+            # Active-count invariant: re-activate only if this node isn't
+            # already counted active (duplicate/stale recover events) and a
+            # spare wasn't already promoted into its slot — the fleet never
+            # runs more than cfg.n_nodes data-parallel workers.
+            if (not self.node_active[nid]
+                    and self.node_active.sum() < self.cfg.n_nodes):
                 self.node_active[nid] = True
+            assert int(self.node_active.sum()) <= self.cfg.n_nodes, \
+                "active-count invariant violated"
             return
         if ev.tag is Tag.STEP_DONE:
             kind, gen = ev.data
@@ -249,13 +258,12 @@ class FleetSim(SimEntity):
             self._run_one_step()
 
 
-def simulate_training_run(cost: StepCost, cfg: FleetConfig,
-                          total_steps: int = 2000, *,
-                          max_wallclock_s: float = 30 * 86400.0) -> RunStats:
-    """``max_wallclock_s`` bounds pathological scenarios (e.g. equilibrium
-    node availability mtbf/(mtbf+repair) below ``min_nodes_frac`` stalls the
-    fleet forever — a finding the simulator should report, not hang on)."""
-    sim = Simulation()
+@scenario("fleet", backends=("legacy", "oo"))
+def _fleet_scenario(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
+                    total_steps: int = 2000,
+                    max_wallclock_s: float = 30 * 86400.0) -> RunStats:
+    """Event-driven fleet run on the backend's discrete-event kernel."""
+    sim = backend.make_simulation()
     fleet = FleetSim(sim, cost, cfg, total_steps)
     end = sim.run(until=max_wallclock_s)
     if fleet.stats.wallclock_s == 0.0:
@@ -264,3 +272,18 @@ def simulate_training_run(cost: StepCost, cfg: FleetConfig,
     # Unique useful work only: re-executed (post-restart) steps don't count.
     fleet.stats.ideal_s = fleet.step * fleet.base_step_s
     return fleet.stats
+
+
+def simulate_training_run(cost: StepCost, cfg: FleetConfig,
+                          total_steps: int = 2000, *,
+                          max_wallclock_s: float = 30 * 86400.0,
+                          backend: str = "oo") -> RunStats:
+    """Run one fleet scenario on the chosen backend (``oo``/``legacy``
+    event loops, or ``vec`` — the compiled SoA path in ``vec_cluster``).
+
+    ``max_wallclock_s`` bounds pathological scenarios (e.g. equilibrium
+    node availability mtbf/(mtbf+repair) below ``min_nodes_frac`` stalls the
+    fleet forever — a finding the simulator should report, not hang on)."""
+    return get_backend(backend).run_scenario(
+        "fleet", cost=cost, cfg=cfg, total_steps=total_steps,
+        max_wallclock_s=max_wallclock_s)

@@ -1,14 +1,19 @@
 """Consolidation simulation drivers — one scenario, three engine flavours.
 
-``run_consolidation(engine=...)`` executes the *same* detect→select→place
-decision sequence on:
+Engine selection goes through the :mod:`repro.core.backend` substrate
+(``run_scenario("consolidation", backend=...)``); this module registers one
+handler per backend instead of hand-rolling a three-way dispatch:
 
-  * ``"6g"``  — LegacySimulation (O(n) linked-list queue, boxed histories,
-                uncached recomputation, string-concat logging),
-  * ``"7g"``  — the re-engineered engine (heap queue, cached paths),
-  * ``"vec"`` — beyond-paper: utilization bookkeeping + overload detection
-                vectorized over all hosts as structure-of-arrays (numpy),
-                decisions bit-identical to the OO paths.
+  * ``legacy`` (alias ``6g``) — LegacySimulation (O(n) linked-list queue,
+                boxed histories, uncached recomputation, string-concat
+                logging),
+  * ``oo``     (alias ``7g``) — the re-engineered engine (heap queue,
+                cached paths),
+  * ``vec``   — beyond-paper: utilization bookkeeping + overload detection
+                vectorized over all VMs/hosts as structure-of-arrays under
+                JAX (the same SoA conventions as ``vec_scheduler`` /
+                ``vec_cluster``; x64 so decisions stay bit-identical to the
+                OO paths).
 
 Benchmarks (Table 2 reproduction) compare run-time and allocation across
 the three; tests assert identical decisions (migrations, energy).
@@ -20,6 +25,7 @@ from typing import List, Optional
 
 import numpy as np
 
+from .backend import SimBackend, get_backend, scenario
 from .engine import SimEntity, Simulation
 from .engine_oo import LegacyConsolidationManager, LegacySimulation
 from .events import Event, Tag
@@ -60,31 +66,60 @@ class _ConsolidationEntity(SimEntity):
 
 
 class VecConsolidationManager(ConsolidationManager):
-    """Structure-of-arrays utilization/detection pass (beyond-paper).
+    """Structure-of-arrays utilization/detection pass under JAX.
 
-    Per step, *one* vectorized sweep computes every VM's utilization, every
-    host's aggregate utilization and every detector threshold, instead of
-    per-object traversals. Selection/placement decisions reuse the scalar
-    routines so results match the OO managers exactly.
+    SoA conventions shared with ``vec_scheduler``/``vec_cluster`` (see
+    ARCHITECTURE.md): per-entity attributes live as padded device arrays
+    (traces ``[V, K]``, capacities ``[V]``/``[H]``), the per-step sweep is
+    one fused vector pass instead of per-object traversals, and the whole
+    path runs under ``jax.experimental.enable_x64`` so every derived float
+    is the same IEEE double the OO managers compute — selection/placement
+    decisions reuse the scalar routines and match the OO managers exactly
+    (asserted by tests and the Table-2 benchmark).
+
+    Host-level demand aggregation stays a scalar accumulation in canonical
+    (ascending VM id) order: summation *order* is part of the bit-identity
+    contract, and a segment-sum's reduction order is unspecified.
     """
 
     def __init__(self, *a, **kw):
         super().__init__(*a, **kw)
-        self._traces = np.stack([np.asarray(vm.trace, dtype=np.float64)
-                                 for vm in self.vms])          # [V, K]
-        self._vm_mips = np.array([vm.caps.total_mips for vm in self.vms])
-        self._host_mips = np.array([h.caps.total_mips for h in self.hosts])
+        import jax
+        import jax.numpy as jnp
+        self._jax = jax
+        with jax.experimental.enable_x64():
+            self._traces = jnp.asarray(
+                np.stack([np.asarray(vm.trace, dtype=np.float64)
+                          for vm in self.vms]), jnp.float64)     # [V, K]
+            self._vm_mips = jnp.asarray(
+                [vm.caps.total_mips for vm in self.vms], jnp.float64)
+            self._host_mips = jnp.asarray(
+                [h.caps.total_mips for h in self.hosts], jnp.float64)
         self._host_index = {h.id: i for i, h in enumerate(self.hosts)}
         self._vm_index = {vm.id: i for i, vm in enumerate(self.vms)}
         self._vm_util_now = np.zeros(len(self.vms))
+        self._sweep_k = -1                     # trace index of cached sweep
+        self._sweep_util = self._sweep_demand = None
+
+    def _sweep(self, t: float):
+        """One SoA pass per trace interval: every VM's utilization and MIPS
+        demand, cached so the detect/select/place loop's many ``host_util``
+        calls within one interval reuse a single device sweep + sync."""
+        k = min(int(t / self.interval), self._traces.shape[1] - 1)
+        if k != self._sweep_k:
+            with self._jax.experimental.enable_x64():
+                util = self._traces[:, k]                        # [V] one sweep
+                demand_vec = util * self._vm_mips                # [V] one sweep
+            self._sweep_k = k
+            self._sweep_util = np.asarray(util)                  # one host sync
+            self._sweep_demand = np.asarray(demand_vec)
+        return self._sweep_util, self._sweep_demand
 
     def record_step(self, t: float) -> None:
         self.now = t
-        k = min(int(t / self.interval), self._traces.shape[1] - 1)
-        util = self._traces[:, k]                               # [V] one sweep
-        demand_vec = util * self._vm_mips                       # [V] one sweep
+        util, demand_vec = self._sweep(t)
         self._vm_util_now = util
-        for vm, u in zip(self.vms, util):                       # histories
+        for vm, u in zip(self.vms, util):                        # histories
             vm.util_history.append(float(u))
         # Per-host aggregation in canonical (ascending vm id) order with
         # scalar accumulation — bit-identical to the OO managers' sums while
@@ -97,35 +132,45 @@ class VecConsolidationManager(ConsolidationManager):
             h.record_utilization(u, self.interval)
 
     def host_util(self, h, t: float) -> float:
-        k = min(int(t / self.interval), self._traces.shape[1] - 1)
+        _, demand_vec = self._sweep(t)
         demand = 0.0
         for vm in sorted(h.guests, key=lambda g: g.id):
-            i = self._vm_index[vm.id]
-            demand += float(self._traces[i, k]) * float(self._vm_mips[i])
+            demand += float(demand_vec[self._vm_index[vm.id]])
         cap = h.caps.total_mips
         return min(demand / cap, 1.0) if cap else 0.0
 
 
-_MANAGERS = {"6g": LegacyConsolidationManager,
-             "7g": ConsolidationManager,
+_MANAGERS = {"legacy": LegacyConsolidationManager,
+             "oo": ConsolidationManager,
              "vec": VecConsolidationManager}
-_SIMS = {"6g": LegacySimulation, "7g": Simulation, "vec": Simulation}
+
+
+@scenario("consolidation", backends=("legacy", "oo", "vec"))
+def _consolidation_scenario(backend: SimBackend, *, algo: str = "ThrMu",
+                            n_hosts: int = 50, n_vms: int = 100, seed: int = 1,
+                            n_samples: int = 288, interval: float = 300.0
+                            ) -> ConsolidationResult:
+    hosts, vms = make_consolidation_scenario(n_hosts, n_vms, seed=seed,
+                                             n_samples=n_samples,
+                                             interval=interval)
+    mgr = _MANAGERS[backend.name](hosts, vms, ConsolidationAlgo.by_name(algo),
+                                  interval=interval, seed=seed)
+    sim = backend.make_simulation()
+    horizon = n_samples * interval
+    _ConsolidationEntity(sim, mgr, horizon)
+    sim.run()
+    return ConsolidationResult(
+        algo=algo, engine=backend.name, energy_kwh=mgr.total_energy_kwh(),
+        migrations=mgr.migrations, events=sim.events_processed,
+        final_active_hosts=sum(1 for h in hosts if h.active))
 
 
 def run_consolidation(engine: str = "7g", algo: str = "ThrMu", *,
                       n_hosts: int = 50, n_vms: int = 100, seed: int = 1,
                       n_samples: int = 288, interval: float = 300.0
                       ) -> ConsolidationResult:
-    hosts, vms = make_consolidation_scenario(n_hosts, n_vms, seed=seed,
-                                             n_samples=n_samples,
-                                             interval=interval)
-    mgr = _MANAGERS[engine](hosts, vms, ConsolidationAlgo.by_name(algo),
-                            interval=interval, seed=seed)
-    sim = _SIMS[engine]()
-    horizon = n_samples * interval
-    _ConsolidationEntity(sim, mgr, horizon)
-    sim.run()
-    return ConsolidationResult(
-        algo=algo, engine=engine, energy_kwh=mgr.total_energy_kwh(),
-        migrations=mgr.migrations, events=sim.events_processed,
-        final_active_hosts=sum(1 for h in hosts if h.active))
+    """Back-compat wrapper over the backend substrate (``6g``/``7g``
+    aliases accepted)."""
+    return get_backend(engine).run_scenario(
+        "consolidation", algo=algo, n_hosts=n_hosts, n_vms=n_vms, seed=seed,
+        n_samples=n_samples, interval=interval)

@@ -37,6 +37,7 @@ class Simulation:
         self.clock = 0.0
         self.entities: List[SimEntity] = []
         self._terminated = False
+        self._started = False
         self.events_processed = 0
 
     # -- entity management ----------------------------------------------------
@@ -59,19 +60,33 @@ class Simulation:
 
     # -- main loop ----------------------------------------------------------------
     def run(self, until: float = float("inf")) -> float:
-        for e in self.entities:
-            e.start()
+        """Dispatch events until the queue drains, ``terminate()`` is called,
+        ``until`` is reached, or a ``SIM_END`` event fires.
+
+        Runs are resumable: an event past ``until`` is *peeked*, never
+        popped, so a later ``run(until=...)`` call picks it up (entities'
+        ``start()`` hooks fire only on the first call).
+
+        ``events_processed`` counts every dispatched event, **including** a
+        terminal ``SIM_END`` (it is popped and acted upon — ending the run);
+        an event left in the queue because of ``until`` is not counted.
+        """
+        if not self._started:
+            self._started = True
+            for e in self.entities:
+                e.start()
         while self.queue and not self._terminated:
-            ev = self.queue.pop()
-            if ev.time > until:
+            nxt = self.queue.peek()
+            if nxt.time > until:
                 self.clock = until
                 break
+            ev = self.queue.pop()
             self.clock = ev.time
+            self.events_processed += 1
             if ev.tag is Tag.SIM_END:
                 break
             if ev.dst is not None:
                 ev.dst.process_event(ev)
-            self.events_processed += 1
         return self.clock
 
     def terminate(self) -> None:

@@ -88,18 +88,24 @@ class LegacySimulation(Simulation):
         super().__init__(queue_cls=LinkedListEventQueue)
 
     def run(self, until: float = float("inf")) -> float:
-        for e in self.entities:
-            e.start()
+        # Same dispatch semantics as Simulation.run (peek-before-pop so runs
+        # are resumable; SIM_END counts as processed) — only the ≤6G
+        # mechanical patterns differ.
+        if not self._started:
+            self._started = True
+            for e in self.entities:
+                e.start()
         # item 2: `len(...) > 0` walks the entire list each iteration.
         while len(self.queue) > 0 and not self._terminated:
-            ev = self.queue.pop()
-            if ev.time > until:
+            nxt = self.queue.peek()
+            if nxt.time > until:
                 self.clock = until
                 break
+            ev = self.queue.pop()
             self.clock = ev.time
+            self.events_processed += 1
             if ev.tag is Tag.SIM_END:
                 break
             if ev.dst is not None:
                 ev.dst.process_event(ev)
-            self.events_processed += 1
         return self.clock

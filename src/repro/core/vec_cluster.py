@@ -1,0 +1,536 @@
+"""Vectorized ML-fleet simulator — ``FleetSim``'s life-cycle as JAX SoA.
+
+The OO :class:`repro.core.cluster.FleetSim` is a pure-Python event loop: one
+heap event per step, numpy straggler sampling, scalar failure bookkeeping.
+This module is the same life-cycle — synchronous steps with lognormal
+straggler max-reduction, pre-drawn exponential failure/repair rounds,
+checkpoint cadence with rollback-to-last-checkpoint on failure, elastic
+width penalty, stall below ``min_nodes_frac``, chronic-straggler eviction —
+as structure-of-arrays state advanced inside **one** ``jax.lax.while_loop``
+under ``jit``, and ``vmap``-ed over a batch of seeds/configs so Monte-Carlo
+what-if sweeps (e.g. 256 MTBF × ckpt-cadence points) run in a single
+compiled call.
+
+SoA conventions (shared with ``vec_scheduler`` and the consolidation vec
+manager — see ARCHITECTURE.md):
+
+  * per-node attributes are dense arrays ``[n_total]`` (active workers +
+    spares), masked rather than resized;
+  * stochastic processes are **pre-drawn**: each node's failure renewal
+    process materializes as ``k_fail_rounds`` absolute outage windows
+    ``[fail_start, fail_start + repair_s)`` (cumsum of exponential gaps +
+    repair insertions), so "is node i up at time t" is a masked comparison,
+    not an event queue;
+  * the next-event reduction ("which failure interrupts this step") is a
+    masked min/argmin — through the fused Pallas kernel
+    (``kernels.next_event``) when ``use_pallas`` is set;
+  * everything runs under ``jax.experimental.enable_x64`` so time
+    accumulates in the same IEEE doubles, in the same order, as the OO
+    engine's event clock.
+
+Exactness contract (asserted by tests):
+
+  * **deterministic** configs (``straggler_sigma=0``, no failures): wall
+    clock / steps / goodput are bit-identical to the OO ``FleetSim`` — both
+    engines reduce to the same ordered sequence of f64 additions;
+  * **stochastic** configs: the failure/straggler processes are
+    statistically identical (exponential MTBF renewals, fixed repair,
+    lognormal jitter), and mean goodput over a seed batch matches the OO
+    engine within tolerance (tests assert 2% over ≥64 seeds).
+
+Documented approximations vs. the OO engine (all second-order for the
+validated statistics): the active set is the index-ordered prefix of up
+nodes (the OO engine promotes the min-bias spare — biases are iid so the
+max-reduction statistics match); failures landing inside a checkpoint write
+or stall window are observed at the next step boundary; a failure during
+the restart window does not charge a second ``restart_s``; recovered nodes
+keep their degrade multiplier until their next degrade event; the
+non-elastic (``elastic=False``) stall-accounting branch is not modeled.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .backend import SimBackend, scenario
+from .cluster import FleetConfig, RunStats, StepCost
+
+STALL_RETRY_S = 60.0          # matches FleetSim's stall-retry cadence
+
+
+@dataclass(frozen=True)
+class _Statics:
+    """Shape-defining / trace-specializing (compile-time) configuration.
+
+    The three feature flags prune whole subgraphs from the compiled loop
+    body: ``sigma_zero`` drops the per-step RNG draw (deterministic runs),
+    ``degrade`` drops the chronic-degradation schedule, ``track_stragglers``
+    drops the per-step median sort + eviction bookkeeping.
+    """
+    n_nodes: int
+    n_spares: int
+    k_fail_rounds: int
+    k_degrade: int
+    window: int
+    use_pallas: bool
+    track_stragglers: bool = True
+    degrade: bool = True
+    sigma_zero: bool = False
+
+    @property
+    def n_total(self) -> int:
+        return self.n_nodes + self.n_spares
+
+
+class _Params(NamedTuple):
+    """Traced per-scenario scalars — every field may carry a batch axis."""
+    base_step_s: Any
+    mtbf_s: Any
+    repair_s: Any
+    ckpt_every: Any
+    ckpt_write_s: Any
+    restart_s: Any
+    sigma: Any
+    evict_factor: Any
+    degrade_s: Any
+    degrade_factor: Any
+    min_nodes: Any            # min_nodes_frac * n_nodes (float threshold)
+    total_steps: Any
+    max_wall_s: Any
+
+
+class _Carry(NamedTuple):
+    t: Any                    # [] f64 simulation clock
+    step: Any                 # [] i  unique steps completed (post-rollback)
+    last_ckpt: Any            # [] i
+    it: Any                   # [] i  loop-iteration counter (RNG folding)
+    bias: Any                 # [n] f64 persistent per-node slowdown bias
+                              #     (scalar 0 when per-node values unused)
+    slow_count: Any           # [n] i  consecutive-slow-step counts (scalar
+    evict_until: Any          # [n] f64 eviction outage ends   when track off)
+    was_up: Any               # [n] bool schedule-up state at last observation
+    was_active: Any           # [n] bool active set of the previous attempt
+    watch_from: Any           # [] f64 start of an in-flight stall/restart/
+                              #        ckpt window (-inf = none): failures
+                              #        inside it cascade another restart
+    failures: Any
+    restarts: Any
+    evictions: Any
+    lost_steps: Any
+    stall_s: Any
+    ckpt_s: Any
+
+
+def _masked_min(values, mask, use_pallas: bool):
+    """Masked next-event min (value only) — fused kernel or jnp."""
+    if use_pallas:
+        from ..kernels.ops import next_event_op
+        vmin, _ = next_event_op(values, mask, interpret=True)
+        return vmin
+    return jnp.min(jnp.where(mask, values, jnp.inf))
+
+
+def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
+    """One fleet scenario, start to finish, as a single lax.while_loop."""
+    n = s.n_total
+    kf, kd, kb, kstep, kevict = jax.random.split(key, 5)
+
+    # Pre-drawn failure renewal process: node i's k-th outage starts at
+    # fail_start[i, k] and ends repair_s later (cf. FleetSim's exponential
+    # NODE_FAILURE draws rescheduled after each NODE_RECOVER).
+    gaps = jax.random.exponential(kf, (n, s.k_fail_rounds)) * params.mtbf_s
+    fail_start = (jnp.cumsum(gaps, axis=1)
+                  + jnp.arange(s.k_fail_rounds) * params.repair_s)
+    # Pre-drawn chronic-degradation times (ELASTIC_RESIZE "degrade" events).
+    if s.degrade:
+        dgaps = jax.random.exponential(kd, (n, s.k_degrade)) * params.degrade_s
+        degrade_t = jnp.cumsum(dgaps, axis=1)
+    if not (s.track_stragglers or s.degrade):
+        bias0 = jnp.asarray(0.0, fail_start.dtype)      # per-node path unused
+    elif s.sigma_zero:
+        bias0 = jnp.ones((n,), fail_start.dtype)
+    else:
+        bias0 = jnp.exp(jax.random.normal(kb, (n,)) * (params.sigma / 2.0))
+
+    n_nodes_f = jnp.asarray(float(s.n_nodes), fail_start.dtype)
+    k_last = s.k_fail_rounds - 1
+    k_iota = jnp.arange(s.k_fail_rounds)
+
+    def round_start(idx):
+        """fail_start[i, idx[i]] as a one-hot contraction over the (small)
+        round axis — XLA CPU executes this as fused vector passes, far
+        cheaper than a batched gather."""
+        return jnp.sum(jnp.where(k_iota == idx[:, None], fail_start, 0.0),
+                       axis=1)
+
+    def cond(c: _Carry):
+        return (c.step < params.total_steps) & (c.t < params.max_wall_s)
+
+    def body(c: _Carry) -> _Carry:
+        # Current renewal round = number of fully completed outages; the
+        # count form needs no carried pointer and is always caught up.
+        ended = jnp.sum(fail_start + params.repair_s <= c.t, axis=1,
+                        dtype=jnp.int32)
+        r = jnp.minimum(ended, k_last)
+        cur = round_start(r)
+        down = (cur <= c.t) & (c.t < cur + params.repair_s)
+        up_sched = ~down
+        up = up_sched & (c.t >= c.evict_until) if s.track_stragglers \
+            else up_sched
+        failures = c.failures + jnp.sum(c.was_up & ~up_sched,
+                                        dtype=jnp.int32)
+        # Next schedule failure strictly after now (inf once exhausted).
+        nxt = round_start(jnp.minimum(r + 1, k_last))
+        next_fail = jnp.where(cur > c.t, cur,
+                              jnp.where(down & (r < k_last), nxt, jnp.inf))
+        # Cascade check: did a then-active node fail inside the stall/
+        # restart/ckpt window we just jumped over?  The OO engine processes
+        # that NODE_FAILURE mid-window (gen bump): roll back to the last
+        # checkpoint and pay another restart_s from the failure time.
+        # (A window is shorter than repair_s, so the in-window failure is
+        # each node's *current* round.)
+        f_window = jnp.min(jnp.where(
+            c.was_active & (cur > c.watch_from) & (cur <= c.t),
+            cur, jnp.inf))
+        cascade = jnp.isfinite(c.watch_from) & (f_window < c.t)
+        # Active set: index-ordered prefix of up nodes, capped at n_nodes
+        # (the OO engine's explicit spare promotion; iid biases make the
+        # choice statistically equivalent).
+        active = up & (jnp.cumsum(up) <= s.n_nodes)
+        n_active = jnp.sum(active)
+        stalled = ~cascade & (n_active < params.min_nodes)
+
+        # -- straggler sampling: sync step = slowest active participant ----
+        if s.track_stragglers or s.degrade:
+            # Per-node slowdowns materialized (needed for eviction
+            # bookkeeping / per-node degradation multipliers).
+            if s.sigma_zero:
+                jitter = jnp.ones((n,), fail_start.dtype)
+            else:
+                jit_key = jax.random.fold_in(kstep, c.it)
+                draws = jax.random.normal(jit_key, (n,), jnp.float32)
+                jitter = jnp.exp(draws.astype(fail_start.dtype)
+                                 * params.sigma)
+            if s.degrade:
+                deg_mult = jnp.exp(jnp.sum(degrade_t <= c.t, axis=1)
+                                   * jnp.log(params.degrade_factor))
+                slowdown = c.bias * deg_mult * jitter
+            else:
+                deg_mult = 1.0
+                slowdown = c.bias * jitter
+            max_slow = jnp.max(jnp.where(active, slowdown, -jnp.inf))
+        elif s.sigma_zero:
+            max_slow = jnp.asarray(1.0, fail_start.dtype)
+        else:
+            # Neither eviction nor degradation feeds per-node values back
+            # into the dynamics, so only the max matters — sample it
+            # directly by inverse CDF: the max of m iid exp(σ_tot·Z) is
+            # exp(σ_tot·Φ⁻¹(U^(1/m))).  σ_tot folds the persistent bias
+            # (σ/2) and per-step jitter (σ) components; the per-step
+            # marginal distribution is exactly the OO engine's (only the
+            # cross-step correlation of which node is slowest is dropped).
+            # One RNG draw per step instead of n.
+            from jax.scipy.special import ndtri
+            u = jax.random.uniform(jax.random.fold_in(kstep, c.it), (),
+                                   fail_start.dtype, minval=1e-12)
+            sig_tot = jnp.sqrt(params.sigma ** 2 + (params.sigma / 2) ** 2)
+            z = ndtri(u ** (1.0 / jnp.maximum(n_active, 1)))
+            max_slow = jnp.exp(sig_tot * z)
+        width = jnp.maximum(n_nodes_f / jnp.maximum(n_active, 1), 1.0)
+        step_s = params.base_step_s * max_slow * width
+
+        # -- failure interruption: earliest active-node failure in-window --
+        t_int = _masked_min(next_fail, active, s.use_pallas)
+        interrupted = ~cascade & ~stalled & (t_int < c.t + step_s)
+        completed = ~cascade & ~stalled & ~interrupted
+        t_done = c.t + step_s
+        step1 = c.step + 1
+
+        # -- straggler bookkeeping + chronic eviction (completed steps) ----
+        if s.track_stragglers:
+            srt = jnp.sort(jnp.where(active, slowdown, jnp.inf))
+            lo = jnp.maximum((n_active - 1) // 2, 0)
+            hi = jnp.maximum(n_active // 2, 0)
+            med = 0.5 * (srt[lo] + srt[hi])             # np.median tie rule
+            slow = active & (slowdown > params.evict_factor * med)
+            slow_count1 = jnp.where(active,
+                                    jnp.where(slow, c.slow_count + 1, 0),
+                                    c.slow_count)
+            chronic = active & (slow_count1 >= s.window)
+            any_chronic = jnp.any(chronic)
+            worst = jnp.argmax(jnp.where(chronic, c.bias * deg_mult,
+                                         -jnp.inf))
+            evict_now = completed & any_chronic
+            new_bias = jnp.exp(jax.random.normal(
+                jax.random.fold_in(kevict, c.it), ()) * (params.sigma / 2.0))
+            bias1 = jnp.where(evict_now, c.bias.at[worst].set(new_bias),
+                              c.bias)
+            evict_until1 = jnp.where(
+                evict_now,
+                c.evict_until.at[worst].set(t_done + params.repair_s),
+                c.evict_until)
+            slow_count2 = jnp.where(evict_now, slow_count1.at[worst].set(0),
+                                    slow_count1)
+        else:
+            evict_now = jnp.asarray(False)
+            bias1, evict_until1, slow_count2 = (c.bias, c.evict_until,
+                                                c.slow_count)
+
+        # -- checkpoint cadence (completed steps) --------------------------
+        ckpt_due = (step1 - c.last_ckpt) >= params.ckpt_every
+        t_after = jnp.where(ckpt_due, t_done + params.ckpt_write_s, t_done)
+        # A failure landing inside the checkpoint write window kills the
+        # in-flight chain like the OO engine's gen bump: the step and the
+        # checkpoint are already counted (last_ckpt = step1 ⇒ zero steps
+        # lost) but the fleet pays restart_s from the failure time.
+        ckpt_hit = completed & ckpt_due \
+            & (t_int < t_done + params.ckpt_write_s)
+
+        # -- select among {cascade, stalled, interrupted, ckpt_hit, done} --
+        t_next = jnp.where(
+            cascade, f_window + params.restart_s,
+            jnp.where(stalled, c.t + STALL_RETRY_S,
+                      jnp.where(interrupted | ckpt_hit,
+                                t_int + params.restart_s, t_after)))
+        step_next = jnp.where(completed, step1,
+                              jnp.where(stalled, c.step, c.last_ckpt))
+        last_ckpt_next = jnp.where(completed & ckpt_due, step1, c.last_ckpt)
+        rollback = cascade | interrupted
+        # Keep watching the new stall/restart window; a clean step clears it.
+        watch_next = jnp.where(
+            cascade, f_window,
+            jnp.where(stalled, c.t,
+                      jnp.where(interrupted | ckpt_hit, t_int, -jnp.inf)))
+        return _Carry(
+            t=t_next,
+            step=step_next,
+            last_ckpt=last_ckpt_next,
+            it=c.it + 1,
+            bias=bias1,
+            slow_count=jnp.where(completed, slow_count2, c.slow_count)
+                       if s.track_stragglers else c.slow_count,
+            evict_until=evict_until1,
+            was_up=up_sched,
+            was_active=jnp.where(cascade, c.was_active, active),
+            watch_from=watch_next,
+            failures=failures,
+            restarts=c.restarts + jnp.where(rollback | ckpt_hit, 1, 0),
+            evictions=c.evictions + jnp.where(evict_now, 1, 0),
+            lost_steps=c.lost_steps + jnp.where(
+                rollback, (c.step - c.last_ckpt).astype(
+                    c.lost_steps.dtype), 0.0),
+            stall_s=c.stall_s + jnp.where(
+                stalled, STALL_RETRY_S,
+                jnp.where(rollback | ckpt_hit, params.restart_s, 0.0)),
+            ckpt_s=c.ckpt_s + jnp.where(completed & ckpt_due,
+                                        params.ckpt_write_s, 0.0),
+        )
+
+    zf = jnp.asarray(0.0, fail_start.dtype)
+    zi = jnp.asarray(0, jnp.int32)
+    init = _Carry(
+        t=zf, step=zi, last_ckpt=zi, it=zi,
+        bias=bias0,
+        slow_count=jnp.zeros((n,), jnp.int32) if s.track_stragglers else zi,
+        evict_until=(jnp.zeros((n,), fail_start.dtype)
+                     if s.track_stragglers else zf),
+        was_up=jnp.ones((n,), bool),
+        was_active=jnp.arange(n) < s.n_nodes,
+        watch_from=jnp.asarray(-jnp.inf, fail_start.dtype),
+        failures=zi, restarts=zi, evictions=zi,
+        lost_steps=zf, stall_s=zf, ckpt_s=zf)
+
+    end = jax.lax.while_loop(cond, body, init)
+    finished = end.step >= params.total_steps
+    wallclock = jnp.where(finished, end.t, params.max_wall_s)
+    ideal = end.step.astype(wallclock.dtype) * params.base_step_s
+    return dict(
+        wallclock_s=wallclock, steps_done=end.step, failures=end.failures,
+        restarts=end.restarts, evictions=end.evictions,
+        lost_steps=end.lost_steps, stall_s=end.stall_s, ckpt_s=end.ckpt_s,
+        ideal_s=ideal,
+        goodput=jnp.where(wallclock > 0, ideal / wallclock, 0.0),
+        iterations=end.it)
+
+
+@functools.lru_cache(maxsize=32)
+def _batched_sim(statics: _Statics):
+    """Compiled (jit ∘ vmap) simulator for one static shape — cached so
+    repeated sweeps at the same shape reuse the executable."""
+    return jax.jit(jax.vmap(
+        functools.partial(_simulate_one, s=statics)))
+
+
+def _make_params(cost: StepCost, cfg: FleetConfig, total_steps,
+                 max_wallclock_s, *, mtbf_hours=None, ckpt_every=None,
+                 straggler_sigma=None) -> _Params:
+    """Broadcast scalars/sweep axes into a batched _Params (numpy, f64)."""
+    base = cost.step_seconds() + cfg.pod_boundary_overhead_s
+    mtbf_h = cfg.mtbf_hours_node if mtbf_hours is None else mtbf_hours
+    every = cfg.ckpt_every_steps if ckpt_every is None else ckpt_every
+    sigma = cfg.straggler_sigma if straggler_sigma is None else straggler_sigma
+    fields = dict(
+        base_step_s=base,
+        mtbf_s=np.asarray(mtbf_h, np.float64) * 3600.0,
+        repair_s=cfg.repair_hours * 3600.0,
+        ckpt_every=np.asarray(every, np.int32),
+        ckpt_write_s=cfg.ckpt_write_s,
+        restart_s=cfg.restart_s,
+        sigma=np.asarray(sigma, np.float64),
+        evict_factor=cfg.straggler_evict_factor,
+        degrade_s=cfg.degrade_mtbf_hours * 3600.0,
+        degrade_factor=cfg.degrade_factor,
+        min_nodes=cfg.min_nodes_frac * cfg.n_nodes,
+        total_steps=np.asarray(total_steps, np.int32),
+        max_wall_s=max_wallclock_s,
+    )
+    shape = np.broadcast_shapes(*(np.shape(v) for v in fields.values()))
+    return _Params(**{k: np.broadcast_to(np.asarray(v, np.asarray(v).dtype),
+                                         shape).astype(
+                          np.int32 if k in ("ckpt_every", "total_steps")
+                          else np.float64)
+                      for k, v in fields.items()})
+
+
+def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
+                         total_steps: int = 2000, *,
+                         seeds: Sequence[int] | np.ndarray = (0,),
+                         mtbf_hours=None, ckpt_every=None,
+                         straggler_sigma=None,
+                         max_wallclock_s: float = 30 * 86400.0,
+                         k_fail_rounds: Optional[int] = None,
+                         k_degrade: int = 8,
+                         use_pallas: bool = False,
+                         precision: str = "exact") -> Dict[str, np.ndarray]:
+    """Run a batch of fleet scenarios in one compiled vmap call.
+
+    ``seeds`` and the optional sweep axes (``mtbf_hours``, ``ckpt_every``,
+    ``straggler_sigma`` — scalars or arrays broadcast against ``seeds``)
+    define the batch. Returns a dict of per-scenario stat arrays
+    (``goodput``, ``wallclock_s``, ``steps_done``, ``failures``, ...).
+
+    ``k_fail_rounds`` (failure-renewal rounds pre-drawn per node) defaults
+    to an estimate covering the simulated horizon with ample margin; a node
+    that exhausts its schedule simply stops failing.
+
+    ``precision``: ``"exact"`` (default) accumulates the clock in f64 under
+    ``enable_x64`` — bit-identical to the OO engine on deterministic
+    configs; ``"fast"`` runs the whole loop in f32 (same statistics, ~2×
+    throughput on CPU — for large Monte-Carlo sweeps).
+    """
+    seeds = np.asarray(seeds, np.uint32)
+    params = _make_params(cost, cfg, total_steps, max_wallclock_s,
+                          mtbf_hours=mtbf_hours, ckpt_every=ckpt_every,
+                          straggler_sigma=straggler_sigma)
+    b = int(np.broadcast_shapes(seeds.shape, params.base_step_s.shape)[0]) \
+        if (seeds.ndim or params.base_step_s.ndim) else 1
+    seeds = np.broadcast_to(np.atleast_1d(seeds), (b,))
+    params = _Params(*(np.broadcast_to(np.atleast_1d(f), (b,))
+                       for f in params))
+    if k_fail_rounds is None:
+        # Horizon estimate: 10× the zero-overhead run time (goodput ≥ 0.1),
+        # capped by the hard wall-clock bound; 3× margin on expected rounds.
+        horizon = min(float(max_wallclock_s),
+                      float(np.max(params.base_step_s))
+                      * float(np.max(params.total_steps)) * 10.0 + 3600.0)
+        cycle = float(np.min(params.mtbf_s) + np.min(params.repair_s))
+        k_fail_rounds = int(np.clip(np.ceil(horizon / cycle * 3.0 + 3), 4, 64))
+    statics = _Statics(
+        cfg.n_nodes, cfg.n_spares, int(k_fail_rounds), k_degrade,
+        cfg.straggler_window, use_pallas,
+        track_stragglers=bool(np.min(params.evict_factor) < 1e8
+                              and cfg.straggler_window <= 10_000),
+        degrade=bool(np.min(params.degrade_s) < 1e8 * 3600.0),
+        sigma_zero=bool(np.all(params.sigma == 0.0)))
+    if precision == "exact":
+        with jax.experimental.enable_x64():
+            keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds))
+            out = _batched_sim(statics)(
+                _Params(*(jnp.asarray(f) for f in params)), keys)
+    elif precision == "fast":
+        # Outside x64 the f64 inputs canonicalize to f32 and the whole loop
+        # (same trace, jit-cached separately by dtype) runs single-precision.
+        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds))
+        out = _batched_sim(statics)(
+            _Params(*(jnp.asarray(f) for f in params)), keys)
+    else:
+        raise ValueError(f"precision must be 'exact' or 'fast': {precision!r}")
+    return {k: np.asarray(v) for k, v in out.items()}
+
+
+def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,
+                       total_steps: int = 2000, *,
+                       max_wallclock_s: float = 30 * 86400.0,
+                       use_pallas: bool = False) -> RunStats:
+    """Single-scenario convenience wrapper returning the OO ``RunStats``."""
+    out = simulate_fleet_batch(cost, cfg, total_steps, seeds=[cfg.seed],
+                               max_wallclock_s=max_wallclock_s,
+                               use_pallas=use_pallas)
+    st = RunStats(
+        wallclock_s=float(out["wallclock_s"][0]),
+        steps_done=int(out["steps_done"][0]),
+        failures=int(out["failures"][0]),
+        evictions=int(out["evictions"][0]),
+        restarts=int(out["restarts"][0]),
+        lost_steps=float(out["lost_steps"][0]),
+        stall_s=float(out["stall_s"][0]),
+        ckpt_s=float(out["ckpt_s"][0]),
+        ideal_s=float(out["ideal_s"][0]))
+    return st
+
+
+# -- backend substrate handlers ------------------------------------------------
+
+@scenario("fleet", backends=("vec",))
+def _fleet_vec(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
+               total_steps: int = 2000,
+               max_wallclock_s: float = 30 * 86400.0,
+               use_pallas: bool = False) -> RunStats:
+    return simulate_fleet_vec(cost, cfg, total_steps,
+                              max_wallclock_s=max_wallclock_s,
+                              use_pallas=use_pallas)
+
+
+@scenario("fleet_batch", backends=("vec",))
+def _fleet_batch_vec(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
+                     total_steps: int = 2000, **kw) -> Dict[str, np.ndarray]:
+    return simulate_fleet_batch(cost, cfg, total_steps, **kw)
+
+
+@scenario("fleet_batch", backends=("legacy", "oo"))
+def _fleet_batch_oo(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
+                    total_steps: int = 2000,
+                    seeds: Sequence[int] = (0,), mtbf_hours=None,
+                    ckpt_every=None, straggler_sigma=None,
+                    max_wallclock_s: float = 30 * 86400.0,
+                    **_ignored) -> Dict[str, np.ndarray]:
+    """Reference semantics for the batched sweep: loop the OO FleetSim over
+    every scenario point (what the vec path replaces with one vmap call)."""
+    from dataclasses import replace
+    from .cluster import _fleet_scenario
+    seeds = np.atleast_1d(np.asarray(seeds))
+    axes = dict(mtbf_hours_node=mtbf_hours, ckpt_every_steps=ckpt_every,
+                straggler_sigma=straggler_sigma)
+    # Same batch contract as the vec handler: seeds broadcast against the
+    # sweep axes (a scalar seed + a length-3 mtbf axis is 3 scenarios).
+    b = int(np.broadcast_shapes(
+        seeds.shape, *(np.atleast_1d(v).shape for v in axes.values()
+                       if v is not None))[0])
+    seeds = np.broadcast_to(seeds, (b,))
+    rows = []
+    for i in range(b):
+        over = {k: np.broadcast_to(np.atleast_1d(v), (b,))[i].item()
+                for k, v in axes.items() if v is not None}
+        c = replace(cfg, seed=int(seeds[i]), **over)
+        rows.append(_fleet_scenario(backend, cost=cost, cfg=c,
+                                    total_steps=total_steps,
+                                    max_wallclock_s=max_wallclock_s))
+    return {k: np.asarray([getattr(r, k) for r in rows])
+            for k in ("wallclock_s", "steps_done", "failures", "restarts",
+                      "evictions", "lost_steps", "stall_s", "ckpt_s",
+                      "ideal_s", "goodput")}

@@ -29,6 +29,8 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from .backend import SimBackend, scenario
+
 INF = jnp.inf
 
 
@@ -72,23 +74,33 @@ def _alloc_mips(state: VecSchedState, guest_mips, guest_pes, mode: str):
     raise ValueError(mode)
 
 
-def _next_event_time(state: VecSchedState, alloc) -> jax.Array:
-    """min over (est. finish of running cloudlets, future submissions)."""
+def _next_event_time(state: VecSchedState, alloc, use_pallas: bool) -> jax.Array:
+    """min over (est. finish of running cloudlets, future submissions).
+
+    With ``use_pallas`` the reduction runs through the fused masked
+    min/argmin Pallas kernel (``kernels.next_event``, interpret mode on
+    CPU); both paths are exact minima, so results are bit-identical.
+    """
     remaining = jnp.maximum(state.length - state.done, 0.0)
     est = jnp.where(alloc > 0, state.now + remaining / jnp.maximum(alloc, 1e-30), INF)
     future = jnp.where(state.submit > state.now, state.submit, INF)
+    if use_pallas:
+        from ..kernels.ops import next_event_op
+        cand = jnp.concatenate([est.reshape(-1), future.reshape(-1)])
+        t_min, _ = next_event_op(cand, interpret=True)
+        return t_min
     return jnp.minimum(jnp.min(est), jnp.min(future))
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def step(state: VecSchedState, guest_mips, guest_pes, mode: str
-         ) -> Tuple[VecSchedState, jax.Array]:
+@functools.partial(jax.jit, static_argnames=("mode", "use_pallas"))
+def step(state: VecSchedState, guest_mips, guest_pes, mode: str,
+         use_pallas: bool = False) -> Tuple[VecSchedState, jax.Array]:
     """One Algorithm-1 pass for ALL guests: advance to the next event.
 
     Returns (new_state, next_time). next_time == inf ⇒ simulation complete.
     """
     alloc, _ = _alloc_mips(state, guest_mips, guest_pes, mode)
-    t_next = _next_event_time(state, alloc)                       # lines 17-23
+    t_next = _next_event_time(state, alloc, use_pallas)           # lines 17-23
     span = jnp.where(jnp.isfinite(t_next), t_next - state.now, 0.0)
     done = jnp.minimum(state.done + span * alloc, state.length)   # lines 2-5
     newly = (done >= state.length - 1e-9) & (state.done < state.length - 1e-9) \
@@ -99,8 +111,9 @@ def step(state: VecSchedState, guest_mips, guest_pes, mode: str
     return new, t_next
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
-def simulate(state: VecSchedState, guest_mips, guest_pes, mode: str) -> VecSchedState:
+@functools.partial(jax.jit, static_argnames=("mode", "use_pallas"))
+def simulate(state: VecSchedState, guest_mips, guest_pes, mode: str,
+             use_pallas: bool = False) -> VecSchedState:
     """Run Algorithm 1 to completion inside one lax.while_loop."""
 
     def cond(carry):
@@ -109,15 +122,15 @@ def simulate(state: VecSchedState, guest_mips, guest_pes, mode: str) -> VecSched
 
     def body(carry):
         st, _ = carry
-        return step(st, guest_mips, guest_pes, mode)
+        return step(st, guest_mips, guest_pes, mode, use_pallas)
 
-    st, t0 = step(state, guest_mips, guest_pes, mode)
+    st, t0 = step(state, guest_mips, guest_pes, mode, use_pallas)
     st, _ = jax.lax.while_loop(cond, body, (st, t0))
     return st
 
 
 def simulate_batch(length, pes, submit, guest_mips, guest_pes,
-                   mode: str = "time"):
+                   mode: str = "time", *, use_pallas: bool = False):
     """Convenience wrapper: returns finish times [G, C] (inf for empty slots).
 
     Runs under x64 so event times match the OO engine's doubles bit-for-bit
@@ -138,5 +151,57 @@ def simulate_batch(length, pes, submit, guest_mips, guest_pes,
         guest_pes = jnp.asarray(guest_pes, jnp.float64)
         st = simulate(make_state(length[g_idx, order], pes[g_idx, order],
                                  submit[g_idx, order]),
-                      guest_mips, guest_pes, mode)
+                      guest_mips, guest_pes, mode, use_pallas)
         return np.asarray(st.finish)[g_idx, inv]
+
+
+# -- backend substrate handlers ------------------------------------------------
+
+@scenario("cloudlet_batch", backends=("vec",))
+def _cloudlet_batch_vec(backend: SimBackend, *, length, pes, submit,
+                        guest_mips, guest_pes, mode: str = "time",
+                        use_pallas: bool = False):
+    """Finish times [G, C] via the compiled SoA path."""
+    return simulate_batch(length, pes, submit, guest_mips, guest_pes, mode,
+                          use_pallas=use_pallas)
+
+
+@scenario("cloudlet_batch", backends=("legacy", "oo"))
+def _cloudlet_batch_oo(backend: SimBackend, *, length, pes, submit,
+                       guest_mips, guest_pes, mode: str = "time",
+                       use_pallas: bool = False):
+    """Finish times [G, C] via the OO engine (reference semantics; inf for
+    empty/unfinished slots) — same contract as the vec handler."""
+    import numpy as np
+    from .datacenter import Broker, Datacenter
+    from .entities import Cloudlet, Host, Vm
+    from .scheduler import (CloudletSchedulerSpaceShared,
+                            CloudletSchedulerTimeShared)
+    length = np.asarray(length, np.float64)
+    pes = np.asarray(pes, np.float64)
+    submit = np.asarray(submit, np.float64)
+    G, C = length.shape
+    sim = backend.make_simulation()
+    hosts = [Host(num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
+                  ram=1e9, bw=1e9) for g in range(G)]
+    dc = Datacenter(sim, hosts)
+    broker = Broker(sim, dc)
+    guests = []
+    for g in range(G):
+        sch = (CloudletSchedulerTimeShared() if mode == "time"
+               else CloudletSchedulerSpaceShared())
+        vm = Vm(sch, num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
+                ram=1024, bw=1e9)
+        broker.add_guest(vm, on_host=hosts[g])
+        guests.append(vm)
+    cls = {}
+    for t, g, c in sorted((submit[g, c], g, c) for g in range(G)
+                          for c in range(C) if length[g, c] > 0):
+        cl = Cloudlet(length=float(length[g, c]), pes=int(pes[g, c]))
+        cls[(g, c)] = cl
+        broker.submit(cl, guests[g], at=float(t))
+    sim.run()
+    out = np.full((G, C), np.inf)
+    for (g, c), cl in cls.items():
+        out[g, c] = cl.finish_time if cl.finish_time >= 0 else np.inf
+    return out

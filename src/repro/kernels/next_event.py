@@ -1,0 +1,87 @@
+"""Fused masked min/argmin "next event" reduction — Pallas kernel.
+
+The vectorized engines (``core.vec_scheduler``, ``core.vec_cluster``) replace
+the OO kernel's heap pop with a reduction over structure-of-arrays candidate
+event times: the next event is the minimum finite time, and (where a policy
+needs the *which*, e.g. "which node's failure interrupts this step") its
+argmin.  XLA emits two separate reduction loops for ``min`` + ``argmin``;
+this kernel fuses them into one pass over VMEM tiles with running
+(value, index) scratch accumulators — the same revisit-and-accumulate
+schedule as the flash-attention kernel, degenerated to a 0-d reduction.
+
+Shapes: input ``[R, M]`` (R independent reductions — guests, batch lanes),
+outputs ``[R]`` min values and ``[R]`` int32 argmins (first occurrence on
+ties, matching ``jnp.argmin``).  Masked-out / padded slots are ``+inf``; an
+all-inf row returns ``(inf, 0)`` exactly like ``jnp.argmin``.
+
+CPU runs interpret mode (tests, the x64 bit-exact scheduler path — f64 is
+interpreter-only; TPU lowering targets f32).  The grid's minor axis walks
+the M tiles sequentially so the scalar accumulators carry across tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+
+
+def _next_event_kernel(t_ref, vmin_ref, imin_ref, *, block: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vmin_ref[0, 0] = jnp.asarray(jnp.inf, vmin_ref.dtype)
+        imin_ref[0, 0] = jnp.asarray(0, jnp.int32)
+
+    t = t_ref[0, :]                                   # [block]
+    bmin = jnp.min(t)
+    barg = jnp.argmin(t).astype(jnp.int32)            # first-occurrence tie rule
+    bidx = j * block + barg
+    cur = vmin_ref[0, 0]
+    better = bmin < cur                               # strict ⇒ earliest block wins ties
+    imin_ref[0, 0] = jnp.where(better, bidx, imin_ref[0, 0])
+    vmin_ref[0, 0] = jnp.where(better, bmin, cur)
+
+
+def next_event(times: jax.Array, mask: jax.Array | None = None, *,
+               block: int = DEFAULT_BLOCK, interpret: bool = True):
+    """Fused masked (min, argmin) over the last axis.
+
+    ``times [..., M]`` (+ optional boolean ``mask``, False ⇒ ignore slot)
+    → ``(vmin [...], argmin [...] int32)``.  Equivalent to
+    ``(jnp.min(where(mask, t, inf), -1), jnp.argmin(where(mask, t, inf), -1))``
+    but as one fused pass.
+    """
+    if mask is not None:
+        times = jnp.where(mask, times, jnp.asarray(jnp.inf, times.dtype))
+    lead = times.shape[:-1]
+    m = times.shape[-1]
+    t2 = times.reshape((-1, m))
+    r = t2.shape[0]
+    blk = min(block, max(m, 1))
+    pad = (-m) % blk
+    if pad:
+        t2 = jnp.pad(t2, ((0, 0), (0, pad)),
+                     constant_values=jnp.asarray(jnp.inf, times.dtype))
+    vmin, imin = pl.pallas_call(
+        functools.partial(_next_event_kernel, block=blk),
+        out_shape=(jax.ShapeDtypeStruct((r, 1), times.dtype),
+                   jax.ShapeDtypeStruct((r, 1), jnp.int32)),
+        grid=(r, t2.shape[1] // blk),
+        in_specs=[pl.BlockSpec((1, blk), lambda i, j: (i, j))],
+        out_specs=(pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))),
+        interpret=interpret,
+    )(t2)
+    return vmin[:, 0].reshape(lead), imin[:, 0].reshape(lead)
+
+
+def next_event_ref(times: jax.Array, mask: jax.Array | None = None):
+    """Pure-jnp oracle for the kernel (two separate reductions)."""
+    if mask is not None:
+        times = jnp.where(mask, times, jnp.asarray(jnp.inf, times.dtype))
+    return jnp.min(times, axis=-1), jnp.argmin(times, axis=-1).astype(jnp.int32)

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from .flash_attention import flash_attention
+from .next_event import next_event
 from .rwkv6_scan import wkv6
 
 
@@ -21,6 +22,16 @@ def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vt = v.transpose(0, 2, 1, 3)
     out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
     return out.transpose(0, 2, 1, 3)
+
+
+def next_event_op(times: jax.Array, mask: jax.Array | None = None, *,
+                  interpret: bool = True):
+    """Engine-layer adapter: fused masked (min, argmin) over the last axis.
+
+    Used by the vectorized simulation engines (``vec_scheduler``,
+    ``vec_cluster``) for the SoA next-event reduction; interpret mode on CPU.
+    """
+    return next_event(times, mask, interpret=interpret)
 
 
 def wkv6_op(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,

@@ -54,6 +54,56 @@ def test_step_cost_roofline_composition():
     assert c.step_seconds() == pytest.approx(2.0 + 0.25)
 
 
+def test_node_recover_invariants():
+    """Regression (NODE_RECOVER bug): re-activation must clear slow_count,
+    never activate an already-active node, and never push the active count
+    past cfg.n_nodes even when a spare was already promoted or a stale
+    duplicate recover event arrives."""
+    from repro.core.cluster import FleetSim
+    from repro.core.engine import Simulation
+    from repro.core.events import Event, Tag
+
+    cfg = FleetConfig(n_nodes=4, n_spares=2, mtbf_hours_node=1e9,
+                      degrade_mtbf_hours=1e9, straggler_sigma=0.0, seed=0)
+    sim = Simulation()
+    fleet = FleetSim(sim, COST, cfg, total_steps=10)
+    # Fail active node 0 → spare promoted, fleet back at full strength.
+    fleet.process_event(Event(time=10.0, tag=Tag.NODE_FAILURE, dst=fleet, data=0))
+    assert int(fleet.node_active.sum()) == cfg.n_nodes
+    assert not fleet.node_active[0] and not fleet.node_ok[0]
+    # Simulate straggler debt accumulated before the failure.
+    fleet.slow_count[0] = 17
+    # Recover while the spare holds its slot: node 0 must NOT re-activate
+    # (invariant) and its slow_count must reset.
+    fleet.process_event(Event(time=20.0, tag=Tag.NODE_RECOVER, dst=fleet, data=0))
+    assert fleet.node_ok[0] and not fleet.node_active[0]
+    assert fleet.slow_count[0] == 0
+    assert int(fleet.node_active.sum()) == cfg.n_nodes
+    # Spare-less fleet below strength + DUPLICATE recover events for the
+    # same node: the first activates it, the second must be a no-op.
+    cfg0 = FleetConfig(n_nodes=4, n_spares=0, mtbf_hours_node=1e9,
+                       degrade_mtbf_hours=1e9, straggler_sigma=0.0, seed=0)
+    sim0 = Simulation()
+    fleet0 = FleetSim(sim0, COST, cfg0, total_steps=10)
+    fleet0.process_event(Event(time=30.0, tag=Tag.NODE_FAILURE, dst=fleet0, data=1))
+    fleet0.process_event(Event(time=31.0, tag=Tag.NODE_FAILURE, dst=fleet0, data=2))
+    assert int(fleet0.node_active.sum()) == cfg0.n_nodes - 2
+    fleet0.process_event(Event(time=40.0, tag=Tag.NODE_RECOVER, dst=fleet0, data=1))
+    fleet0.process_event(Event(time=40.0, tag=Tag.NODE_RECOVER, dst=fleet0, data=1))
+    assert int(fleet0.node_active.sum()) == cfg0.n_nodes - 1
+    assert fleet0.node_active[1]
+
+
+def test_active_count_invariant_under_churn():
+    """Stress the failure/recover/evict paths: the fleet never runs more
+    than cfg.n_nodes active workers at any event boundary (checked by the
+    engine-side assertion) and finishes the run."""
+    st = _run(mtbf_hours_node=5.0, repair_hours=0.5, n_nodes=32, n_spares=2,
+              degrade_mtbf_hours=20.0, straggler_sigma=0.12,
+              straggler_evict_factor=1.4, straggler_window=5)
+    assert st.steps_done == 300
+
+
 def test_unsustainable_fleet_stalls_out_bounded():
     """Availability mtbf/(mtbf+repair) < min_nodes_frac ⇒ the run cannot
     finish; the simulator reports it (bounded by max_wallclock_s) instead

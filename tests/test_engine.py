@@ -1,9 +1,13 @@
-"""Engine-level tests: event queues, Algorithm-1 schedulers, vec engine."""
+"""Engine-level tests: event queues, Algorithm-1 schedulers, run semantics.
+
+(Property-based queue/scheduler tests live in test_properties.py — they
+need the optional ``hypothesis`` dependency.)
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.engine import Simulation
+from repro.core.engine import SimEntity, Simulation
+from repro.core.engine_oo import LegacySimulation
 from repro.core.datacenter import Broker, Datacenter
 from repro.core.entities import Cloudlet, Host, Vm
 from repro.core.events import (Event, HeapEventQueue, LinkedListEventQueue, Tag)
@@ -12,21 +16,62 @@ from repro.core.scheduler import (CloudletSchedulerSpaceShared,
 from repro.core.vec_scheduler import simulate_batch
 
 
-# -- event queues -------------------------------------------------------------
+# -- event queues / run-loop semantics ----------------------------------------
 
-@given(st.lists(st.tuples(st.floats(0, 1e6, allow_nan=False),
-                          st.integers(0, 3)), max_size=200))
-@settings(max_examples=50, deadline=None)
-def test_queue_pop_order_property(items):
-    """Both queues pop in (time, priority, insertion) order — identically."""
-    heap, ll = HeapEventQueue(), LinkedListEventQueue()
-    for t, pr in items:
-        heap.push(Event(time=t, tag="x", priority=pr))
-        ll.push(Event(time=t, tag="x", priority=pr))
-    out_h = [heap.pop().sort_key() for _ in range(len(items))]
-    out_l = [ll.pop().sort_key() for _ in range(len(items))]
-    assert out_h == sorted(out_h)
-    assert out_h == out_l
+class _Recorder(SimEntity):
+    """Records every dispatched event time; schedules nothing itself."""
+
+    def __init__(self, sim, times):
+        super().__init__(sim, "recorder")
+        self.times = list(times)
+        self.seen = []
+        self.starts = 0
+
+    def start(self):
+        self.starts += 1
+        for t in self.times:
+            self.sim.schedule(t, Tag.SCHED_UPDATE, self)
+
+    def process_event(self, ev):
+        self.seen.append(ev.time)
+
+
+@pytest.mark.parametrize("sim_cls", [Simulation, LegacySimulation])
+def test_run_until_is_resumable(sim_cls):
+    """An event past ``until`` must be peeked, not popped-and-dropped: a
+    resumed run() picks it up (the bug fixed at engine.py run())."""
+    sim = sim_cls()
+    rec = _Recorder(sim, [1.0, 2.0, 3.0])
+    end = sim.run(until=1.5)
+    assert end == 1.5 and sim.clock == 1.5
+    assert rec.seen == [1.0]
+    end = sim.run(until=2.5)
+    assert rec.seen == [1.0, 2.0]          # the t=2 event was not lost
+    end = sim.run()
+    assert rec.seen == [1.0, 2.0, 3.0]
+    assert rec.starts == 1                 # start() fires once, not per run()
+    assert sim.events_processed == 3
+
+
+@pytest.mark.parametrize("sim_cls", [Simulation, LegacySimulation])
+def test_sim_end_counts_as_processed(sim_cls):
+    """Documented choice: a dispatched SIM_END increments events_processed
+    (it is popped and acted upon); events beyond it are not dispatched."""
+    sim = sim_cls()
+    rec = _Recorder(sim, [1.0, 3.0])
+    sim.queue.push(Event(time=2.0, tag=Tag.SIM_END))
+    sim.run()
+    assert rec.seen == [1.0]
+    assert sim.clock == 2.0
+    assert sim.events_processed == 2       # the t=1 event + SIM_END
+
+
+def test_run_until_exact_boundary_processed():
+    """Events at exactly ``until`` are dispatched (strict > comparison)."""
+    sim = Simulation()
+    rec = _Recorder(sim, [1.0, 2.0])
+    sim.run(until=2.0)
+    assert rec.seen == [1.0, 2.0]
 
 
 def test_linkedlist_len_counts():
@@ -101,43 +146,3 @@ def test_retroactive_progress_bug_absent():
            (Cloudlet(length=1000.0, pes=1), 0.9)]
     done = _run_one_vm(CloudletSchedulerTimeShared(), cls)
     assert done[1].finish_time >= 0.9 + 1000.0 / 2000.0  # can't be instant
-
-
-# -- vectorized scheduler vs OO engine (property) --------------------------------
-
-@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["time", "space"]))
-@settings(max_examples=15, deadline=None)
-def test_vec_scheduler_matches_oo(seed, mode):
-    rng = np.random.default_rng(seed)
-    G, C = 2, 5
-    length = np.where(rng.random((G, C)) < 0.8,
-                      rng.integers(100, 5000, (G, C)).astype(float), 0.0)
-    pes = rng.integers(1, 3, (G, C)).astype(float)
-    submit = np.where(length > 0, np.round(rng.random((G, C)) * 10, 3), 1e18)
-    gmips = rng.integers(500, 2000, G).astype(float)
-    gpes = rng.integers(1, 5, G).astype(float)
-    vec = simulate_batch(length, pes, submit, gmips, gpes, mode)
-
-    sim = Simulation()
-    hosts = [Host(num_pes=int(gpes[g]), mips=float(gmips[g]), ram=1e9, bw=1e9)
-             for g in range(G)]
-    dc = Datacenter(sim, hosts)
-    broker = Broker(sim, dc)
-    guests, cls = [], {}
-    for g in range(G):
-        sch = (CloudletSchedulerTimeShared() if mode == "time"
-               else CloudletSchedulerSpaceShared())
-        vm = Vm(sch, num_pes=int(gpes[g]), mips=float(gmips[g]),
-                ram=1024, bw=1e9)
-        broker.add_guest(vm, on_host=hosts[g])
-        guests.append(vm)
-    for t, g, c in sorted((submit[g, c], g, c) for g in range(G)
-                          for c in range(C) if length[g, c] > 0):
-        cl = Cloudlet(length=float(length[g, c]), pes=int(pes[g, c]))
-        cls[(g, c)] = cl
-        broker.submit(cl, guests[g], at=float(t))
-    sim.run()
-    for (g, c), cl in cls.items():
-        oo = cl.finish_time if cl.finish_time >= 0 else np.inf
-        assert np.isclose(vec[g, c], oo, rtol=1e-9, atol=1e-9) or \
-            (np.isinf(vec[g, c]) and np.isinf(oo))

@@ -5,7 +5,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import attention_op, wkv6_op
+from repro.kernels.next_event import next_event, next_event_ref
+from repro.kernels.ops import attention_op, next_event_op, wkv6_op
 from repro.kernels.ref import attention_ref, wkv6_ref
 from repro.kernels.rwkv6_scan import wkv6
 
@@ -81,6 +82,51 @@ def test_ops_layout_adapters():
     u = jnp.zeros((2, 32))
     y, st = wkv6_op(r, r, r, logw, u, interpret=True)
     assert y.shape == r.shape and st.shape == (2, 2, 32, 32)
+
+
+@pytest.mark.parametrize("shape", [(7,), (512,), (513,), (3, 1000), (2, 2, 65)])
+def test_next_event_matches_oracle(shape):
+    """Fused masked min/argmin == the two-reduction jnp oracle, including
+    ragged sizes that exercise the inf padding."""
+    t = jax.random.uniform(RNG, shape) * 1e6
+    v, i = next_event(t, interpret=True)
+    vr, ir = next_event_ref(t)
+    assert jnp.array_equal(v, vr) and jnp.array_equal(i, ir)
+
+
+def test_next_event_mask_and_ties():
+    t = jnp.array([[5.0, 1.0, 1.0, 9.0]])
+    v, i = next_event(t, interpret=True)
+    assert float(v[0]) == 1.0 and int(i[0]) == 1   # first occurrence on ties
+    mask = jnp.array([[True, False, False, True]])
+    v, i = next_event(t, mask, interpret=True)
+    assert float(v[0]) == 5.0 and int(i[0]) == 0
+    # ties across block boundaries keep the lowest index
+    t2 = jnp.full((1, 1200), 3.0)
+    v2, i2 = next_event(t2, block=256, interpret=True)
+    assert int(i2[0]) == 0
+
+
+def test_next_event_all_masked_matches_argmin_convention():
+    t = jnp.ones((2, 8))
+    mask = jnp.zeros((2, 8), bool)
+    v, i = next_event(t, mask, interpret=True)
+    vr, ir = next_event_ref(t, mask)
+    assert jnp.all(jnp.isinf(v)) and jnp.array_equal(i, ir)
+
+
+def test_next_event_f64_and_vmap():
+    """The engine paths run the kernel under x64 (bit-exact scheduler) and
+    under vmap (batched fleet sweeps)."""
+    with jax.experimental.enable_x64():
+        t = jnp.asarray(jax.random.uniform(RNG, (3, 50)), jnp.float64)
+        v, i = next_event_op(t, interpret=True)
+        assert v.dtype == jnp.float64
+        assert jnp.array_equal(v, jnp.min(t, axis=-1))
+    tb = jax.random.uniform(RNG, (4, 33))
+    v_b, i_b = jax.vmap(lambda row: next_event(row, interpret=True))(tb)
+    assert jnp.array_equal(v_b, jnp.min(tb, axis=-1))
+    assert jnp.array_equal(i_b, jnp.argmin(tb, axis=-1).astype(jnp.int32))
 
 
 def test_kernel_matches_model_xla_path():

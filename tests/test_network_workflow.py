@@ -2,7 +2,6 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.case_study import (O_C, O_V, PAYLOAD_BIG, PAYLOAD_SMALL,
                                    run_case_study)
@@ -30,26 +29,7 @@ def test_overhead_disabled_edge_case():
     assert abs(r.makespans[0] - (10000 / 7800 * 2 + 32.0)) < 1e-6
 
 
-# -- Eq.(2) as a property over random parameters ---------------------------------
-
-@given(payload=st.floats(1.0, 2e9), overhead=st.floats(0.0, 10.0),
-       length=st.floats(100.0, 1e6))
-@settings(max_examples=20, deadline=None)
-def test_eq2_property(payload, overhead, length):
-    """Simulated chain makespan equals Eq.(2) for arbitrary parameters."""
-    import repro.core.case_study as cs
-    old_l = cs.L_TASK
-    try:
-        cs.L_TASK = length
-        for placement, hops in (("I", 0), ("II", 1), ("III", 2)):
-            r = cs.run_case_study(virt="V", placement=placement,
-                                  payload=payload, activations=1)
-            theo = theoretical_makespan([length, length], cs.MIPS,
-                                        cs.O_V, hops, payload, cs.BW)
-            assert abs(r.makespans[0] - theo) < 1e-6 * max(theo, 1.0)
-    finally:
-        cs.L_TASK = old_l
-
+# Eq.(2) property over random parameters: moved to test_properties.py
 
 # -- nesting / overhead composition -----------------------------------------------
 

@@ -2,7 +2,6 @@
 import random
 
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.core.consolidation_sim import run_consolidation
 from repro.core.power import (ALGORITHMS, detect_iqr, detect_lr, detect_lrr,
@@ -13,20 +12,11 @@ from repro.core.selection import (FirstFit, MaximumScore, MinimumScore,
 
 # -- selection invariants ---------------------------------------------------------
 
-@given(st.lists(st.floats(-1e6, 1e6), min_size=1, max_size=50))
-@settings(max_examples=50, deadline=None)
-def test_minmax_score_invariant(xs):
-    lo = MinimumScore(lambda x: x).select(xs)
-    hi = MaximumScore(lambda x: x).select(xs)
-    assert lo == min(xs) and hi == max(xs)
-
-
-@given(st.lists(st.integers(-100, 100), min_size=1, max_size=50))
-@settings(max_examples=50, deadline=None)
-def test_filter_respected(xs):
-    sel = MinimumScore(lambda x: x).select(xs, lambda x: x % 2 == 0)
-    evens = [x for x in xs if x % 2 == 0]
-    assert sel == (min(evens) if evens else None)
+def test_minmax_score_single_case():
+    xs = [3.0, -1.5, 9.0, 0.0]
+    assert MinimumScore(lambda x: x).select(xs) == -1.5
+    assert MaximumScore(lambda x: x).select(xs) == 9.0
+    # (property-based variants live in test_properties.py)
 
 
 def test_empty_pool_returns_none():

@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import load_tiny
@@ -130,13 +129,11 @@ def test_cosine_schedule_endpoints():
     assert float(s(110)) == pytest.approx(0.0, abs=1e-6)
 
 
-# -- compression --------------------------------------------------------------------
+# -- compression: property-based roundtrip test moved to test_properties.py --
 
-@given(st.integers(0, 2 ** 31 - 1))
-@settings(max_examples=20, deadline=None)
-def test_int8_roundtrip_error_bound(seed):
-    rng = np.random.default_rng(seed)
-    x = jnp.asarray(rng.normal(size=(64,)) * rng.uniform(0.01, 10))
+def test_int8_roundtrip_single_seed():
+    rng = np.random.default_rng(123)
+    x = jnp.asarray(rng.normal(size=(64,)) * 2.0)
     q, scale = compress_int8(x)
     back = decompress_int8(q, scale)
     assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.5 + 1e-9

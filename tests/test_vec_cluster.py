@@ -1,0 +1,151 @@
+"""vec_cluster validation: the jit/vmap SoA fleet simulator vs the OO
+FleetSim — exact on deterministic configs, statistical (2% mean goodput,
+64 seeds) on stochastic ones — plus batching, precision modes and the
+Pallas next-event path."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core.cluster import FleetConfig, StepCost, simulate_training_run
+from repro.core.vec_cluster import simulate_fleet_batch, simulate_fleet_vec
+
+COST = StepCost(compute_s=1.0, memory_s=0.4, collective_s=0.3,
+                overlap_collective=0.5)
+
+
+# -- deterministic exactness ---------------------------------------------------
+
+@pytest.mark.parametrize("cfg,steps", [
+    # ckpt cadence mid-run
+    (FleetConfig(n_nodes=64, n_spares=4, straggler_sigma=0.0,
+                 mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                 ckpt_every_steps=50, seed=3), 300),
+    # ckpt boundary coinciding with the final step (wallclock includes the
+    # final write — semantics shared with the OO engine)
+    (FleetConfig(n_nodes=8, n_spares=0, straggler_sigma=0.0,
+                 mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                 ckpt_every_steps=100, seed=0), 200),
+    # pod-boundary overhead folded into the base step
+    (FleetConfig(n_nodes=16, n_spares=1, straggler_sigma=0.0,
+                 mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                 ckpt_every_steps=33, pod_boundary_overhead_s=0.25,
+                 seed=7), 120),
+])
+def test_deterministic_config_matches_oo_exactly(cfg, steps):
+    oo = simulate_training_run(COST, cfg, total_steps=steps)
+    vec = simulate_fleet_vec(COST, cfg, total_steps=steps)
+    assert vec.wallclock_s == oo.wallclock_s        # bit-identical f64
+    assert vec.steps_done == oo.steps_done
+    assert vec.goodput == oo.goodput
+    assert vec.ckpt_s == oo.ckpt_s
+    assert vec.failures == oo.failures == 0
+
+
+def test_deterministic_pallas_path_identical():
+    cfg = FleetConfig(n_nodes=32, n_spares=2, straggler_sigma=0.0,
+                      mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                      ckpt_every_steps=40, seed=1)
+    plain = simulate_fleet_vec(COST, cfg, total_steps=100)
+    pallas = simulate_fleet_vec(COST, cfg, total_steps=100, use_pallas=True)
+    assert plain.wallclock_s == pallas.wallclock_s
+    assert plain.goodput == pallas.goodput
+
+
+# -- stochastic statistical agreement -----------------------------------------
+
+# Failure-heavy so every seed averages many failure/restart cycles: the
+# engines' mean goodput then separates modeling bias from Monte-Carlo noise.
+STOCH = FleetConfig(n_nodes=64, n_spares=8, straggler_sigma=0.08,
+                    mtbf_hours_node=2.0, repair_hours=0.2, restart_s=60.0,
+                    ckpt_every_steps=20, ckpt_write_s=10.0,
+                    degrade_mtbf_hours=1e9)
+
+
+def _oo_goodputs(cfg, steps, seeds):
+    return np.array([simulate_training_run(
+        COST, replace(cfg, seed=int(s)), total_steps=steps).goodput
+        for s in seeds])
+
+
+def test_stochastic_mean_goodput_within_2pct():
+    seeds = np.arange(64)
+    oo = _oo_goodputs(STOCH, 300, seeds)
+    vec = simulate_fleet_batch(COST, STOCH, 300, seeds=seeds)["goodput"]
+    assert vec.shape == (64,)
+    rel = abs(vec.mean() - oo.mean()) / oo.mean()
+    assert rel < 0.02, (vec.mean(), oo.mean(), rel)
+
+
+def test_stochastic_fast_maxpath_within_2pct():
+    """Eviction/degradation statically off ⇒ the loop samples the straggler
+    max by inverse CDF (1 draw/step); statistics must still match OO."""
+    cfg = replace(STOCH, straggler_evict_factor=1e9)
+    seeds = np.arange(64)
+    oo = _oo_goodputs(cfg, 300, seeds)
+    vec = simulate_fleet_batch(COST, cfg, 300, seeds=seeds)["goodput"]
+    rel = abs(vec.mean() - oo.mean()) / oo.mean()
+    assert rel < 0.02, (vec.mean(), oo.mean(), rel)
+
+
+def test_fast_precision_statistics_match_exact():
+    cfg = replace(STOCH, straggler_evict_factor=1e9)
+    seeds = np.arange(64)
+    exact = simulate_fleet_batch(COST, cfg, 300, seeds=seeds)["goodput"]
+    fast = simulate_fleet_batch(COST, cfg, 300, seeds=seeds,
+                                precision="fast")["goodput"]
+    assert abs(fast.mean() - exact.mean()) / exact.mean() < 0.02
+    with pytest.raises(ValueError):
+        simulate_fleet_batch(COST, cfg, 10, seeds=[0], precision="half")
+
+
+# -- batched sweeps ------------------------------------------------------------
+
+def test_vmap_sweep_broadcasts_scenario_axes():
+    mtbfs = np.array([1e9, 1e9, 2.0, 2.0])
+    ckpts = np.array([20, 50, 20, 50])
+    out = simulate_fleet_batch(COST, STOCH, 100, seeds=np.arange(4),
+                               mtbf_hours=mtbfs, ckpt_every=ckpts)
+    assert out["goodput"].shape == (4,)
+    # healthy lanes finish with zero failures; flaky lanes see failures
+    assert out["failures"][0] == 0 and out["failures"][1] == 0
+    assert out["failures"][2] > 0 or out["failures"][3] > 0
+    # more frequent checkpoints on a healthy fleet cost more ckpt time
+    assert out["ckpt_s"][0] > out["ckpt_s"][1]
+
+
+def test_batch_matches_singleton_runs():
+    """A batch lane must reproduce the single-scenario wrapper exactly
+    (same seed → same pre-drawn schedules → same trajectory)."""
+    cfg = replace(STOCH, seed=11)
+    single = simulate_fleet_vec(COST, cfg, 150)
+    batch = simulate_fleet_batch(COST, cfg, 150, seeds=[11, 12, 13])
+    assert batch["wallclock_s"][0] == single.wallclock_s
+    assert batch["steps_done"][0] == single.steps_done
+    # different seeds give different trajectories
+    assert not np.all(batch["wallclock_s"] == batch["wallclock_s"][0])
+
+
+def test_unsustainable_fleet_bounded_not_hung():
+    """Equilibrium availability below min_nodes_frac: the vec engine, like
+    the OO engine, reports a stalled-out run bounded by max_wallclock_s."""
+    st = simulate_fleet_vec(
+        COST, FleetConfig(n_nodes=64, n_spares=0, mtbf_hours_node=3.0,
+                          repair_hours=2.0, min_nodes_frac=0.75,
+                          degrade_mtbf_hours=1e9, seed=1),
+        total_steps=10_000, max_wallclock_s=6 * 3600.0)
+    assert st.steps_done < 10_000
+    assert st.stall_s > 0
+    assert st.wallclock_s == 6 * 3600.0
+
+
+def test_straggler_eviction_engages():
+    """Chronic degradations drive evictions through the vectorized
+    slow-count/median path (the OO policy's SoA counterpart)."""
+    cfg = FleetConfig(n_nodes=32, n_spares=4, straggler_sigma=0.1,
+                      mtbf_hours_node=1e9, degrade_mtbf_hours=2.0,
+                      repair_hours=0.5, straggler_evict_factor=1.5,
+                      straggler_window=10, seed=5)
+    st = simulate_fleet_vec(COST, cfg, total_steps=400)
+    assert st.evictions > 0
+    assert st.steps_done == 400

@@ -1,0 +1,109 @@
+"""vec_scheduler edge cases, asserted bit-identical against the OO
+``CloudletScheduler`` paths (via the backend substrate's ``cloudlet_batch``
+scenario so both engines run the same contract)."""
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario
+
+
+def _both(length, pes, submit, gmips, gpes, mode, **kw):
+    kwargs = dict(length=length, pes=pes, submit=submit,
+                  guest_mips=gmips, guest_pes=gpes, mode=mode, **kw)
+    vec = run_scenario("cloudlet_batch", backend="vec", **kwargs)
+    oo = run_scenario("cloudlet_batch", backend="oo", **kwargs)
+    return np.asarray(vec), np.asarray(oo)
+
+
+def _assert_identical(vec, oo):
+    both_inf = np.isinf(vec) & np.isinf(oo)
+    assert np.all(both_inf | (vec == oo)), (vec, oo)
+
+
+@pytest.mark.parametrize("mode", ["time", "space"])
+def test_zero_length_empty_slots(mode):
+    """length == 0 marks an empty (padded) slot: it must never run, finish,
+    or influence its guest's capacity split."""
+    length = np.array([[1000.0, 0.0, 2000.0, 0.0]])
+    pes = np.ones((1, 4))
+    submit = np.array([[0.0, 0.0, 0.0, 5.0]])
+    vec, oo = _both(length, pes, submit, np.array([1000.0]), np.array([2.0]),
+                    mode)
+    _assert_identical(vec, oo)
+    assert np.isinf(vec[0, 1]) and np.isinf(vec[0, 3])
+    if mode == "time":
+        # two 1-PE cloudlets on 2 PEs: full speed, empty slots ignored
+        assert vec[0, 0] == pytest.approx(1.0)
+        assert vec[0, 2] == pytest.approx(2.0)
+
+
+def test_all_slots_empty():
+    length = np.zeros((2, 3))
+    vec, oo = _both(length, np.ones((2, 3)), np.zeros((2, 3)),
+                    np.array([1000.0, 500.0]), np.array([1.0, 2.0]), "time")
+    assert np.all(np.isinf(vec)) and np.all(np.isinf(oo))
+
+
+def test_equal_submit_times_space_shared_fifo():
+    """Space-shared FIFO among cloudlets submitted at the same instant:
+    admission follows slot (submission) order, and the queued tail starts
+    only when PEs free up — identical to the OO scheduler."""
+    G, C = 1, 4
+    length = np.full((G, C), 1000.0)
+    pes = np.full((G, C), 2.0)
+    submit = np.zeros((G, C))                      # all equal
+    vec, oo = _both(length, pes, submit, np.array([1000.0]), np.array([2.0]),
+                    "space")
+    _assert_identical(vec, oo)
+    # 2-PE guest, 2-PE cloudlets → strictly serial: 0.5, 1.0, 1.5, 2.0
+    assert np.allclose(vec[0], [0.5, 1.0, 1.5, 2.0])
+
+
+def test_equal_submit_times_mixed_pes_fifo_packing():
+    """Equal submit times with mixed PE demands: FIFO admission packs by
+    cumulative PEs, exactly like CloudletSchedulerSpaceShared."""
+    length = np.array([[500.0, 500.0, 500.0]])
+    pes = np.array([[1.0, 2.0, 1.0]])              # slots 0+2 fit; 1 queues
+    submit = np.zeros((1, 3))
+    vec, oo = _both(length, pes, submit, np.array([1000.0]), np.array([2.0]),
+                    "space")
+    _assert_identical(vec, oo)
+
+
+def test_single_pe_guest_oversubscription_time_shared():
+    """Many 1-PE cloudlets on a single-PE guest: capacity splits evenly and
+    everything finishes together (time-shared), matching OO exactly."""
+    C = 6
+    length = np.full((1, C), 600.0)
+    pes = np.ones((1, C))
+    submit = np.zeros((1, C))
+    vec, oo = _both(length, pes, submit, np.array([600.0]), np.array([1.0]),
+                    "time")
+    _assert_identical(vec, oo)
+    assert np.allclose(vec[0], 6.0)                # 600·6 MI / 600 MIPS
+
+
+def test_single_pe_guest_oversubscription_space_shared():
+    """1-PE guest, head-of-line cloudlet needing 2 PEs can never run; the
+    queue behind it is blocked forever (inf) in both engines."""
+    length = np.array([[100.0, 100.0]])
+    pes = np.array([[2.0, 1.0]])
+    submit = np.zeros((1, 2))
+    vec, oo = _both(length, pes, submit, np.array([1000.0]), np.array([1.0]),
+                    "space")
+    assert np.all(np.isinf(vec)) and np.all(np.isinf(oo))
+
+
+def test_staggered_submits_match_and_pallas_parity():
+    """Late submissions (time-shared) match OO; the fused Pallas next-event
+    kernel path returns bit-identical finish times to the jnp reduction."""
+    length = np.array([[1000.0, 1000.0, 500.0]])
+    pes = np.ones((1, 3))
+    submit = np.array([[0.0, 0.9, 2.0]])
+    gmips, gpes = np.array([1000.0]), np.array([2.0])
+    vec, oo = _both(length, pes, submit, gmips, gpes, "time")
+    _assert_identical(vec, oo)
+    vec_pallas = run_scenario("cloudlet_batch", backend="vec", length=length,
+                              pes=pes, submit=submit, guest_mips=gmips,
+                              guest_pes=gpes, mode="time", use_pallas=True)
+    assert np.array_equal(np.asarray(vec_pallas), vec)
