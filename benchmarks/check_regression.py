@@ -1,0 +1,112 @@
+"""Perf-regression gate: fail CI when a recorded speedup ratio degrades.
+
+Compares the tracked figures of merit in a freshly generated benchmark
+record (``BENCH_substrate.json``, ``BENCH_workflow.json``) against a
+committed baseline (``benchmarks/baselines/*.json``) and exits non-zero
+when any tracked ratio drops more than ``--threshold`` (default 25%)
+below the baseline.
+
+Tracked keys: every top-level section carrying a ``speedup_vs_oo`` entry
+(``vec``, ``vec_fast``, ``vec_pallas``, ...) — so new flavours and new
+benchmark records are gated automatically once a baseline is committed.
+
+Usage (pairs of current/baseline paths):
+
+  python -m benchmarks.check_regression \
+      BENCH_substrate.json benchmarks/baselines/substrate_quick.json \
+      BENCH_workflow.json  benchmarks/baselines/workflow_quick.json
+
+Quick-mode CI runs must gate against quick-mode baselines (the configs are
+embedded in each record and mismatches are reported); absolute wall times
+are machine-dependent, but the OO-loop-vs-vmap *ratio* is stable enough to
+catch substrate regressions while tolerating runner noise via the
+threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+from typing import Dict, List, Tuple
+
+TRACKED_KEY = "speedup_vs_oo"
+
+
+def tracked_ratios(record: Dict) -> Dict[str, float]:
+    """flavour name -> tracked speedup ratio, for every flavour section."""
+    out = {}
+    for name, section in record.items():
+        if isinstance(section, dict) and TRACKED_KEY in section:
+            out[name] = float(section[TRACKED_KEY])
+    return out
+
+
+def check_pair(current: Dict, baseline: Dict, threshold: float
+               ) -> Tuple[List[str], List[str]]:
+    """Returns (failures, notes) comparing one record against its baseline."""
+    failures, notes = [], []
+    bench = current.get("benchmark", "?")
+    if current.get("config", {}).get("quick") != \
+            baseline.get("config", {}).get("quick"):
+        notes.append(f"{bench}: quick-mode mismatch vs baseline "
+                     f"(current={current.get('config', {}).get('quick')}, "
+                     f"baseline={baseline.get('config', {}).get('quick')})")
+    cur, base = tracked_ratios(current), tracked_ratios(baseline)
+    for name, base_ratio in sorted(base.items()):
+        if name not in cur:
+            failures.append(f"{bench}/{name}: tracked ratio missing from "
+                            f"current record (baseline {base_ratio:.2f}x)")
+            continue
+        floor = base_ratio * (1.0 - threshold)
+        verdict = "FAIL" if cur[name] < floor else "ok"
+        msg = (f"{bench}/{name}: {TRACKED_KEY} {cur[name]:.2f}x vs baseline "
+               f"{base_ratio:.2f}x (floor {floor:.2f}x) {verdict}")
+        (failures if verdict == "FAIL" else notes).append(msg)
+    for name in sorted(set(cur) - set(base)):
+        notes.append(f"{bench}/{name}: no baseline yet "
+                     f"({cur[name]:.2f}x recorded, not gated)")
+    return failures, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail (exit 1) when a tracked speedup ratio degrades "
+                    "more than --threshold vs its committed baseline")
+    ap.add_argument("paths", nargs="+",
+                    help="pairs: CURRENT BASELINE [CURRENT BASELINE ...]")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="allowed fractional degradation (default 0.25)")
+    args = ap.parse_args(argv)
+    if len(args.paths) % 2:
+        ap.error("paths must come in CURRENT BASELINE pairs")
+
+    all_failures = []
+    for i in range(0, len(args.paths), 2):
+        cur_p, base_p = (pathlib.Path(args.paths[i]),
+                         pathlib.Path(args.paths[i + 1]))
+        if not cur_p.exists():
+            all_failures.append(f"{cur_p}: current record missing "
+                                "(benchmark did not run?)")
+            continue
+        if not base_p.exists():
+            print(f"# {base_p}: no baseline committed yet — skipping gate")
+            continue
+        failures, notes = check_pair(json.loads(cur_p.read_text()),
+                                     json.loads(base_p.read_text()),
+                                     args.threshold)
+        for n in notes:
+            print(f"# {n}")
+        for f in failures:
+            print(f"REGRESSION {f}")
+        all_failures += failures
+    if all_failures:
+        print(f"{len(all_failures)} perf regression(s) beyond "
+              f"{args.threshold:.0%} threshold", file=sys.stderr)
+        return 1
+    print("# perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -11,7 +11,10 @@ Benchmarks (paper artifact → module):
   beyond    → vec_speedup        (vectorized Algorithm 1 vs OO)
   §6→ML     → cluster_sim        (fleet goodput vs MTBF/ckpt/stragglers)
   beyond    → batch_sweep        (vmap fleet sweep vs OO loop → BENCH_substrate.json)
+  beyond    → workflow_sweep     (vmap case-study DAG grid vs OO loop → BENCH_workflow.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
+
+``check_regression.py`` (not a suite) gates the recorded speedups in CI.
 """
 from __future__ import annotations
 
@@ -28,7 +31,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, consolidation,
-                   engine_micro, vec_speedup)
+                   engine_micro, vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -36,6 +39,7 @@ def main() -> None:
         "vec_speedup": vec_speedup.run,
         "cluster_sim": cluster_sim.run,
         "batch_sweep": batch_sweep.run,
+        "workflow_sweep": workflow_sweep.run,
     }
     try:
         from . import dryrun_report

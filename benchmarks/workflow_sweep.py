@@ -1,0 +1,121 @@
+"""Workflow benchmark: the §6 case-study grid, OO loop vs one vmap call.
+
+The workload is the ISSUE-2 acceptance scenario: the full Figure 5 /
+Table 3 grid — {V, C, N} virtualization × {I, II, III} placement ×
+{1 B, 1 GB} payload × seeds — with a Poisson stream of DAG activations per
+cell.  The OO engine runs one Python event loop per cell; the vec backend
+(``core.vec_workflow``) runs every cell inside a single jit-compiled
+``lax.while_loop`` under ``vmap``:
+
+  * ``vec``        — exact mode (f64; bit-identical to OO on deterministic
+                     single-activation chains, ε-close on streams),
+  * ``vec_pallas`` — exact mode with the fused Pallas next-event reduction
+                     (interpret mode on CPU — records the TPU-lowering
+                     path's overhead honestly).
+
+Writes ``BENCH_workflow.json`` at the repo root so the vectorized-workflow
+perf trajectory is recorded PR over PR; also emits the usual CSV rows.
+``benchmarks/check_regression.py`` gates CI on the recorded speedups.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.case_study import PAYLOAD_BIG, PAYLOAD_SMALL, run_case_study
+
+from ._util import emit
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_workflow.json"
+
+
+def _grid(n_seeds: int):
+    virts, places, pays, seeds = [], [], [], []
+    for v in ("V", "C", "N"):
+        for p in ("I", "II", "III"):
+            for pay in (PAYLOAD_SMALL, PAYLOAD_BIG):
+                for s in range(n_seeds):
+                    virts.append(v)
+                    places.append(p)
+                    pays.append(pay)
+                    seeds.append(s)
+    return virts, places, pays, seeds
+
+
+def _oo_sweep(grid, activations):
+    virts, places, pays, seeds = grid
+    # Warm the lazy scenario registry (first dispatch imports the vec
+    # modules and with them jax) outside the timed loop.
+    run_case_study(backend="oo", activations=1)
+    wall, makespans = float("inf"), None
+    for _ in range(2):                     # best-of-2: keeps the CI
+        t0 = time.perf_counter()           # regression gate noise-immune
+        makespans = [run_case_study(backend="oo", virt=virts[i],
+                                    placement=places[i], payload=pays[i],
+                                    seed=seeds[i],
+                                    activations=activations).makespans
+                     for i in range(len(virts))]
+        wall = min(wall, time.perf_counter() - t0)
+    return wall, np.asarray(makespans)
+
+
+def _vec_sweep(grid, activations, **kw):
+    from repro.core.backend import run_scenario
+    virts, places, pays, seeds = grid
+    run = lambda s: run_scenario("case_study", backend="vec", virt=virts,
+                                 placement=places, payload=pays, seed=s,
+                                 activations=activations, **kw)
+    t0 = time.perf_counter()
+    run([s + 1 for s in seeds])            # compile + one execution
+    cold = time.perf_counter() - t0
+    wall, rs = float("inf"), None
+    for _ in range(3):                     # best-of-3: the warm wall is
+        t0 = time.perf_counter()           # milliseconds — keep the CI
+        rs = run(seeds)                    # regression gate noise-immune
+        wall = min(wall, time.perf_counter() - t0)
+    compile_s = max(cold - wall, 0.0)      # cold call compiles AND executes
+    return wall, compile_s, np.asarray([r.makespans for r in rs])
+
+
+def run(quick: bool = False) -> dict:
+    n_seeds = 2 if quick else 8
+    activations = 8 if quick else 16
+    grid = _grid(n_seeds)
+    b = len(grid[0])
+
+    oo_wall, oo_ms = _oo_sweep(grid, activations)
+    flavours = {}
+    for name, kw in (("vec", {}), ("vec_pallas", dict(use_pallas=True))):
+        wall, compile_s, ms = _vec_sweep(grid, activations, **kw)
+        rel = float(abs(ms.mean() - oo_ms.mean()) / oo_ms.mean())
+        flavours[name] = dict(
+            wall_s=round(wall, 4), compile_s=round(compile_s, 4),
+            makespan_mean=round(float(ms.mean()), 5),
+            makespan_rel_diff_vs_oo=round(rel, 7),
+            speedup_vs_oo=round(oo_wall / wall, 2))
+        emit(f"workflow_sweep/{name}", wall / b * 1e6,
+             f"wall_s={wall:.2f};compile_s={compile_s:.2f};"
+             f"speedup_vs_oo={oo_wall / wall:.1f}x;"
+             f"makespan_rel_diff={rel:.2e}")
+
+    record = dict(
+        benchmark="workflow_sweep",
+        config=dict(cells=b, activations=activations, seeds=n_seeds,
+                    quick=quick,
+                    sweep="virt × placement × payload × seed"),
+        oo=dict(wall_s=round(oo_wall, 4),
+                makespan_mean=round(float(oo_ms.mean()), 5)),
+        **flavours)
+    emit("workflow_sweep/oo_loop", oo_wall / b * 1e6,
+         f"wall_s={oo_wall:.2f};makespan={oo_ms.mean():.4f}")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("workflow_sweep/record", 0.0, f"written={OUT_PATH.name};"
+         f"vec_speedup={flavours['vec']['speedup_vs_oo']}x")
+    return record
+
+
+if __name__ == "__main__":
+    run()

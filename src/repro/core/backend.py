@@ -20,14 +20,17 @@ Two registries:
   * **backends** — ``get_backend(name)`` → :class:`SimBackend` (accepts the
     ``6g``/``7g`` aliases everywhere a backend name is taken);
   * **scenarios** — scenario kinds (``"consolidation"``, ``"fleet"``,
-    ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``) registered by
-    their home modules via the :func:`scenario` decorator, keyed per backend.
+    ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``,
+    ``"workflow_batch"``) registered by their home modules via the
+    :func:`scenario` decorator, keyed per backend.
 
 The single entry point is ``run_scenario(kind, backend=..., **params)`` (or
 ``SimBackend.run_scenario``): modules and benchmarks select engines through
 it instead of dispatching by hand.  A backend without an implementation for
-a scenario raises :class:`ScenarioUnsupported` (e.g. the network case study
-has no vectorized path).
+a scenario raises :class:`ScenarioUnsupported` (e.g. ``"fleet"`` has no
+``legacy`` batched path beyond the loop fallback; every paper scenario —
+including the §6 network case study since ``vec_workflow`` — now has a
+vectorized implementation).
 
 Scenario-provider modules are imported lazily on first dispatch so that
 importing :mod:`repro.core` stays light and free of cycles.
@@ -128,6 +131,7 @@ _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.vec_cluster",
     "repro.core.case_study",
     "repro.core.vec_scheduler",
+    "repro.core.vec_workflow",
 )
 _loaded = False
 

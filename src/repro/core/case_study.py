@@ -74,12 +74,27 @@ def build_datacenter(sim: Simulation) -> Tuple[Datacenter, List[Host]]:
 
 
 PLACEMENTS = {"I": (0, 0), "II": (0, 1), "III": (0, 2)}   # host idx for T0, T1
+HOPS = {"I": 0, "II": 1, "III": 2}                        # Eq.(2) networkHops
+
+
+def cell_overhead(virt: str, overhead_on: bool = True) -> float:
+    """Composed virtualization overhead O_α of one Figure-5 cell (C4:
+    nesting composes, O_N = O_V + O_C). Shared by the OO and vec paths."""
+    return {"V": O_V, "C": O_C, "N": O_V + O_C}[virt] if overhead_on else 0.0
+
+
+def cell_theoretical(virt: str, placement: str, payload: float,
+                     overhead_on: bool = True) -> float:
+    """Eq.(2) analytic makespan for one case-study grid cell."""
+    return theoretical_makespan([L_TASK, L_TASK], MIPS,
+                                cell_overhead(virt, overhead_on),
+                                HOPS[placement], payload, BW)
 
 
 @scenario("case_study", backends=("legacy", "oo"))
 def _case_study_scenario(backend: SimBackend, **kw) -> "CaseStudyResult":
-    # The network/workflow case study has no vectorized path (DAG + packet
-    # routing is event-driven); backend selection picks the kernel flavour.
+    # Event-driven reference path; the ``vec`` implementation (SoA DAG
+    # engine under jit/vmap) is registered by ``repro.core.vec_workflow``.
     return _run_case_study_on(backend.make_simulation(), **kw)
 
 
@@ -88,8 +103,12 @@ def run_case_study(*, backend: str = "oo", virt: str = "V",
                    activations: int = 1, overhead_on: bool = True,
                    seed: int = 42) -> CaseStudyResult:
     """Simulate the case study; return per-activation makespans + Eq.(2)
-    value. Engine selection goes through the SimBackend substrate (``vec``
-    raises ScenarioUnsupported — there is no vectorized network path)."""
+    value. Engine selection goes through the SimBackend substrate:
+    ``oo``/``legacy`` run the event kernels; ``vec`` runs the vectorized
+    DAG engine (``repro.core.vec_workflow``) — bit-identical on
+    deterministic single-activation chains, and it additionally accepts
+    sequences for ``virt``/``placement``/``payload``/``seed`` to run a
+    whole grid of cells in one compiled vmap call."""
     return get_backend(backend).run_scenario(
         "case_study", virt=virt, placement=placement, payload=payload,
         activations=activations, overhead_on=overhead_on, seed=seed)
@@ -138,7 +157,5 @@ def _run_case_study_on(sim: Simulation, *, virt: str = "V",
         assert end >= 0, "workflow did not complete"
         makespans.append(end - start)
 
-    hops = {"I": 0, "II": 1, "III": 2}[placement]
-    ov = {"V": O_V, "C": O_C, "N": O_V + O_C}[virt] if overhead_on else 0.0
-    theo = theoretical_makespan([L_TASK, L_TASK], MIPS, ov, hops, payload, BW)
+    theo = cell_theoretical(virt, placement, payload, overhead_on)
     return CaseStudyResult(makespans, theo, virt, placement, payload)

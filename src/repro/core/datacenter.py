@@ -63,8 +63,8 @@ class Datacenter(SimEntity):
         self._update_processing()
 
     def _cloudlet_finished(self, cl: Cloudlet, now: float) -> None:
-        if isinstance(cl, NetworkCloudlet):
-            cl.check_deadline(now)
+        # (deadline checking moved into the scheduler's finish path — it now
+        #  holds even when a scheduler is driven without a datacenter)
         if self.broker is not None:
             self.sim.schedule(now, Tag.CLOUDLET_RETURN, self.broker,
                               src=self, data=cl)

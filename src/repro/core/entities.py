@@ -73,6 +73,11 @@ class Cloudlet:
     def is_finished(self) -> bool:
         return self.length_so_far >= self.length - 1e-9
 
+    # -- Finish hook: called by the scheduler the moment I complete (networked
+    #    cloudlets use it to check their deadline at finish time).
+    def on_finished(self, now: float) -> None:
+        pass
+
     # -- Handler for next-event estimation (Algorithm 1 line 18).
     def estimate_finish(self, now: float, alloc_mips: float) -> float:
         if alloc_mips <= 0.0:

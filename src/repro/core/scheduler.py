@@ -71,8 +71,14 @@ class CloudletScheduler:
         self.mips_share = mips_share
         time_span = now - self.previous_time                      # line 1
         self.previous_time = now
-        for cl in list(self.exec_list):                           # lines 2-9
-            alloc = self.allocated_mips_for(cl, now)
+        # Snapshot the elapsed window's allocation for ALL cloudlets before
+        # applying any progress (CloudSim computes capacity once per update
+        # sweep): a cloudlet completing mid-sweep must not retroactively
+        # grant later cloudlets its freed share for the same past window —
+        # that conjures capacity out of thin air under contention.
+        window = [(cl, self.allocated_mips_for(cl, now))
+                  for cl in list(self.exec_list)]
+        for cl, alloc in window:                                  # lines 2-9
             cl.update_progress(time_span, alloc, now)             # handler 1
             # (called even for time_span == 0 so stage machinery — SEND
             #  emission, satisfied RECVs — can advance on wake-up events)
@@ -81,6 +87,7 @@ class CloudletScheduler:
             self.exec_list.remove(cl)
             cl.status = CloudletStatus.SUCCESS
             cl.finish_time = now
+            cl.on_finished(now)        # deadline check happens at finish time
             self.finished.append(cl)
             for cb in self._finished_callbacks:
                 cb(cl, now)

@@ -112,10 +112,11 @@ class NetworkCloudlet(Cloudlet):
 
     # -- handler 2: stop condition ---------------------------------------------
     def is_finished(self) -> bool:
-        done = self.stage_idx >= len(self.stages)
-        if done and self.finish_time < 0:
-            pass
-        return done
+        return self.stage_idx >= len(self.stages)
+
+    # -- finish hook: deadlines are *checked*, not just stored (7G §4.5) --------
+    def on_finished(self, now: float) -> None:
+        self.check_deadline(now)
 
     # -- next-event estimation ----------------------------------------------------
     def estimate_finish(self, now: float, alloc_mips: float) -> float:

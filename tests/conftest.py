@@ -4,3 +4,5 @@ import sys
 # Tests run single-device (the dry-run's 512-device XLA flag is set only in
 # its own subprocess — see test_dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# Repo root, so tests can import the benchmarks package (perf-gate tests).
+sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))

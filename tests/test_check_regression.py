@@ -1,0 +1,95 @@
+"""Perf-regression gate (benchmarks/check_regression.py) unit tests."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import check_pair, main, tracked_ratios
+
+
+def _record(speedups, quick=True, bench="batch_sweep"):
+    rec = {"benchmark": bench, "config": {"quick": quick},
+           "oo": {"wall_s": 10.0}}
+    for name, s in speedups.items():
+        rec[name] = {"wall_s": 1.0, "speedup_vs_oo": s}
+    return rec
+
+
+def test_tracked_ratios_found():
+    r = _record({"vec": 19.0, "vec_fast": 12.0, "vec_pallas": 5.4})
+    assert tracked_ratios(r) == {"vec": 19.0, "vec_fast": 12.0,
+                                 "vec_pallas": 5.4}
+
+
+def test_within_threshold_passes():
+    base = _record({"vec": 20.0})
+    cur = _record({"vec": 16.0})                 # -20% < 25% threshold
+    failures, _ = check_pair(cur, base, 0.25)
+    assert failures == []
+
+
+def test_beyond_threshold_fails():
+    base = _record({"vec": 20.0, "vec_fast": 12.0})
+    cur = _record({"vec": 14.9, "vec_fast": 12.5})   # vec down 25.5%
+    failures, _ = check_pair(cur, base, 0.25)
+    assert len(failures) == 1 and "vec" in failures[0]
+
+
+def test_missing_tracked_key_fails():
+    base = _record({"vec": 20.0})
+    cur = _record({})
+    failures, _ = check_pair(cur, base, 0.25)
+    assert failures and "missing" in failures[0]
+
+
+def test_new_flavour_without_baseline_is_note_not_failure():
+    base = _record({"vec": 20.0})
+    cur = _record({"vec": 20.0, "vec_gpu": 100.0})
+    failures, notes = check_pair(cur, base, 0.25)
+    assert failures == []
+    assert any("vec_gpu" in n for n in notes)
+
+
+def test_quick_mode_mismatch_noted():
+    base = _record({"vec": 20.0}, quick=False)
+    cur = _record({"vec": 20.0}, quick=True)
+    _, notes = check_pair(cur, base, 0.25)
+    assert any("quick-mode mismatch" in n for n in notes)
+
+
+def test_cli_exit_codes(tmp_path):
+    """Acceptance: the CLI exits non-zero on a >25% speedup degradation."""
+    base = tmp_path / "base.json"
+    cur_ok = tmp_path / "ok.json"
+    cur_bad = tmp_path / "bad.json"
+    base.write_text(json.dumps(_record({"vec": 20.0})))
+    cur_ok.write_text(json.dumps(_record({"vec": 19.0})))
+    cur_bad.write_text(json.dumps(_record({"vec": 10.0})))
+    assert main([str(cur_ok), str(base)]) == 0
+    assert main([str(cur_bad), str(base)]) == 1
+    # custom threshold: a 50% drop passes a 60% threshold
+    assert main([str(cur_bad), str(base), "--threshold", "0.6"]) == 0
+
+
+def test_cli_missing_baseline_skips(tmp_path, capsys):
+    cur = tmp_path / "cur.json"
+    cur.write_text(json.dumps(_record({"vec": 20.0})))
+    assert main([str(cur), str(tmp_path / "nope.json")]) == 0
+    assert "skipping gate" in capsys.readouterr().out
+
+
+def test_cli_missing_current_fails(tmp_path):
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_record({"vec": 20.0})))
+    assert main([str(tmp_path / "nope.json"), str(base)]) == 1
+
+
+def test_committed_baselines_are_consistent():
+    """The baselines shipped in-repo parse and carry tracked ratios."""
+    import pathlib
+    root = pathlib.Path(__file__).resolve().parents[1]
+    for name in ("substrate.json", "substrate_quick.json",
+                 "workflow.json", "workflow_quick.json"):
+        rec = json.loads((root / "benchmarks" / "baselines" / name)
+                         .read_text())
+        assert tracked_ratios(rec), name
+        assert rec["config"]["quick"] == name.endswith("_quick.json"), name

@@ -65,6 +65,51 @@ def test_deadline_checked():
     assert cl.missed_deadline
 
 
+def test_deadline_set_by_scheduler_finish_path():
+    """Regression (ISSUE 2): ``check_deadline`` fires at finish time inside
+    the scheduler itself — a tight deadline is flagged even when the
+    scheduler is driven directly, without a Datacenter in the loop."""
+    from repro.core.entities import Vm
+    from repro.core.workflow import NetworkCloudlet, Stage, StageKind
+    vm = Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=100.0)
+    tight = NetworkCloudlet([Stage(StageKind.EXEC, length=1000.0)],
+                            deadline=1.0)
+    loose = NetworkCloudlet([Stage(StageKind.EXEC, length=1000.0)],
+                            deadline=1e9)
+    vm.submit(tight, 0.0)
+    vm.submit(loose, 0.0)
+    nxt = vm.update_processing(0.0, [100.0])
+    vm.update_processing(nxt, [100.0])           # both finish at 20 s
+    assert tight.finish_time == 20.0 and loose.finish_time == 20.0
+    assert tight.missed_deadline
+    assert not loose.missed_deadline
+
+
+def test_timeshared_window_allocation_is_not_retroactive():
+    """Regression: a cloudlet finishing mid-update-sweep must not grant its
+    freed share to later cloudlets for the *same* elapsed window (the guest
+    would execute more MI than its capacity allows)."""
+    from repro.core.entities import Cloudlet, Vm
+    vm = Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=1000.0)
+    a = Cloudlet(length=1000.0)
+    b = Cloudlet(length=1000.0)
+    vm.submit(a, 0.0)
+    vm.update_processing(0.0, [1000.0])
+    # b arrives at 0.5: a has 500 MI done; both then run at 500 MIPS.
+    vm.update_processing(0.5, [1000.0])
+    vm.submit(b, 0.5)
+    vm.update_processing(0.5, [1000.0])
+    # a finishes at 1.5; in the same sweep b must still be charged the
+    # shared 500 MIPS for [0.5, 1.5], i.e. 500 MI done — not 1000.
+    vm.update_processing(1.5, [1000.0])
+    assert a.finish_time == 1.5
+    assert b.length_so_far == pytest.approx(500.0)
+    nxt = vm.update_processing(1.5, [1000.0])
+    assert nxt == pytest.approx(2.0)             # b alone at 1000 MIPS
+    vm.update_processing(nxt, [1000.0])
+    assert b.finish_time == pytest.approx(2.0)
+
+
 def test_fig7_contention_claims():
     """Paper Figure 7: co-location contention; II ≡ III at tiny payloads."""
     r1 = run_case_study(virt="V", placement="I", payload=PAYLOAD_SMALL,

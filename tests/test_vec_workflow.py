@@ -1,0 +1,181 @@
+"""Vectorized DAG-workflow engine vs the OO reference (ISSUE 2 tentpole).
+
+Exactness contract: bit-identical finish times/makespans on deterministic
+single-activation DAGs (the engines tick at the same event times with the
+same ordered f64 arithmetic); mean makespan within 2% over ≥64 seeds on
+Poisson activation streams (in practice they agree to machine epsilon since
+the arrival draws are shared and the dynamics coincide).
+"""
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario
+from repro.core.case_study import (MIPS, PAYLOAD_BIG, PAYLOAD_SMALL,
+                                   run_case_study)
+
+VIRTS = ["V", "C", "N"]
+PLACES = ["I", "II", "III"]
+PAYLOADS = [PAYLOAD_SMALL, PAYLOAD_BIG]
+
+
+# -- OO vs Eq.(2) vs vec over the full {V,C,N} × {I,II,III} × {1B,1GB} grid ----
+
+@pytest.mark.parametrize("virt", VIRTS)
+@pytest.mark.parametrize("placement", PLACES)
+@pytest.mark.parametrize("payload", PAYLOADS)
+def test_grid_cell_oo_eq2_vec_agree(virt, placement, payload):
+    """Each case-study cell: OO matches Eq.(2) analytically AND the vec
+    engine reproduces the OO makespan bit-for-bit."""
+    r_oo = run_case_study(backend="oo", virt=virt, placement=placement,
+                          payload=payload, activations=1)
+    r_vec = run_case_study(backend="vec", virt=virt, placement=placement,
+                           payload=payload, activations=1)
+    assert abs(r_oo.makespans[0] - r_oo.theoretical) < 1e-6
+    assert r_vec.makespans[0] == r_oo.makespans[0]          # bit-identical
+    assert r_vec.theoretical == r_oo.theoretical
+
+
+def test_grid_mode_single_compiled_call():
+    """The whole 18-cell Figure 5 / Table 3 grid in one vmap call."""
+    virts = [v for v in VIRTS for _ in range(6)]
+    places = [p for _ in range(3) for p in PLACES for _ in range(2)]
+    pays = PAYLOADS * 9
+    rs = run_case_study(backend="vec", virt=virts, placement=places,
+                        payload=pays, activations=1)
+    assert len(rs) == 18
+    for r in rs:
+        r_oo = run_case_study(backend="oo", virt=r.virt, placement=r.placement,
+                              payload=r.payload, activations=1)
+        assert r.makespans[0] == r_oo.makespans[0]
+
+
+def test_stochastic_stream_mean_within_2pct():
+    """Poisson activation streams over ≥64 seeds: mean makespan within 2%
+    (arrival draws are shared; placement I adds guest contention)."""
+    seeds = list(range(64))
+    rs_vec = run_case_study(backend="vec", virt="V", placement="I",
+                            payload=PAYLOAD_SMALL, activations=6, seed=seeds)
+    vec_mean = np.mean([m for r in rs_vec for m in r.makespans])
+    oo_mean = np.mean([m for s in seeds
+                       for m in run_case_study(backend="oo", virt="V",
+                                               placement="I",
+                                               payload=PAYLOAD_SMALL,
+                                               activations=6,
+                                               seed=s).makespans])
+    assert abs(vec_mean - oo_mean) / oo_mean < 0.02
+
+
+def test_pallas_next_event_path_identical():
+    r_j = run_scenario("case_study", backend="vec", virt="N",
+                       placement="III", payload=PAYLOAD_BIG, activations=3)
+    r_p = run_scenario("case_study", backend="vec", virt="N",
+                       placement="III", payload=PAYLOAD_BIG, activations=3,
+                       use_pallas=True)
+    assert r_p.makespans == r_j.makespans
+
+
+# -- generic DAGs: diamond fan-out/fan-in with multi-parent delivery ----------
+
+DIAMOND = dict(nodes=[1000.0, 2000.0, 1500.0, 1000.0],
+               edges=[(0, 1), (0, 2), (1, 3), (2, 3)],
+               guest_of=[0, 1, 2, 3], guest_mips=[1000.0] * 4,
+               guest_pes=[1.0] * 4, guest_overhead=[2.0, 3.0, 0.0, 1.0],
+               host_of_guest=[0, 0, 1, 2], rack_of_host=[0, 0, 1],
+               link_bw=1e9)
+
+
+@pytest.mark.parametrize("payload", [1.0, 1e8])
+def test_diamond_dag_multi_parent_bit_identical(payload):
+    """Fan-out then fan-in: the sink RECVs from two parents; both engines
+    must deliver both payloads before its EXEC starts — bit-identically."""
+    oo = run_scenario("workflow_batch", backend="oo", payload=payload,
+                      **DIAMOND)
+    vec = run_scenario("workflow_batch", backend="vec", payload=payload,
+                       **DIAMOND)
+    assert np.array_equal(oo["finish"], vec["finish"])
+    assert np.array_equal(oo["makespans"], vec["makespans"])
+    # the sink waits for the slower parent chain
+    assert oo["finish"][0, 3] == oo["makespans"][0, 0]
+
+
+def test_diamond_sink_gated_by_slowest_parent():
+    """Delaying one parent moves the sink's finish by the same amount."""
+    base = run_scenario("workflow_batch", backend="vec", payload=1.0,
+                        **DIAMOND)
+    slow = dict(DIAMOND, nodes=[1000.0, 2000.0, 4000.0, 1000.0])
+    out = run_scenario("workflow_batch", backend="vec", payload=1.0, **slow)
+    assert out["finish"][0, 3] > base["finish"][0, 3]
+    oo = run_scenario("workflow_batch", backend="oo", payload=1.0, **slow)
+    assert np.array_equal(oo["finish"], out["finish"])
+
+
+def test_diamond_activation_stream_matches_oo():
+    """Contended multi-activation streams (time-shared guests reused across
+    activations) stay within 2% — in practice machine epsilon."""
+    kw = dict(DIAMOND, payload=1e8, activations=5, arrival_rate=0.5,
+              seed=[0, 1, 2, 3])
+    oo = run_scenario("workflow_batch", backend="oo", **kw)
+    vec = run_scenario("workflow_batch", backend="vec", **kw)
+    assert np.allclose(oo["makespans"], vec["makespans"], rtol=1e-9)
+    rel = abs(oo["makespans"].mean() - vec["makespans"].mean()) \
+        / oo["makespans"].mean()
+    assert rel < 0.02
+
+
+def test_workflow_batch_deadline_flags_match():
+    """Deadline misses: vec computes them in closed form, OO via the
+    scheduler's finish-time check — identical flags."""
+    kw = dict(DIAMOND, payload=1e8, deadline=5.0)
+    oo = run_scenario("workflow_batch", backend="oo", **kw)
+    vec = run_scenario("workflow_batch", backend="vec", **kw)
+    assert np.array_equal(oo["missed_deadline"], vec["missed_deadline"])
+    assert oo["missed_deadline"].any()          # the sink chain is late
+    assert not oo["missed_deadline"][0, 0]      # the 1 s root is not
+
+
+def test_deadlocked_dag_reports_no_deadline_miss_on_both_engines():
+    """A cyclic (deadlocked) DAG never finishes: both engines return
+    finish=inf and — since no finish-time check ever fires — missed=False."""
+    kw = dict(nodes=[100.0, 100.0], edges=[(0, 1), (1, 0)], payload=1.0,
+              guest_of=[0, 1], guest_mips=[1000.0, 1000.0],
+              host_of_guest=[0, 1], rack_of_host=[0, 0], deadline=5.0)
+    oo = run_scenario("workflow_batch", backend="oo", **kw)
+    vec = run_scenario("workflow_batch", backend="vec", **kw)
+    assert np.all(np.isinf(oo["finish"])) and np.all(np.isinf(vec["finish"]))
+    assert not oo["missed_deadline"].any()
+    assert not vec["missed_deadline"].any()
+
+
+def test_chain_on_legacy_kernel_matches_oo():
+    """workflow_batch also runs on the ≤6G kernel with identical numbers
+    (the substrate's any-scenario-any-backend guarantee)."""
+    kw = dict(nodes=[500.0, 500.0], edges=[(0, 1)], payload=1e6,
+              guest_of=[0, 1], guest_mips=[1000.0, 1000.0],
+              host_of_guest=[0, 1], rack_of_host=[0, 1])
+    oo = run_scenario("workflow_batch", backend="oo", **kw)
+    legacy = run_scenario("workflow_batch", backend="legacy", **kw)
+    assert np.array_equal(oo["finish"], legacy["finish"])
+
+
+# -- closed-form delay lookup vs NetworkTopology.transfer_delay ---------------
+
+def test_vec_delay_matches_transfer_delay():
+    from repro.core.entities import Container, Host, Vm
+    from repro.core.network import NetworkTopology
+    from repro.core.scheduler import CloudletSchedulerTimeShared
+    from repro.core.vec_workflow import _edge_delay, _links_between
+    hosts = [Host(num_pes=4, mips=MIPS, ram=65536, bw=1e9,
+                  guest_scheduler="time") for _ in range(4)]
+    topo = NetworkTopology(link_bw=1e9, switch_latency=0.25)
+    topo.add_rack(0, hosts[:2])
+    topo.add_rack(1, hosts[2:])
+    vm = Vm(CloudletSchedulerTimeShared(), mips=MIPS, bw=1e9,
+            virt_overhead=5.0)
+    ctr = Container(CloudletSchedulerTimeShared(), mips=MIPS, bw=1e9,
+                    virt_overhead=3.0)
+    assert hosts[0].try_allocate(vm) and hosts[2].try_allocate(ctr)
+    for payload in (1.0, 1e9):
+        want = topo.transfer_delay(vm, ctr, payload)
+        links, n_sw = _links_between(0, 1, [0, 2], [0, 0, 1, 1])
+        got = _edge_delay(payload, links, n_sw, 0.25, 1e9, 5.0, 3.0)
+        assert got == want                       # same float ops, same order
