@@ -1,17 +1,26 @@
-"""Substrate benchmark: Monte-Carlo fleet sweep, OO loop vs one vmap call.
+"""Substrate benchmark: Monte-Carlo fleet sweep, OO loop vs the sweep layer.
 
 The workload is the ISSUE-1 acceptance scenario: a 256-point what-if sweep
 (MTBF × checkpoint-cadence × seeds) over a synchronous-training fleet.  The
 OO engine runs one Python event loop per scenario; the vec backend runs the
-whole batch inside a single jit-compiled ``lax.while_loop`` under ``vmap``
-(``core.vec_cluster``), in three flavours:
+batch through the sweep execution layer (``core.sweep``: divergence-bucketed
+chunks with donated buffers, sharded over local devices — bit-identical to
+the monolithic vmap dispatch), in three flavours:
 
   * ``vec``        — exact mode (f64, bit-identical to OO on deterministic
                      configs),
-  * ``vec_fast``   — f32 loop (same statistics, higher throughput),
-  * ``vec_pallas`` — exact mode with the fused Pallas next-event reduction
-                     (interpret mode on CPU — records the TPU-lowering
-                     path's overhead honestly).
+  * ``vec_fast``   — f32 loop over the same f64-drawn stochastic sample
+                     (same scenarios, cheaper arithmetic),
+  * ``vec_pallas`` — exact mode requesting the fused Pallas next-event
+                     reduction (auto-falls back to the jnp reduction on
+                     CPU, where the kernel would run in interpret mode —
+                     the recorded numbers say which path actually ran).
+
+Each flavour records ``wall_s`` (best-of-3 warm) next to ``compile_s``,
+plus the sweep schedule that produced it (``devices``, ``chunk_size``,
+``active_lane_fraction``); the top-level ``sweep`` section summarizes the
+vec flavour's schedule, and ``check_regression.py`` gates the speedups
+like-for-like by device count.
 
 Writes ``BENCH_substrate.json`` at the repo root so the perf trajectory of
 the substrate is recorded PR over PR; also emits the usual CSV rows.
@@ -75,19 +84,32 @@ def _oo_sweep(cfg, steps, mt, ck, seeds):
     return wall, events, np.asarray(goodputs)
 
 
-def _vec_sweep(cfg, steps, mt, ck, seeds, **kw):
+def _vec_sweeps(cfg, steps, mt, ck, seeds, flavour_kws):
+    """Time all vec flavours with interleaved best-of-3 rounds: the gated
+    figures are *ratios* (vs OO and between flavours), so runner load must
+    skew every flavour equally."""
     from repro.core.vec_cluster import simulate_fleet_batch
-    run = lambda s: simulate_fleet_batch(COST, cfg, steps, seeds=s,
-                                         mtbf_hours=mt, ckpt_every=ck, **kw)
-    t0 = time.perf_counter()
-    run(seeds + 1)                         # compile + one execution
-    cold = time.perf_counter() - t0
-    t0 = time.perf_counter()
-    out = run(seeds)
-    wall = time.perf_counter() - t0
-    # The cold call compiles AND executes once; report compilation alone.
-    compile_s = max(cold - wall, 0.0)
-    return wall, compile_s, int(out["iterations"].sum()), out["goodput"]
+    run = lambda s, kw: simulate_fleet_batch(COST, cfg, steps, seeds=s,
+                                             mtbf_hours=mt, ckpt_every=ck,
+                                             with_report=True, **kw)
+    colds, walls, outs = {}, {}, {}
+    for name, kw in flavour_kws.items():   # compile + one execution each
+        t0 = time.perf_counter()
+        run(seeds + 1, kw)
+        colds[name] = time.perf_counter() - t0
+        walls[name] = float("inf")
+    for _ in range(3):
+        for name, kw in flavour_kws.items():
+            t0 = time.perf_counter()
+            outs[name] = run(seeds, kw)
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    results = {}
+    for name, (out, report) in outs.items():
+        # The cold call compiles AND executes once; report compile alone.
+        results[name] = (walls[name], max(colds[name] - walls[name], 0.0),
+                         int(out["iterations"].sum()), out["goodput"],
+                         report)
+    return results
 
 
 def run(quick: bool = False) -> dict:
@@ -98,17 +120,26 @@ def run(quick: bool = False) -> dict:
     mt, ck, seeds = _sweep_axes(b)
 
     oo_wall, oo_events, oo_good = _oo_sweep(cfg, steps, mt, ck, seeds)
-    flavours = {}
-    for name, kw in (("vec", {}),
-                     ("vec_fast", dict(precision="fast")),
-                     ("vec_pallas", dict(use_pallas=True))):
-        wall, compile_s, iters, good = _vec_sweep(cfg, steps, mt, ck,
-                                                  seeds, **kw)
+    from repro.kernels.ops import pallas_native
+    flavours, vec_report = {}, None
+    timed = _vec_sweeps(cfg, steps, mt, ck, seeds,
+                        {"vec": {},
+                         "vec_fast": dict(precision="fast"),
+                         "vec_pallas": dict(use_pallas=True)})
+    for name, (wall, compile_s, iters, good, report) in timed.items():
         flavours[name] = dict(
             wall_s=round(wall, 4), compile_s=round(compile_s, 4),
+            devices=report.devices, chunk_size=report.chunk_size,
+            active_lane_fraction=round(report.active_lane_fraction, 4),
             events=iters, events_per_s=round(iters / wall, 1),
             goodput_mean=round(float(good.mean()), 5),
             speedup_vs_oo=round(oo_wall / wall, 2))
+        if name == "vec":
+            vec_report = report
+        if name == "vec_pallas":
+            # On CPU the opt-in auto-falls back to the jnp reduction
+            # (interpret-mode Pallas once cost 3.5×); record which path ran.
+            flavours[name]["pallas_native"] = pallas_native()
         emit(f"batch_sweep/{name}", wall / b * 1e6,
              f"wall_s={wall:.2f};compile_s={compile_s:.2f};"
              f"speedup_vs_oo={oo_wall / wall:.1f}x;"
@@ -125,6 +156,14 @@ def run(quick: bool = False) -> dict:
                 events_per_s=round(oo_events / oo_wall, 1),
                 goodput_mean=round(float(oo_good.mean()), 5)),
         **flavours,
+        sweep=dict(
+            devices=vec_report.devices, chunk_size=vec_report.chunk_size,
+            n_chunks=vec_report.n_chunks, bucketed=vec_report.bucketed,
+            donated=vec_report.donated,
+            active_lane_fraction=round(
+                vec_report.active_lane_fraction, 4),
+            active_lane_fraction_monolithic=round(
+                vec_report.active_lane_fraction_monolithic, 4)),
         validation=dict(goodput_rel_diff_vec_vs_oo=round(float(rel), 5)))
     emit("batch_sweep/oo_loop", oo_wall / b * 1e6,
          f"wall_s={oo_wall:.2f};events_per_s={oo_events / oo_wall:.0f};"

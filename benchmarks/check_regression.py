@@ -6,9 +6,17 @@ committed baseline (``benchmarks/baselines/*.json``) and exits non-zero
 when any tracked ratio drops more than ``--threshold`` (default 25%)
 below the baseline.
 
-Tracked keys: every top-level section carrying a ``speedup_vs_oo`` entry
-(``vec``, ``vec_fast``, ``vec_pallas``, ...) — so new flavours and new
-benchmark records are gated automatically once a baseline is committed.
+Tracked keys: every top-level section carrying a ``speedup_vs_oo`` or
+``speedup_vs_monolithic`` entry (``vec``, ``vec_fast``, ``vec_pallas``,
+``sweep``, ...) — so new flavours and new benchmark records are gated
+automatically once a baseline is committed.
+
+Speedups are only comparable like-for-like by device count: a section
+recording ``devices`` is gated only when it matches the baseline's
+``devices`` (a sweep fanned out over 8 accelerators against a 1-device
+baseline would otherwise hide a real per-device regression — and the other
+direction would fail spuriously).  Mismatches are reported as notes and
+skipped.
 
 Usage (pairs of current/baseline paths):
 
@@ -30,16 +38,28 @@ import pathlib
 import sys
 from typing import Dict, List, Tuple
 
-TRACKED_KEY = "speedup_vs_oo"
+TRACKED_KEYS = ("speedup_vs_oo", "speedup_vs_monolithic")
+
+
+def tracked_sections(record: Dict) -> Dict[str, Dict]:
+    """flavour name -> section, for every section carrying a tracked key."""
+    return {name: section for name, section in record.items()
+            if isinstance(section, dict)
+            and any(k in section for k in TRACKED_KEYS)}
+
+
+def tracked_ratio(section: Dict) -> Tuple[str, float]:
+    """(tracked key, ratio) for one flavour section."""
+    for key in TRACKED_KEYS:
+        if key in section:
+            return key, float(section[key])
+    raise KeyError(f"no tracked key in section: {sorted(section)}")
 
 
 def tracked_ratios(record: Dict) -> Dict[str, float]:
     """flavour name -> tracked speedup ratio, for every flavour section."""
-    out = {}
-    for name, section in record.items():
-        if isinstance(section, dict) and TRACKED_KEY in section:
-            out[name] = float(section[TRACKED_KEY])
-    return out
+    return {name: tracked_ratio(section)[1]
+            for name, section in tracked_sections(record).items()}
 
 
 def check_pair(current: Dict, baseline: Dict, threshold: float
@@ -52,20 +72,35 @@ def check_pair(current: Dict, baseline: Dict, threshold: float
         notes.append(f"{bench}: quick-mode mismatch vs baseline "
                      f"(current={current.get('config', {}).get('quick')}, "
                      f"baseline={baseline.get('config', {}).get('quick')})")
-    cur, base = tracked_ratios(current), tracked_ratios(baseline)
-    for name, base_ratio in sorted(base.items()):
-        if name not in cur:
-            failures.append(f"{bench}/{name}: tracked ratio missing from "
-                            f"current record (baseline {base_ratio:.2f}x)")
+    cur, base = tracked_sections(current), tracked_sections(baseline)
+    for name, base_sec in sorted(base.items()):
+        key, base_ratio = tracked_ratio(base_sec)
+        # The baseline's *specific* key must be present: silently comparing
+        # e.g. a vs-monolithic ratio against a vs-OO floor gates nothing.
+        if name not in cur or key not in cur[name]:
+            failures.append(f"{bench}/{name}: tracked ratio {key} missing "
+                            f"from current record (baseline "
+                            f"{base_ratio:.2f}x)")
+            continue
+        cur_ratio = float(cur[name][key])
+        # Like-for-like by device count: a sweep sharded over N devices is
+        # not comparable to a 1-device baseline (either direction).
+        cur_dev, base_dev = cur[name].get("devices"), base_sec.get("devices")
+        if cur_dev is not None and base_dev is not None \
+                and cur_dev != base_dev:
+            notes.append(
+                f"{bench}/{name}: device-count mismatch (current "
+                f"{cur_dev} vs baseline {base_dev}) — not gated")
             continue
         floor = base_ratio * (1.0 - threshold)
-        verdict = "FAIL" if cur[name] < floor else "ok"
-        msg = (f"{bench}/{name}: {TRACKED_KEY} {cur[name]:.2f}x vs baseline "
+        verdict = "FAIL" if cur_ratio < floor else "ok"
+        msg = (f"{bench}/{name}: {key} {cur_ratio:.2f}x vs baseline "
                f"{base_ratio:.2f}x (floor {floor:.2f}x) {verdict}")
         (failures if verdict == "FAIL" else notes).append(msg)
     for name in sorted(set(cur) - set(base)):
+        key, ratio = tracked_ratio(cur[name])
         notes.append(f"{bench}/{name}: no baseline yet "
-                     f"({cur[name]:.2f}x recorded, not gated)")
+                     f"({ratio:.2f}x recorded, not gated)")
     return failures, notes
 
 

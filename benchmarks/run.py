@@ -10,8 +10,9 @@ Benchmarks (paper artifact → module):
   §4.4      → engine_micro       (event-queue data structures)
   beyond    → vec_speedup        (vectorized Algorithm 1 vs OO)
   §6→ML     → cluster_sim        (fleet goodput vs MTBF/ckpt/stragglers)
-  beyond    → batch_sweep        (vmap fleet sweep vs OO loop → BENCH_substrate.json)
+  beyond    → batch_sweep        (sweep-layer fleet sweep vs OO loop → BENCH_substrate.json)
   beyond    → workflow_sweep     (vmap case-study DAG grid vs OO loop → BENCH_workflow.json)
+  beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap → BENCH_sweep.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
 ``check_regression.py`` (not a suite) gates the recorded speedups in CI.
@@ -31,7 +32,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, consolidation,
-                   engine_micro, vec_speedup, workflow_sweep)
+                   engine_micro, sweep_runner, vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -40,6 +41,7 @@ def main() -> None:
         "cluster_sim": cluster_sim.run,
         "batch_sweep": batch_sweep.run,
         "workflow_sweep": workflow_sweep.run,
+        "sweep_runner": sweep_runner.run,
     }
     try:
         from . import dryrun_report

@@ -1,0 +1,124 @@
+"""Sweep-runner benchmark: the sweep layer's schedule vs a monolithic vmap.
+
+The sweep execution layer (``core.sweep``) exists to beat the one-dispatch
+``jit(vmap(...))`` baseline on divergent grids: a vmapped ``while_loop``
+runs every lane to the slowest lane's iteration count, so a grid whose
+cells differ in predicted length wastes (1 − active-lane fraction) of its
+lane-iterations.  This cell measures exactly that delta on the fleet
+sweep's MTBF × ckpt-cadence grid — the same engine, same cells, same bits
+out, scheduled two ways:
+
+  * ``monolithic`` — one chunk, one device dispatch (PR-2-era behaviour),
+  * ``sweep``      — divergence-bucketed chunks with donated buffers over
+                     all local devices (the default policy).
+
+``speedup_vs_monolithic`` is the tracked figure of merit
+(``check_regression.py`` gates it against ``benchmarks/baselines/``); the
+record also keeps both schedules' active-lane fractions so a policy change
+that wins wall time by luck while losing lane occupancy is visible.
+
+Writes ``BENCH_sweep.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core.cluster import FleetConfig, StepCost
+
+from ._util import emit
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_sweep.json"
+
+COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                overlap_collective=0.6)
+
+
+def _grid(b: int):
+    """MTBF × ckpt-cadence × seed grid — maximally divergent: low-MTBF ×
+    long-cadence cells redo ~the whole run on a failure, high-MTBF cells
+    run exactly ``total_steps`` iterations."""
+    mtbfs = np.array([2000.0, 500.0, 100.0, 50.0])
+    ckpts = np.array([50, 100, 200, 1000])
+    reps = max(b // (len(mtbfs) * len(ckpts)), 1)
+    mt = np.repeat(mtbfs, len(ckpts) * reps)[:b]
+    ck = np.tile(np.repeat(ckpts, reps), len(mtbfs))[:b]
+    seeds = np.tile(np.arange(reps), b)[:b]
+    return mt, ck, seeds
+
+
+def _timed_pair(cfg, steps, mt, ck, seeds):
+    """Warm both schedules, then time them in interleaved best-of-3 rounds
+    so runner load skews both sides equally (the gated figure of merit is
+    their *ratio*)."""
+    from repro.core.vec_cluster import simulate_fleet_batch
+    b = len(seeds)
+    run = lambda s, **kw: simulate_fleet_batch(
+        COST, cfg, steps, seeds=s, mtbf_hours=mt, ckpt_every=ck,
+        with_report=True, **kw)
+    run(seeds + 1, chunk_size=b)                # compile both schedules
+    run(seeds + 1)
+    walls = {"monolithic": float("inf"), "sweep": float("inf")}
+    outs = {}
+    for _ in range(3):
+        for name, kw in (("monolithic", dict(chunk_size=b)), ("sweep", {})):
+            t0 = time.perf_counter()
+            outs[name] = run(seeds, **kw)
+            walls[name] = min(walls[name], time.perf_counter() - t0)
+    return walls, outs
+
+
+def run(quick: bool = False) -> dict:
+    # Quick mode keeps the full cell count and trims steps: at tiny grids
+    # the delta between schedules drowns in per-dispatch overhead and the
+    # CI gate would be gating noise.
+    b = 256
+    steps = 400 if quick else 1000
+    cfg = FleetConfig(n_nodes=32, n_spares=2, straggler_sigma=0.08,
+                      repair_hours=2.0, degrade_mtbf_hours=1e9,
+                      straggler_evict_factor=1e9)
+    mt, ck, seeds = _grid(b)
+
+    walls, outs = _timed_pair(cfg, steps, mt, ck, seeds)
+    mono_wall, sweep_wall = walls["monolithic"], walls["sweep"]
+    (mono_out, mono_rep), (sweep_out, sweep_rep) = (outs["monolithic"],
+                                                    outs["sweep"])
+    # The schedule must never change results: same engine, same bits.
+    for k in mono_out:
+        assert np.array_equal(mono_out[k], sweep_out[k]), \
+            f"sweep schedule changed {k!r} vs monolithic"
+
+    record = dict(
+        benchmark="sweep_runner",
+        config=dict(scenarios=b, total_steps=steps, n_nodes=cfg.n_nodes,
+                    n_spares=cfg.n_spares, quick=quick,
+                    sweep="mtbf_hours × ckpt_every × seed"),
+        monolithic=dict(
+            wall_s=round(mono_wall, 4), devices=mono_rep.devices,
+            chunk_size=mono_rep.chunk_size,
+            active_lane_fraction=round(mono_rep.active_lane_fraction, 4)),
+        sweep=dict(
+            wall_s=round(sweep_wall, 4), devices=sweep_rep.devices,
+            chunk_size=sweep_rep.chunk_size, n_chunks=sweep_rep.n_chunks,
+            bucketed=sweep_rep.bucketed, donated=sweep_rep.donated,
+            active_lane_fraction=round(sweep_rep.active_lane_fraction, 4),
+            speedup_vs_monolithic=round(mono_wall / sweep_wall, 2)),
+    )
+    emit("sweep_runner/monolithic", mono_wall / b * 1e6,
+         f"wall_s={mono_wall:.3f};"
+         f"active_frac={mono_rep.active_lane_fraction:.3f}")
+    emit("sweep_runner/sweep", sweep_wall / b * 1e6,
+         f"wall_s={sweep_wall:.3f};chunk={sweep_rep.chunk_size};"
+         f"devices={sweep_rep.devices};"
+         f"active_frac={sweep_rep.active_lane_fraction:.3f};"
+         f"speedup_vs_monolithic={mono_wall / sweep_wall:.2f}x")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("sweep_runner/record", 0.0, f"written={OUT_PATH.name}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -9,9 +9,14 @@ cell.  The OO engine runs one Python event loop per cell; the vec backend
 
   * ``vec``        — exact mode (f64; bit-identical to OO on deterministic
                      single-activation chains, ε-close on streams),
-  * ``vec_pallas`` — exact mode with the fused Pallas next-event reduction
-                     (interpret mode on CPU — records the TPU-lowering
-                     path's overhead honestly).
+  * ``vec_pallas`` — exact mode requesting the fused Pallas next-event
+                     reduction (auto-falls back to the jnp reduction on
+                     CPU, where the kernel would run in interpret mode;
+                     the ``pallas_native`` field records which path ran).
+
+Both flavours run through the sweep execution layer (``core.sweep``) and
+record their schedule (``devices``, ``chunk_size``, active-lane fraction)
+next to ``wall_s``/``compile_s``.
 
 Writes ``BENCH_workflow.json`` at the repo root so the vectorized-workflow
 perf trajectory is recorded PR over PR; also emits the usual CSV rows.
@@ -67,17 +72,18 @@ def _vec_sweep(grid, activations, **kw):
     virts, places, pays, seeds = grid
     run = lambda s: run_scenario("case_study", backend="vec", virt=virts,
                                  placement=places, payload=pays, seed=s,
-                                 activations=activations, **kw)
+                                 activations=activations, with_report=True,
+                                 **kw)
     t0 = time.perf_counter()
     run([s + 1 for s in seeds])            # compile + one execution
     cold = time.perf_counter() - t0
-    wall, rs = float("inf"), None
+    wall, rs, report = float("inf"), None, None
     for _ in range(3):                     # best-of-3: the warm wall is
         t0 = time.perf_counter()           # milliseconds — keep the CI
-        rs = run(seeds)                    # regression gate noise-immune
+        rs, report = run(seeds)            # regression gate noise-immune
         wall = min(wall, time.perf_counter() - t0)
     compile_s = max(cold - wall, 0.0)      # cold call compiles AND executes
-    return wall, compile_s, np.asarray([r.makespans for r in rs])
+    return wall, compile_s, np.asarray([r.makespans for r in rs]), report
 
 
 def run(quick: bool = False) -> dict:
@@ -87,15 +93,22 @@ def run(quick: bool = False) -> dict:
     b = len(grid[0])
 
     oo_wall, oo_ms = _oo_sweep(grid, activations)
-    flavours = {}
+    from repro.kernels.ops import pallas_native
+    flavours, vec_report = {}, None
     for name, kw in (("vec", {}), ("vec_pallas", dict(use_pallas=True))):
-        wall, compile_s, ms = _vec_sweep(grid, activations, **kw)
+        wall, compile_s, ms, report = _vec_sweep(grid, activations, **kw)
         rel = float(abs(ms.mean() - oo_ms.mean()) / oo_ms.mean())
         flavours[name] = dict(
             wall_s=round(wall, 4), compile_s=round(compile_s, 4),
+            devices=report.devices, chunk_size=report.chunk_size,
+            active_lane_fraction=round(report.active_lane_fraction, 4),
             makespan_mean=round(float(ms.mean()), 5),
             makespan_rel_diff_vs_oo=round(rel, 7),
             speedup_vs_oo=round(oo_wall / wall, 2))
+        if name == "vec":
+            vec_report = report
+        if name == "vec_pallas":
+            flavours[name]["pallas_native"] = pallas_native()
         emit(f"workflow_sweep/{name}", wall / b * 1e6,
              f"wall_s={wall:.2f};compile_s={compile_s:.2f};"
              f"speedup_vs_oo={oo_wall / wall:.1f}x;"
@@ -108,7 +121,15 @@ def run(quick: bool = False) -> dict:
                     sweep="virt × placement × payload × seed"),
         oo=dict(wall_s=round(oo_wall, 4),
                 makespan_mean=round(float(oo_ms.mean()), 5)),
-        **flavours)
+        **flavours,
+        sweep=dict(
+            devices=vec_report.devices, chunk_size=vec_report.chunk_size,
+            n_chunks=vec_report.n_chunks, bucketed=vec_report.bucketed,
+            donated=vec_report.donated,
+            active_lane_fraction=round(
+                vec_report.active_lane_fraction, 4),
+            active_lane_fraction_monolithic=round(
+                vec_report.active_lane_fraction_monolithic, 4)))
     emit("workflow_sweep/oo_loop", oo_wall / b * 1e6,
          f"wall_s={oo_wall:.2f};makespan={oo_ms.mean():.4f}")
     OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")

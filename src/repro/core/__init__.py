@@ -5,7 +5,9 @@
 # vectorized engines and the ML-fleet cluster layer — all selected through
 # the standardized SimBackend substrate (see ARCHITECTURE.md).
 from .backend import (BackendError, ScenarioUnsupported, SimBackend,
-                      available_backends, get_backend, run_scenario)
+                      available_backends, get_backend, run_scenario,
+                      run_sweep)
+from .sweep import SweepReport
 from .engine import SimEntity, Simulation
 from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
 from .entities import (Cloudlet, CloudletStatus, Container, CoreAttributes,

@@ -21,8 +21,8 @@ Two registries:
     ``6g``/``7g`` aliases everywhere a backend name is taken);
   * **scenarios** — scenario kinds (``"consolidation"``, ``"fleet"``,
     ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``,
-    ``"workflow_batch"``) registered by their home modules via the
-    :func:`scenario` decorator, keyed per backend.
+    ``"workflow_batch"``, ``"consolidation_batch"``) registered by their
+    home modules via the :func:`scenario` decorator, keyed per backend.
 
 The single entry point is ``run_scenario(kind, backend=..., **params)`` (or
 ``SimBackend.run_scenario``): modules and benchmarks select engines through
@@ -31,6 +31,15 @@ a scenario raises :class:`ScenarioUnsupported` (e.g. ``"fleet"`` has no
 ``legacy`` batched path beyond the loop fallback; every paper scenario —
 including the §6 network case study since ``vec_workflow`` — now has a
 vectorized implementation).
+
+Batched scenario kinds execute through the **sweep layer**
+(:mod:`repro.core.sweep`): chunked dispatch with donated buffers, device
+sharding, and divergence bucketing, all bit-identical to a monolithic run.
+:func:`run_sweep` is the sweep-aware entry point — identical to
+:func:`run_scenario` but returning ``(result, SweepReport)`` so callers see
+how the sweep was scheduled (devices, chunk size, active-lane fraction);
+the same sweep controls (``chunk_size=``, ``devices=``) pass through
+``run_scenario`` as ordinary scenario params.
 
 Scenario-provider modules are imported lazily on first dispatch so that
 importing :mod:`repro.core` stays light and free of cycles.
@@ -180,3 +189,26 @@ def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
 def run_scenario(kind: str, *, backend: str = "oo", **params: Any) -> Any:
     """Module-level convenience: ``get_backend(backend).run_scenario(...)``."""
     return get_backend(backend).run_scenario(kind, **params)
+
+
+def run_sweep(kind: str, *, backend: str = "vec", **params: Any):
+    """Sweep-aware batch entry point: run a *batched* scenario kind and
+    return ``(result, SweepReport)``.
+
+    Equivalent to ``run_scenario(kind, backend=..., with_report=True,
+    **params)`` — batched handlers (``fleet_batch``, ``workflow_batch``,
+    ``cloudlet_batch`` cells, ``case_study`` grids, ``consolidation_batch``)
+    accept the sweep controls ``chunk_size=`` and ``devices=`` and route
+    execution through :mod:`repro.core.sweep`.  A kind/backend pair with no
+    sweep path raises (``TypeError`` from the handler's signature, or
+    :class:`ScenarioUnsupported` if a permissive handler swallowed
+    ``with_report``) — never a bare result the caller would mis-unpack.
+    """
+    from .sweep import SweepReport
+    res = get_backend(backend).run_scenario(kind, with_report=True, **params)
+    if not (isinstance(res, tuple) and len(res) == 2
+            and isinstance(res[1], SweepReport)):
+        raise ScenarioUnsupported(
+            f"scenario {kind!r} has no sweep-aware path on backend "
+            f"{backend!r} (handler returned no SweepReport)")
+    return res

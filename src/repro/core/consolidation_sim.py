@@ -165,6 +165,42 @@ def _consolidation_scenario(backend: SimBackend, *, algo: str = "ThrMu",
         final_active_hosts=sum(1 for h in hosts if h.active))
 
 
+@scenario("consolidation_batch", backends=("legacy", "oo", "vec"))
+def _consolidation_batch(backend: SimBackend, *, algos=("ThrMu",),
+                         seeds=(1,), n_hosts: int = 50, n_vms: int = 100,
+                         n_samples: int = 288, interval: float = 300.0,
+                         chunk_size: Optional[int] = None,
+                         with_report: bool = False):
+    """Batched consolidation sweep (``algos`` × ``seeds`` broadcast) through
+    the sweep layer's host path.
+
+    The consolidation drivers are Python event loops (the vec flavour
+    vectorizes the per-step utilization sweep, not the loop), so cells run
+    on :func:`repro.core.sweep.run_host_sweep` — same ordering/report
+    contract as the compiled engines, executed cell-at-a-time.  Cells are
+    bucketed by predicted cost (∝ hosts × VMs × samples, uniform here
+    unless the caller broadcasts differing sizes).  Returns a list of
+    :class:`ConsolidationResult` in cell order; ``with_report=True``
+    returns ``(results, SweepReport)``.
+    """
+    from .sweep import run_host_sweep
+    algos = np.atleast_1d(np.asarray(algos, dtype=object))
+    seeds = np.atleast_1d(np.asarray(seeds))
+    b = int(np.broadcast_shapes(algos.shape, seeds.shape)[0])
+    algos = np.broadcast_to(algos, (b,))
+    seeds = np.broadcast_to(seeds, (b,))
+
+    def run_cell(i: int) -> ConsolidationResult:
+        return _consolidation_scenario(
+            backend, algo=str(algos[i]), n_hosts=n_hosts, n_vms=n_vms,
+            seed=int(seeds[i]), n_samples=n_samples, interval=interval)
+
+    results, report = run_host_sweep(
+        run_cell, b, chunk_size=chunk_size,
+        predicted_cost=np.full(b, float(n_hosts) * n_vms * n_samples))
+    return (results, report) if with_report else results
+
+
 def run_consolidation(engine: str = "7g", algo: str = "ThrMu", *,
                       n_hosts: int = 50, n_vms: int = 100, seed: int = 1,
                       n_samples: int = 288, interval: float = 300.0

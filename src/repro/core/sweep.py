@@ -1,0 +1,286 @@
+"""Sweep execution layer — chunked, sharded, divergence-bucketed batch runs.
+
+CloudSim 7G's headline results are run-time and memory wins from a
+re-engineered core; our counterpart hot path is the vec substrate's batched
+sweeps.  Before this layer each vec engine dispatched its whole scenario
+grid as **one** ``jit(vmap(...))`` call on **one** device: memory scaled
+with the full grid, and — because a ``vmap``-ed ``lax.while_loop`` iterates
+until the *slowest* lane's predicate clears — every lane paid for the
+longest lane (measured active-lane fraction ~0.54 on the committed fleet
+sweep).  This module is the one place all batched entry points now route
+through (``vec_cluster.simulate_fleet_batch``, ``vec_workflow
+.simulate_specs``, ``vec_scheduler.simulate_cells``, and the consolidation
+driver's host-looped cell batches):
+
+  * **chunked execution** — the cell axis is split into fixed-size chunks
+    dispatched sequentially, so device memory is bounded by ``chunk_size``
+    lanes and sweeps larger than device memory stream through.  Lanes are
+    independent under ``vmap``, so chunked results are **bit-identical** to
+    the monolithic call (asserted by tests); the last chunk is padded by
+    repeating its final cell so every dispatch reuses one compiled shape.
+  * **divergence bucketing** — with a ``predicted_cost`` per cell (steps,
+    expected failure-rollback work, DAG size), cells are sorted by
+    predicted length before chunking, so short lanes ride with short lanes
+    instead of idling behind the grid's longest cell.  The permutation is
+    undone on output; per-lane results are unchanged — only co-residency
+    changes.
+  * **device sharding** — each chunk's lanes are split across
+    ``jax.devices()`` via ``jax.pmap`` (cells padded to a device multiple),
+    with a clean single-device ``jit`` fallback; results are bit-identical
+    either way.
+  * **buffer donation** — chunk inputs are donated (``donate_argnums``) so
+    XLA may reuse their buffers for the chunk's outputs/temporaries instead
+    of holding both live across the stream of chunks.
+  * **divergence accounting** — when the engine reports per-lane loop
+    ``iterations``, the :class:`SweepReport` records the active-lane
+    fraction actually executed (Σ lane iters / Σ chunk-max × lanes) next to
+    the fraction a monolithic dispatch would have achieved, plus the
+    device count and chunk size — benchmarks persist these in the BENCH
+    JSONs and ``check_regression.py`` compares like-for-like device counts.
+
+The exactness contract is strict: chunking, bucketing, and sharding are
+*schedules* over independent lanes — none of them may change a single
+output bit relative to the monolithic call (see ARCHITECTURE.md, "Sweep
+execution layer").
+"""
+from __future__ import annotations
+
+import functools
+import re
+import warnings
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import numpy as np
+
+# jax is imported lazily inside the executors: ``repro.core`` re-exports
+# :class:`SweepReport`, and importing the core package must stay light
+# (the substrate contract — vec engines themselves load lazily too).
+
+MIN_CHUNK = 16          # smaller dispatches are dominated by fixed overhead
+_DIVERGENCE_SPREAD = 1.05   # predicted max/min above this ⇒ bucketing pays
+
+# XLA warns when a donated input cannot be aliased into an output (common:
+# i32 params vs f64 outputs).  Donation is best-effort by design; silence
+# just that warning, not the user's.
+_DONATION_MSG = re.compile(r"[Ss]ome donated buffers were not usable")
+
+
+@dataclass(frozen=True)
+class SweepReport:
+    """How one sweep was executed, and how well its lanes stayed busy."""
+    n_cells: int
+    chunk_size: int
+    n_chunks: int
+    devices: int
+    bucketed: bool
+    donated: bool
+    # Σ lane iterations / Σ_chunks (chunk max iterations × chunk lanes) —
+    # the fraction of executed vmap-lane-iterations doing real work under
+    # the schedule actually run (1.0 = no lane ever idled).
+    active_lane_fraction: Optional[float] = None
+    # Same statistic had the whole grid run as one dispatch — the
+    # divergence a monolithic vmap(while_loop) suffers on this grid.
+    active_lane_fraction_monolithic: Optional[float] = None
+    lane_iterations: Optional[np.ndarray] = None
+
+
+def resolve_devices(devices: Any = None) -> Sequence[Any]:
+    """``None``/"auto" → all local devices; int n → first n; list → as-is."""
+    import jax
+    if devices is None or devices == "auto":
+        return jax.devices()
+    if isinstance(devices, int):
+        avail = jax.devices()
+        if not 1 <= devices <= len(avail):
+            raise ValueError(
+                f"devices={devices} requested, {len(avail)} available")
+        return avail[:devices]
+    return list(devices)
+
+
+def auto_chunk_size(n_cells: int, predicted_cost, n_devices: int) -> int:
+    """Default chunking policy.
+
+    Chunking only pays when lanes diverge (a vmapped ``while_loop`` runs
+    every lane to the chunk's max iteration count): with no cost spread
+    predicted — or too few cells to form several chunks — run monolithic.
+    Otherwise target ~8 chunks, floored at ``MIN_CHUNK`` lanes per device.
+    """
+    if predicted_cost is None or n_cells < 2 * MIN_CHUNK * n_devices:
+        return n_cells
+    pred = np.asarray(predicted_cost, np.float64)
+    lo = float(pred.min())
+    if lo <= 0 or float(pred.max()) / lo <= _DIVERGENCE_SPREAD:
+        return n_cells
+    chunk = max(MIN_CHUNK * n_devices, n_cells // 8)
+    return int(-(-chunk // n_devices) * n_devices)       # device multiple
+
+
+@functools.lru_cache(maxsize=64)
+def _executor(fn: Callable, devices: tuple, donate: bool) -> Callable:
+    """Compiled dispatcher for one (engine fn, device placement) pair.
+
+    ``fn`` takes a single params pytree with a leading lane axis; the
+    engines hand us a per-statics-cached callable so this cache keys on a
+    stable object.  Multi-device wraps in ``pmap`` over exactly the given
+    devices (an explicit ``devices=`` list is a *placement*, not just a
+    count); both paths donate the chunk's input buffers when asked.
+    """
+    import jax
+    donate_argnums = (0,) if donate else ()
+    if len(devices) > 1:
+        return jax.pmap(fn, devices=list(devices),
+                        donate_argnums=donate_argnums)
+    jitted = jax.jit(fn, donate_argnums=donate_argnums)
+    if devices[0] == jax.devices()[0]:
+        return jitted                       # default placement: nothing to do
+
+    def on_device(params):
+        return jitted(jax.device_put(params, devices[0]))
+    return on_device
+
+
+def _take(params, idx: np.ndarray):
+    """Gather cells ``idx`` along every leaf's leading axis (host side)."""
+    import jax
+    return jax.tree_util.tree_map(
+        lambda leaf: np.take(np.asarray(leaf), idx, axis=0), params)
+
+
+def _dispatch(executor, chunk_params, n_devices: int):
+    """Run one chunk, sharding its lanes over devices when there are >1."""
+    import jax
+    if n_devices > 1:
+        def fold(leaf):
+            per = leaf.shape[0] // n_devices
+            return leaf.reshape((n_devices, per) + leaf.shape[1:])
+        out = executor(jax.tree_util.tree_map(fold, chunk_params))
+        return {k: np.asarray(v).reshape((-1,) + np.asarray(v).shape[2:])
+                for k, v in out.items()}
+    return {k: np.asarray(v) for k, v in executor(chunk_params).items()}
+
+
+def execute_sweep(fn: Callable[[Any], Dict[str, Any]], params: Any, *,
+                  chunk_size: Optional[int] = None,
+                  devices: Any = None,
+                  predicted_cost=None,
+                  donate: bool = True,
+                  iterations_key: str = "iterations",
+                  ):
+    """Execute a vmapped simulation over its cell axis in scheduled chunks.
+
+    (The engine-facing executor; the scenario-level entry point with the
+    same report contract is :func:`repro.core.backend.run_sweep`.)
+
+    ``fn(params) -> dict of arrays`` must be a vmapped engine whose every
+    input leaf and output array carries the cell axis first, with lanes
+    fully independent (the vec engines' contract).  Returns
+    ``(outputs, SweepReport)`` where ``outputs`` concatenates all chunks
+    back into original cell order — bit-identical to ``fn(params)`` run
+    monolithically.
+
+    ``chunk_size=None`` applies :func:`auto_chunk_size` (monolithic unless
+    ``predicted_cost`` shows divergence); ``devices=None`` uses all local
+    devices (an explicit list is honored as the placement).
+    ``predicted_cost`` (one float per cell) buckets cells by predicted
+    length so short lanes don't idle behind long ones.
+    """
+    import jax
+    leaves = jax.tree_util.tree_leaves(params)
+    if not leaves:
+        raise ValueError("execute_sweep: params pytree has no array leaves")
+    n_cells = int(np.shape(leaves[0])[0])
+    devs = tuple(resolve_devices(devices))
+    if n_cells == 0:
+        # Degenerate grid: one empty dispatch preserves the monolithic
+        # contract (empty per-key outputs) instead of crashing.
+        out = _dispatch(_executor(fn, devs[:1], donate), params, 1)
+        return out, SweepReport(
+            n_cells=0, chunk_size=0, n_chunks=0, devices=1, bucketed=False,
+            donated=donate)
+    devs = devs[:n_cells] if len(devs) > n_cells else devs
+    n_dev = len(devs)
+    if chunk_size is None:
+        chunk_size = auto_chunk_size(n_cells, predicted_cost, n_dev)
+    chunk_size = max(1, min(int(chunk_size), n_cells))
+    # Shards must split evenly: round the chunk up to a device multiple.
+    chunk_size = -(-chunk_size // n_dev) * n_dev
+
+    bucketed = predicted_cost is not None and chunk_size < n_cells
+    if bucketed:
+        pred = np.asarray(predicted_cost, np.float64)
+        if pred.shape != (n_cells,):
+            raise ValueError(
+                f"predicted_cost shape {pred.shape} != ({n_cells},)")
+        order = np.argsort(-pred, kind="stable")     # longest lanes together
+    else:
+        order = np.arange(n_cells)
+
+    executor = _executor(fn, devs, donate)
+    chunks, chunk_meta = [], []
+    with warnings.catch_warnings():
+        if donate:
+            warnings.filterwarnings("ignore", message=_DONATION_MSG.pattern)
+        for lo in range(0, n_cells, chunk_size):
+            idx = order[lo:lo + chunk_size]
+            real = len(idx)
+            if real < chunk_size:                    # pad: repeat final cell
+                idx = np.concatenate(
+                    [idx, np.full(chunk_size - real, idx[-1], idx.dtype)])
+            out = _dispatch(executor, _take(params, idx), n_dev)
+            chunks.append({k: v[:real] for k, v in out.items()})
+            chunk_meta.append(real)
+
+    inv = np.argsort(order, kind="stable")
+    outputs = {k: np.concatenate([c[k] for c in chunks])[inv]
+               for k in chunks[0]}
+
+    frac = frac_mono = lane_iters = None
+    if iterations_key in outputs:
+        lane_iters = np.asarray(outputs[iterations_key], np.int64)
+        if lane_iters.shape == (n_cells,) and lane_iters.max() > 0:
+            total = int(lane_iters.sum())
+            sorted_iters = lane_iters[order]
+            executed = sum(
+                int(sorted_iters[lo:lo + chunk_size].max()) * real
+                for lo, real in zip(range(0, n_cells, chunk_size),
+                                    chunk_meta))
+            frac = total / executed
+            frac_mono = total / (int(lane_iters.max()) * n_cells)
+    report = SweepReport(
+        n_cells=n_cells, chunk_size=chunk_size,
+        n_chunks=len(chunk_meta), devices=n_dev, bucketed=bucketed,
+        donated=donate, active_lane_fraction=frac,
+        active_lane_fraction_monolithic=frac_mono,
+        lane_iterations=lane_iters)
+    return outputs, report
+
+
+def run_host_sweep(run_cell: Callable[[int], Any], n_cells: int, *,
+                   chunk_size: Optional[int] = None,
+                   predicted_cost=None):
+    """Host-loop counterpart of :func:`execute_sweep` for engines whose
+    cells are Python event loops (the consolidation drivers): same ordering
+    and reporting contract, executed one cell at a time on the host.
+
+    Returns ``(results, SweepReport)`` with ``results`` in original cell
+    order.  A host loop never idles a lane, so the active fraction is 1.
+    """
+    if chunk_size is None:
+        chunk_size = n_cells
+    chunk_size = max(1, min(int(chunk_size), max(n_cells, 1)))
+    bucketed = predicted_cost is not None
+    order = (np.argsort(-np.asarray(predicted_cost, np.float64),
+                        kind="stable")
+             if bucketed else np.arange(n_cells))
+    results: list = [None] * n_cells
+    for i in order:
+        results[int(i)] = run_cell(int(i))
+    report = SweepReport(
+        n_cells=n_cells, chunk_size=chunk_size,
+        n_chunks=-(-n_cells // chunk_size) if n_cells else 0,
+        devices=1, bucketed=bucketed, donated=False,
+        active_lane_fraction=1.0 if n_cells else None,
+        active_lane_fraction_monolithic=1.0 if n_cells else None)
+    return results, report

@@ -70,7 +70,9 @@ class _Statics:
     The three feature flags prune whole subgraphs from the compiled loop
     body: ``sigma_zero`` drops the per-step RNG draw (deterministic runs),
     ``degrade`` drops the chronic-degradation schedule, ``track_stragglers``
-    drops the per-step median sort + eviction bookkeeping.
+    drops the per-step median sort + eviction bookkeeping.  ``fast`` keeps
+    the pre-drawn stochastic schedules in f64 (the *same* sample as exact
+    mode) but runs the loop itself in f32.
     """
     n_nodes: int
     n_spares: int
@@ -81,6 +83,7 @@ class _Statics:
     track_stragglers: bool = True
     degrade: bool = True
     sigma_zero: bool = False
+    fast: bool = False
 
     @property
     def n_total(self) -> int:
@@ -130,7 +133,7 @@ def _masked_min(values, mask, use_pallas: bool):
     """Masked next-event min (value only) — fused kernel or jnp."""
     if use_pallas:
         from ..kernels.ops import next_event_op
-        vmin, _ = next_event_op(values, mask, interpret=True)
+        vmin, _ = next_event_op(values, mask)
         return vmin
     return jnp.min(jnp.where(mask, values, jnp.inf))
 
@@ -156,6 +159,22 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
         bias0 = jnp.ones((n,), fail_start.dtype)
     else:
         bias0 = jnp.exp(jax.random.normal(kb, (n,)) * (params.sigma / 2.0))
+
+    if s.fast:
+        # "fast" precision: the pre-drawn schedules above were sampled in
+        # f64 — the *same* failure/degrade/bias sample the exact path sees
+        # (an f32 RNG stream is a different sample, and an unluckier draw
+        # once made the f32 sweep *slower* end-to-end via extra rollback
+        # redo-work) — and only the loop arithmetic drops to f32.
+        def _f32(x):
+            x = jnp.asarray(x)
+            return x.astype(jnp.float32) \
+                if jnp.issubdtype(x.dtype, jnp.floating) else x
+        params = _Params(*(_f32(f) for f in params))
+        fail_start = fail_start.astype(jnp.float32)
+        bias0 = _f32(bias0)
+        if s.degrade:
+            degrade_t = degrade_t.astype(jnp.float32)
 
     n_nodes_f = jnp.asarray(float(s.n_nodes), fail_start.dtype)
     k_last = s.k_fail_rounds - 1
@@ -360,10 +379,30 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
 
 @functools.lru_cache(maxsize=32)
 def _batched_sim(statics: _Statics):
-    """Compiled (jit ∘ vmap) simulator for one static shape — cached so
-    repeated sweeps at the same shape reuse the executable."""
-    return jax.jit(jax.vmap(
-        functools.partial(_simulate_one, s=statics)))
+    """Batched (vmap) simulator for one static shape, in the sweep layer's
+    single-pytree calling convention — cached so the sweep executor (which
+    jits with buffer donation) reuses one compiled executable per shape."""
+    sim = jax.vmap(functools.partial(_simulate_one, s=statics))
+
+    def run(args):
+        params, keys = args
+        return sim(params, keys)
+    return run
+
+
+def _predicted_iters(params: _Params, n_total: int) -> np.ndarray:
+    """Predicted while-loop length per cell, for divergence bucketing.
+
+    Loop iterations ≈ unique steps + failure-rollback redo work: each
+    failure among the ``n_total`` nodes over the ≈ ``total_steps ×
+    base_step_s`` horizon rolls the fleet back ~``ckpt_every/2`` steps.
+    Only the *ordering* matters (cells are bucketed by predicted length),
+    so second-order terms (stalls, checkpoint writes) are ignored."""
+    steps = np.asarray(params.total_steps, np.float64)
+    horizon = steps * np.asarray(params.base_step_s, np.float64)
+    exp_failures = horizon * n_total / np.asarray(params.mtbf_s, np.float64)
+    redo = np.asarray(params.ckpt_every, np.float64) / 2.0 + 1.0
+    return steps + exp_failures * redo
 
 
 def _make_params(cost: StepCost, cfg: FleetConfig, total_steps,
@@ -405,14 +444,26 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
                          max_wallclock_s: float = 30 * 86400.0,
                          k_fail_rounds: Optional[int] = None,
                          k_degrade: int = 8,
-                         use_pallas: bool = False,
-                         precision: str = "exact") -> Dict[str, np.ndarray]:
-    """Run a batch of fleet scenarios in one compiled vmap call.
+                         use_pallas: bool | str = False,
+                         precision: str = "exact",
+                         chunk_size: Optional[int] = None,
+                         devices=None,
+                         donate: bool = True,
+                         with_report: bool = False):
+    """Run a batch of fleet scenarios through the sweep execution layer.
 
     ``seeds`` and the optional sweep axes (``mtbf_hours``, ``ckpt_every``,
     ``straggler_sigma`` — scalars or arrays broadcast against ``seeds``)
     define the batch. Returns a dict of per-scenario stat arrays
-    (``goodput``, ``wallclock_s``, ``steps_done``, ``failures``, ...).
+    (``goodput``, ``wallclock_s``, ``steps_done``, ``failures``, ...);
+    with ``with_report=True`` returns ``(stats, SweepReport)``.
+
+    Execution goes through :mod:`repro.core.sweep`: cells are bucketed by
+    predicted loop length (divergent grids no longer run every lane to the
+    slowest cell's iteration count), dispatched in bounded chunks with
+    donated input buffers (``chunk_size``/``donate``), and sharded across
+    ``devices`` (default: all local devices) — all bit-identical to the
+    monolithic single-dispatch call.
 
     ``k_fail_rounds`` (failure-renewal rounds pre-drawn per node) defaults
     to an estimate covering the simulated horizon with ample margin; a node
@@ -420,9 +471,20 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
 
     ``precision``: ``"exact"`` (default) accumulates the clock in f64 under
     ``enable_x64`` — bit-identical to the OO engine on deterministic
-    configs; ``"fast"`` runs the whole loop in f32 (same statistics, ~2×
-    throughput on CPU — for large Monte-Carlo sweeps).
+    configs; ``"fast"`` draws the same f64 stochastic schedules but runs
+    the loop in f32 (same scenario sample, cheaper arithmetic — for large
+    Monte-Carlo sweeps).
+
+    ``use_pallas`` resolves through :func:`repro.kernels.ops
+    .resolve_use_pallas`: on CPU the interpret-mode kernel is slower than
+    the plain reduction, so ``True`` falls back to the jnp path with a
+    one-time warning (``"force"`` overrides).
     """
+    from ..kernels.ops import resolve_use_pallas
+    from .sweep import execute_sweep
+    if precision not in ("exact", "fast"):
+        raise ValueError(f"precision must be 'exact' or 'fast': {precision!r}")
+    use_pallas = resolve_use_pallas(use_pallas)
     seeds = np.asarray(seeds, np.uint32)
     params = _make_params(cost, cfg, total_steps, max_wallclock_s,
                           mtbf_hours=mtbf_hours, ckpt_every=ckpt_every,
@@ -432,6 +494,17 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
     seeds = np.broadcast_to(np.atleast_1d(seeds), (b,))
     params = _Params(*(np.broadcast_to(np.atleast_1d(f), (b,))
                        for f in params))
+    if b == 0:
+        # Degenerate grid (e.g. a sweep driver whose filter left no cells):
+        # empty per-stat arrays, no dispatch.
+        from .sweep import SweepReport
+        zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int32)
+        out = dict(wallclock_s=zf, steps_done=zi, failures=zi, restarts=zi,
+                   evictions=zi, lost_steps=zf, stall_s=zf, ckpt_s=zf,
+                   ideal_s=zf, goodput=zf, iterations=zi)
+        report = SweepReport(n_cells=0, chunk_size=0, n_chunks=0, devices=1,
+                             bucketed=False, donated=donate)
+        return (out, report) if with_report else out
     if k_fail_rounds is None:
         # Horizon estimate: 10× the zero-overhead run time (goodput ≥ 0.1),
         # capped by the hard wall-clock bound; 3× margin on expected rounds.
@@ -442,25 +515,21 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
         k_fail_rounds = int(np.clip(np.ceil(horizon / cycle * 3.0 + 3), 4, 64))
     statics = _Statics(
         cfg.n_nodes, cfg.n_spares, int(k_fail_rounds), k_degrade,
-        cfg.straggler_window, use_pallas,
+        cfg.straggler_window, bool(use_pallas),
         track_stragglers=bool(np.min(params.evict_factor) < 1e8
                               and cfg.straggler_window <= 10_000),
         degrade=bool(np.min(params.degrade_s) < 1e8 * 3600.0),
-        sigma_zero=bool(np.all(params.sigma == 0.0)))
-    if precision == "exact":
-        with jax.experimental.enable_x64():
-            keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds))
-            out = _batched_sim(statics)(
-                _Params(*(jnp.asarray(f) for f in params)), keys)
-    elif precision == "fast":
-        # Outside x64 the f64 inputs canonicalize to f32 and the whole loop
-        # (same trace, jit-cached separately by dtype) runs single-precision.
-        keys = jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds))
-        out = _batched_sim(statics)(
-            _Params(*(jnp.asarray(f) for f in params)), keys)
-    else:
-        raise ValueError(f"precision must be 'exact' or 'fast': {precision!r}")
-    return {k: np.asarray(v) for k, v in out.items()}
+        sigma_zero=bool(np.all(params.sigma == 0.0)),
+        fast=(precision == "fast"))
+    with jax.experimental.enable_x64():
+        # Keys and (for "fast") the pre-drawn schedules are built in the
+        # x64 world either way, so both precisions see the same sample.
+        keys = np.asarray(jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds)))
+        out, report = execute_sweep(
+            _batched_sim(statics), (params, keys),
+            chunk_size=chunk_size, devices=devices, donate=donate,
+            predicted_cost=_predicted_iters(params, statics.n_total))
+    return (out, report) if with_report else out
 
 
 def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,

@@ -87,7 +87,7 @@ def _next_event_time(state: VecSchedState, alloc, use_pallas: bool) -> jax.Array
     if use_pallas:
         from ..kernels.ops import next_event_op
         cand = jnp.concatenate([est.reshape(-1), future.reshape(-1)])
-        t_min, _ = next_event_op(cand, interpret=True)
+        t_min, _ = next_event_op(cand)
         return t_min
     return jnp.minimum(jnp.min(est), jnp.min(future))
 
@@ -130,13 +130,18 @@ def simulate(state: VecSchedState, guest_mips, guest_pes, mode: str,
 
 
 def simulate_batch(length, pes, submit, guest_mips, guest_pes,
-                   mode: str = "time", *, use_pallas: bool = False):
+                   mode: str = "time", *, use_pallas: bool | str = False):
     """Convenience wrapper: returns finish times [G, C] (inf for empty slots).
 
     Runs under x64 so event times match the OO engine's doubles bit-for-bit
     (enabled locally — the model stack elsewhere stays on default f32/bf16).
+    All guests share one global event clock, exactly like the OO kernel —
+    for a *batch of independent scheduler problems* (cells that may be
+    chunked/sharded without changing a bit) use :func:`simulate_cells`.
     """
     import numpy as np
+    from ..kernels.ops import resolve_use_pallas
+    use_pallas = resolve_use_pallas(use_pallas)
     length = np.asarray(length, np.float64)
     pes = np.asarray(pes, np.float64)
     submit = np.asarray(submit, np.float64)
@@ -155,13 +160,95 @@ def simulate_batch(length, pes, submit, guest_mips, guest_pes,
         return np.asarray(st.finish)[g_idx, inv]
 
 
+# -- multi-cell batched entry (the sweep layer's unit of work) -----------------
+
+@functools.lru_cache(maxsize=32)
+def _batched_cells(mode: str, use_pallas: bool):
+    """Vmapped whole-simulation runner over independent scheduler cells, in
+    the sweep layer's single-pytree calling convention.
+
+    Each cell is one complete [G, C] scheduler problem with its own event
+    clock (cells never interact), so chunking/sharding the cell axis is
+    bit-identical to the monolithic dispatch — unlike guests *within* a
+    cell, which share the global clock.  Also counts loop iterations per
+    cell for the sweep layer's divergence accounting.
+    """
+    def one(args):
+        length, pes, submit, gmips, gpes = args
+        st, t0 = step(make_state(length, pes, submit), gmips, gpes, mode,
+                      use_pallas)
+
+        def cond(c):
+            return jnp.isfinite(c[1])
+
+        def body(c):
+            st, _, it = c
+            st2, t2 = step(st, gmips, gpes, mode, use_pallas)
+            return st2, t2, it + 1
+
+        st, _, it = jax.lax.while_loop(cond, body,
+                                       (st, t0, jnp.asarray(1, jnp.int32)))
+        return dict(finish=st.finish, iterations=it)
+
+    return jax.vmap(one)
+
+
+def simulate_cells(length, pes, submit, guest_mips, guest_pes,
+                   mode: str = "time", *, use_pallas: bool | str = False,
+                   chunk_size=None, devices=None, donate: bool = True,
+                   with_report: bool = False):
+    """Batch of independent scheduler cells through the sweep layer.
+
+    ``length``/``pes``/``submit`` are ``[B, G, C]``; ``guest_mips``/
+    ``guest_pes`` are ``[B, G]``.  Every cell advances on its own event
+    clock (the [G, C] semantics within one cell are exactly
+    :func:`simulate_batch`'s).  Returns finish times ``[B, G, C]``; with
+    ``with_report=True`` returns ``(finish, SweepReport)``.  Cells are
+    bucketed by live-cloudlet count, chunked with donated buffers, and
+    sharded across devices — bit-identical to the monolithic dispatch.
+    """
+    import numpy as np
+    from ..kernels.ops import resolve_use_pallas
+    from .sweep import execute_sweep
+    use_pallas = resolve_use_pallas(use_pallas)
+    length = np.asarray(length, np.float64)
+    pes = np.asarray(pes, np.float64)
+    submit = np.asarray(submit, np.float64)
+    guest_mips = np.asarray(guest_mips, np.float64)
+    guest_pes = np.asarray(guest_pes, np.float64)
+    # Per-cell slot canonicalization (space-shared FIFO is arrival-ordered).
+    order = np.argsort(submit + np.arange(submit.shape[-1]) * 1e-12, axis=-1,
+                       kind="stable")
+    inv = np.argsort(order, axis=-1, kind="stable")
+    params = (np.take_along_axis(length, order, -1),
+              np.take_along_axis(pes, order, -1),
+              np.take_along_axis(submit, order, -1),
+              guest_mips, guest_pes)
+    # Loop length ≈ events ≈ live cloudlets (+ their submissions).
+    pred = np.count_nonzero(length > 0, axis=(1, 2)) + 1
+    with jax.experimental.enable_x64():
+        out, report = execute_sweep(
+            _batched_cells(mode, bool(use_pallas)), params,
+            chunk_size=chunk_size, devices=devices, donate=donate,
+            predicted_cost=pred)
+    finish = np.take_along_axis(out["finish"], inv, -1)
+    return (finish, report) if with_report else finish
+
+
 # -- backend substrate handlers ------------------------------------------------
 
 @scenario("cloudlet_batch", backends=("vec",))
 def _cloudlet_batch_vec(backend: SimBackend, *, length, pes, submit,
                         guest_mips, guest_pes, mode: str = "time",
-                        use_pallas: bool = False):
-    """Finish times [G, C] via the compiled SoA path."""
+                        use_pallas: bool | str = False, **sweep_kw):
+    """Finish times via the compiled SoA path: ``[G, C]`` inputs run the
+    single-problem global-clock simulator; ``[B, G, C]`` inputs run a batch
+    of independent cells through the sweep layer (``chunk_size`` /
+    ``devices`` / ``with_report`` accepted)."""
+    import numpy as np
+    if np.asarray(length).ndim == 3:
+        return simulate_cells(length, pes, submit, guest_mips, guest_pes,
+                              mode, use_pallas=use_pallas, **sweep_kw)
     return simulate_batch(length, pes, submit, guest_mips, guest_pes, mode,
                           use_pallas=use_pallas)
 
@@ -171,8 +258,18 @@ def _cloudlet_batch_oo(backend: SimBackend, *, length, pes, submit,
                        guest_mips, guest_pes, mode: str = "time",
                        use_pallas: bool = False):
     """Finish times [G, C] via the OO engine (reference semantics; inf for
-    empty/unfinished slots) — same contract as the vec handler."""
+    empty/unfinished slots) — same contract as the vec handler.  ``[B, G,
+    C]`` inputs loop the engine over the independent cells.  Sweep controls
+    (``with_report``/``chunk_size``/``devices``) are deliberately *not*
+    accepted: this handler has no sweep path, and ``backend.run_sweep``'s
+    contract is a ``TypeError`` rather than a silently-dropped report."""
     import numpy as np
+    if np.asarray(length).ndim == 3:
+        return np.stack([
+            _cloudlet_batch_oo(backend, length=length[b], pes=pes[b],
+                               submit=submit[b], guest_mips=guest_mips[b],
+                               guest_pes=guest_pes[b], mode=mode)
+            for b in range(np.asarray(length).shape[0])])
     from .datacenter import Broker, Datacenter
     from .entities import Cloudlet, Host, Vm
     from .scheduler import (CloudletSchedulerSpaceShared,

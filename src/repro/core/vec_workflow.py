@@ -148,7 +148,7 @@ def _cascade(spec: WorkflowSpec, s: _WfStatics, now, sidx, arrival):
 def _next_event_min(candidates, use_pallas: bool):
     if use_pallas:
         from ..kernels.ops import next_event_op
-        t_min, _ = next_event_op(candidates, interpret=True)
+        t_min, _ = next_event_op(candidates)
         return t_min
     return jnp.min(candidates)
 
@@ -225,8 +225,10 @@ def _simulate_one(spec: WorkflowSpec, s: _WfStatics) -> Dict[str, Any]:
 
 @functools.lru_cache(maxsize=32)
 def _batched_sim(statics: _WfStatics):
-    """Compiled (jit ∘ vmap) workflow simulator for one static shape."""
-    return jax.jit(jax.vmap(functools.partial(_simulate_one, s=statics)))
+    """Batched (vmap) workflow simulator for one static shape, in the sweep
+    layer's single-pytree calling convention (the sweep executor jits it
+    with buffer donation)."""
+    return jax.vmap(functools.partial(_simulate_one, s=statics))
 
 
 # ---------------------------------------------------------------------------
@@ -346,13 +348,28 @@ def pad_stack(specs: Sequence[WorkflowSpec]) -> WorkflowSpec:
 
 
 def simulate_specs(specs: Sequence[WorkflowSpec], *,
-                   use_pallas: bool = False,
-                   max_iters: Optional[int] = None) -> Dict[str, np.ndarray]:
-    """Run a batch of workflow cells in one compiled vmap call.
+                   use_pallas: bool | str = False,
+                   max_iters: Optional[int] = None,
+                   chunk_size: Optional[int] = None,
+                   devices=None,
+                   donate: bool = True,
+                   with_report: bool = False):
+    """Run a batch of workflow cells through the sweep execution layer.
 
     Returns ``finish [B, T]`` (inf = never finished — deadlocked DAG),
-    ``done [B, T]`` MI, and per-cell loop ``iterations``.
+    ``done [B, T]`` MI, and per-cell loop ``iterations``; with
+    ``with_report=True`` returns ``(stats, SweepReport)``.
+
+    Cells are bucketed by predicted event count (submissions + stage
+    completions per cell), dispatched in bounded chunks with donated
+    buffers, and sharded across ``devices`` — all bit-identical to the
+    monolithic single-dispatch call (see :mod:`repro.core.sweep`).
+    ``use_pallas`` resolves through ``kernels.ops.resolve_use_pallas``
+    (CPU falls back to the jnp reduction with a one-time warning).
     """
+    from ..kernels.ops import resolve_use_pallas
+    from .sweep import execute_sweep
+    use_pallas = resolve_use_pallas(use_pallas)
     batched = pad_stack(specs)
     T, S = batched.kind.shape[1:]
     G = batched.gmips.shape[1]
@@ -361,10 +378,15 @@ def simulate_specs(specs: Sequence[WorkflowSpec], *,
         # 8× margin covers contention re-ticks with room to spare.
         max_iters = 8 * T * (S + 1) + 64
     statics = _WfStatics(T, S, G, int(max_iters), bool(use_pallas))
+    # Predicted loop length ≈ per-cell live stages + submissions (cells of
+    # one grid share padded shapes but not DAG population or arrivals).
+    pred = np.asarray(batched.n_stage, np.int64).sum(axis=1) + T
     with jax.experimental.enable_x64():
-        out = _batched_sim(statics)(
-            WorkflowSpec(*(jnp.asarray(f) for f in batched)))
-    return {k: np.asarray(v) for k, v in out.items()}
+        out, report = execute_sweep(
+            _batched_sim(statics), batched,
+            chunk_size=chunk_size, devices=devices, donate=donate,
+            predicted_cost=pred)
+    return (out, report) if with_report else out
 
 
 # ---------------------------------------------------------------------------
@@ -398,12 +420,17 @@ def _case_study_cell(virt: str, placement: str, payload: float,
 def run_case_study_vec(*, virt: str = "V", placement: str = "II",
                        payload: Optional[float] = None, activations: int = 1,
                        overhead_on: bool = True, seed: int = 42,
-                       use_pallas: bool = False):
+                       use_pallas: bool | str = False,
+                       chunk_size: Optional[int] = None,
+                       devices=None,
+                       with_report: bool = False):
     """Vectorized §6 case study — same contract as the OO
     ``run_case_study``.  Scalar parameters return one ``CaseStudyResult``;
     passing a sequence for any of ``virt``/``placement``/``payload``/``seed``
     broadcasts them to a cell grid and returns a list of results computed in
-    **one** compiled vmap call (the whole Figure 5 / Table 3 grid at once).
+    **one** compiled vmap call (the whole Figure 5 / Table 3 grid at once),
+    scheduled by the sweep layer (``chunk_size``/``devices``;
+    ``with_report=True`` additionally returns the ``SweepReport``).
     """
     from .case_study import PAYLOAD_BIG, CaseStudyResult
     if payload is None:
@@ -422,7 +449,9 @@ def run_case_study_vec(*, virt: str = "V", placement: str = "II",
                                      overhead_on, int(seeds[b]))
         specs.append(spec)
         cell_arrivals.append(arr)
-    out = simulate_specs(specs, use_pallas=use_pallas)
+    out, report = simulate_specs(specs, use_pallas=use_pallas,
+                                 chunk_size=chunk_size, devices=devices,
+                                 with_report=True)
 
     from .case_study import cell_theoretical
     results = []
@@ -435,7 +464,8 @@ def run_case_study_vec(*, virt: str = "V", placement: str = "II",
             makespans, cell_theoretical(str(virts[b]), str(places[b]),
                                         float(payloads[b]), overhead_on),
             str(virts[b]), str(places[b]), float(payloads[b])))
-    return results[0] if scalar else results
+    results = results[0] if scalar else results
+    return (results, report) if with_report else results
 
 
 @scenario("case_study", backends=("vec",))
@@ -507,14 +537,18 @@ def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
                         activations: int = 1, seed: int = 0,
                         arrival_rate: Optional[float] = None,
                         deadline: Optional[float] = None,
-                        use_pallas: bool = False) -> Dict[str, np.ndarray]:
-    """Batched generic-DAG workflows in one compiled vmap call.
+                        use_pallas: bool | str = False,
+                        chunk_size: Optional[int] = None,
+                        devices=None,
+                        with_report: bool = False):
+    """Batched generic-DAG workflows through the sweep execution layer.
 
     ``nodes`` are EXEC lengths (MI), ``edges`` are ``(src, dst)`` index
     pairs (≤ one edge per ordered pair), ``guest_of`` places each node on a
     (time-shared) guest.  ``payload`` and ``seed`` broadcast to the batch
     axis.  Returns ``finish [B, T]``, ``makespans [B, activations]``,
-    ``missed_deadline [B, T]``, ``iterations [B]``.
+    ``missed_deadline [B, T]``, ``iterations [B]``; with
+    ``with_report=True`` returns ``(dict, SweepReport)``.
     """
     guest_pes = guest_pes if guest_pes is not None else [1.0] * len(guest_mips)
     host_of_guest = (host_of_guest if host_of_guest is not None
@@ -525,12 +559,15 @@ def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
         nodes, edges, payload, guest_of, guest_mips, guest_pes,
         guest_overhead, guest_bw, host_of_guest, rack_of_host, link_bw,
         switch_latency, activations, seed, arrival_rate, deadline)
-    out = simulate_specs(specs, use_pallas=use_pallas)
+    out, report = simulate_specs(specs, use_pallas=use_pallas,
+                                 chunk_size=chunk_size, devices=devices,
+                                 with_report=True)
     submit = np.stack([np.asarray(sp.submit) for sp in specs])
     makespans, missed = _workflow_result(out["finish"], arrivals, activations,
                                          len(nodes), submit, deadline)
-    return dict(finish=out["finish"], makespans=makespans,
-                missed_deadline=missed, iterations=out["iterations"])
+    res = dict(finish=out["finish"], makespans=makespans,
+               missed_deadline=missed, iterations=out["iterations"])
+    return (res, report) if with_report else res
 
 
 @scenario("workflow_batch", backends=("legacy", "oo"))

@@ -3,8 +3,18 @@
 The model stack calls these when ``cfg.use_pallas`` (TPU); on CPU they run
 in interpret mode (tests) or the models fall back to the XLA reference path.
 Layout adapters live here so kernels keep their natural [B, H, S, N] tiling.
+
+The vec simulation engines gate their ``use_pallas`` opt-in through
+:func:`resolve_use_pallas`: on CPU the kernels only run in *interpret* mode,
+which is strictly slower than the plain XLA reduction (the committed
+``BENCH_substrate.json`` once recorded the opt-in costing 3.5×), so the
+opt-in auto-falls back to the jnp path with a one-time warning.  Pass
+``use_pallas="force"`` to run the interpret-mode kernel anyway (kernel
+tests, TPU-lowering dry runs).
 """
 from __future__ import annotations
+
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +22,39 @@ import jax.numpy as jnp
 from .flash_attention import flash_attention
 from .next_event import next_event
 from .rwkv6_scan import wkv6
+
+_PALLAS_BACKENDS = ("tpu", "gpu")
+_warned_pallas_fallback = False
+
+
+def pallas_native() -> bool:
+    """True when Pallas kernels lower natively (no interpret mode) here."""
+    return jax.default_backend() in _PALLAS_BACKENDS
+
+
+def resolve_use_pallas(use_pallas) -> bool:
+    """Resolve an engine's ``use_pallas`` opt-in against the backend.
+
+    ``False`` stays off.  ``True`` enables the fused kernels only where
+    they lower natively; on CPU (interpret mode — slower than the plain
+    reduction) it falls back to the jnp path with a one-time warning.
+    ``"force"`` always enables them (interpret mode on CPU).
+    """
+    global _warned_pallas_fallback
+    if not use_pallas:
+        return False
+    if use_pallas == "force" or pallas_native():
+        return True
+    if not _warned_pallas_fallback:
+        _warned_pallas_fallback = True
+        warnings.warn(
+            "use_pallas=True requested on the "
+            f"{jax.default_backend()!r} backend, where the Pallas "
+            "next-event kernel only runs in interpret mode (slower than "
+            "the plain XLA reduction) — falling back to the jnp path. "
+            "Pass use_pallas='force' to run the interpret-mode kernel "
+            "anyway.", RuntimeWarning, stacklevel=3)
+    return False
 
 
 def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -25,12 +68,16 @@ def attention_op(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def next_event_op(times: jax.Array, mask: jax.Array | None = None, *,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """Engine-layer adapter: fused masked (min, argmin) over the last axis.
 
     Used by the vectorized simulation engines (``vec_scheduler``,
-    ``vec_cluster``) for the SoA next-event reduction; interpret mode on CPU.
+    ``vec_cluster``, ``vec_workflow``) for the SoA next-event reduction.
+    ``interpret=None`` resolves automatically: native lowering on TPU/GPU,
+    interpret mode elsewhere (reached only via ``use_pallas="force"``).
     """
+    if interpret is None:
+        interpret = not pallas_native()
     return next_event(times, mask, interpret=interpret)
 
 

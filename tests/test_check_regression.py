@@ -56,6 +56,48 @@ def test_quick_mode_mismatch_noted():
     assert any("quick-mode mismatch" in n for n in notes)
 
 
+def test_device_count_mismatch_not_gated():
+    """Speedups are only comparable like-for-like by device count: an
+    8-device record never gates (pass or fail) against a 1-device baseline."""
+    base = _record({"vec": 20.0})
+    cur = _record({"vec": 5.0})                  # would fail hard...
+    base["vec"]["devices"], cur["vec"]["devices"] = 1, 8
+    failures, notes = check_pair(cur, base, 0.25)
+    assert failures == []                        # ...but is skipped
+    assert any("device-count mismatch" in n for n in notes)
+
+
+def test_device_count_match_still_gates():
+    base = _record({"vec": 20.0})
+    cur = _record({"vec": 5.0})
+    base["vec"]["devices"] = cur["vec"]["devices"] = 1
+    failures, _ = check_pair(cur, base, 0.25)
+    assert len(failures) == 1
+
+
+def test_baseline_key_absent_from_current_section_fails():
+    """A metric rename must surface as 'missing', not silently gate the
+    section's other (semantically different) tracked ratio."""
+    base = {"benchmark": "b", "config": {"quick": True},
+            "vec": {"speedup_vs_oo": 20.0}}
+    cur = {"benchmark": "b", "config": {"quick": True},
+           "vec": {"speedup_vs_monolithic": 19.5}}
+    failures, _ = check_pair(cur, base, 0.25)
+    assert len(failures) == 1 and "missing" in failures[0]
+
+
+def test_speedup_vs_monolithic_sections_tracked():
+    """The sweep_runner record's tracked key gates like speedup_vs_oo."""
+    base = {"benchmark": "sweep_runner", "config": {"quick": True},
+            "sweep": {"speedup_vs_monolithic": 2.0, "devices": 1}}
+    cur = {"benchmark": "sweep_runner", "config": {"quick": True},
+           "sweep": {"speedup_vs_monolithic": 1.0, "devices": 1}}
+    failures, _ = check_pair(cur, base, 0.25)
+    assert len(failures) == 1 and "speedup_vs_monolithic" in failures[0]
+    failures, _ = check_pair(base, base, 0.25)
+    assert failures == []
+
+
 def test_cli_exit_codes(tmp_path):
     """Acceptance: the CLI exits non-zero on a >25% speedup degradation."""
     base = tmp_path / "base.json"
@@ -88,7 +130,8 @@ def test_committed_baselines_are_consistent():
     import pathlib
     root = pathlib.Path(__file__).resolve().parents[1]
     for name in ("substrate.json", "substrate_quick.json",
-                 "workflow.json", "workflow_quick.json"):
+                 "workflow.json", "workflow_quick.json",
+                 "sweep.json", "sweep_quick.json"):
         rec = json.loads((root / "benchmarks" / "baselines" / name)
                          .read_text())
         assert tracked_ratios(rec), name

@@ -1,0 +1,266 @@
+"""Sweep execution layer (repro.core.sweep) — exactness and policy tests.
+
+The layer's contract is strict: chunking, divergence bucketing, buffer
+donation, and device sharding are *schedules* over independent vmap lanes
+and must not change one output bit relative to the monolithic dispatch.
+Covered here for all batched entry points (``fleet_batch``,
+``workflow_batch``, ``cloudlet_batch`` cells, ``consolidation_batch``),
+plus the chunking policy, the divergence report, the Pallas CPU
+auto-fallback, and the f32 fast path's shared-sample guarantee.
+"""
+import subprocess
+import sys
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario, run_sweep
+from repro.core.cluster import FleetConfig, StepCost
+from repro.core.sweep import SweepReport, auto_chunk_size, run_host_sweep
+from repro.core.vec_cluster import simulate_fleet_batch
+
+COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                overlap_collective=0.6)
+
+# Divergent little grid: the mtbf axis spreads predicted loop lengths, so
+# the auto policy buckets; small enough to compile in seconds.
+FLEET_CFG = FleetConfig(n_nodes=8, n_spares=2, straggler_sigma=0.08,
+                        repair_hours=0.5, degrade_mtbf_hours=1e9,
+                        straggler_evict_factor=1e9)
+B = 32
+MTBF = np.repeat([200.0, 20.0, 2.0, 0.5], B // 4)
+CKPT = np.tile([10, 50], B // 2)
+SEEDS = np.arange(B)
+
+
+def _fleet(**kw):
+    return simulate_fleet_batch(COST, FLEET_CFG, 60, seeds=SEEDS,
+                                mtbf_hours=MTBF, ckpt_every=CKPT, **kw)
+
+
+# -- bit-identity: chunked / bucketed / sharded-fallback vs monolithic --------
+
+@pytest.mark.parametrize("precision", ["exact", "fast"])
+def test_fleet_chunked_bit_identical(precision):
+    mono = _fleet(precision=precision, chunk_size=B)
+    chunked, rep = _fleet(precision=precision, chunk_size=10,  # uneven: pads
+                          with_report=True)
+    assert rep.n_chunks == 4 and rep.chunk_size == 10 and rep.bucketed
+    for k in mono:
+        assert np.array_equal(mono[k], chunked[k]), k
+
+
+def test_fleet_auto_policy_bit_identical_and_bucketed():
+    mono = _fleet(chunk_size=B)
+    auto, rep = _fleet(with_report=True)
+    assert rep.bucketed and rep.n_chunks > 1      # mtbf spread ⇒ buckets
+    for k in mono:
+        assert np.array_equal(mono[k], auto[k]), k
+
+
+def test_fleet_single_device_sharded_fallback_bit_identical():
+    mono = _fleet(chunk_size=B)
+    sharded, rep = _fleet(devices=1, chunk_size=16, with_report=True)
+    assert rep.devices == 1
+    for k in mono:
+        assert np.array_equal(mono[k], sharded[k]), k
+
+
+def test_fleet_donation_off_bit_identical():
+    mono = _fleet(chunk_size=B)
+    undonated = _fleet(chunk_size=16, donate=False)
+    for k in mono:
+        assert np.array_equal(mono[k], undonated[k]), k
+
+
+def test_fleet_multi_device_sharded_bit_identical():
+    """pmap sharding over 2 (forced host) devices reproduces the 1-device
+    bits.  Needs a fresh process: XLA device count is fixed at backend init."""
+    mono = _fleet(chunk_size=B)
+    code = f"""
+import numpy as np
+from repro.core.vec_cluster import simulate_fleet_batch
+from repro.core.cluster import FleetConfig, StepCost
+import jax
+assert jax.device_count() == 2, jax.devices()
+out, rep = simulate_fleet_batch(
+    StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+             overlap_collective=0.6),
+    FleetConfig(n_nodes=8, n_spares=2, straggler_sigma=0.08,
+                repair_hours=0.5, degrade_mtbf_hours=1e9,
+                straggler_evict_factor=1e9),
+    60, seeds=np.arange({B}),
+    mtbf_hours=np.repeat([200.0, 20.0, 2.0, 0.5], {B // 4}),
+    ckpt_every=np.tile([10, 50], {B // 2}),
+    chunk_size=16, with_report=True)
+assert rep.devices == 2, rep
+print(out["wallclock_s"].tobytes().hex())
+print(out["goodput"].tobytes().hex())
+"""
+    import os
+    env = dict(os.environ,
+               XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
+                          + " --xla_force_host_platform_device_count=2"),
+               PYTHONPATH=os.pathsep.join(sys.path))
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=300)
+    assert proc.returncode == 0, proc.stderr
+    wall_hex, good_hex = proc.stdout.split()
+    assert wall_hex == mono["wallclock_s"].tobytes().hex()
+    assert good_hex == mono["goodput"].tobytes().hex()
+
+
+def test_workflow_chunked_bit_identical():
+    diamond = dict(nodes=[1000.0, 2000.0, 1500.0, 1000.0],
+                   edges=[(0, 1), (0, 2), (1, 3), (2, 3)],
+                   guest_of=[0, 1, 2, 0], guest_mips=[1000.0] * 3,
+                   payload=list(np.linspace(0.0, 2e6, 12)),
+                   activations=3, arrival_rate=0.5)
+    mono = run_scenario("workflow_batch", backend="vec", **diamond)
+    chunked, rep = run_scenario("workflow_batch", backend="vec",
+                                chunk_size=5, with_report=True, **diamond)
+    assert rep.n_chunks == 3
+    for k in mono:
+        assert np.array_equal(mono[k], chunked[k]), k
+
+
+def test_cloudlet_cells_chunked_bit_identical():
+    rng = np.random.default_rng(7)
+    Bc, G, C = 10, 3, 4
+    kw = dict(
+        length=rng.uniform(100, 4000, (Bc, G, C))
+        * (rng.random((Bc, G, C)) < 0.8),
+        pes=np.ones((Bc, G, C)),
+        submit=rng.uniform(0, 10, (Bc, G, C)),
+        guest_mips=rng.uniform(500, 1500, (Bc, G)),
+        guest_pes=np.full((Bc, G), 2.0))
+    mono = run_scenario("cloudlet_batch", backend="vec", **kw)
+    chunked, rep = run_sweep("cloudlet_batch", chunk_size=3, **kw)
+    assert rep.n_chunks == 4
+    assert np.array_equal(mono, chunked)
+    # and the cells contract matches the OO engine per cell (inf-safe)
+    oo = run_scenario("cloudlet_batch", backend="oo", **kw)
+    assert np.array_equal(np.isfinite(mono), np.isfinite(oo))
+    m = np.isfinite(mono)
+    np.testing.assert_allclose(mono[m], oo[m], rtol=1e-12)
+
+
+def test_empty_batch_returns_empty_outputs():
+    out, rep = simulate_fleet_batch(COST, FLEET_CFG, 60,
+                                    seeds=np.array([], np.uint32),
+                                    with_report=True)
+    assert rep.n_cells == 0 and rep.n_chunks == 0
+    assert out["goodput"].shape == (0,)
+    assert out["iterations"].shape == (0,)
+
+
+def test_run_sweep_rejects_sweepless_paths():
+    """A kind/backend pair with no sweep path must raise, never hand back a
+    bare result the caller would mis-unpack as (result, report)."""
+    from repro.core.backend import ScenarioUnsupported
+    rng = np.random.default_rng(0)
+    kw = dict(length=rng.uniform(100, 500, (2, 2, 3)),
+              pes=np.ones((2, 2, 3)), submit=np.zeros((2, 2, 3)),
+              guest_mips=np.full((2, 2), 1000.0),
+              guest_pes=np.ones((2, 2)))
+    with pytest.raises((TypeError, ScenarioUnsupported)):
+        run_sweep("cloudlet_batch", backend="oo", **kw)
+    with pytest.raises((TypeError, ScenarioUnsupported)):
+        run_sweep("consolidation", backend="oo", algo="ThrMu", n_hosts=4,
+                  n_vms=8, n_samples=4)
+
+
+def test_consolidation_batch_host_sweep_matches_loop():
+    from repro.core.consolidation_sim import run_consolidation
+    res, rep = run_sweep("consolidation_batch", seeds=[1, 2], n_hosts=8,
+                         n_vms=16, n_samples=12)
+    assert isinstance(rep, SweepReport) and rep.devices == 1
+    assert rep.active_lane_fraction == 1.0
+    for seed, r in zip([1, 2], res):
+        single = run_consolidation("vec", seed=seed, n_hosts=8, n_vms=16,
+                                   n_samples=12)
+        assert (r.migrations, r.energy_kwh) == (single.migrations,
+                                                single.energy_kwh)
+
+
+# -- divergence accounting + policy -------------------------------------------
+
+def test_report_divergence_accounting():
+    out, rep = _fleet(chunk_size=8, with_report=True)
+    assert rep.n_cells == B and rep.devices >= 1
+    assert rep.lane_iterations.shape == (B,)
+    assert (rep.lane_iterations == out["iterations"]).all()
+    assert 0.0 < rep.active_lane_fraction <= 1.0
+    assert 0.0 < rep.active_lane_fraction_monolithic <= 1.0
+    # bucketed chunks can only improve (or match) lane occupancy
+    assert rep.active_lane_fraction >= rep.active_lane_fraction_monolithic
+
+
+def test_auto_chunk_size_policy():
+    # no prediction / uniform prediction / tiny grids: monolithic
+    assert auto_chunk_size(256, None, 1) == 256
+    assert auto_chunk_size(256, np.full(256, 7.0), 1) == 256
+    assert auto_chunk_size(24, np.r_[np.full(12, 1.0), np.full(12, 9.0)],
+                           1) == 24
+    # divergent large grid: ~8 chunks, floored at MIN_CHUNK lanes/device
+    # and aligned to a device multiple
+    assert auto_chunk_size(256, np.linspace(1, 10, 256), 1) == 32
+    assert auto_chunk_size(256, np.linspace(1, 10, 256), 3) == 48
+
+
+def test_run_host_sweep_orders_and_restores():
+    calls = []
+
+    def cell(i):
+        calls.append(i)
+        return i * 10
+
+    res, rep = run_host_sweep(cell, 4, predicted_cost=[1.0, 4.0, 2.0, 3.0])
+    assert res == [0, 10, 20, 30]             # original order restored
+    assert calls == [1, 3, 2, 0]              # executed longest-first
+    assert rep.bucketed and rep.devices == 1
+
+
+# -- fast-path repairs --------------------------------------------------------
+
+def test_fast_precision_shares_failure_sample():
+    """precision="fast" must see the *same* pre-drawn failure schedules as
+    exact mode (an independent f32 RNG stream is a different — and once
+    measurably unluckier — scenario sample)."""
+    exact = _fleet(precision="exact", chunk_size=B)
+    fast = _fleet(precision="fast", chunk_size=B)
+    assert exact["failures"].sum() > 0        # the grid actually fails
+    assert np.array_equal(exact["failures"], fast["failures"])
+    assert np.array_equal(exact["restarts"], fast["restarts"])
+    # Per-step jitter draws stay dtype-local, so lanes drift at f32 scale —
+    # but with the schedules shared the drift is percent-level even on this
+    # failure-saturated grid, not a different scenario.
+    good = np.abs(fast["goodput"] - exact["goodput"])
+    assert good.max() < 0.05 and good.mean() < 5e-3
+
+
+def test_pallas_cpu_auto_fallback_warns_once_and_matches():
+    import jax
+    from repro.kernels import ops
+    if ops.pallas_native():                   # on TPU/GPU there is no fallback
+        pytest.skip("Pallas lowers natively here")
+    plain = _fleet(chunk_size=B)
+    ops._warned_pallas_fallback = False
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        first = _fleet(chunk_size=B, use_pallas=True)
+        second = _fleet(chunk_size=B, use_pallas=True)
+    msgs = [w for w in rec if issubclass(w.category, RuntimeWarning)
+            and "use_pallas" in str(w.message)]
+    assert len(msgs) == 1                     # one-time warning
+    for k in plain:                           # fallback IS the plain path
+        assert np.array_equal(plain[k], first[k]), k
+        assert np.array_equal(plain[k], second[k]), k
+    assert jax.default_backend() == "cpu"
+
+
+def test_resolve_use_pallas_force():
+    from repro.kernels.ops import resolve_use_pallas
+    assert resolve_use_pallas(False) is False
+    assert resolve_use_pallas("force") is True

@@ -47,7 +47,11 @@ def test_deterministic_pallas_path_identical():
                       mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
                       ckpt_every_steps=40, seed=1)
     plain = simulate_fleet_vec(COST, cfg, total_steps=100)
-    pallas = simulate_fleet_vec(COST, cfg, total_steps=100, use_pallas=True)
+    # "force" runs the interpret-mode kernel even on CPU (a bare True would
+    # auto-fall back to the jnp reduction here — that path has its own test
+    # in test_sweep.py); this test keeps covering the kernel itself.
+    pallas = simulate_fleet_vec(COST, cfg, total_steps=100,
+                                use_pallas="force")
     assert plain.wallclock_s == pallas.wallclock_s
     assert plain.goodput == pallas.goodput
 

@@ -103,7 +103,10 @@ def test_staggered_submits_match_and_pallas_parity():
     gmips, gpes = np.array([1000.0]), np.array([2.0])
     vec, oo = _both(length, pes, submit, gmips, gpes, "time")
     _assert_identical(vec, oo)
+    # "force": run the interpret-mode kernel even on CPU (True would
+    # auto-fall back to the jnp reduction and test nothing new).
     vec_pallas = run_scenario("cloudlet_batch", backend="vec", length=length,
                               pes=pes, submit=submit, guest_mips=gmips,
-                              guest_pes=gpes, mode="time", use_pallas=True)
+                              guest_pes=gpes, mode="time",
+                              use_pallas="force")
     assert np.array_equal(np.asarray(vec_pallas), vec)

@@ -68,9 +68,11 @@ def test_stochastic_stream_mean_within_2pct():
 def test_pallas_next_event_path_identical():
     r_j = run_scenario("case_study", backend="vec", virt="N",
                        placement="III", payload=PAYLOAD_BIG, activations=3)
+    # "force": run the interpret-mode kernel even on CPU (True would
+    # auto-fall back to the jnp reduction and test nothing new).
     r_p = run_scenario("case_study", backend="vec", virt="N",
                        placement="III", payload=PAYLOAD_BIG, activations=3,
-                       use_pallas=True)
+                       use_pallas="force")
     assert r_p.makespans == r_j.makespans
 
 
