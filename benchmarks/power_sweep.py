@@ -1,0 +1,101 @@
+"""Power benchmark: the elastic-datacenter sweep, OO event loop vs vec.
+
+The workload is the ISSUE-4 acceptance scenario: a 256-lane energy/SLA
+trade-off sweep of the power-aware elastic datacenter (``power_batch``) —
+seed × scale-out-threshold cells over a mixed fleet of linear / cubic /
+SPEC-table / DVFS power models.  The OO backend runs one event-driven
+Python autoscaling loop per cell (``power.ElasticDatacenterManager``
+inside a Simulation); the vec backend (``core.vec_power``) runs every cell
+inside a single jit-compiled ``lax.while_loop`` under ``vmap``, routed
+through the sweep execution layer.  Both produce **bit-identical** outputs
+(asserted below — the benchmark is also an exactness check).
+
+``speedup_vs_oo`` is the tracked figure of merit (the acceptance floor is
+5×; ``check_regression.py`` gates it against ``benchmarks/baselines/``).
+
+Writes ``BENCH_power.json`` at the repo root; emits the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from ._util import emit
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_power.json"
+
+
+def _grid(b: int):
+    """seed × up-threshold grid: the energy/SLA trade-off axis."""
+    up = np.tile([0.7, 0.8, 0.9, 0.95], (b + 3) // 4)[:b]
+    seeds = np.arange(b)
+    return seeds, up
+
+
+def _run(backend: str, seeds, up, n_samples: int, **kw):
+    from repro.core.backend import run_scenario
+    return run_scenario("power_batch", backend=backend, seeds=seeds,
+                        n_hosts=16, n_vms=64, n_samples=n_samples,
+                        up_thr=up, lo_thr=0.3, cooldown=4, **kw)
+
+
+def run(quick: bool = False) -> dict:
+    b = 256
+    n_samples = 96 if quick else 288
+    seeds, up = _grid(b)
+
+    # OO reference: best-of-2 (warm the lazy registry first).
+    _run("oo", seeds[:1], up[:1], 4)
+    oo_wall, oo = float("inf"), None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        oo = _run("oo", seeds, up, n_samples)
+        oo_wall = min(oo_wall, time.perf_counter() - t0)
+
+    # vec: compile once, then best-of-3 warm walls.
+    t0 = time.perf_counter()
+    _run("vec", seeds + 1, up, n_samples)
+    cold = time.perf_counter() - t0
+    vec_wall, vec, report = float("inf"), None, None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        vec, report = _run("vec", seeds, up, n_samples, with_report=True)
+        vec_wall = min(vec_wall, time.perf_counter() - t0)
+    compile_s = max(cold - vec_wall, 0.0)
+
+    # The vec engine must never change a bit vs the OO reference.
+    for k in oo:
+        assert np.array_equal(np.asarray(oo[k]), np.asarray(vec[k])), \
+            f"vec power engine changed {k!r} vs OO"
+
+    record = dict(
+        benchmark="power_sweep",
+        config=dict(cells=b, n_hosts=16, n_vms=64, n_samples=n_samples,
+                    quick=quick, sweep="seed × up_thr"),
+        oo=dict(wall_s=round(oo_wall, 4),
+                energy_mean_wh=round(float(oo["energy_total_wh"].mean()), 3),
+                sla_mean_s=round(float(oo["sla_total_s"].mean()), 3),
+                migrations_total=int(oo["migrations"].sum())),
+        vec=dict(
+            wall_s=round(vec_wall, 4), compile_s=round(compile_s, 4),
+            devices=report.devices, chunk_size=report.chunk_size,
+            active_lane_fraction=round(report.active_lane_fraction, 4),
+            bit_exact_vs_oo=True,
+            speedup_vs_oo=round(oo_wall / vec_wall, 2)),
+    )
+    emit("power_sweep/oo_loop", oo_wall / b * 1e6,
+         f"wall_s={oo_wall:.2f};energy_mean={oo['energy_total_wh'].mean():.1f}Wh")
+    emit("power_sweep/vec", vec_wall / b * 1e6,
+         f"wall_s={vec_wall:.3f};compile_s={compile_s:.2f};"
+         f"speedup_vs_oo={oo_wall / vec_wall:.1f}x;bit_exact=True")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("power_sweep/record", 0.0, f"written={OUT_PATH.name};"
+         f"vec_speedup={record['vec']['speedup_vs_oo']}x")
+    return record
+
+
+if __name__ == "__main__":
+    run()

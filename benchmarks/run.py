@@ -13,6 +13,7 @@ Benchmarks (paper artifact → module):
   beyond    → batch_sweep        (sweep-layer fleet sweep vs OO loop → BENCH_substrate.json)
   beyond    → workflow_sweep     (vmap case-study DAG grid vs OO loop → BENCH_workflow.json)
   beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap → BENCH_sweep.json)
+  beyond    → power_sweep        (elastic-datacenter energy/SLA sweep vs OO loop → BENCH_power.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
 ``check_regression.py`` (not a suite) gates the recorded speedups in CI.
@@ -32,7 +33,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, consolidation,
-                   engine_micro, sweep_runner, vec_speedup, workflow_sweep)
+                   engine_micro, power_sweep, sweep_runner, vec_speedup,
+                   workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -42,6 +44,7 @@ def main() -> None:
         "batch_sweep": batch_sweep.run,
         "workflow_sweep": workflow_sweep.run,
         "sweep_runner": sweep_runner.run,
+        "power_sweep": power_sweep.run,
     }
     try:
         from . import dryrun_report

@@ -21,8 +21,9 @@ Two registries:
     ``6g``/``7g`` aliases everywhere a backend name is taken);
   * **scenarios** — scenario kinds (``"consolidation"``, ``"fleet"``,
     ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``,
-    ``"workflow_batch"``, ``"consolidation_batch"``) registered by their
-    home modules via the :func:`scenario` decorator, keyed per backend.
+    ``"workflow_batch"``, ``"consolidation_batch"``, ``"power_batch"``)
+    registered by their home modules via the :func:`scenario` decorator,
+    keyed per backend.
 
 The single entry point is ``run_scenario(kind, backend=..., **params)`` (or
 ``SimBackend.run_scenario``): modules and benchmarks select engines through
@@ -141,6 +142,7 @@ _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.case_study",
     "repro.core.vec_scheduler",
     "repro.core.vec_workflow",
+    "repro.core.vec_power",
 )
 _loaded = False
 

@@ -46,6 +46,7 @@ class Tag(enum.Enum):
     HOST_POWER_ON = enum.auto()
     HOST_POWER_OFF = enum.auto()
     CONSOLIDATE = enum.auto()
+    AUTOSCALE = enum.auto()             # elastic-datacenter scaling interval
     # Cluster (ML-fleet) layer
     NODE_FAILURE = enum.auto()
     NODE_RECOVER = enum.auto()

@@ -15,13 +15,16 @@ from __future__ import annotations
 import math
 import random
 from collections import deque
+
+import numpy as np
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
 from .entities import Cloudlet, CoreAttributes, GuestEntity, Host, HostEntity, Vm
 from .scheduler import CloudletSchedulerTimeShared
 from .selection import (MaximumScore, MinimumScore, RandomSelection,
-                        SelectionPolicy)
+                        SelectionPolicy, least_power_efficient,
+                        most_power_efficient)
 
 HISTORY_LEN = 30          # samples of history used by adaptive detectors
 SAFETY_LR = 1.2           # Beloglazov's safety parameter for LR/LRR
@@ -34,6 +37,26 @@ THR_STATIC = 0.8
 # Power model + power-aware entities (PowerHostEntity/PowerGuestEntity ifaces)
 # --------------------------------------------------------------------------
 
+def interp_table(points: Sequence[float], util: float) -> float:
+    """Piecewise-linear power lookup over evenly spaced utilization points.
+
+    CloudSim's ``PowerModelSpecPower`` semantics: ``points[k]`` is the power
+    at utilization ``k/(len-1)`` and intermediate utilizations interpolate
+    linearly between the two enclosing measurements.
+
+    (The elastic scenario's engines never call this inside their hot
+    loops: they accumulate the exact :func:`table_segment` decomposition
+    and finalize through :func:`segment_energy_j`, which reproduces this
+    interpolation bit-for-bit — asserted by tests.)
+    """
+    u = min(max(util, 0.0), 1.0)
+    n = len(points)
+    x = u * (n - 1)
+    k = min(int(x), n - 2)
+    frac = x - k
+    return points[k] + (points[k + 1] - points[k]) * frac
+
+
 @dataclass
 class PowerModelLinear:
     """P(u) = idle + (max-idle)·u — the standard CloudSim linear model."""
@@ -43,6 +66,127 @@ class PowerModelLinear:
     def power(self, util: float) -> float:
         u = min(max(util, 0.0), 1.0)
         return self.idle_w + (self.max_w - self.idle_w) * u
+
+
+@dataclass
+class PowerModelCubic:
+    """P(u) = idle + (max-idle)·u³ — CloudSim's ``PowerModelCubic``
+    (dynamic power ∝ V²f with both scaling with load)."""
+    idle_w: float = 93.7
+    max_w: float = 135.0
+
+    def power(self, util: float) -> float:
+        u = min(max(util, 0.0), 1.0)
+        return self.idle_w + (self.max_w - self.idle_w) * u * u * u
+
+
+@dataclass(frozen=True)
+class PowerModelSpecTable:
+    """SPECpower-style measured table: power at 0%, 10%, …, 100% load,
+    linearly interpolated in between (``PowerModelSpecPower`` semantics)."""
+    points: Tuple[float, ...]
+
+    def __post_init__(self):
+        object.__setattr__(self, "points",
+                           tuple(float(p) for p in self.points))
+        if len(self.points) < 2:
+            raise ValueError("SPEC table needs ≥ 2 measurement points")
+
+    def power(self, util: float) -> float:
+        return interp_table(self.points, util)
+
+
+# The two SPECpower_ssj2008 tables every CloudSim power example ships
+# (Beloglazov & Buyya's evaluation hosts).
+SPEC_HP_ML110_G4 = (86.0, 89.4, 92.6, 96.0, 99.5, 102.0, 106.0, 108.0,
+                    112.0, 114.0, 117.0)
+SPEC_HP_ML110_G5 = (93.7, 97.0, 101.0, 105.0, 110.0, 116.0, 121.0, 125.0,
+                    129.0, 133.0, 135.0)
+
+
+@dataclass(frozen=True)
+class PowerModelDvfs:
+    """Discrete-step DVFS: the host clocks at the lowest frequency step
+    ``f ≥ u`` and dynamic power scales as ``f²·u`` (∝ V²f at proportional
+    voltage).  Monotone non-decreasing in utilization: linear within a
+    step, an upward jump at each step boundary.
+    """
+    idle_w: float = 86.0
+    max_w: float = 117.0
+    steps: Tuple[float, ...] = (0.4, 0.6, 0.8, 1.0)
+
+    def __post_init__(self):
+        object.__setattr__(self, "steps",
+                          tuple(float(f) for f in self.steps))
+        if not self.steps or tuple(sorted(self.steps)) != self.steps \
+                or self.steps[-1] != 1.0:
+            raise ValueError("DVFS steps must ascend and end at 1.0")
+
+    def frequency(self, util: float) -> float:
+        u = min(max(util, 0.0), 1.0)
+        for f in self.steps:
+            if f >= u:
+                return f
+        return self.steps[-1]
+
+    def power(self, util: float) -> float:
+        u = min(max(util, 0.0), 1.0)
+        f = self.frequency(u)
+        return self.idle_w + (self.max_w - self.idle_w) * (f * f) * u
+
+
+def power_points(model, n_points: int = 11) -> List[float]:
+    """Sample any power model onto an evenly spaced utilization table.
+
+    The elastic-datacenter scenario evaluates *all* host power through
+    :func:`interp_table` over these samples (its vec engine needs one
+    uniform SoA representation); the models' own ``power()`` stays the
+    ground truth for the consolidation workloads and the unit tests.
+    """
+    if n_points < 2:
+        raise ValueError("n_points must be ≥ 2")
+    return [model.power(k / (n_points - 1)) for k in range(n_points)]
+
+
+def table_segment(util: float, n_points: int) -> Tuple[int, float]:
+    """(segment index, fractional position) of a utilization in a table.
+
+    The exact-summation decomposition behind the elastic scenario's energy
+    accounting: interpolated power is ``t[s] + (t[s+1]-t[s])·frac``, so an
+    engine only needs to *count* segment hits and *sum* fracs — both exact
+    accumulations — and :func:`segment_energy_j` applies the table once at
+    the end.  ``frac`` comes from ``fmod`` (exact in IEEE-754, and equal to
+    the ``x - s`` the direct interpolation uses, since ``s = ⌊x⌋``); the
+    top endpoint folds into the last segment with ``frac = 1``.
+    """
+    x = util * (n_points - 1)
+    s = min(int(x), n_points - 2)
+    frac = 1.0 if x >= n_points - 1 else math.fmod(x, 1.0)
+    return s, frac
+
+
+def segment_energy_j(tables: "np.ndarray", seg_count: "np.ndarray",
+                     seg_frac: "np.ndarray", interval) -> "np.ndarray":
+    """Per-host energy (J) from segment-hit counts and frac sums.
+
+    ``tables [..., H, P]``, ``seg_count``/``seg_frac [..., H, P-1]`` →
+    ``[..., H]`` joules.  Σ_k interval·(t[s_k] + Δt[s_k]·frac_k)
+    regrouped by segment:  interval · Σ_s (count_s·t[s] + Δt[s]·Σfrac_s).
+
+    This host-side numpy routine is shared verbatim by the OO manager and
+    the vec engine — the one place the power table is multiplied in.  The
+    compiled vec loop deliberately contains **no** float multiply feeding
+    an add: XLA:CPU's fusion clones producers into consumers and may then
+    contract ``a + b·c`` into an FMA (observed as 1-ulp energy drift on
+    wide batches that no graph-level pin — optimization_barrier, bitcast,
+    select, roll — survives, since fusion re-derives the product from the
+    cloned multiply).  Pure counts and frac sums are exact accumulations,
+    immune by construction.
+    """
+    tables = np.asarray(tables, np.float64)
+    lo, hi = tables[..., :-1], tables[..., 1:]
+    watts = seg_count * lo + (hi - lo) * seg_frac
+    return watts.sum(axis=-1) * np.asarray(interval)[..., None]
 
 
 class PowerHost(Host):
@@ -320,6 +464,255 @@ def planetlab_like_trace(rng: random.Random, n_samples: int = 288) -> List[float
         x = min(max(x + rng.gauss(0, 0.05), 0.0), 1.0)
         out.append(min(max(0.7 * (base + diurnal) + 0.3 * x, 0.0), 1.0))
     return out
+
+
+# --------------------------------------------------------------------------
+# Power-aware elastic datacenter (the ``power_batch`` scenario's OO side)
+# --------------------------------------------------------------------------
+
+MODEL_MIXES = ("mixed", "linear", "cubic", "spec", "dvfs")
+
+
+def make_power_fleet(n_hosts: int, mix: str = "mixed") -> List[object]:
+    """One power model per host.  ``mixed`` cycles through all four model
+    families in two efficiency tiers (G4-class efficient, G5-class not),
+    so energy-aware host selection has a real gradient to exploit."""
+    mixed = [
+        PowerModelLinear(86.0, 117.0),
+        PowerModelCubic(93.7, 135.0),
+        PowerModelSpecTable(SPEC_HP_ML110_G4),
+        PowerModelDvfs(93.7, 135.0),
+        PowerModelSpecTable(SPEC_HP_ML110_G5),
+        PowerModelDvfs(86.0, 117.0),
+    ]
+    families = {
+        "mixed": mixed,
+        "linear": [PowerModelLinear(86.0, 117.0),
+                   PowerModelLinear(93.7, 135.0)],
+        "cubic": [PowerModelCubic(86.0, 117.0),
+                  PowerModelCubic(93.7, 135.0)],
+        "spec": [PowerModelSpecTable(SPEC_HP_ML110_G4),
+                 PowerModelSpecTable(SPEC_HP_ML110_G5)],
+        "dvfs": [PowerModelDvfs(86.0, 117.0),
+                 PowerModelDvfs(93.7, 135.0)],
+    }
+    try:
+        cycle = families[mix]
+    except KeyError:
+        raise ValueError(f"unknown model mix {mix!r}; "
+                         f"known: {MODEL_MIXES}") from None
+    return [cycle[i % len(cycle)] for i in range(n_hosts)]
+
+
+def elastic_demand_trace(rng: random.Random, n_samples: int) -> List[float]:
+    """Aggregate per-VM utilization trace in [0, 1]: triangle-wave diurnal
+    swing + bounded random walk.
+
+    Deliberately libm-free (``rng.uniform`` + arithmetic only, no
+    ``sin``/``gauss``): the trace is the sole stochastic input of the
+    elastic scenario, and keeping it free of platform-dependent
+    transcendental rounding keeps the committed golden fixtures bit-stable
+    across machines.
+    """
+    walk = rng.uniform(0.2, 0.8)
+    out = []
+    for k in range(n_samples):
+        phase = k / n_samples
+        diurnal = 1.0 - 2.0 * abs(phase - 0.5)          # 0 → 1 → 0 triangle
+        walk = min(max(walk + rng.uniform(-0.08, 0.08), 0.0), 1.0)
+        out.append(min(max(0.1 + 0.6 * diurnal + 0.3 * (walk - 0.5),
+                           0.02), 1.0))
+    return out
+
+
+class ElasticDatacenterManager:
+    """Threshold autoscaler over a fleet of :class:`PowerHost`\\ s — the OO
+    reference for the ``power_batch`` scenario (the decision/accounting
+    loop ``vec_power`` compiles into one ``lax.while_loop``).
+
+    Per interval k: every VM demands ``trace[k] · vm_mips``; VMs are spread
+    evenly (by count, in host-index order) over the active hosts; per-host
+    energy integrates the host's power table at its utilization; SLA
+    violation time accrues on every overloaded host.  At the interval's
+    end, when the cooldown has expired, one scaling action may fire:
+
+      * scale-out — some active host runs above ``up_thr`` and a host is
+        off: power on the *most efficient* inactive host (min watts/MIPS at
+        full load, the C2 ``MinimumScore`` policy; ties → lowest index);
+      * scale-in — every active host runs below ``lo_thr`` and more than
+        ``min_active`` hosts are on: drain the *least efficient* active
+        host (``MaximumScore``) and power it off.
+
+    Either action rebalances to the even split and counts each VM that
+    lands on a new host as one migration.
+
+    Bit-exactness contract (asserted by tests + the differential suite):
+    every float here is computed by the same IEEE-754 ops, in the same
+    order, as ``vec_power._simulate_one`` — utilization from a single
+    ``count · demand`` product (never a VM-by-VM sum), energy/SLA/unserved
+    tracked as *exact* accumulations (segment-hit counts, frac sums,
+    interval counts — see :func:`table_segment`) with every float multiply
+    deferred to the shared host-side finalizers (:func:`segment_energy_j`),
+    and per-host accumulators summed to scalars only via ``np.sum`` on the
+    host side.
+    """
+
+    def __init__(self, hosts: List[PowerHost], vms: List[Vm],
+                 trace: Sequence[float], *, vm_mips: float,
+                 up_thr: float = 0.8, lo_thr: float = 0.3,
+                 cooldown_k: int = 3, min_active: int = 1,
+                 init_active: Optional[int] = None,
+                 interval: float = 300.0, n_points: int = 11):
+        self.hosts = hosts
+        self.vms = vms
+        self.trace = [float(u) for u in trace]
+        self.vm_mips = float(vm_mips)
+        self.up_thr = float(up_thr)
+        self.lo_thr = float(lo_thr)
+        self.cooldown_k = int(cooldown_k)
+        self.min_active = max(int(min_active), 1)
+        self.interval = float(interval)
+        H = len(hosts)
+        if not 1 <= self.min_active <= H:
+            raise ValueError("min_active must be in [1, n_hosts]")
+        init_active = H if init_active is None else int(init_active)
+        if not self.min_active <= init_active <= H:
+            raise ValueError("init_active must be in [min_active, n_hosts]")
+        min_host_mips = min(h.caps.mips for h in hosts)
+        if self.vm_mips > min_host_mips:
+            raise ValueError(
+                f"vm_mips ({self.vm_mips}) must be ≤ every host's per-PE "
+                f"MIPS ({min_host_mips}): a VM must fit a time-shared host")
+        # SoA mirrors of the fleet (shared bit-for-bit with the vec engine).
+        self.caps = np.asarray([h.caps.total_mips for h in hosts], np.float64)
+        self.tables = np.asarray([power_points(h.power_model, n_points)
+                                  for h in hosts], np.float64)
+        self.eff = self.tables[:, -1] / self.caps      # watts/MIPS, full load
+        self._pick_on = most_power_efficient(lambda i: self.eff[i])
+        self._pick_off = least_power_efficient(lambda i: self.eff[i])
+        # exact accumulators (floats multiplied only in result())
+        self.n_points = int(n_points)
+        self.seg_count = np.zeros((H, n_points - 1), np.int32)
+        self.seg_frac = np.zeros((H, n_points - 1), np.float64)
+        self.over_count = np.zeros(H, np.int32)
+        self.unserved_mips = np.zeros(H, np.float64)
+        self.migrations = 0
+        self.scale_out_events = 0
+        self.scale_in_events = 0
+        self.cooldown = 0
+        self.events: List[Tuple[int, str, int]] = []   # (k, action, host)
+        # initial placement: first ``init_active`` hosts on, even VM split
+        for i, h in enumerate(hosts):
+            h.active = i < init_active
+        self._rebalance()
+
+    # -- placement ---------------------------------------------------------
+    def _even_targets(self) -> List[int]:
+        """Even VM split over active hosts, in host-index order: the first
+        ``V mod A`` active hosts take the extra VM."""
+        targets = [0] * len(self.hosts)
+        active = [i for i, h in enumerate(self.hosts) if h.active]
+        base = len(self.vms) // len(active)
+        rem = len(self.vms) - base * len(active)
+        for rank, i in enumerate(active):
+            targets[i] = base + (1 if rank < rem else 0)
+        return targets
+
+    def _rebalance(self) -> int:
+        """Move VMs (host-index order, excess hosts pop from the tail) until
+        every host holds its even-split target; returns VMs that moved."""
+        targets = self._even_targets()
+        pool: List[Vm] = [vm for vm in self.vms if vm.host is None]
+        for i, h in enumerate(self.hosts):
+            while len(h.guests) > targets[i]:
+                vm = h.guests[-1]
+                h.deallocate(vm)
+                pool.append(vm)
+        moved = 0
+        for i, h in enumerate(self.hosts):
+            while len(h.guests) < targets[i]:
+                vm = pool.pop()
+                if not h.try_allocate(vm):
+                    raise RuntimeError(f"rebalance failed on host {i}")
+                moved += 1
+        assert not pool, "rebalance lost VMs"
+        return moved
+
+    # -- one interval ------------------------------------------------------
+    def step(self, k: int) -> None:
+        H = len(self.hosts)
+        d = self.trace[k] * self.vm_mips               # per-VM MIPS demand
+        utils = [0.0] * H
+        for i, h in enumerate(self.hosts):
+            demand = len(h.guests) * d
+            cap = float(self.caps[i])
+            util = min(demand / cap, 1.0)
+            utils[i] = util
+            if h.active:
+                s, frac = table_segment(util, self.n_points)
+                self.seg_count[i, s] += 1
+                self.seg_frac[i, s] += frac
+            if demand > cap:
+                self.over_count[i] += 1
+            # max(demand, cap) - cap ≡ max(demand - cap, 0) — written so no
+            # multiply feeds the subtraction (the vec engine's FMA-immunity
+            # form; see segment_energy_j).
+            self.unserved_mips[i] += max(demand, cap) - cap
+        # -- autoscale decision (end of interval; affects interval k+1) ----
+        active_idx = [i for i, h in enumerate(self.hosts) if h.active]
+        n_act = len(active_idx)
+        can = self.cooldown == 0
+        any_over = any(utils[i] > self.up_thr for i in active_idx)
+        all_under = max(utils[i] for i in active_idx) < self.lo_thr
+        want_out = can and any_over and n_act < H
+        want_in = (can and not want_out and all_under
+                   and n_act > self.min_active)
+        if want_out:
+            i = self._pick_on.select(
+                [i for i in range(H) if not self.hosts[i].active])
+            self.hosts[i].active = True
+            self.scale_out_events += 1
+            self.events.append((k, "out", i))
+        elif want_in:
+            i = self._pick_off.select(active_idx)
+            self.hosts[i].active = False
+            self.scale_in_events += 1
+            self.events.append((k, "in", i))
+        if want_out or want_in:
+            self.migrations += self._rebalance()
+            self.cooldown = self.cooldown_k
+        else:
+            self.cooldown = max(self.cooldown - 1, 0)
+
+    # -- summary -----------------------------------------------------------
+    def result(self) -> Dict[str, object]:
+        energy_j = segment_energy_j(self.tables, self.seg_count,
+                                    self.seg_frac, self.interval)
+        return dict(
+            energy_wh=energy_j / 3600.0,
+            sla_s=self.over_count * np.float64(self.interval),
+            unserved_mips_s=self.unserved_mips * np.float64(self.interval),
+            migrations=np.int32(self.migrations),
+            scale_out_events=np.int32(self.scale_out_events),
+            scale_in_events=np.int32(self.scale_in_events),
+            final_active=np.int32(sum(1 for h in self.hosts if h.active)),
+            iterations=np.int32(len(self.trace)))
+
+
+def make_elastic_scenario(n_hosts: int, n_vms: int, *, seed: int,
+                          n_samples: int, host_mips: float, vm_mips: float,
+                          model_mix: str = "mixed"
+                          ) -> Tuple[List[PowerHost], List[Vm], List[float]]:
+    """Hosts (uniform capacity, mixed power models), identical VMs, and the
+    cell's demand trace — shared verbatim by the OO and vec backends."""
+    models = make_power_fleet(n_hosts, model_mix)
+    hosts = [PowerHost(num_pes=1, mips=host_mips, ram=1e12, bw=1e15,
+                       guest_scheduler="time", power_model=m)
+             for m in models]
+    vms = [Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=vm_mips,
+              ram=1.0, bw=1.0) for _ in range(n_vms)]
+    trace = elastic_demand_trace(random.Random(seed), n_samples)
+    return hosts, vms, trace
 
 
 def make_consolidation_scenario(n_hosts: int = 50, n_vms: int = 100, *,

@@ -114,3 +114,20 @@ def power_aware_best_fit(power_delta: Callable[[T, object], float],
                          guest) -> SelectionPolicy:
     """PABFD placement: host whose power increases least when adding ``guest``."""
     return MinimumScore(lambda h: power_delta(h, guest))
+
+
+# Energy-aware elastic-datacenter selectors (the ``power_batch`` scenario):
+# scale-out powers on the host that buys capacity cheapest in watts, scale-in
+# drains the host that burns the most watts per MIPS.  Both are again thin
+# Min/MaximumScore parameterizations; ``min()``/``max()`` return the *first*
+# extremal candidate, which is the documented tie-break (and what the vec
+# engine's first-occurrence argmin/argmax mirrors bit-for-bit).
+
+def most_power_efficient(watts_per_mips: Callable[[T], float]) -> SelectionPolicy:
+    """Scale-out pick: minimum watts/MIPS at full load (ties → first)."""
+    return MinimumScore(watts_per_mips)
+
+
+def least_power_efficient(watts_per_mips: Callable[[T], float]) -> SelectionPolicy:
+    """Scale-in pick: maximum watts/MIPS at full load (ties → first)."""
+    return MaximumScore(watts_per_mips)

@@ -1,8 +1,22 @@
 import os
 import sys
 
+import pytest
+
 # Tests run single-device (the dry-run's 512-device XLA flag is set only in
 # its own subprocess — see test_dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Repo root, so tests can import the benchmarks package (perf-gate tests).
 sys.path.insert(1, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate the committed golden-trace fixtures under "
+             "tests/golden/ instead of asserting against them")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")

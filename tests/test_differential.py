@@ -1,0 +1,213 @@
+"""Cross-backend differential suite — random configs, oo vs vec, one harness.
+
+Every batched scenario kind the substrate registers on *both* the ``oo``
+and ``vec`` backends (``fleet_batch``, ``workflow_batch``,
+``cloudlet_batch``, ``consolidation_batch``, ``power_batch``) runs here
+through one generic harness: a seeded generator draws a random scenario
+config, both backends run it, and a per-kind comparator asserts the
+agreement contract — **bit-exact** for deterministic scenarios
+(fleet-deterministic, power) and **ε-close** where the engines share the
+stochastic sample but not every float op (workflow streams, cloudlet
+time-sharing, consolidation decisions at 1e-12).
+
+The deterministic parametrization below always runs; when ``hypothesis``
+is installed the same checks also run property-style over drawn seeds
+(``test_differential_hypothesis``), so CI fuzzes fresh configs every run
+while a hypothesis-less machine still covers every kind.
+
+A vec engine that drifts from its OO reference — a changed decision, a
+reordered float reduction, a lost output key — fails here first.
+"""
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# -- comparators ---------------------------------------------------------------
+
+def _assert_exact(oo, vec, keys=None):
+    keys = keys if keys is not None else sorted(set(oo) & set(vec))
+    assert keys, "no comparable output keys"
+    for k in keys:
+        a, b = np.asarray(oo[k]), np.asarray(vec[k])
+        assert a.shape == b.shape, f"{k}: shape {a.shape} vs {b.shape}"
+        assert np.array_equal(a, b), f"{k}: oo/vec outputs differ"
+
+
+def _assert_close(a, b, key, rtol):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    assert np.array_equal(np.isfinite(a), np.isfinite(b)), \
+        f"{key}: finite-mask differs"
+    m = np.isfinite(a)
+    assert np.allclose(a[m], b[m], rtol=rtol), f"{key}: beyond rtol={rtol}"
+
+
+# -- per-kind cases ------------------------------------------------------------
+# Shapes stay fixed per kind (one vec compile across trials); the rng only
+# varies traced parameters, seeds, and topology within those shapes.
+
+def _gen_fleet(rng):
+    """Deterministic fleet configs (σ=0, no failures): bit-exact contract."""
+    from repro.core.cluster import FleetConfig, StepCost
+    cost = StepCost(compute_s=float(rng.uniform(0.5, 2.0)),
+                    memory_s=float(rng.uniform(0.2, 1.0)),
+                    collective_s=float(rng.uniform(0.1, 0.8)),
+                    overlap_collective=float(rng.uniform(0.0, 0.9)))
+    cfg = FleetConfig(n_nodes=8, n_spares=2, straggler_sigma=0.0,
+                      mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                      straggler_evict_factor=1e9)
+    return dict(cost=cost, cfg=cfg,
+                total_steps=int(rng.integers(40, 90)),
+                seeds=np.arange(4),
+                ckpt_every=rng.integers(5, 30, 4))
+
+
+def _run_fleet(backend, params):
+    return run_scenario("fleet_batch", backend=backend, **params)
+
+
+def _cmp_fleet(oo, vec):
+    _assert_exact(oo, vec, keys=["wallclock_s", "steps_done", "failures",
+                                 "restarts", "evictions", "lost_steps",
+                                 "stall_s", "ckpt_s", "ideal_s", "goodput"])
+
+
+def _gen_workflow(rng):
+    """Random 5-node DAGs on 3 guests with a Poisson activation stream."""
+    n = 5
+    edges = [(i, j) for i in range(n) for j in range(i + 1, n)
+             if rng.random() < 0.4]
+    return dict(nodes=[float(rng.integers(500, 4000)) for _ in range(n)],
+                edges=edges,
+                guest_of=[int(rng.integers(0, 3)) for _ in range(n)],
+                guest_mips=[1000.0, 1500.0, 800.0],
+                payload=float(rng.uniform(0.0, 2e6)),
+                activations=2, seed=int(rng.integers(0, 1000)),
+                arrival_rate=0.5)
+
+
+def _run_workflow(backend, params):
+    return run_scenario("workflow_batch", backend=backend, **params)
+
+
+def _cmp_workflow(oo, vec):
+    # Streams share the arrival sample but not every float op: ε contract
+    # (single-activation chains are bit-exact — covered in test_vec_workflow).
+    _assert_close(oo["finish"], vec["finish"], "finish", rtol=1e-9)
+    _assert_close(oo["makespans"], vec["makespans"], "makespans", rtol=1e-9)
+    _assert_exact(oo, vec, keys=["missed_deadline"])
+
+
+def _gen_cloudlet(rng):
+    B, G, C = 4, 3, 4
+    return dict(
+        length=(rng.uniform(100, 4000, (B, G, C))
+                * (rng.random((B, G, C)) < 0.8)),
+        pes=rng.integers(1, 3, (B, G, C)).astype(float),
+        submit=np.round(rng.uniform(0, 10, (B, G, C)), 3),
+        guest_mips=rng.uniform(500, 1500, (B, G)),
+        guest_pes=np.full((B, G), 2.0),
+        mode=("time", "space")[int(rng.integers(0, 2))])
+
+
+def _run_cloudlet(backend, params):
+    return dict(finish=run_scenario("cloudlet_batch", backend=backend,
+                                    **params))
+
+
+def _cmp_cloudlet(oo, vec):
+    _assert_close(oo["finish"], vec["finish"], "finish", rtol=1e-12)
+
+
+def _gen_consolidation(rng):
+    from repro.core.power import ALGORITHMS
+    return dict(algos=tuple(rng.choice(ALGORITHMS, 2)),
+                seeds=tuple(int(s) for s in rng.integers(0, 100, 2)),
+                n_hosts=8, n_vms=16, n_samples=int(rng.integers(8, 16)))
+
+
+def _run_consolidation(backend, params):
+    res = run_scenario("consolidation_batch", backend=backend, **params)
+    return dict(migrations=[r.migrations for r in res],
+                energy_kwh=[r.energy_kwh for r in res],
+                final_active_hosts=[r.final_active_hosts for r in res])
+
+
+def _cmp_consolidation(oo, vec):
+    # Decisions must match exactly; energy to 1e-12 (the vec manager's SoA
+    # utilization sweep reproduces the OO doubles — see consolidation_sim).
+    _assert_exact(oo, vec, keys=["migrations", "final_active_hosts"])
+    _assert_close(oo["energy_kwh"], vec["energy_kwh"], "energy_kwh",
+                  rtol=1e-12)
+
+
+def _gen_power(rng):
+    lo = float(rng.uniform(0.1, 0.4))
+    return dict(seeds=rng.integers(0, 1000, 3),
+                n_hosts=8, n_vms=int(rng.integers(8, 48)),
+                n_samples=int(rng.integers(16, 48)),
+                up_thr=float(rng.uniform(0.6, 0.95)), lo_thr=lo,
+                cooldown=int(rng.integers(0, 6)),
+                init_active=int(rng.integers(1, 9)),
+                model_mix=("mixed", "linear", "cubic", "spec", "dvfs")[
+                    int(rng.integers(0, 5))])
+
+
+def _run_power(backend, params):
+    return run_scenario("power_batch", backend=backend, **params)
+
+
+def _cmp_power(oo, vec):
+    _assert_exact(oo, vec)       # every output, bit-exact — the contract
+
+
+CASES = {
+    "fleet_batch": (_gen_fleet, _run_fleet, _cmp_fleet),
+    "workflow_batch": (_gen_workflow, _run_workflow, _cmp_workflow),
+    "cloudlet_batch": (_gen_cloudlet, _run_cloudlet, _cmp_cloudlet),
+    "consolidation_batch": (_gen_consolidation, _run_consolidation,
+                            _cmp_consolidation),
+    "power_batch": (_gen_power, _run_power, _cmp_power),
+}
+
+
+def _check(kind, seed):
+    gen, run, cmp = CASES[kind]
+    params = gen(np.random.default_rng(seed))
+    cmp(run("oo", params), run("vec", params))
+
+
+# -- always-on deterministic parametrization -----------------------------------
+
+@pytest.mark.parametrize("trial", range(3))
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_differential(kind, trial):
+    _check(kind, 7919 * trial + sum(map(ord, kind)))
+
+
+def test_covers_every_dual_backend_batched_kind():
+    """The suite must grow with the registry: any batched kind registered
+    on both oo and vec without a differential case fails here."""
+    from repro.core.backend import _SCENARIOS, _load_scenarios
+    _load_scenarios()
+    dual = {k for k, table in _SCENARIOS.items()
+            if k.endswith("_batch") and {"oo", "vec"} <= set(table)}
+    assert dual == set(CASES), \
+        f"differential coverage out of sync with registry: {dual ^ set(CASES)}"
+
+
+# -- hypothesis-driven property layer ------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(seed=st.integers(0, 2 ** 31 - 1))
+    @settings(max_examples=3, deadline=None)
+    @pytest.mark.parametrize("kind", sorted(CASES))
+    def test_differential_hypothesis(kind, seed):
+        _check(kind, seed)

@@ -1,0 +1,154 @@
+"""Golden-trace regression fixtures — one canonical config per scenario.
+
+Each fixture under ``tests/golden/`` freezes the outputs (and, for the
+elastic-power scenario, the autoscaler's event sequence) of one small
+canonical configuration of every batched scenario kind.  The tests replay
+the config and assert the engines still produce the committed numbers —
+integer/bool outputs exactly, floats to 1e-12 relative (absorbing
+platform-libm ulps in trace synthesis without letting a real regression
+through).
+
+Regenerate intentionally with::
+
+    pytest tests/test_golden.py --update-golden
+
+(The diff of the regenerated JSON *is* the review artifact: an engine
+change that moves any number shows up in version control.)
+"""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+
+# -- canonical configs ---------------------------------------------------------
+
+def _fleet_case():
+    from repro.core.cluster import FleetConfig, StepCost
+    cost = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
+                    overlap_collective=0.6)
+    cfg = FleetConfig(n_nodes=8, n_spares=2, straggler_sigma=0.08,
+                      repair_hours=0.5, degrade_mtbf_hours=1e9,
+                      straggler_evict_factor=1e9)
+    out = run_scenario(
+        "fleet_batch", backend="vec", cost=cost, cfg=cfg, total_steps=60,
+        seeds=np.arange(4), mtbf_hours=np.array([200.0, 20.0, 2.0, 0.5]),
+        ckpt_every=np.array([10, 50, 10, 50]))
+    return dict(config=dict(total_steps=60, n_nodes=8, seeds=4),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
+def _workflow_case():
+    out = run_scenario(
+        "workflow_batch", backend="vec",
+        nodes=[1000.0, 2000.0, 1500.0, 1000.0],
+        edges=[(0, 1), (0, 2), (1, 3), (2, 3)],
+        guest_of=[0, 1, 2, 0], guest_mips=[1000.0] * 3,
+        payload=list(np.linspace(0.0, 2e6, 6)), activations=3,
+        arrival_rate=0.5)
+    return dict(config=dict(dag="diamond", payload_lanes=6, activations=3),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
+def _cloudlet_case():
+    rng = np.random.default_rng(7)
+    B, G, C = 6, 3, 4
+    kw = dict(
+        length=(rng.uniform(100, 4000, (B, G, C))
+                * (rng.random((B, G, C)) < 0.8)),
+        pes=np.ones((B, G, C)),
+        submit=rng.uniform(0, 10, (B, G, C)),
+        guest_mips=rng.uniform(500, 1500, (B, G)),
+        guest_pes=np.full((B, G), 2.0))
+    finish = run_scenario("cloudlet_batch", backend="vec", **kw)
+    return dict(config=dict(B=B, G=G, C=C, gen="default_rng(7)"),
+                outputs=dict(finish=np.asarray(finish).tolist()))
+
+
+def _consolidation_case():
+    res = run_scenario("consolidation_batch", backend="oo",
+                       algos=("ThrMu", "MadMmt"), seeds=(1, 2),
+                       n_hosts=8, n_vms=16, n_samples=12)
+    return dict(
+        config=dict(algos=["ThrMu", "MadMmt"], seeds=[1, 2], n_hosts=8,
+                    n_vms=16, n_samples=12),
+        outputs=dict(
+            migrations=[r.migrations for r in res],
+            energy_kwh=[r.energy_kwh for r in res],
+            final_active_hosts=[r.final_active_hosts for r in res]))
+
+
+def _power_case():
+    from repro.core.power import ElasticDatacenterManager, make_elastic_scenario
+    cfg = dict(seeds=[0, 1], n_hosts=8, n_vms=32, n_samples=48,
+               up_thr=0.8, lo_thr=0.3, cooldown=2)
+    out = run_scenario("power_batch", backend="oo", **cfg)
+    # The autoscaler's event sequence (interval, action, host) for cell 0 —
+    # the "trace" part of the golden trace.
+    hosts, vms, trace = make_elastic_scenario(
+        cfg["n_hosts"], cfg["n_vms"], seed=0, n_samples=cfg["n_samples"],
+        host_mips=8000.0, vm_mips=1000.0)
+    mgr = ElasticDatacenterManager(hosts, vms, trace, vm_mips=1000.0,
+                                   up_thr=0.8, lo_thr=0.3, cooldown_k=2)
+    for k in range(cfg["n_samples"]):
+        mgr.step(k)
+    return dict(config=cfg,
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()},
+                events=[[k, a, h] for k, a, h in mgr.events])
+
+
+CASES = {
+    "fleet_batch": _fleet_case,
+    "workflow_batch": _workflow_case,
+    "cloudlet_batch": _cloudlet_case,
+    "consolidation_batch": _consolidation_case,
+    "power_batch": _power_case,
+}
+
+
+# -- replay --------------------------------------------------------------------
+
+def _assert_outputs_match(stored, current, kind):
+    assert sorted(stored) == sorted(current), \
+        f"{kind}: output keys changed ({sorted(current)})"
+    for key, want in stored.items():
+        got = np.asarray(current[key])
+        want = np.asarray(want)
+        assert got.shape == want.shape, f"{kind}/{key}: shape changed"
+        if want.dtype.kind in "fc":
+            assert np.allclose(got, want, rtol=1e-12, atol=1e-12), \
+                f"{kind}/{key}: drifted from golden fixture"
+        else:
+            assert np.array_equal(got, want), \
+                f"{kind}/{key}: changed vs golden fixture"
+
+
+@pytest.mark.parametrize("kind", sorted(CASES))
+def test_golden_trace(kind, update_golden):
+    path = GOLDEN_DIR / f"{kind}.json"
+    record = CASES[kind]()
+    if update_golden:
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(record, indent=1, sort_keys=True) + "\n")
+        pytest.skip(f"regenerated {path.name}")
+    assert path.exists(), \
+        f"missing golden fixture {path}; run pytest --update-golden"
+    stored = json.loads(path.read_text())
+    assert stored["config"] == json.loads(json.dumps(record["config"])), \
+        f"{kind}: canonical config changed — regenerate with --update-golden"
+    _assert_outputs_match(stored["outputs"],
+                          {k: np.asarray(v)
+                           for k, v in record["outputs"].items()}, kind)
+    if "events" in stored:
+        assert record["events"] == [list(e) for e in stored["events"]], \
+            f"{kind}: autoscaler event sequence changed vs golden fixture"
+
+
+def test_update_flag_is_off_by_default(request):
+    """Committed fixtures are the contract — the flag must be explicit."""
+    assert request.config.getoption("--update-golden") in (False, True)

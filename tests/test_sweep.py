@@ -264,3 +264,77 @@ def test_resolve_use_pallas_force():
     from repro.kernels.ops import resolve_use_pallas
     assert resolve_use_pallas(False) is False
     assert resolve_use_pallas("force") is True
+
+
+# -- edge cases: chunk clamping, single lane, degenerate bucketing, errors ----
+
+def test_chunk_size_larger_than_lane_count_clamps():
+    """chunk_size beyond the grid is clamped to one full (monolithic)
+    chunk — same bits, sane report."""
+    mono = _fleet(chunk_size=B)
+    over, rep = _fleet(chunk_size=10 * B, with_report=True)
+    assert rep.n_chunks == 1 and rep.chunk_size == B
+    for k in mono:
+        assert np.array_equal(mono[k], over[k]), k
+
+
+def test_single_lane_sweep():
+    out, rep = simulate_fleet_batch(COST, FLEET_CFG, 60, seeds=[3],
+                                    mtbf_hours=20.0, with_report=True)
+    assert rep.n_cells == 1 and rep.n_chunks == 1 and rep.chunk_size == 1
+    assert out["goodput"].shape == (1,)
+    assert rep.active_lane_fraction == 1.0          # one lane never idles
+
+
+def test_identical_lanes_bucketing_degenerate():
+    """All lanes predicted identical: the auto policy stays monolithic
+    (bucketing can't help), and every lane's result is the same bits."""
+    from repro.core.sweep import execute_sweep
+
+    def fn(params):
+        (x,) = params
+        import jax.numpy as jnp
+        return {"y": x * 2.0, "iterations": jnp.ones(x.shape[0],
+                                                     jnp.int32) * 5}
+
+    x = np.full(48, 7.0)
+    out, rep = execute_sweep(fn, (x,), predicted_cost=np.full(48, 3.0))
+    assert not rep.bucketed and rep.n_chunks == 1 and rep.chunk_size == 48
+    assert (out["y"] == 14.0).all()
+    assert rep.active_lane_fraction == 1.0          # uniform iterations
+    # An *explicit* chunk_size with a predicted_cost reports bucketed=True
+    # even over identical lanes — the sort ran, it just reorders nothing —
+    # and the outputs stay bit-identical to the monolithic dispatch.
+    chunked, rep2 = execute_sweep(fn, (x,), chunk_size=7,
+                                  predicted_cost=np.full(48, 3.0))
+    assert rep2.bucketed and rep2.n_chunks == 7     # ordering is a no-op
+    assert np.array_equal(out["iterations"], chunked["iterations"])
+    assert np.array_equal(out["y"], chunked["y"])
+
+
+def test_run_sweep_rejection_messages():
+    """Unregistered kind/backend pairs reject with an actionable message —
+    naming the kind, the backend, and where the scenario IS available."""
+    from repro.core.backend import (BackendError, ScenarioUnsupported,
+                                    _SCENARIOS, run_scenario, scenario)
+    with pytest.raises(BackendError, match="unknown scenario kind"):
+        run_sweep("warp_drive", backend="vec")
+    with pytest.raises(BackendError, match="unknown backend"):
+        run_sweep("fleet_batch", backend="quantum")
+    try:
+        @scenario("_sweep_probe", backends=("oo",))
+        def _probe(backend, **kw):
+            return "bare result"                     # no SweepReport
+        with pytest.raises(ScenarioUnsupported,
+                           match=r"_sweep_probe.*no 'vec' implementation"
+                                 r".*available on: \['oo'\]"):
+            run_sweep("_sweep_probe", backend="vec")
+        # a handler that swallows with_report but returns no report must
+        # also be rejected — never a bare result the caller mis-unpacks
+        with pytest.raises(ScenarioUnsupported,
+                           match="no sweep-aware path"):
+            run_sweep("_sweep_probe", backend="oo")
+        assert run_scenario("_sweep_probe", backend="oo",
+                            with_report=False) == "bare result"
+    finally:
+        _SCENARIOS.pop("_sweep_probe", None)
