@@ -14,6 +14,7 @@ Benchmarks (paper artifact → module):
   beyond    → workflow_sweep     (vmap case-study DAG grid vs OO loop → BENCH_workflow.json)
   beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap → BENCH_sweep.json)
   beyond    → power_sweep        (elastic-datacenter energy/SLA sweep vs OO loop → BENCH_power.json)
+  beyond    → netdc_sweep        (multi-DC routing sweep vs OO loop → BENCH_netdc.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
 ``check_regression.py`` (not a suite) gates the recorded speedups in CI.
@@ -33,8 +34,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, consolidation,
-                   engine_micro, power_sweep, sweep_runner, vec_speedup,
-                   workflow_sweep)
+                   engine_micro, netdc_sweep, power_sweep, sweep_runner,
+                   vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -45,6 +46,7 @@ def main() -> None:
         "workflow_sweep": workflow_sweep.run,
         "sweep_runner": sweep_runner.run,
         "power_sweep": power_sweep.run,
+        "netdc_sweep": netdc_sweep.run,
     }
     try:
         from . import dryrun_report

@@ -6,7 +6,7 @@
 # the standardized SimBackend substrate (see ARCHITECTURE.md).
 from .backend import (BackendError, ScenarioUnsupported, SimBackend,
                       available_backends, get_backend, run_scenario,
-                      run_sweep)
+                      run_sweep, supporting_backends)
 from .sweep import SweepReport
 from .engine import SimEntity, Simulation
 from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
@@ -16,6 +16,7 @@ from .scheduler import (CloudletScheduler, CloudletSchedulerSpaceShared,
                         CloudletSchedulerTimeShared)
 from .selection import (FirstFit, MaximumScore, MinimumScore, RandomSelection,
                         SelectionPolicy)
-from .network import NetworkTopology, Packet, theoretical_makespan
+from .network import (InterDCTopology, NetworkTopology, Packet,
+                      store_and_forward_delay, theoretical_makespan)
 from .workflow import NetworkCloudlet, Stage, StageKind, chain_dag, generic_dag
 from .datacenter import Broker, Datacenter

@@ -21,9 +21,9 @@ Two registries:
     ``6g``/``7g`` aliases everywhere a backend name is taken);
   * **scenarios** — scenario kinds (``"consolidation"``, ``"fleet"``,
     ``"fleet_batch"``, ``"case_study"``, ``"cloudlet_batch"``,
-    ``"workflow_batch"``, ``"consolidation_batch"``, ``"power_batch"``)
-    registered by their home modules via the :func:`scenario` decorator,
-    keyed per backend.
+    ``"workflow_batch"``, ``"consolidation_batch"``, ``"power_batch"``,
+    ``"netdc_batch"``) registered by their home modules via the
+    :func:`scenario` decorator, keyed per backend.
 
 The single entry point is ``run_scenario(kind, backend=..., **params)`` (or
 ``SimBackend.run_scenario``): modules and benchmarks select engines through
@@ -135,6 +135,9 @@ register_backend(SimBackend(
 _SCENARIOS: Dict[str, Dict[str, Callable[..., Any]]] = {}
 
 # Modules that register scenario handlers on import (lazy, cycle-free).
+# OO reference implementations live with their OO engines (cluster,
+# scheduler, workflow, power, netdc); each vec module is a VecEngine
+# definition (see repro.core.vec_engine) registering the "vec" handlers.
 _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.consolidation_sim",
     "repro.core.cluster",
@@ -143,6 +146,8 @@ _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.vec_scheduler",
     "repro.core.vec_workflow",
     "repro.core.vec_power",
+    "repro.core.netdc",
+    "repro.core.vec_netdc",
 )
 _loaded = False
 
@@ -174,6 +179,16 @@ def scenario_kinds() -> List[str]:
     return sorted(_SCENARIOS)
 
 
+def supporting_backends(kind: str) -> List[str]:
+    """Registered backend names that implement ``kind`` (``"*"`` handlers
+    expanded to every backend)."""
+    _load_scenarios()
+    table = _SCENARIOS.get(kind, {})
+    if "*" in table:
+        return available_backends()
+    return sorted(b for b in table if b in _BACKENDS)
+
+
 def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
     _load_scenarios()
     table = _SCENARIOS.get(kind)
@@ -182,9 +197,14 @@ def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
             f"unknown scenario kind {kind!r}; known: {scenario_kinds()}")
     handler = table.get(backend_name, table.get("*"))
     if handler is None:
+        supported = supporting_backends(kind)
+        aliases = ", ".join(f"{a!r}→{c!r}" for a, c in sorted(_ALIASES.items())
+                            if c in supported)
         raise ScenarioUnsupported(
-            f"scenario {kind!r} has no {backend_name!r} implementation "
-            f"(available on: {sorted(table)})")
+            f"scenario {kind!r} is not implemented on backend "
+            f"{backend_name!r}; supported backends: "
+            f"{', '.join(repr(b) for b in supported) or 'none'}"
+            + (f" (aliases: {aliases})" if aliases else ""))
     return handler
 
 

@@ -287,3 +287,36 @@ def simulate_training_run(cost: StepCost, cfg: FleetConfig,
     return get_backend(backend).run_scenario(
         "fleet", cost=cost, cfg=cfg, total_steps=total_steps,
         max_wallclock_s=max_wallclock_s)
+
+
+@scenario("fleet_batch", backends=("legacy", "oo"))
+def _fleet_batch_oo(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
+                    total_steps: int = 2000,
+                    seeds=(0,), mtbf_hours=None,
+                    ckpt_every=None, straggler_sigma=None,
+                    max_wallclock_s: float = 30 * 86400.0,
+                    **_ignored):
+    """Reference semantics for the batched sweep: loop the OO FleetSim over
+    every scenario point (what ``vec_cluster``'s engine replaces with one
+    vmap call).  Same batch contract as the vec handler: seeds broadcast
+    against the sweep axes."""
+    from dataclasses import replace
+    seeds = np.atleast_1d(np.asarray(seeds))
+    axes = dict(mtbf_hours_node=mtbf_hours, ckpt_every_steps=ckpt_every,
+                straggler_sigma=straggler_sigma)
+    b = int(np.broadcast_shapes(
+        seeds.shape, *(np.atleast_1d(v).shape for v in axes.values()
+                       if v is not None))[0])
+    seeds = np.broadcast_to(seeds, (b,))
+    rows = []
+    for i in range(b):
+        over = {k: np.broadcast_to(np.atleast_1d(v), (b,))[i].item()
+                for k, v in axes.items() if v is not None}
+        c = replace(cfg, seed=int(seeds[i]), **over)
+        rows.append(_fleet_scenario(backend, cost=cost, cfg=c,
+                                    total_steps=total_steps,
+                                    max_wallclock_s=max_wallclock_s))
+    return {k: np.asarray([getattr(r, k) for r in rows])
+            for k in ("wallclock_s", "steps_done", "failures", "restarts",
+                      "evictions", "lost_steps", "stall_s", "ckpt_s",
+                      "ideal_s", "goodput")}

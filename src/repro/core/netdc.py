@@ -1,0 +1,265 @@
+"""Multi-datacenter cloudlet routing — the ``netdc_batch`` scenario.
+
+A broker receives a stream of cloudlets ("jobs"), each originating at a
+source datacenter, and routes every job — at its submission event — to the
+geo-distributed datacenter that minimizes its *locality-weighted completion
+time*: WAN transfer delay over the inter-DC latency/bandwidth matrix
+(:class:`repro.core.network.InterDCTopology`, the same closed-form
+store-and-forward arithmetic as the rack topology), queueing behind the
+work already committed to that datacenter (single FIFO server at
+``dc_mips[d]``), and execution time.  A ``locality_weight`` > 1 penalizes
+remote placement; an ``offline_dc`` masks a datacenter out of the candidate
+set (regional outage).
+
+This module owns everything both backends share — the libm-free workload
+generator (golden-fixture bit-stability across platforms), the per-cell
+routing tables (transfer/execution/bias matrices, all precomputed host-side
+so neither backend multiplies inside its decision loop — no FMA-contraction
+hazard, cf. ``vec_power``), the routing rule itself, and the host-side
+summary statistics — plus the OO reference: a broker entity driving
+CLOUDLET_SUBMIT/CLOUDLET_RETURN events through a ``Simulation``.  The vec
+implementation (:mod:`repro.core.vec_netdc`) is a thin
+:class:`~repro.core.vec_engine.VecEngine` definition over the same tables.
+
+Exactness contract (asserted by the differential suite and golden
+fixtures): ``oo`` and ``vec`` agree **bit-exactly** on every output — the
+decision arithmetic is adds/max/compares over shared precomputed f64
+tables, and ties break to the lowest datacenter index on both paths.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+from .backend import SimBackend, scenario
+from .engine import SimEntity, Simulation
+from .events import Event, Tag
+from .network import InterDCTopology
+
+
+def default_dc_mips(n_dcs: int) -> np.ndarray:
+    """Heterogeneous default capacities: four repeating size classes."""
+    return np.asarray([4000.0 + 1500.0 * (d % 4) for d in range(n_dcs)],
+                      np.float64)
+
+
+def netdc_workload(rng: random.Random, n_jobs: int, n_dcs: int, *,
+                   mean_gap_s: float, length_mi, payload_mb) -> Dict[str, Any]:
+    """One seed's job stream: nondecreasing submit times (uniform gaps),
+    uniform source DC, uniform length (MI) and payload (bytes).
+
+    Deliberately libm-free (``rng.uniform``/``randrange`` + arithmetic, no
+    ``expovariate``): the stream is the scenario's sole stochastic input,
+    and avoiding platform-dependent transcendental rounding keeps the
+    committed golden fixtures bit-stable across machines.
+    """
+    t = 0.0
+    submit, src, length, payload = [], [], [], []
+    for j in range(n_jobs):
+        if j:
+            t += rng.uniform(0.0, 2.0 * mean_gap_s)
+        submit.append(t)
+        src.append(rng.randrange(n_dcs))
+        length.append(rng.uniform(*length_mi))
+        payload.append(rng.uniform(*payload_mb) * 1e6)
+    return dict(submit=np.asarray(submit, np.float64),
+                src=np.asarray(src, np.int32),
+                length=np.asarray(length, np.float64),
+                payload=np.asarray(payload, np.float64))
+
+
+@dataclass(frozen=True)
+class NetdcCell:
+    """One cell's precomputed routing tables — shared verbatim by the OO
+    broker and the vec engine, so decision bit-identity reduces to both
+    backends evaluating the same adds/max/compares over the same doubles."""
+    submit: np.ndarray        # [J] f64 nondecreasing submission times
+    src: np.ndarray           # [J] i32 source DC per job
+    length: np.ndarray        # [J] f64 MI
+    payload: np.ndarray       # [J] f64 bytes
+    xfer: np.ndarray          # [J, D] f64 WAN transfer delay to each DC
+    exec_s: np.ndarray        # [J, D] f64 execution time on each DC
+    bias: np.ndarray          # [J, D] f64 (locality_weight - 1) · xfer
+    online: np.ndarray        # [D] bool candidate mask
+
+
+def build_cell(seed: int, n_dcs: int, n_jobs: int, dc_mips: np.ndarray,
+               topo: InterDCTopology, locality_weight: float,
+               offline_dc: int, *, mean_gap_s: float, length_mi,
+               payload_mb) -> NetdcCell:
+    """Workload + routing tables for one (seed, weight, outage) cell."""
+    wl = netdc_workload(random.Random(int(seed)), n_jobs, n_dcs,
+                        mean_gap_s=mean_gap_s, length_mi=length_mi,
+                        payload_mb=payload_mb)
+    xfer = topo.delay_rows(wl["src"], wl["payload"])
+    online = np.ones(n_dcs, bool)
+    if offline_dc >= 0:
+        online[offline_dc] = False
+    return NetdcCell(
+        submit=wl["submit"], src=wl["src"], length=wl["length"],
+        payload=wl["payload"], xfer=xfer,
+        exec_s=wl["length"][:, None] / dc_mips[None, :],
+        bias=(float(locality_weight) - 1.0) * xfer,
+        online=online)
+
+
+def route_job(free: Sequence[float], arr, exec_row, bias_row, online):
+    """The routing rule, scalar form (the OO broker's inner loop): pick the
+    first-occurrence argmin of ``max(free[d], arr[d]) + exec[d] + bias[d]``
+    over online DCs.  The vec engine evaluates the identical expression
+    vectorized (``ops.argmin``); both tie-break to the lowest index."""
+    best, best_score, best_fin = -1, np.inf, np.inf
+    for d in range(len(free)):
+        if not online[d]:
+            continue
+        start = free[d] if free[d] > arr[d] else arr[d]
+        fin = start + exec_row[d]
+        score = fin + bias_row[d]
+        if score < best_score:
+            best, best_score, best_fin = d, score, fin
+    return best, best_fin
+
+
+def summarize(out: Dict[str, Any], cells: Sequence[NetdcCell]
+              ) -> Dict[str, Any]:
+    """Batch-level metrics from per-job ``finish``/``dst`` — one shared
+    numpy routine so every aggregate (pairwise sums, argmax tie-breaks) is
+    computed identically for both backends."""
+    out = dict(out)
+    finish = out["finish"] = np.asarray(out["finish"], np.float64)
+    dst = out["dst"] = np.asarray(out["dst"], np.int64)
+    submit = np.stack([c.submit for c in cells])
+    src = np.stack([c.src for c in cells]).astype(np.int64)
+    payload = np.stack([c.payload for c in cells])
+    xfer = np.stack([c.xfer for c in cells])
+    exec_s = np.stack([c.exec_s for c in cells])
+    d_iota = np.arange(xfer.shape[-1])
+    remote = dst != src
+    out["makespan"] = np.max(finish, axis=-1)
+    out["response_total_s"] = np.sum(finish - submit, axis=-1)
+    out["remote_jobs"] = np.sum(remote, axis=-1)
+    out["remote_bytes"] = np.sum(np.where(remote, payload, 0.0), axis=-1)
+    out["xfer_total_s"] = np.sum(
+        np.take_along_axis(xfer, dst[..., None], -1)[..., 0], axis=-1)
+    out["dc_jobs"] = np.sum(dst[:, :, None] == d_iota, axis=1)
+    out["dc_busy_s"] = np.sum(
+        np.where(dst[:, :, None] == d_iota, exec_s, 0.0), axis=1)
+    out["busiest_dc"] = np.argmax(out["dc_busy_s"], axis=-1)
+    return out
+
+
+
+
+def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
+                hop_latency_s: float, locality_weight, offline_dc: int,
+                mean_gap_s: float, length_mi, payload_mb):
+    """Validated per-cell table construction — the shared front half of
+    both backends' batch handlers."""
+    if n_jobs < 1 or n_dcs < 1:
+        raise ValueError("netdc_batch needs n_jobs ≥ 1 and n_dcs ≥ 1")
+    dc_mips = (default_dc_mips(n_dcs) if dc_mips is None
+               else np.asarray(dc_mips, np.float64))
+    if dc_mips.shape != (n_dcs,) or not np.all(dc_mips > 0):
+        raise ValueError(f"dc_mips must be {n_dcs} positive capacities")
+    from .vec_engine import broadcast_cells
+    seeds, axes, b = broadcast_cells(seeds, dict(
+        locality_weight=locality_weight, offline_dc=offline_dc))
+    weights = axes["locality_weight"].astype(np.float64)
+    offs = axes["offline_dc"].astype(np.int64)
+    if b and (np.max(offs) >= n_dcs or
+              (n_dcs == 1 and np.any(offs >= 0))):
+        raise ValueError("offline_dc must be < n_dcs and leave at least "
+                         "one datacenter online")
+    topo = InterDCTopology(n_dcs, link_bw=link_bw,
+                           hop_latency_s=hop_latency_s)
+    cells = [build_cell(int(seeds[i]), n_dcs, n_jobs, dc_mips, topo,
+                        float(weights[i]), int(offs[i]),
+                        mean_gap_s=mean_gap_s, length_mi=length_mi,
+                        payload_mb=payload_mb)
+             for i in range(b)]
+    return cells, b
+
+
+def empty_netdc_outputs(n_dcs: int) -> Dict[str, np.ndarray]:
+    zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int64)
+    zjf, zji = np.empty((0, 0), np.float64), np.empty((0, 0), np.int64)
+    return dict(finish=zjf, dst=zji, makespan=zf, response_total_s=zf,
+                remote_jobs=zi, remote_bytes=zf, xfer_total_s=zf,
+                dc_jobs=np.empty((0, n_dcs), np.int64),
+                dc_busy_s=np.empty((0, n_dcs), np.float64), busiest_dc=zi,
+                iterations=np.empty((0,), np.int32))
+
+
+# -- OO reference: an event-driven broker inside a Simulation ------------------
+
+class MultiDCBroker(SimEntity):
+    """Routes each job at its CLOUDLET_SUBMIT event and collects its
+    CLOUDLET_RETURN — the discrete-event reference the vec engine compiles
+    into one ``lax.while_loop``."""
+
+    def __init__(self, sim: Simulation, cell: NetdcCell):
+        super().__init__(sim, "netdc-broker")
+        self.cell = cell
+        n = len(cell.submit)
+        self.free = [0.0] * cell.xfer.shape[1]
+        self.finish = np.full(n, np.inf)
+        self.dst = np.full(n, -1, np.int64)
+        self.completed = 0
+
+    def start(self) -> None:
+        for j, t in enumerate(self.cell.submit):
+            self.sim.schedule(float(t), Tag.CLOUDLET_SUBMIT, self, data=j)
+
+    def process_event(self, ev: Event) -> None:
+        c = self.cell
+        if ev.tag is Tag.CLOUDLET_SUBMIT:
+            j = ev.data
+            arr = c.submit[j] + c.xfer[j]          # [D] WAN arrival times
+            d, fin = route_job(self.free, arr, c.exec_s[j], c.bias[j],
+                               c.online)
+            self.free[d] = fin
+            self.dst[j] = d
+            self.finish[j] = fin
+            self.sim.schedule(float(fin), Tag.CLOUDLET_RETURN, self, data=j)
+        elif ev.tag is Tag.CLOUDLET_RETURN:
+            self.completed += 1
+
+
+@scenario("netdc_batch", backends=("legacy", "oo"))
+def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
+                    n_jobs: int = 64, dc_mips=None,
+                    locality_weight=1.0, offline_dc=-1,
+                    link_bw: float = 10e9, hop_latency_s: float = 0.02,
+                    mean_gap_s: float = 2.0, length_mi=(2e3, 2e4),
+                    payload_mb=(10.0, 200.0),
+                    chunk_size: Optional[int] = None,
+                    with_report: bool = False, **_ignored):
+    """Reference semantics for ``netdc_batch``: one event-driven broker
+    simulation per cell, through the sweep layer's host path (so
+    ``run_sweep`` sees a populated report)."""
+    from .sweep import run_host_sweep
+    from .vec_engine import empty_report
+    cells, b = build_cells(
+        seeds=seeds, n_dcs=n_dcs, n_jobs=n_jobs, dc_mips=dc_mips,
+        link_bw=link_bw, hop_latency_s=hop_latency_s,
+        locality_weight=locality_weight, offline_dc=offline_dc,
+        mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb)
+    if b == 0:
+        out = empty_netdc_outputs(n_dcs)
+        del out["iterations"]                    # the vec loop's counter
+        return (out, empty_report(donate=False)) if with_report else out
+
+    def run_cell(i: int):
+        sim = backend.make_simulation()
+        broker = MultiDCBroker(sim, cells[i])
+        sim.run()
+        assert broker.completed == n_jobs, "netdc: lost CLOUDLET_RETURNs"
+        return dict(finish=broker.finish, dst=broker.dst)
+
+    rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
+    out = summarize({k: np.stack([r[k] for r in rows]) for k in rows[0]},
+                    cells)
+    return (out, report) if with_report else out

@@ -20,7 +20,9 @@ import numpy as np
 from dataclasses import dataclass, field
 from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 
+from .engine import SimEntity
 from .entities import Cloudlet, CoreAttributes, GuestEntity, Host, HostEntity, Vm
+from .events import Tag
 from .scheduler import CloudletSchedulerTimeShared
 from .selection import (MaximumScore, MinimumScore, RandomSelection,
                         SelectionPolicy, least_power_efficient,
@@ -745,3 +747,127 @@ def make_consolidation_scenario(n_hosts: int = 50, n_vms: int = 100, *,
         if not placed:
             raise RuntimeError("scenario over-packed: increase hosts")
     return hosts, vms
+
+
+# -- power_batch: shared accounting + the OO (legacy/oo) reference -------------
+
+def _finalize(out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Datacenter-level totals from the per-host accumulators.
+
+    Shared by the oo and vec handlers so the scalar reductions are the same
+    ``np.sum`` (pairwise) over bit-identical per-host arrays — keeping the
+    totals in the bit-exactness contract too.
+    """
+    out = dict(out)
+    out["energy_total_wh"] = np.sum(out["energy_wh"], axis=-1)
+    out["sla_total_s"] = np.sum(out["sla_s"], axis=-1)
+    out["unserved_total_mips_s"] = np.sum(out["unserved_mips_s"], axis=-1)
+    return out
+
+
+def _broadcast_cells(seeds, axes: Dict):
+    """Broadcast ``seeds`` against the sweep axes → (seeds[B], axes[B], B)
+    (the substrate's shared batch contract)."""
+    from .vec_engine import broadcast_cells
+    return broadcast_cells(seeds, axes)
+
+
+def _empty_outputs(n_hosts: int):
+    zf = np.empty((0, n_hosts), np.float64)
+    zi = np.empty((0,), np.int32)
+    return _finalize(dict(
+        energy_wh=zf, sla_s=zf, unserved_mips_s=zf, migrations=zi,
+        scale_out_events=zi, scale_in_events=zi, final_active=zi,
+        iterations=zi))
+
+
+def _finalize_accumulators(out: Dict[str, np.ndarray], tables: np.ndarray,
+                           interval) -> Dict[str, np.ndarray]:
+    """Exact loop accumulators → public per-host metrics (host-side numpy;
+    op-for-op what ``ElasticDatacenterManager.result`` computes)."""
+    interval = np.float64(interval)
+    out = dict(out)
+    energy_j = segment_energy_j(tables, out.pop("seg_count"),
+                                out.pop("seg_frac"), interval)
+    out["energy_wh"] = energy_j / 3600.0
+    out["sla_s"] = out.pop("over_count") * interval
+    out["unserved_mips_s"] = out.pop("unserved_mips") * interval
+    return out
+
+
+class _AutoscaleEntity(SimEntity):
+    """Periodic AUTOSCALE driver running the elastic manager inside a
+    Simulation (the legacy/oo engine flavours differ only in queue
+    mechanics — decisions and accounting live in the manager)."""
+
+    def __init__(self, sim, mgr: "ElasticDatacenterManager",
+                 n_intervals: int):
+        super().__init__(sim, "autoscaler")
+        self.mgr = mgr
+        self.n_intervals = n_intervals
+        self._k = 0
+
+    def start(self) -> None:
+        if self.n_intervals > 0:
+            self.sim.schedule(0.0, Tag.AUTOSCALE, self)
+
+    def process_event(self, ev) -> None:
+        if ev.tag is Tag.AUTOSCALE:
+            self.mgr.step(self._k)
+            self._k += 1
+            if self._k < self.n_intervals:
+                self.sim.schedule(ev.time + self.mgr.interval, Tag.AUTOSCALE,
+                                  self)
+
+
+def _run_elastic_cell(backend, *, seed: int, n_hosts: int,
+                      n_vms: int, n_samples: int, interval: float,
+                      host_mips: float, vm_mips: float, up_thr: float,
+                      lo_thr: float, cooldown: int, min_active: int,
+                      init_active, model_mix: str, n_points: int) -> Dict:
+    hosts, vms, trace = make_elastic_scenario(
+        n_hosts, n_vms, seed=seed, n_samples=n_samples,
+        host_mips=host_mips, vm_mips=vm_mips, model_mix=model_mix)
+    mgr = ElasticDatacenterManager(
+        hosts, vms, trace, vm_mips=vm_mips, up_thr=up_thr, lo_thr=lo_thr,
+        cooldown_k=cooldown, min_active=min_active, init_active=init_active,
+        interval=interval, n_points=n_points)
+    sim = backend.make_simulation()
+    _AutoscaleEntity(sim, mgr, n_samples)
+    sim.run()
+    return mgr.result()
+
+
+def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
+                    n_vms: int = 32, n_samples: int = 288,
+                    interval: float = 300.0, host_mips: float = 8000.0,
+                    vm_mips=1000.0, up_thr=0.8, lo_thr=0.3, cooldown=3,
+                    min_active: int = 1, init_active=None,
+                    model_mix: str = "mixed", n_points: int = 11,
+                    chunk_size=None, with_report: bool = False, **_ignored):
+    """Reference semantics for the power sweep: run the OO elastic manager
+    (event-driven, one cell at a time) over every scenario point — what the
+    vec path replaces with one compiled vmap call.  Cells route through the
+    sweep layer's host path so ``run_sweep`` sees a populated report.
+    (Registered for legacy/oo in :mod:`repro.core.vec_power`.)"""
+    from .sweep import run_host_sweep
+    from .vec_engine import empty_report
+    seeds, axes, b = _broadcast_cells(seeds, dict(
+        up_thr=up_thr, lo_thr=lo_thr, cooldown=cooldown, vm_mips=vm_mips))
+    if b == 0:
+        out, report = _empty_outputs(n_hosts), empty_report(donate=False)
+        return (out, report) if with_report else out
+
+    def run_cell(i: int) -> Dict:
+        return _run_elastic_cell(
+            backend, seed=int(seeds[i]), n_hosts=n_hosts, n_vms=n_vms,
+            n_samples=n_samples, interval=interval, host_mips=host_mips,
+            vm_mips=float(axes["vm_mips"][i]),
+            up_thr=float(axes["up_thr"][i]), lo_thr=float(axes["lo_thr"][i]),
+            cooldown=int(axes["cooldown"][i]), min_active=min_active,
+            init_active=init_active, model_mix=model_mix, n_points=n_points)
+
+    rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
+    out = _finalize({k: np.stack([np.asarray(r[k]) for r in rows])
+                     for k in rows[0]})
+    return (out, report) if with_report else out

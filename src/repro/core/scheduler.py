@@ -194,3 +194,50 @@ class CloudletSchedulerSpaceShared(CloudletScheduler):
         if g is None:
             return 0.0
         return min(self._used_pes(), g.caps.num_pes) * g.caps.mips
+
+
+def _cloudlet_batch_oo_impl(backend, *, length, pes, submit, guest_mips,
+                            guest_pes, mode: str = "time"):
+    """Finish times [G, C] via the OO engine (reference semantics; inf for
+    empty/unfinished slots) — the contract ``vec_scheduler``'s engine
+    replaces with one compiled call.  ``[B, G, C]`` inputs loop the engine
+    over the independent cells.  Registered in
+    :mod:`repro.core.vec_scheduler`."""
+    import numpy as np
+    from .datacenter import Broker, Datacenter
+    from .entities import Cloudlet, Host, Vm
+    if np.asarray(length).ndim == 3:
+        return np.stack([
+            _cloudlet_batch_oo_impl(backend, length=length[b], pes=pes[b],
+                                    submit=submit[b],
+                                    guest_mips=guest_mips[b],
+                                    guest_pes=guest_pes[b], mode=mode)
+            for b in range(np.asarray(length).shape[0])])
+    length = np.asarray(length, np.float64)
+    pes = np.asarray(pes, np.float64)
+    submit = np.asarray(submit, np.float64)
+    G, C = length.shape
+    sim = backend.make_simulation()
+    hosts = [Host(num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
+                  ram=1e9, bw=1e9) for g in range(G)]
+    dc = Datacenter(sim, hosts)
+    broker = Broker(sim, dc)
+    guests = []
+    for g in range(G):
+        sch = (CloudletSchedulerTimeShared() if mode == "time"
+               else CloudletSchedulerSpaceShared())
+        vm = Vm(sch, num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
+                ram=1024, bw=1e9)
+        broker.add_guest(vm, on_host=hosts[g])
+        guests.append(vm)
+    cls = {}
+    for t, g, c in sorted((submit[g, c], g, c) for g in range(G)
+                          for c in range(C) if length[g, c] > 0):
+        cl = Cloudlet(length=float(length[g, c]), pes=int(pes[g, c]))
+        cls[(g, c)] = cl
+        broker.submit(cl, guests[g], at=float(t))
+    sim.run()
+    out = np.full((G, C), np.inf)
+    for (g, c), cl in cls.items():
+        out[g, c] = cl.finish_time if cl.finish_time >= 0 else np.inf
+    return out

@@ -1,55 +1,25 @@
 """Vectorized ML-fleet simulator — ``FleetSim``'s life-cycle as JAX SoA.
 
-The OO :class:`repro.core.cluster.FleetSim` is a pure-Python event loop: one
-heap event per step, numpy straggler sampling, scalar failure bookkeeping.
-This module is the same life-cycle — synchronous steps with lognormal
-straggler max-reduction, pre-drawn exponential failure/repair rounds,
-checkpoint cadence with rollback-to-last-checkpoint on failure, elastic
-width penalty, stall below ``min_nodes_frac``, chronic-straggler eviction —
-as structure-of-arrays state advanced inside **one** ``jax.lax.while_loop``
-under ``jit``, and ``vmap``-ed over a batch of seeds/configs so Monte-Carlo
-what-if sweeps (e.g. 256 MTBF × ckpt-cadence points) run in a single
-compiled call.
+The OO :class:`repro.core.cluster.FleetSim` is a pure-Python event loop;
+this module is the same life-cycle — lognormal straggler max-reduction,
+pre-drawn exponential failure/repair rounds, checkpoint cadence with
+rollback-on-failure, elastic width penalty, stall below ``min_nodes_frac``,
+chronic-straggler eviction — as a :class:`~repro.core.vec_engine.VecEngine`
+definition (dense masked node arrays; failure interruptions via ``ops.min``).
 
-SoA conventions (shared with ``vec_scheduler`` and the consolidation vec
-manager — see ARCHITECTURE.md):
-
-  * per-node attributes are dense arrays ``[n_total]`` (active workers +
-    spares), masked rather than resized;
-  * stochastic processes are **pre-drawn**: each node's failure renewal
-    process materializes as ``k_fail_rounds`` absolute outage windows
-    ``[fail_start, fail_start + repair_s)`` (cumsum of exponential gaps +
-    repair insertions), so "is node i up at time t" is a masked comparison,
-    not an event queue;
-  * the next-event reduction ("which failure interrupts this step") is a
-    masked min/argmin — through the fused Pallas kernel
-    (``kernels.next_event``) when ``use_pallas`` is set;
-  * everything runs under ``jax.experimental.enable_x64`` so time
-    accumulates in the same IEEE doubles, in the same order, as the OO
-    engine's event clock.
-
-Exactness contract (asserted by tests):
-
-  * **deterministic** configs (``straggler_sigma=0``, no failures): wall
-    clock / steps / goodput are bit-identical to the OO ``FleetSim`` — both
-    engines reduce to the same ordered sequence of f64 additions;
-  * **stochastic** configs: the failure/straggler processes are
-    statistically identical (exponential MTBF renewals, fixed repair,
-    lognormal jitter), and mean goodput over a seed batch matches the OO
-    engine within tolerance (tests assert 2% over ≥64 seeds).
-
-Documented approximations vs. the OO engine (all second-order for the
-validated statistics): the active set is the index-ordered prefix of up
-nodes (the OO engine promotes the min-bias spare — biases are iid so the
-max-reduction statistics match); failures landing inside a checkpoint write
-or stall window are observed at the next step boundary; a failure during
-the restart window does not charge a second ``restart_s``; recovered nodes
-keep their degrade multiplier until their next degrade event; the
-non-elastic (``elastic=False``) stall-accounting branch is not modeled.
+Exactness contract (asserted by tests): **deterministic** configs
+(``straggler_sigma=0``, no failures) are bit-identical to the OO
+``FleetSim`` (same ordered f64 additions); **stochastic** configs share the
+process laws and match mean goodput within 2% over ≥64 seeds.  Documented
+approximations (second-order for the validated statistics): index-ordered
+active prefix instead of min-bias spare promotion; failures inside
+ckpt/stall windows observed at the next boundary; a failure during the
+restart window charges no second ``restart_s``; recovered nodes keep their
+degrade multiplier until their next degrade event; ``elastic=False`` stall
+accounting not modeled.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, NamedTuple, Optional, Sequence
 
@@ -57,8 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.ops import masked_argmax
 from .backend import SimBackend, scenario
 from .cluster import FleetConfig, RunStats, StepCost
+from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry, \
+    resolve_precision
 
 STALL_RETRY_S = 60.0          # matches FleetSim's stall-retry cadence
 
@@ -111,7 +84,6 @@ class _Carry(NamedTuple):
     t: Any                    # [] f64 simulation clock
     step: Any                 # [] i  unique steps completed (post-rollback)
     last_ckpt: Any            # [] i
-    it: Any                   # [] i  loop-iteration counter (RNG folding)
     bias: Any                 # [n] f64 persistent per-node slowdown bias
                               #     (scalar 0 when per-node values unused)
     slow_count: Any           # [n] i  consecutive-slow-step counts (scalar
@@ -129,17 +101,10 @@ class _Carry(NamedTuple):
     ckpt_s: Any
 
 
-def _masked_min(values, mask, use_pallas: bool):
-    """Masked next-event min (value only) — fused kernel or jnp."""
-    if use_pallas:
-        from ..kernels.ops import next_event_op
-        vmin, _ = next_event_op(values, mask)
-        return vmin
-    return jnp.min(jnp.where(mask, values, jnp.inf))
-
-
-def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
-    """One fleet scenario, start to finish, as a single lax.while_loop."""
+def _fleet_build(args, s: _Statics, ops) -> Loop:
+    """One fleet scenario as a loop over step attempts (the driver's ``it``
+    replaces the old carried counter for per-step RNG folding)."""
+    params, key = args
     n = s.n_total
     kf, kd, kb, kstep, kevict = jax.random.split(key, 5)
 
@@ -187,10 +152,10 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
         return jnp.sum(jnp.where(k_iota == idx[:, None], fail_start, 0.0),
                        axis=1)
 
-    def cond(c: _Carry):
+    def cond(c: _Carry, it):
         return (c.step < params.total_steps) & (c.t < params.max_wall_s)
 
-    def body(c: _Carry) -> _Carry:
+    def body(c: _Carry, it) -> _Carry:
         # Current renewal round = number of fully completed outages; the
         # count form needs no carried pointer and is always caught up.
         ended = jnp.sum(fail_start + params.repair_s <= c.t, axis=1,
@@ -231,7 +196,7 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
             if s.sigma_zero:
                 jitter = jnp.ones((n,), fail_start.dtype)
             else:
-                jit_key = jax.random.fold_in(kstep, c.it)
+                jit_key = jax.random.fold_in(kstep, it)
                 draws = jax.random.normal(jit_key, (n,), jnp.float32)
                 jitter = jnp.exp(draws.astype(fail_start.dtype)
                                  * params.sigma)
@@ -255,7 +220,7 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
             # cross-step correlation of which node is slowest is dropped).
             # One RNG draw per step instead of n.
             from jax.scipy.special import ndtri
-            u = jax.random.uniform(jax.random.fold_in(kstep, c.it), (),
+            u = jax.random.uniform(jax.random.fold_in(kstep, it), (),
                                    fail_start.dtype, minval=1e-12)
             sig_tot = jnp.sqrt(params.sigma ** 2 + (params.sigma / 2) ** 2)
             z = ndtri(u ** (1.0 / jnp.maximum(n_active, 1)))
@@ -264,7 +229,7 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
         step_s = params.base_step_s * max_slow * width
 
         # -- failure interruption: earliest active-node failure in-window --
-        t_int = _masked_min(next_fail, active, s.use_pallas)
+        t_int = ops.min(next_fail, active)
         interrupted = ~cascade & ~stalled & (t_int < c.t + step_s)
         completed = ~cascade & ~stalled & ~interrupted
         t_done = c.t + step_s
@@ -282,11 +247,10 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
                                     c.slow_count)
             chronic = active & (slow_count1 >= s.window)
             any_chronic = jnp.any(chronic)
-            worst = jnp.argmax(jnp.where(chronic, c.bias * deg_mult,
-                                         -jnp.inf))
+            worst = masked_argmax(c.bias * deg_mult, chronic)
             evict_now = completed & any_chronic
             new_bias = jnp.exp(jax.random.normal(
-                jax.random.fold_in(kevict, c.it), ()) * (params.sigma / 2.0))
+                jax.random.fold_in(kevict, it), ()) * (params.sigma / 2.0))
             bias1 = jnp.where(evict_now, c.bias.at[worst].set(new_bias),
                               c.bias)
             evict_until1 = jnp.where(
@@ -329,7 +293,6 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
             t=t_next,
             step=step_next,
             last_ckpt=last_ckpt_next,
-            it=c.it + 1,
             bias=bias1,
             slow_count=jnp.where(completed, slow_count2, c.slow_count)
                        if s.track_stragglers else c.slow_count,
@@ -350,10 +313,21 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
                                         params.ckpt_write_s, 0.0),
         )
 
+    def finalize(end: _Carry, it) -> Dict[str, Any]:
+        finished = end.step >= params.total_steps
+        wallclock = jnp.where(finished, end.t, params.max_wall_s)
+        ideal = end.step.astype(wallclock.dtype) * params.base_step_s
+        return dict(
+            wallclock_s=wallclock, steps_done=end.step, failures=end.failures,
+            restarts=end.restarts, evictions=end.evictions,
+            lost_steps=end.lost_steps, stall_s=end.stall_s, ckpt_s=end.ckpt_s,
+            ideal_s=ideal,
+            goodput=jnp.where(wallclock > 0, ideal / wallclock, 0.0))
+
     zf = jnp.asarray(0.0, fail_start.dtype)
     zi = jnp.asarray(0, jnp.int32)
     init = _Carry(
-        t=zf, step=zi, last_ckpt=zi, it=zi,
+        t=zf, step=zi, last_ckpt=zi,
         bias=bias0,
         slow_count=jnp.zeros((n,), jnp.int32) if s.track_stragglers else zi,
         evict_until=(jnp.zeros((n,), fail_start.dtype)
@@ -363,31 +337,10 @@ def _simulate_one(params: _Params, key, s: _Statics) -> Dict[str, Any]:
         watch_from=jnp.asarray(-jnp.inf, fail_start.dtype),
         failures=zi, restarts=zi, evictions=zi,
         lost_steps=zf, stall_s=zf, ckpt_s=zf)
-
-    end = jax.lax.while_loop(cond, body, init)
-    finished = end.step >= params.total_steps
-    wallclock = jnp.where(finished, end.t, params.max_wall_s)
-    ideal = end.step.astype(wallclock.dtype) * params.base_step_s
-    return dict(
-        wallclock_s=wallclock, steps_done=end.step, failures=end.failures,
-        restarts=end.restarts, evictions=end.evictions,
-        lost_steps=end.lost_steps, stall_s=end.stall_s, ckpt_s=end.ckpt_s,
-        ideal_s=ideal,
-        goodput=jnp.where(wallclock > 0, ideal / wallclock, 0.0),
-        iterations=end.it)
+    return Loop(init=init, cond=cond, body=body, finalize=finalize)
 
 
-@functools.lru_cache(maxsize=32)
-def _batched_sim(statics: _Statics):
-    """Batched (vmap) simulator for one static shape, in the sweep layer's
-    single-pytree calling convention — cached so the sweep executor (which
-    jits with buffer donation) reuses one compiled executable per shape."""
-    sim = jax.vmap(functools.partial(_simulate_one, s=statics))
-
-    def run(args):
-        params, keys = args
-        return sim(params, keys)
-    return run
+FLEET_ENGINE = VecEngine("fleet_batch", _fleet_build)
 
 
 def _predicted_iters(params: _Params, n_total: int) -> np.ndarray:
@@ -436,55 +389,14 @@ def _make_params(cost: StepCost, cfg: FleetConfig, total_steps,
                       for k, v in fields.items()})
 
 
-def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
-                         total_steps: int = 2000, *,
-                         seeds: Sequence[int] | np.ndarray = (0,),
-                         mtbf_hours=None, ckpt_every=None,
-                         straggler_sigma=None,
-                         max_wallclock_s: float = 30 * 86400.0,
-                         k_fail_rounds: Optional[int] = None,
-                         k_degrade: int = 8,
-                         use_pallas: bool | str = False,
-                         precision: str = "exact",
-                         chunk_size: Optional[int] = None,
-                         devices=None,
-                         donate: bool = True,
-                         with_report: bool = False):
-    """Run a batch of fleet scenarios through the sweep execution layer.
-
-    ``seeds`` and the optional sweep axes (``mtbf_hours``, ``ckpt_every``,
-    ``straggler_sigma`` — scalars or arrays broadcast against ``seeds``)
-    define the batch. Returns a dict of per-scenario stat arrays
-    (``goodput``, ``wallclock_s``, ``steps_done``, ``failures``, ...);
-    with ``with_report=True`` returns ``(stats, SweepReport)``.
-
-    Execution goes through :mod:`repro.core.sweep`: cells are bucketed by
-    predicted loop length (divergent grids no longer run every lane to the
-    slowest cell's iteration count), dispatched in bounded chunks with
-    donated input buffers (``chunk_size``/``donate``), and sharded across
-    ``devices`` (default: all local devices) — all bit-identical to the
-    monolithic single-dispatch call.
-
-    ``k_fail_rounds`` (failure-renewal rounds pre-drawn per node) defaults
-    to an estimate covering the simulated horizon with ample margin; a node
-    that exhausts its schedule simply stops failing.
-
-    ``precision``: ``"exact"`` (default) accumulates the clock in f64 under
-    ``enable_x64`` — bit-identical to the OO engine on deterministic
-    configs; ``"fast"`` draws the same f64 stochastic schedules but runs
-    the loop in f32 (same scenario sample, cheaper arithmetic — for large
-    Monte-Carlo sweeps).
-
-    ``use_pallas`` resolves through :func:`repro.kernels.ops
-    .resolve_use_pallas`: on CPU the interpret-mode kernel is slower than
-    the plain reduction, so ``True`` falls back to the jnp path with a
-    one-time warning (``"force"`` overrides).
-    """
-    from ..kernels.ops import resolve_use_pallas
-    from .sweep import execute_sweep
-    if precision not in ("exact", "fast"):
-        raise ValueError(f"precision must be 'exact' or 'fast': {precision!r}")
-    use_pallas = resolve_use_pallas(use_pallas)
+def _prepare_fleet(cost: StepCost, cfg: FleetConfig, total_steps: int = 2000,
+                   *, use_pallas: bool,
+                   seeds: Sequence[int] | np.ndarray = (0,),
+                   mtbf_hours=None, ckpt_every=None, straggler_sigma=None,
+                   max_wallclock_s: float = 30 * 86400.0,
+                   k_fail_rounds: Optional[int] = None, k_degrade: int = 8,
+                   precision: str = "exact"):
+    fast = resolve_precision(precision)
     seeds = np.asarray(seeds, np.uint32)
     params = _make_params(cost, cfg, total_steps, max_wallclock_s,
                           mtbf_hours=mtbf_hours, ckpt_every=ckpt_every,
@@ -497,14 +409,11 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
     if b == 0:
         # Degenerate grid (e.g. a sweep driver whose filter left no cells):
         # empty per-stat arrays, no dispatch.
-        from .sweep import SweepReport
         zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int32)
-        out = dict(wallclock_s=zf, steps_done=zi, failures=zi, restarts=zi,
-                   evictions=zi, lost_steps=zf, stall_s=zf, ckpt_s=zf,
-                   ideal_s=zf, goodput=zf, iterations=zi)
-        report = SweepReport(n_cells=0, chunk_size=0, n_chunks=0, devices=1,
-                             bucketed=False, donated=donate)
-        return (out, report) if with_report else out
+        return Done(dict(
+            wallclock_s=zf, steps_done=zi, failures=zi, restarts=zi,
+            evictions=zi, lost_steps=zf, stall_s=zf, ckpt_s=zf,
+            ideal_s=zf, goodput=zf, iterations=zi))
     if k_fail_rounds is None:
         # Horizon estimate: 10× the zero-overhead run time (goodput ≥ 0.1),
         # capped by the hard wall-clock bound; 3× margin on expected rounds.
@@ -520,16 +429,34 @@ def simulate_fleet_batch(cost: StepCost, cfg: FleetConfig,
                               and cfg.straggler_window <= 10_000),
         degrade=bool(np.min(params.degrade_s) < 1e8 * 3600.0),
         sigma_zero=bool(np.all(params.sigma == 0.0)),
-        fast=(precision == "fast"))
+        fast=fast)
     with jax.experimental.enable_x64():
         # Keys and (for "fast") the pre-drawn schedules are built in the
         # x64 world either way, so both precisions see the same sample.
         keys = np.asarray(jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds)))
-        out, report = execute_sweep(
-            _batched_sim(statics), (params, keys),
-            chunk_size=chunk_size, devices=devices, donate=donate,
-            predicted_cost=_predicted_iters(params, statics.n_total))
-    return (out, report) if with_report else out
+    return BatchPlan(
+        (params, keys), statics,
+        predicted_cost=_predicted_iters(params, statics.n_total))
+
+
+simulate_fleet_batch = make_batch_entry(
+    FLEET_ENGINE, _prepare_fleet, name="simulate_fleet_batch", doc="""\
+    Run a batch of fleet scenarios through the sweep execution layer.
+
+    ``seeds`` and the optional sweep axes (``mtbf_hours``, ``ckpt_every``,
+    ``straggler_sigma`` — scalars or arrays broadcast against ``seeds``)
+    define the batch. Returns a dict of per-scenario stat arrays
+    (``goodput``, ``wallclock_s``, ``steps_done``, ``failures``, ...);
+    with ``with_report=True`` returns ``(stats, SweepReport)``.  Cells are
+    bucketed by predicted loop length, chunked with donated buffers, and
+    sharded across ``devices`` — bit-identical to the monolithic call.
+
+    ``k_fail_rounds`` (failure-renewal rounds pre-drawn per node) defaults
+    to an estimate covering the simulated horizon with ample margin (a node
+    that exhausts its schedule simply stops failing); ``precision`` is
+    ``"exact"`` (f64, bit-identical to the OO engine on deterministic
+    configs) or ``"fast"`` (same f64 stochastic sample, f32 loop).
+    """)
 
 
 def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,
@@ -540,17 +467,9 @@ def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,
     out = simulate_fleet_batch(cost, cfg, total_steps, seeds=[cfg.seed],
                                max_wallclock_s=max_wallclock_s,
                                use_pallas=use_pallas)
-    st = RunStats(
-        wallclock_s=float(out["wallclock_s"][0]),
-        steps_done=int(out["steps_done"][0]),
-        failures=int(out["failures"][0]),
-        evictions=int(out["evictions"][0]),
-        restarts=int(out["restarts"][0]),
-        lost_steps=float(out["lost_steps"][0]),
-        stall_s=float(out["stall_s"][0]),
-        ckpt_s=float(out["ckpt_s"][0]),
-        ideal_s=float(out["ideal_s"][0]))
-    return st
+    from dataclasses import fields
+    return RunStats(**{f.name: (int if f.type == "int" else float)(
+        out[f.name][0]) for f in fields(RunStats)})
 
 
 # -- backend substrate handlers ------------------------------------------------
@@ -563,43 +482,3 @@ def _fleet_vec(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
     return simulate_fleet_vec(cost, cfg, total_steps,
                               max_wallclock_s=max_wallclock_s,
                               use_pallas=use_pallas)
-
-
-@scenario("fleet_batch", backends=("vec",))
-def _fleet_batch_vec(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
-                     total_steps: int = 2000, **kw) -> Dict[str, np.ndarray]:
-    return simulate_fleet_batch(cost, cfg, total_steps, **kw)
-
-
-@scenario("fleet_batch", backends=("legacy", "oo"))
-def _fleet_batch_oo(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
-                    total_steps: int = 2000,
-                    seeds: Sequence[int] = (0,), mtbf_hours=None,
-                    ckpt_every=None, straggler_sigma=None,
-                    max_wallclock_s: float = 30 * 86400.0,
-                    **_ignored) -> Dict[str, np.ndarray]:
-    """Reference semantics for the batched sweep: loop the OO FleetSim over
-    every scenario point (what the vec path replaces with one vmap call)."""
-    from dataclasses import replace
-    from .cluster import _fleet_scenario
-    seeds = np.atleast_1d(np.asarray(seeds))
-    axes = dict(mtbf_hours_node=mtbf_hours, ckpt_every_steps=ckpt_every,
-                straggler_sigma=straggler_sigma)
-    # Same batch contract as the vec handler: seeds broadcast against the
-    # sweep axes (a scalar seed + a length-3 mtbf axis is 3 scenarios).
-    b = int(np.broadcast_shapes(
-        seeds.shape, *(np.atleast_1d(v).shape for v in axes.values()
-                       if v is not None))[0])
-    seeds = np.broadcast_to(seeds, (b,))
-    rows = []
-    for i in range(b):
-        over = {k: np.broadcast_to(np.atleast_1d(v), (b,))[i].item()
-                for k, v in axes.items() if v is not None}
-        c = replace(cfg, seed=int(seeds[i]), **over)
-        rows.append(_fleet_scenario(backend, cost=cost, cfg=c,
-                                    total_steps=total_steps,
-                                    max_wallclock_s=max_wallclock_s))
-    return {k: np.asarray([getattr(r, k) for r in rows])
-            for k in ("wallclock_s", "steps_done", "failures", "restarts",
-                      "evictions", "lost_steps", "stall_s", "ckpt_s",
-                      "ideal_s", "goodput")}

@@ -1,0 +1,211 @@
+"""VecEngine — the declarative SoA event-loop substrate under every vec engine.
+
+CloudSim 7G's headline contribution is a re-engineered internal architecture
+with standardized interfaces that cut code with no loss of functionality
+(paper §4).  Before this module our four vectorized engines (``vec_cluster``,
+``vec_workflow``, ``vec_power``, ``vec_scheduler``) each hand-rolled the same
+scaffolding: a statics dataclass, masked next-event reductions with a Pallas
+fallback, a single-cell ``lax.while_loop``, a vmap batch entry cached per
+static shape, ``use_pallas``/precision resolution, and routing through the
+sweep execution layer.  Here that scaffolding exists **once**, and a scenario
+is a declarative definition:
+
+  * a **statics** object (hashable; shape-defining, trace-specializing) with
+    an optional ``use_pallas`` field the driver reads;
+  * a **params pytree** whose every leaf carries the cell axis first (the
+    sweep layer's calling convention);
+  * a ``build(params, statics, ops) -> Loop`` function returning the loop's
+    initial **state pytree**, its ``cond``/``body`` transition functions, and
+    a traced metrics **finalizer** — ``ops`` is a
+    :class:`repro.kernels.ops.MaskedOps` bound to the resolved Pallas switch,
+    so "next event = masked min/argmin" is one call.
+
+The driver (:func:`batched_sim` → ``vmap(run_one)``) owns the iteration
+counter: ``body(state, it)`` sees the current count (RNG folding, trace
+indexing), the loop result gains an ``iterations`` output automatically
+(the sweep layer's divergence accounting key), and the per-statics compiled
+executable is cached so the sweep executor's donating ``jit`` is reused.
+
+Batched entry points are produced by :func:`make_batch_entry` in one call:
+a ``prepare(...)`` function maps the public signature to a :class:`BatchPlan`
+(params + statics + predicted cost + host-side finalizer) or short-circuits
+a degenerate batch with :class:`Done`; the builder resolves ``use_pallas``
+(:func:`repro.kernels.ops.resolve_use_pallas`) and ``precision``
+(:func:`resolve_precision`), runs the plan under ``enable_x64`` through
+:func:`repro.core.sweep.execute_sweep` (chunking, buffer donation, device
+sharding, divergence bucketing — all bit-identical to a monolithic call),
+plumbs ``with_report``, and registers the ``@scenario`` handler.
+
+SoA conventions every engine definition follows (the contracts tests assert):
+
+  1. dense padded arrays with boolean masks instead of resizing;
+  2. the whole simulation inside one ``lax.while_loop`` under ``jit``/
+     ``vmap`` (the driver's loop);
+  3. next event = masked min/argmin reduction (``ops.*``), not a heap walk;
+  4. stochastic processes pre-drawn as absolute schedules in ``build``;
+  5. ``enable_x64`` so decision/number identity with the OO engines holds
+     (the driver enters it around every dispatch);
+  6. compile-time feature pruning via statics flags (``build`` runs at trace
+     time — plain Python ``if`` drops whole subgraphs).
+
+See ARCHITECTURE.md ("Authoring a vec scenario") for a worked end-to-end
+example; ``vec_netdc`` is the smallest real definition in the tree.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.ops import MaskedOps, resolve_use_pallas
+from .backend import scenario
+from .sweep import SweepReport, execute_sweep
+
+
+class Loop(NamedTuple):
+    """One cell's compiled event loop, as returned by an engine's ``build``.
+
+    ``cond(state, it)`` / ``body(state, it) -> state`` / ``finalize(state,
+    it) -> dict`` all run traced; ``it`` is the driver-owned int32 iteration
+    counter.  ``finalize`` may return an ``iterations`` entry to override
+    the driver's count (e.g. a step dispatched before the loop).
+    """
+
+    init: Any
+    cond: Callable[[Any, Any], Any]
+    body: Callable[[Any, Any], Any]
+    finalize: Callable[[Any, Any], Dict[str, Any]]
+
+
+@dataclass(frozen=True)
+class VecEngine:
+    """A scenario kind as a declarative SoA event-loop definition."""
+
+    kind: str
+    build: Callable[[Any, Any, MaskedOps], Loop]
+
+
+def run_one(engine: VecEngine, params: Any, statics: Any) -> Dict[str, Any]:
+    """One cell, start to finish, as a single ``lax.while_loop``."""
+    ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
+    loop = engine.build(params, statics, ops)
+
+    def cond(c):
+        return loop.cond(c[0], c[1])
+
+    def body(c):
+        return loop.body(c[0], c[1]), c[1] + 1
+
+    state, it = jax.lax.while_loop(cond, body,
+                                   (loop.init, jnp.asarray(0, jnp.int32)))
+    out = dict(loop.finalize(state, it))
+    out.setdefault("iterations", it)
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def batched_sim(engine: VecEngine, statics: Any) -> Callable:
+    """Batched (vmap) simulator for one static shape, in the sweep layer's
+    single-pytree calling convention — cached so the sweep executor (which
+    jits with buffer donation) reuses one compiled executable per shape."""
+    return jax.vmap(functools.partial(run_one, engine, statics=statics))
+
+
+class BatchPlan(NamedTuple):
+    """What ``prepare`` hands the driver: data + schedule for one batch."""
+
+    params: Any                               # batched pytree, cell axis first
+    statics: Any                              # hashable; may carry use_pallas
+    predicted_cost: Optional[Any] = None      # per-cell loop-length estimate
+    finalize: Optional[Callable[[Dict[str, Any]], Any]] = None  # host-side
+
+
+class Done(NamedTuple):
+    """``prepare`` short-circuit: host-computed outputs, no device dispatch
+    (degenerate grids — e.g. a sweep driver whose filter left no cells)."""
+
+    outputs: Any
+
+
+def empty_report(donate: bool = True) -> SweepReport:
+    """The sweep report a zero-cell batch carries (no dispatch happened)."""
+    return SweepReport(n_cells=0, chunk_size=0, n_chunks=0, devices=1,
+                       bucketed=False, donated=donate)
+
+
+def broadcast_cells(seeds, axes: Dict[str, Any]):
+    """Broadcast ``seeds`` against named sweep axes → ``(seeds[B],
+    {axis: values[B]}, B)`` — the batch contract every sweep-axis entry
+    point shares (scalars or arrays broadcast against ``seeds``)."""
+    seeds = np.atleast_1d(np.asarray(seeds, np.int64))
+    arrs = {k: np.atleast_1d(np.asarray(v)) for k, v in axes.items()}
+    b = int(np.broadcast_shapes(seeds.shape,
+                                *(a.shape for a in arrs.values()))[0])
+    return (np.broadcast_to(seeds, (b,)),
+            {k: np.broadcast_to(a, (b,)) for k, a in arrs.items()}, b)
+
+
+def resolve_precision(precision: str) -> bool:
+    """Validate an engine's ``precision`` opt-in → ``fast`` flag.
+
+    ``"exact"`` accumulates in f64 under ``enable_x64`` (bit-identical to
+    the OO engines where promised); ``"fast"`` keeps the f64 stochastic
+    sample but runs the loop arithmetic in f32.
+    """
+    if precision not in ("exact", "fast"):
+        raise ValueError(
+            f"precision must be 'exact' or 'fast': {precision!r}")
+    return precision == "fast"
+
+
+def run_plan(engine: VecEngine, plan, *, chunk_size=None, devices=None,
+             donate: bool = True, with_report: bool = False):
+    """Execute a :class:`BatchPlan` through the sweep layer under x64."""
+    if isinstance(plan, Done):
+        out, report = plan.outputs, empty_report(donate)
+    else:
+        with jax.experimental.enable_x64():
+            out, report = execute_sweep(
+                batched_sim(engine, plan.statics), plan.params,
+                chunk_size=chunk_size, devices=devices, donate=donate,
+                predicted_cost=plan.predicted_cost)
+        if plan.finalize is not None:
+            out = plan.finalize(out)
+    return (out, report) if with_report else out
+
+
+def make_batch_entry(engine: VecEngine, prepare: Callable, *,
+                     kind: Optional[str] = None, backends=("vec",),
+                     name: Optional[str] = None,
+                     doc: Optional[str] = None) -> Callable:
+    """Build a sweep-routed batched entry point and register its scenario.
+
+    ``prepare(*args, use_pallas=<resolved bool>, **kw)`` returns a
+    :class:`BatchPlan` (or :class:`Done`).  The produced entry adds the
+    uniform sweep controls (``use_pallas``, ``chunk_size``, ``devices``,
+    ``donate``, ``with_report``) to ``prepare``'s own signature and is
+    registered as the ``kind`` handler for ``backends`` (pass ``backends=()``
+    to skip registration, e.g. when a hand-written handler dispatches on
+    input shape first).
+    """
+    kind = kind or engine.kind
+
+    def entry(*args, use_pallas: bool | str = False, chunk_size=None,
+              devices=None, donate: bool = True, with_report: bool = False,
+              **kw):
+        plan = prepare(*args, use_pallas=resolve_use_pallas(use_pallas), **kw)
+        return run_plan(engine, plan, chunk_size=chunk_size, devices=devices,
+                        donate=donate, with_report=with_report)
+
+    entry.__name__ = name or f"simulate_{kind}"
+    entry.__qualname__ = entry.__name__
+    if doc:
+        entry.__doc__ = doc
+    if backends:
+        scenario(kind, backends=backends)(
+            lambda backend, **params: entry(**params))
+    return entry

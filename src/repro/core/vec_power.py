@@ -1,32 +1,18 @@
 """Vectorized power-aware elastic datacenter — ``power_batch`` as JAX SoA.
 
-CloudSim 7G's headline claims are energy efficiency inside a generalized
-architecture where power models, selection policies, and scheduling
-extensions compose in one simulated environment (paper §1, §4; Table 2).
-The OO side of that story lives in ``core.power``: power models
-(linear / cubic / SPEC-table / DVFS), the unified C2 selection policies,
-and :class:`~repro.core.power.ElasticDatacenterManager` — a threshold
-autoscaler that powers hosts on/off against a demand trace, integrating
-per-host energy and SLA-violation time.  This module is the same scenario
-as structure-of-arrays state advanced inside **one** ``jax.lax.while_loop``
-under ``jit``, ``vmap``-ed over a batch of cells (seed × threshold ×
-cooldown × VM-size sweeps) and routed through the sweep execution layer
-(:mod:`repro.core.sweep`: chunking, buffer donation, device sharding).
-
-SoA conventions (shared with ``vec_scheduler``/``vec_cluster``/
-``vec_workflow`` — see ARCHITECTURE.md):
-
-  * per-host attributes are dense ``[H]`` arrays (capacity, watts/MIPS
-    efficiency) with power models lowered to ``[H, P]`` utilization→power
-    tables (:func:`repro.core.power.power_points`) — one uniform
-    representation for all four model families instead of per-object
-    virtual dispatch;
-  * the autoscaler's energy-aware host picks are masked first-occurrence
-    ``argmin``/``argmax`` reductions over the efficiency array — through
-    the fused Pallas next-event kernel (``kernels.next_event``) when
-    ``use_pallas`` is set, since "cheapest inactive host" is exactly a
-    masked next-event reduction with watts in place of event times;
-  * everything runs under ``jax.experimental.enable_x64``.
+The OO side of the paper's energy story lives in ``core.power``: power
+models (linear / cubic / SPEC-table / DVFS), the unified C2 selection
+policies, and :class:`~repro.core.power.ElasticDatacenterManager` — a
+threshold autoscaler that powers hosts on/off against a demand trace,
+integrating per-host energy and SLA-violation time.  This module is the
+same scenario as a :class:`~repro.core.vec_engine.VecEngine` definition:
+per-host attributes as dense ``[H]`` arrays with power models lowered to
+``[H, P]`` utilization→power tables (:func:`repro.core.power.power_points`),
+and the autoscaler's energy-aware host picks as masked first-occurrence
+``argmin``/``argmax`` reductions (``ops.argmin``/``ops.argmax`` — the fused
+Pallas next-event kernel when ``use_pallas`` is set, since "cheapest
+inactive host" is exactly a masked next-event reduction with watts in place
+of event times).
 
 Exactness contract (asserted by tests and the differential suite): the
 scenario is deterministic given its demand trace, and ``oo`` and ``vec``
@@ -45,19 +31,17 @@ into divides, min/max, and compares — none contractible.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Any, Dict, NamedTuple, Optional, Sequence
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backend import SimBackend, scenario
-from .engine import SimEntity, Simulation
-from .events import Event, Tag
-from .power import (ElasticDatacenterManager, make_elastic_scenario,
+from .backend import scenario
+from .power import (_broadcast_cells, _empty_outputs, _finalize,
+                    _finalize_accumulators, _power_batch_oo,
                     make_power_fleet, power_points)
+from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
 
 
 @dataclass(frozen=True)
@@ -87,7 +71,6 @@ class _Params(NamedTuple):
 
 
 class _Carry(NamedTuple):
-    k: Any              # [] i32 interval index
     count: Any          # [H] i32 VMs placed per host
     active: Any         # [H] bool host powered on
     cooldown: Any       # [] i32 intervals until the next action may fire
@@ -98,17 +81,6 @@ class _Carry(NamedTuple):
     migrations: Any     # [] i32 VMs that landed on a new host
     scale_out: Any      # [] i32 power-on events
     scale_in: Any       # [] i32 power-off events
-
-
-def _masked_argmin(values, mask, use_pallas: bool):
-    """First-occurrence argmin over ``values`` where ``mask`` — the fused
-    next-event kernel shares ``jnp.argmin``'s tie rule, so both paths pick
-    the same host (bit-exactness includes the selection decisions)."""
-    if use_pallas:
-        from ..kernels.ops import next_event_op
-        _, idx = next_event_op(values, mask)
-        return idx
-    return jnp.argmin(jnp.where(mask, values, jnp.inf))
 
 
 def _even_counts(active, n_vms: int):
@@ -123,20 +95,18 @@ def _even_counts(active, n_vms: int):
     return jnp.where(active, base + (rank < rem).astype(jnp.int32), 0)
 
 
-def _simulate_one(params: _Params, s: _Statics) -> Dict[str, Any]:
-    """One elastic-datacenter cell, start to finish, in one while_loop."""
+def _power_build(params: _Params, s: _Statics, ops) -> Loop:
+    """One elastic-datacenter cell: one loop iteration per trace interval
+    (the driver's counter ``it`` is the interval index ``k``)."""
     H = s.n_hosts
     idx = jnp.arange(H)
     seg_iota = jnp.arange(s.n_points - 1)
 
-    def cond(c: _Carry):
-        return c.k < s.n_intervals
-
-    def body(c: _Carry) -> _Carry:
+    def body(c: _Carry, it) -> _Carry:
         # -- demand, utilization, energy, SLA (current placement) ----------
         # Multiplies here feed only divides, min/max, and compares — never
         # an add/sub, so XLA cannot FMA-contract (module docstring).
-        d = params.trace[c.k] * params.vm_mips          # per-VM MIPS demand
+        d = params.trace[it] * params.vm_mips           # per-VM MIPS demand
         demand = c.count.astype(params.cap.dtype) * d   # [H]
         util = jnp.minimum(demand / params.cap, 1.0)
         # Exact energy accounting: which table segment, how far into it
@@ -163,8 +133,8 @@ def _simulate_one(params: _Params, s: _Statics) -> Dict[str, Any]:
         want_out = can & any_over & (n_act < H)
         want_in = can & ~want_out & all_under & (n_act > s.min_active)
         # energy-aware picks: cheapest inactive host on, dearest active off
-        pick_on = _masked_argmin(params.eff, ~c.active, s.use_pallas)
-        pick_off = _masked_argmin(-params.eff, c.active, s.use_pallas)
+        pick_on = ops.argmin(params.eff, ~c.active)
+        pick_off = ops.argmax(params.eff, c.active)
         active1 = jnp.where(
             want_out, c.active | (idx == pick_on),
             jnp.where(want_in, c.active & (idx != pick_off), c.active))
@@ -173,7 +143,6 @@ def _simulate_one(params: _Params, s: _Statics) -> Dict[str, Any]:
         moved = jnp.sum(jnp.maximum(count1 - c.count, 0), dtype=jnp.int32)
         one = jnp.asarray(1, jnp.int32)
         return _Carry(
-            k=c.k + 1,
             count=count1,
             active=active1,
             cooldown=jnp.where(changed, params.cooldown_k,
@@ -184,9 +153,23 @@ def _simulate_one(params: _Params, s: _Statics) -> Dict[str, Any]:
             scale_out=c.scale_out + jnp.where(want_out, one, 0),
             scale_in=c.scale_in + jnp.where(want_in, one, 0))
 
+    def finalize(end: _Carry, it) -> Dict[str, Any]:
+        # Exact accumulators leave the loop; energy/SLA/unserved are
+        # finalized on the host by the same numpy routine the OO manager
+        # uses (the plan's host-side finalizer).
+        return dict(
+            seg_count=end.seg_count,
+            seg_frac=end.seg_frac,
+            over_count=end.over_count,
+            unserved_mips=end.unserved,
+            migrations=end.migrations,
+            scale_out_events=end.scale_out,
+            scale_in_events=end.scale_in,
+            final_active=jnp.sum(end.active.astype(jnp.int32)))
+
     active0 = idx < params.init_active
     zi = jnp.asarray(0, jnp.int32)
-    init = _Carry(k=zi, count=_even_counts(active0, s.n_vms), active=active0,
+    init = _Carry(count=_even_counts(active0, s.n_vms), active=active0,
                   cooldown=zi,
                   seg_count=jnp.zeros((H, s.n_points - 1), jnp.int32),
                   seg_frac=jnp.zeros((H, s.n_points - 1),
@@ -194,113 +177,20 @@ def _simulate_one(params: _Params, s: _Statics) -> Dict[str, Any]:
                   over_count=jnp.zeros((H,), jnp.int32),
                   unserved=jnp.zeros((H,), params.cap.dtype),
                   migrations=zi, scale_out=zi, scale_in=zi)
-    end = jax.lax.while_loop(cond, body, init)
-    # Exact accumulators leave the loop; energy/SLA/unserved are finalized
-    # on the host by the same numpy routine the OO manager uses.
-    return dict(
-        seg_count=end.seg_count,
-        seg_frac=end.seg_frac,
-        over_count=end.over_count,
-        unserved_mips=end.unserved,
-        migrations=end.migrations,
-        scale_out_events=end.scale_out,
-        scale_in_events=end.scale_in,
-        final_active=jnp.sum(end.active.astype(jnp.int32)),
-        iterations=end.k)
+    return Loop(init=init, cond=lambda c, it: it < s.n_intervals,
+                body=body, finalize=finalize)
 
 
-@functools.lru_cache(maxsize=32)
-def _batched_sim(statics: _Statics):
-    """Batched (vmap) simulator for one static shape, in the sweep layer's
-    single-pytree calling convention (cached per shape so the executor's
-    donating jit reuses one compiled executable)."""
-    return jax.vmap(functools.partial(_simulate_one, s=statics))
+POWER_ENGINE = VecEngine("power_batch", _power_build)
 
 
-def _finalize(out: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
-    """Datacenter-level totals from the per-host accumulators.
-
-    Shared by the oo and vec handlers so the scalar reductions are the same
-    ``np.sum`` (pairwise) over bit-identical per-host arrays — keeping the
-    totals in the bit-exactness contract too.
-    """
-    out = dict(out)
-    out["energy_total_wh"] = np.sum(out["energy_wh"], axis=-1)
-    out["sla_total_s"] = np.sum(out["sla_s"], axis=-1)
-    out["unserved_total_mips_s"] = np.sum(out["unserved_mips_s"], axis=-1)
-    return out
-
-
-def _broadcast_cells(seeds, axes: Dict[str, Any]):
-    """Broadcast ``seeds`` against the sweep axes → (seeds[B], axes[B])."""
-    seeds = np.atleast_1d(np.asarray(seeds, np.int64))
-    arrs = {k: np.atleast_1d(np.asarray(v)) for k, v in axes.items()}
-    b = int(np.broadcast_shapes(seeds.shape,
-                                *(a.shape for a in arrs.values()))[0])
-    return (np.broadcast_to(seeds, (b,)),
-            {k: np.broadcast_to(a, (b,)) for k, a in arrs.items()}, b)
-
-
-def _empty_outputs(n_hosts: int, donate: bool):
-    from .sweep import SweepReport
-    zf = np.empty((0, n_hosts), np.float64)
-    zi = np.empty((0,), np.int32)
-    out = _finalize(dict(
-        energy_wh=zf, sla_s=zf, unserved_mips_s=zf, migrations=zi,
-        scale_out_events=zi, scale_in_events=zi, final_active=zi,
-        iterations=zi))
-    return out, SweepReport(n_cells=0, chunk_size=0, n_chunks=0, devices=1,
-                            bucketed=False, donated=donate)
-
-
-def _finalize_accumulators(out: Dict[str, np.ndarray], tables: np.ndarray,
-                           interval) -> Dict[str, np.ndarray]:
-    """Exact loop accumulators → public per-host metrics (host-side numpy;
-    op-for-op what ``ElasticDatacenterManager.result`` computes)."""
-    from .power import segment_energy_j
-    interval = np.float64(interval)
-    out = dict(out)
-    energy_j = segment_energy_j(tables, out.pop("seg_count"),
-                                out.pop("seg_frac"), interval)
-    out["energy_wh"] = energy_j / 3600.0
-    out["sla_s"] = out.pop("over_count") * interval
-    out["unserved_mips_s"] = out.pop("unserved_mips") * interval
-    return out
-
-
-def simulate_power_batch(*, seeds: Sequence[int] | np.ndarray = (0,),
-                         n_hosts: int = 8, n_vms: int = 32,
-                         n_samples: int = 288, interval: float = 300.0,
-                         host_mips: float = 8000.0, vm_mips=1000.0,
-                         up_thr=0.8, lo_thr=0.3, cooldown=3,
-                         min_active: int = 1,
-                         init_active: Optional[int] = None,
-                         model_mix: str = "mixed", n_points: int = 11,
-                         use_pallas: bool | str = False,
-                         chunk_size: Optional[int] = None,
-                         devices=None, donate: bool = True,
-                         with_report: bool = False):
-    """Run a batch of elastic-datacenter cells through the sweep layer.
-
-    ``seeds`` and the optional sweep axes (``up_thr``, ``lo_thr``,
-    ``cooldown``, ``vm_mips`` — scalars or arrays broadcast against
-    ``seeds``) define the batch; each cell's demand trace is synthesized
-    from its seed (:func:`repro.core.power.elastic_demand_trace`) and
-    shared verbatim with the OO reference.  Returns a dict of per-cell
-    stats — per-host ``energy_wh [B, H]`` / ``sla_s`` / ``unserved_mips_s``
-    plus their datacenter totals, integer ``migrations`` /
-    ``scale_out_events`` / ``scale_in_events`` / ``final_active`` — and
-    with ``with_report=True`` returns ``(stats, SweepReport)``.
-
-    Execution goes through :mod:`repro.core.sweep` (bounded chunks with
-    donated buffers, device sharding) — bit-identical to the monolithic
-    dispatch, which in turn is bit-identical to the OO manager.  All lanes
-    run exactly ``n_samples`` loop iterations, so there is no divergence to
-    bucket (``predicted_cost`` stays unset).
-    """
-    from ..kernels.ops import resolve_use_pallas
-    from .sweep import execute_sweep
-    use_pallas = resolve_use_pallas(use_pallas)
+def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,),
+                   n_hosts: int = 8, n_vms: int = 32,
+                   n_samples: int = 288, interval: float = 300.0,
+                   host_mips: float = 8000.0, vm_mips=1000.0,
+                   up_thr=0.8, lo_thr=0.3, cooldown=3,
+                   min_active: int = 1, init_active: Optional[int] = None,
+                   model_mix: str = "mixed", n_points: int = 11):
     min_active = max(int(min_active), 1)
     init_active = n_hosts if init_active is None else int(init_active)
     if not 1 <= min_active <= n_hosts:
@@ -321,8 +211,7 @@ def simulate_power_batch(*, seeds: Sequence[int] | np.ndarray = (0,),
             f"vm_mips (max {np.max(axes['vm_mips'])}) must be ≤ host_mips "
             f"({host_mips}): a VM must fit a time-shared host")
     if b == 0:
-        out, report = _empty_outputs(n_hosts, donate)
-        return (out, report) if with_report else out
+        return Done(_empty_outputs(n_hosts))
 
     from .power import elastic_demand_trace
     import random as _random
@@ -345,98 +234,35 @@ def simulate_power_batch(*, seeds: Sequence[int] | np.ndarray = (0,),
         init_active=np.full(b, init_active, np.int32))
     statics = _Statics(int(n_hosts), int(n_points), int(n_samples),
                        int(n_vms), min_active, bool(use_pallas))
-    with jax.experimental.enable_x64():
-        out, report = execute_sweep(
-            _batched_sim(statics), params,
-            chunk_size=chunk_size, devices=devices, donate=donate)
-    out = _finalize(_finalize_accumulators(out, table, float(interval)))
-    return (out, report) if with_report else out
+    # All lanes run exactly n_samples iterations — no divergence to bucket.
+    return BatchPlan(
+        params, statics,
+        finalize=lambda out: _finalize(
+            _finalize_accumulators(out, table, float(interval))))
+
+
+simulate_power_batch = make_batch_entry(
+    POWER_ENGINE, _prepare_power, name="simulate_power_batch", doc="""\
+    Run a batch of elastic-datacenter cells through the sweep layer.
+
+    ``seeds`` and the optional sweep axes (``up_thr``, ``lo_thr``,
+    ``cooldown``, ``vm_mips`` — scalars or arrays broadcast against
+    ``seeds``) define the batch; each cell's demand trace is synthesized
+    from its seed (:func:`repro.core.power.elastic_demand_trace`) and
+    shared verbatim with the OO reference.  Returns a dict of per-cell
+    stats — per-host ``energy_wh [B, H]`` / ``sla_s`` / ``unserved_mips_s``
+    plus their datacenter totals, integer ``migrations`` /
+    ``scale_out_events`` / ``scale_in_events`` / ``final_active`` — and
+    with ``with_report=True`` returns ``(stats, SweepReport)``.
+
+    Execution goes through :mod:`repro.core.sweep` (bounded chunks with
+    donated buffers, device sharding) — bit-identical to the monolithic
+    dispatch, which in turn is bit-identical to the OO manager.
+    """)
 
 
 # -- OO reference (legacy / oo backends) ---------------------------------------
-
-class _AutoscaleEntity(SimEntity):
-    """Periodic AUTOSCALE driver running the elastic manager inside a
-    Simulation (the legacy/oo engine flavours differ only in queue
-    mechanics — decisions and accounting live in the manager)."""
-
-    def __init__(self, sim: Simulation, mgr: ElasticDatacenterManager,
-                 n_intervals: int):
-        super().__init__(sim, "autoscaler")
-        self.mgr = mgr
-        self.n_intervals = n_intervals
-        self._k = 0
-
-    def start(self) -> None:
-        if self.n_intervals > 0:
-            self.sim.schedule(0.0, Tag.AUTOSCALE, self)
-
-    def process_event(self, ev: Event) -> None:
-        if ev.tag is Tag.AUTOSCALE:
-            self.mgr.step(self._k)
-            self._k += 1
-            if self._k < self.n_intervals:
-                self.sim.schedule(ev.time + self.mgr.interval, Tag.AUTOSCALE,
-                                  self)
-
-
-def _run_elastic_cell(backend: SimBackend, *, seed: int, n_hosts: int,
-                      n_vms: int, n_samples: int, interval: float,
-                      host_mips: float, vm_mips: float, up_thr: float,
-                      lo_thr: float, cooldown: int, min_active: int,
-                      init_active: Optional[int], model_mix: str,
-                      n_points: int) -> Dict[str, Any]:
-    hosts, vms, trace = make_elastic_scenario(
-        n_hosts, n_vms, seed=seed, n_samples=n_samples,
-        host_mips=host_mips, vm_mips=vm_mips, model_mix=model_mix)
-    mgr = ElasticDatacenterManager(
-        hosts, vms, trace, vm_mips=vm_mips, up_thr=up_thr, lo_thr=lo_thr,
-        cooldown_k=cooldown, min_active=min_active, init_active=init_active,
-        interval=interval, n_points=n_points)
-    sim = backend.make_simulation()
-    _AutoscaleEntity(sim, mgr, n_samples)
-    sim.run()
-    return mgr.result()
-
-
-# -- backend substrate handlers ------------------------------------------------
-
-@scenario("power_batch", backends=("vec",))
-def _power_batch_vec(backend: SimBackend, **kw):
-    return simulate_power_batch(**kw)
-
-
-@scenario("power_batch", backends=("legacy", "oo"))
-def _power_batch_oo(backend: SimBackend, *,
-                    seeds: Sequence[int] = (0,), n_hosts: int = 8,
-                    n_vms: int = 32, n_samples: int = 288,
-                    interval: float = 300.0, host_mips: float = 8000.0,
-                    vm_mips=1000.0, up_thr=0.8, lo_thr=0.3, cooldown=3,
-                    min_active: int = 1, init_active: Optional[int] = None,
-                    model_mix: str = "mixed", n_points: int = 11,
-                    chunk_size: Optional[int] = None,
-                    with_report: bool = False, **_ignored):
-    """Reference semantics for the power sweep: run the OO elastic manager
-    (event-driven, one cell at a time) over every scenario point — what the
-    vec path replaces with one compiled vmap call.  Cells route through the
-    sweep layer's host path so ``run_sweep`` sees a populated report."""
-    from .sweep import run_host_sweep
-    seeds, axes, b = _broadcast_cells(seeds, dict(
-        up_thr=up_thr, lo_thr=lo_thr, cooldown=cooldown, vm_mips=vm_mips))
-    if b == 0:
-        out, report = _empty_outputs(n_hosts, donate=False)
-        return (out, report) if with_report else out
-
-    def run_cell(i: int) -> Dict[str, Any]:
-        return _run_elastic_cell(
-            backend, seed=int(seeds[i]), n_hosts=n_hosts, n_vms=n_vms,
-            n_samples=n_samples, interval=interval, host_mips=host_mips,
-            vm_mips=float(axes["vm_mips"][i]),
-            up_thr=float(axes["up_thr"][i]), lo_thr=float(axes["lo_thr"][i]),
-            cooldown=int(axes["cooldown"][i]), min_active=min_active,
-            init_active=init_active, model_mix=model_mix, n_points=n_points)
-
-    rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
-    out = _finalize({k: np.stack([np.asarray(r[k]) for r in rows])
-                     for k in rows[0]})
-    return (out, report) if with_report else out
+# The event-driven reference implementation lives with the OO manager in
+# :mod:`repro.core.power`; registered here so loading the vec module wires
+# every backend of the kind.
+scenario("power_batch", backends=("legacy", "oo"))(_power_batch_oo)

@@ -1,12 +1,11 @@
 """Vectorized Algorithm 1 — the paper's scheduler life-cycle as JAX SoA.
 
-Beyond-paper contribution: CloudSim's ``CloudletScheduler`` advances each
-cloudlet with a Python/Java ``for`` loop per scheduler per event.  On
-accelerator-class hardware the idiomatic form is structure-of-arrays: all
-guests × all cloudlets advance in one fused masked-vector pass, and the
-"next event" is an ``argmin`` reduction instead of a heap walk.  The entire
-simulation (lines 1–23 of Algorithm 1, iterated to completion) runs inside a
-single ``jax.lax.while_loop`` under ``jax.jit``.
+CloudSim's ``CloudletScheduler`` advances each cloudlet with a Python/Java
+``for`` loop per scheduler per event; here all guests × all cloudlets advance
+in one fused masked-vector pass and "next event" is a masked min reduction
+(``repro.kernels.ops``), with the whole simulation (Algorithm 1 lines 1–23,
+iterated to completion) inside a single ``lax.while_loop`` — the substrate
+conventions live in :mod:`repro.core.vec_engine`.
 
 Semantics exactly match ``CloudletSchedulerTimeShared`` /
 ``CloudletSchedulerSpaceShared`` (asserted by tests against the OO engine):
@@ -29,7 +28,9 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..kernels.ops import masked_min
 from .backend import SimBackend, scenario
+from .vec_engine import BatchPlan, Loop, VecEngine, make_batch_entry
 
 INF = jnp.inf
 
@@ -75,21 +76,14 @@ def _alloc_mips(state: VecSchedState, guest_mips, guest_pes, mode: str):
 
 
 def _next_event_time(state: VecSchedState, alloc, use_pallas: bool) -> jax.Array:
-    """min over (est. finish of running cloudlets, future submissions).
-
-    With ``use_pallas`` the reduction runs through the fused masked
-    min/argmin Pallas kernel (``kernels.next_event``, interpret mode on
-    CPU); both paths are exact minima, so results are bit-identical.
-    """
+    """min over (est. finish of running cloudlets, future submissions) —
+    through :func:`repro.kernels.ops.masked_min` (exact minima on both the
+    jnp and Pallas paths, so results are bit-identical)."""
     remaining = jnp.maximum(state.length - state.done, 0.0)
     est = jnp.where(alloc > 0, state.now + remaining / jnp.maximum(alloc, 1e-30), INF)
     future = jnp.where(state.submit > state.now, state.submit, INF)
-    if use_pallas:
-        from ..kernels.ops import next_event_op
-        cand = jnp.concatenate([est.reshape(-1), future.reshape(-1)])
-        t_min, _ = next_event_op(cand)
-        return t_min
-    return jnp.minimum(jnp.min(est), jnp.min(future))
+    return masked_min(jnp.concatenate([est.reshape(-1), future.reshape(-1)]),
+                      use_pallas=use_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "use_pallas"))
@@ -129,6 +123,15 @@ def simulate(state: VecSchedState, guest_mips, guest_pes, mode: str,
     return st
 
 
+def _canonical_order(submit):
+    """Space-shared FIFO is defined by *arrival* order: canonicalize slot
+    order to (submit time, slot index) per guest; returns (order, inverse)."""
+    import numpy as np
+    order = np.argsort(submit + np.arange(submit.shape[-1]) * 1e-12, axis=-1,
+                       kind="stable")
+    return order, np.argsort(order, axis=-1, kind="stable")
+
+
 def simulate_batch(length, pes, submit, guest_mips, guest_pes,
                    mode: str = "time", *, use_pallas: bool | str = False):
     """Convenience wrapper: returns finish times [G, C] (inf for empty slots).
@@ -145,11 +148,7 @@ def simulate_batch(length, pes, submit, guest_mips, guest_pes,
     length = np.asarray(length, np.float64)
     pes = np.asarray(pes, np.float64)
     submit = np.asarray(submit, np.float64)
-    # Space-shared FIFO is defined by *arrival* order: canonicalize slot
-    # order to (submit time, slot index) per guest, then un-permute results.
-    order = np.argsort(submit + np.arange(submit.shape[1]) * 1e-12, axis=1,
-                       kind="stable")
-    inv = np.argsort(order, axis=1, kind="stable")
+    order, inv = _canonical_order(submit)
     g_idx = np.arange(length.shape[0])[:, None]
     with jax.experimental.enable_x64():
         guest_mips = jnp.asarray(guest_mips, jnp.float64)
@@ -160,44 +159,54 @@ def simulate_batch(length, pes, submit, guest_mips, guest_pes,
         return np.asarray(st.finish)[g_idx, inv]
 
 
-# -- multi-cell batched entry (the sweep layer's unit of work) -----------------
+# -- multi-cell batched entry (a VecEngine definition) -------------------------
 
-@functools.lru_cache(maxsize=32)
-def _batched_cells(mode: str, use_pallas: bool):
-    """Vmapped whole-simulation runner over independent scheduler cells, in
-    the sweep layer's single-pytree calling convention.
-
-    Each cell is one complete [G, C] scheduler problem with its own event
-    clock (cells never interact), so chunking/sharding the cell axis is
-    bit-identical to the monolithic dispatch — unlike guests *within* a
-    cell, which share the global clock.  Also counts loop iterations per
-    cell for the sweep layer's divergence accounting.
-    """
-    def one(args):
-        length, pes, submit, gmips, gpes = args
-        st, t0 = step(make_state(length, pes, submit), gmips, gpes, mode,
-                      use_pallas)
-
-        def cond(c):
-            return jnp.isfinite(c[1])
-
-        def body(c):
-            st, _, it = c
-            st2, t2 = step(st, gmips, gpes, mode, use_pallas)
-            return st2, t2, it + 1
-
-        st, _, it = jax.lax.while_loop(cond, body,
-                                       (st, t0, jnp.asarray(1, jnp.int32)))
-        return dict(finish=st.finish, iterations=it)
-
-    return jax.vmap(one)
+class _CellStatics(NamedTuple):
+    mode: str
+    use_pallas: bool
 
 
-def simulate_cells(length, pes, submit, guest_mips, guest_pes,
-                   mode: str = "time", *, use_pallas: bool | str = False,
-                   chunk_size=None, devices=None, donate: bool = True,
-                   with_report: bool = False):
-    """Batch of independent scheduler cells through the sweep layer.
+def _cells_build(params, statics: _CellStatics, ops) -> Loop:
+    """One complete [G, C] scheduler problem per cell, on its own event
+    clock (cells never interact — chunking/sharding the cell axis is
+    bit-identical to the monolithic dispatch, unlike guests *within* a
+    cell, which share the global clock)."""
+    length, pes, submit, gmips, gpes = params
+    run = functools.partial(step, guest_mips=gmips, guest_pes=gpes,
+                            mode=statics.mode, use_pallas=statics.use_pallas)
+    return Loop(
+        init=run(make_state(length, pes, submit)),
+        cond=lambda c, it: jnp.isfinite(c[1]),
+        body=lambda c, it: run(c[0]),
+        # One step ran before the loop: count it in the iteration total.
+        finalize=lambda c, it: dict(finish=c[0].finish, iterations=it + 1))
+
+
+CELLS_ENGINE = VecEngine("cloudlet_batch", _cells_build)
+
+
+def _prepare_cells(length, pes, submit, guest_mips, guest_pes,
+                   mode: str = "time", *, use_pallas: bool) -> BatchPlan:
+    import numpy as np
+    length = np.asarray(length, np.float64)
+    pes = np.asarray(pes, np.float64)
+    submit = np.asarray(submit, np.float64)
+    order, inv = _canonical_order(submit)
+    params = (np.take_along_axis(length, order, -1),
+              np.take_along_axis(pes, order, -1),
+              np.take_along_axis(submit, order, -1),
+              np.asarray(guest_mips, np.float64),
+              np.asarray(guest_pes, np.float64))
+    return BatchPlan(
+        params, _CellStatics(mode, bool(use_pallas)),
+        # Loop length ≈ events ≈ live cloudlets (+ their submissions).
+        predicted_cost=np.count_nonzero(length > 0, axis=(1, 2)) + 1,
+        finalize=lambda out: np.take_along_axis(out["finish"], inv, -1))
+
+
+simulate_cells = make_batch_entry(
+    CELLS_ENGINE, _prepare_cells, backends=(), name="simulate_cells", doc="""\
+    Batch of independent scheduler cells through the sweep layer.
 
     ``length``/``pes``/``submit`` are ``[B, G, C]``; ``guest_mips``/
     ``guest_pes`` are ``[B, G]``.  Every cell advances on its own event
@@ -206,33 +215,7 @@ def simulate_cells(length, pes, submit, guest_mips, guest_pes,
     ``with_report=True`` returns ``(finish, SweepReport)``.  Cells are
     bucketed by live-cloudlet count, chunked with donated buffers, and
     sharded across devices — bit-identical to the monolithic dispatch.
-    """
-    import numpy as np
-    from ..kernels.ops import resolve_use_pallas
-    from .sweep import execute_sweep
-    use_pallas = resolve_use_pallas(use_pallas)
-    length = np.asarray(length, np.float64)
-    pes = np.asarray(pes, np.float64)
-    submit = np.asarray(submit, np.float64)
-    guest_mips = np.asarray(guest_mips, np.float64)
-    guest_pes = np.asarray(guest_pes, np.float64)
-    # Per-cell slot canonicalization (space-shared FIFO is arrival-ordered).
-    order = np.argsort(submit + np.arange(submit.shape[-1]) * 1e-12, axis=-1,
-                       kind="stable")
-    inv = np.argsort(order, axis=-1, kind="stable")
-    params = (np.take_along_axis(length, order, -1),
-              np.take_along_axis(pes, order, -1),
-              np.take_along_axis(submit, order, -1),
-              guest_mips, guest_pes)
-    # Loop length ≈ events ≈ live cloudlets (+ their submissions).
-    pred = np.count_nonzero(length > 0, axis=(1, 2)) + 1
-    with jax.experimental.enable_x64():
-        out, report = execute_sweep(
-            _batched_cells(mode, bool(use_pallas)), params,
-            chunk_size=chunk_size, devices=devices, donate=donate,
-            predicted_cost=pred)
-    finish = np.take_along_axis(out["finish"], inv, -1)
-    return (finish, report) if with_report else finish
+    """)
 
 
 # -- backend substrate handlers ------------------------------------------------
@@ -257,48 +240,11 @@ def _cloudlet_batch_vec(backend: SimBackend, *, length, pes, submit,
 def _cloudlet_batch_oo(backend: SimBackend, *, length, pes, submit,
                        guest_mips, guest_pes, mode: str = "time",
                        use_pallas: bool = False):
-    """Finish times [G, C] via the OO engine (reference semantics; inf for
-    empty/unfinished slots) — same contract as the vec handler.  ``[B, G,
-    C]`` inputs loop the engine over the independent cells.  Sweep controls
-    (``with_report``/``chunk_size``/``devices``) are deliberately *not*
-    accepted: this handler has no sweep path, and ``backend.run_sweep``'s
-    contract is a ``TypeError`` rather than a silently-dropped report."""
-    import numpy as np
-    if np.asarray(length).ndim == 3:
-        return np.stack([
-            _cloudlet_batch_oo(backend, length=length[b], pes=pes[b],
-                               submit=submit[b], guest_mips=guest_mips[b],
-                               guest_pes=guest_pes[b], mode=mode)
-            for b in range(np.asarray(length).shape[0])])
-    from .datacenter import Broker, Datacenter
-    from .entities import Cloudlet, Host, Vm
-    from .scheduler import (CloudletSchedulerSpaceShared,
-                            CloudletSchedulerTimeShared)
-    length = np.asarray(length, np.float64)
-    pes = np.asarray(pes, np.float64)
-    submit = np.asarray(submit, np.float64)
-    G, C = length.shape
-    sim = backend.make_simulation()
-    hosts = [Host(num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
-                  ram=1e9, bw=1e9) for g in range(G)]
-    dc = Datacenter(sim, hosts)
-    broker = Broker(sim, dc)
-    guests = []
-    for g in range(G):
-        sch = (CloudletSchedulerTimeShared() if mode == "time"
-               else CloudletSchedulerSpaceShared())
-        vm = Vm(sch, num_pes=int(guest_pes[g]), mips=float(guest_mips[g]),
-                ram=1024, bw=1e9)
-        broker.add_guest(vm, on_host=hosts[g])
-        guests.append(vm)
-    cls = {}
-    for t, g, c in sorted((submit[g, c], g, c) for g in range(G)
-                          for c in range(C) if length[g, c] > 0):
-        cl = Cloudlet(length=float(length[g, c]), pes=int(pes[g, c]))
-        cls[(g, c)] = cl
-        broker.submit(cl, guests[g], at=float(t))
-    sim.run()
-    out = np.full((G, C), np.inf)
-    for (g, c), cl in cls.items():
-        out[g, c] = cl.finish_time if cl.finish_time >= 0 else np.inf
-    return out
+    """Reference semantics (:func:`repro.core.scheduler
+    ._cloudlet_batch_oo_impl`): the OO event engine, per cell.  Sweep
+    controls are deliberately *not* accepted — ``backend.run_sweep``'s
+    contract is a ``TypeError``, not a silently-dropped report."""
+    from .scheduler import _cloudlet_batch_oo_impl
+    return _cloudlet_batch_oo_impl(backend, length=length, pes=pes,
+                                   submit=submit, guest_mips=guest_mips,
+                                   guest_pes=guest_pes, mode=mode)

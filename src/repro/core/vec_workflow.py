@@ -1,58 +1,32 @@
 """Vectorized networked-workflow engine — DAG stage machines as JAX SoA.
 
 The OO path runs the NetworkCloudSim rewrite (``core.workflow`` +
-``core.datacenter``) one Python event at a time: every EXEC completion,
-packet arrival, and activation submission walks entity objects.  This module
-is the same EXEC/SEND/RECV stage semantics — Algorithm 1's handler methods,
-time-shared capacity splitting, store-and-forward link delays with composed
-virtualization overheads (C4) — as structure-of-arrays state advanced inside
-**one** ``jax.lax.while_loop`` under ``jit``, and ``vmap``-ed over a batch of
-scenario cells so the whole §6 case-study grid (virt × placement × payload ×
-seed) runs in a single compiled call.
+``core.datacenter``) one Python event at a time.  This module is the same
+EXEC/SEND/RECV stage semantics — Algorithm 1's handler methods, time-shared
+capacity splitting, store-and-forward link delays with composed
+virtualization overheads (C4) — as a :class:`~repro.core.vec_engine
+.VecEngine` definition, so the whole §6 case-study grid (virt × placement ×
+payload × seed) runs in a single compiled call.
 
-SoA layout (per scenario cell; every array gains a leading batch axis under
-``vmap`` — see ARCHITECTURE.md for the shared conventions):
+SoA layout (per scenario cell): each DAG activation is flattened into tasks
+``[n_tasks]`` with padded stage columns ``[n_tasks, max_stages]`` (``kind``,
+EXEC MI ``slen`` + ordered prefix ``before``, closed-form SEND ``delay``
+from :func:`repro.core.network.store_and_forward_delay`, matching RECV slot
+coordinates); packet transport is a scatter of arrival times, and the next
+event is a masked min over (EXEC finish estimates, future submissions,
+in-flight arrivals) via ``ops.min``.
 
-  * each DAG activation is flattened into tasks ``[n_tasks]`` with padded
-    stage columns ``[n_tasks, max_stages]``: ``kind`` (PAD/EXEC/SEND/RECV),
-    ``slen`` (MI), ``before`` (exclusive prefix of earlier EXEC MI, summed
-    in the OO engine's order), ``delay`` (closed-form network delay of each
-    SEND — ``links·payload·8/bw + switch_lat + O_src + O_dst``, precomputed
-    from the rack topology with ``network.transfer_delay``'s exact float
-    arithmetic, 0 when co-located), ``send_dst``/``send_slot`` (the matching
-    RECV slot in the peer task);
-  * packet transport is a scatter: firing SEND ``(t, s)`` writes
-    ``now + delay[t, s]`` into ``arrival[send_dst, send_slot]``, and a RECV
-    is satisfied when its ``arrival`` column is ``<= now`` — the dependency-
-    ready mask ("all parents delivered") emerges from consecutive RECV
-    stages each gating on its own arrival entry;
-  * the next event is a masked min over (EXEC finish estimates, future
-    submissions, in-flight arrivals) — through the fused Pallas kernel
-    (``kernels.next_event``) when ``use_pallas`` is set;
-  * everything runs under ``jax.experimental.enable_x64`` with the same
-    f64 operation order as the OO engine's event clock.
-
-Exactness contract (asserted by tests):
-
-  * **deterministic single-activation** DAGs: finish times and makespans are
-    bit-identical to the OO engine (both engines tick at the same event
-    times and accumulate the same ordered f64 arithmetic), and equal to
-    ``theoretical_makespan`` (Eq. 2) where it applies;
-  * **stochastic activation streams** (Poisson arrivals): the arrival draws
-    are shared with the OO path (same ``random.Random(seed)`` stream), and
-    mean makespan matches within 2% over ≥64 seeds (tests assert this).
-
-Documented approximations vs. the OO engine (second-order; none are hit by
-the case-study grid): host-level time-shared oversubscription is folded
-into a static per-guest *granted* MIPS instead of being recomputed per
-event; guests with ≥3 PEs may differ in the last ulp (``granted`` is
-``mips·pes``, the OO engine sums the share list); zero-time-span scheduler
-ticks after submission events are not replayed (they only matter through
-the 1e-9 stage-completion tolerance).
+Exactness contract (asserted by tests): deterministic single-activation
+DAGs are **bit-identical** to the OO engine and equal to
+``theoretical_makespan`` (Eq. 2) where it applies; Poisson activation
+streams share the OO arrival draws and match within 2% mean over ≥64
+seeds.  Documented approximations (second-order; none hit by the
+case-study grid): host oversubscription folded into static granted MIPS;
+≥3-PE guests may differ in the last ulp; zero-span submission re-ticks not
+replayed.
 """
 from __future__ import annotations
 
-import functools
 import random
 from dataclasses import dataclass
 from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
@@ -62,7 +36,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import SimBackend, scenario
-from .workflow import NetworkCloudlet, StageKind
+from .network import store_and_forward_delay
+from .vec_engine import BatchPlan, Loop, VecEngine, make_batch_entry
+from .workflow import (NetworkCloudlet, StageKind, _normalize_guests,
+                       _workflow_batch_build, _workflow_result)
 
 # Stage-kind codes (PAD marks unused padded slots).
 PAD, EXEC, SEND, RECV = 0, 1, 2, 3
@@ -109,7 +86,6 @@ class _WfCarry(NamedTuple):
     done: Any          # [T] f64 MI executed (Cloudlet.length_so_far)
     arrival: Any       # [T, S] f64 packet arrival time per RECV slot
     finish: Any        # [T] f64 finish times (inf until done)
-    it: Any            # [] i32 event counter
 
 
 def _at_stage(arr, sidx):
@@ -145,22 +121,11 @@ def _cascade(spec: WorkflowSpec, s: _WfStatics, now, sidx, arrival):
     return jax.lax.fori_loop(0, s.cascade_rounds, one_round, (sidx, arrival))
 
 
-def _next_event_min(candidates, use_pallas: bool):
-    if use_pallas:
-        from ..kernels.ops import next_event_op
-        t_min, _ = next_event_op(candidates)
-        return t_min
-    return jnp.min(candidates)
-
-
-def _simulate_one(spec: WorkflowSpec, s: _WfStatics) -> Dict[str, Any]:
-    """One scenario cell, start to finish, as a single lax.while_loop."""
+def _wf_build(spec: WorkflowSpec, s: _WfStatics, ops) -> Loop:
+    """One scenario cell, start to finish (one event per loop iteration)."""
     granted = spec.gmips * spec.gpes                     # per-guest MIPS pool
 
-    def cond(c: _WfCarry):
-        return jnp.isfinite(c.t_next) & (c.it < s.max_iters)
-
-    def body(c: _WfCarry) -> _WfCarry:
+    def body(c: _WfCarry, it) -> _WfCarry:
         # 1. Non-blocking stage cascade at the current event time (SENDs
         #    fire, satisfied RECVs unblock — incl. 0-delay co-located sends).
         sidx, arrival = _cascade(spec, s, c.now, c.sidx, c.arrival)
@@ -192,8 +157,7 @@ def _simulate_one(spec: WorkflowSpec, s: _WfStatics) -> Dict[str, Any]:
         waiting = submitted & (sidx < spec.n_stage) & (kind_now == RECV)
         wake = jnp.where(waiting & (_at_stage(arrival, sidx) > c.now),
                          _at_stage(arrival, sidx), jnp.inf)
-        t_next = _next_event_min(jnp.concatenate([est, fut, wake]),
-                                 s.use_pallas)
+        t_next = ops.min(jnp.concatenate([est, fut, wake]))
         # 5. Handler 1 (update_progress) over the window [now, t_next]:
         #    step = min(span·alloc, room), 1e-9 completion tolerance —
         #    the OO engine's exact arithmetic.
@@ -208,8 +172,7 @@ def _simulate_one(spec: WorkflowSpec, s: _WfStatics) -> Dict[str, Any]:
             sidx=sidx + completed.astype(sidx.dtype),
             done=done,
             arrival=arrival,
-            finish=finish,
-            it=c.it + 1)
+            finish=finish)
 
     zf = jnp.asarray(0.0, spec.slen.dtype)
     init = _WfCarry(
@@ -217,18 +180,15 @@ def _simulate_one(spec: WorkflowSpec, s: _WfStatics) -> Dict[str, Any]:
         sidx=jnp.zeros((s.n_tasks,), jnp.int32),
         done=jnp.zeros((s.n_tasks,), spec.slen.dtype),
         arrival=jnp.full((s.n_tasks, s.max_stages), jnp.inf, spec.slen.dtype),
-        finish=jnp.full((s.n_tasks,), jnp.inf, spec.slen.dtype),
-        it=jnp.asarray(0, jnp.int32))
-    end = jax.lax.while_loop(cond, body, init)
-    return dict(finish=end.finish, done=end.done, iterations=end.it)
+        finish=jnp.full((s.n_tasks,), jnp.inf, spec.slen.dtype))
+    return Loop(
+        init=init,
+        cond=lambda c, it: jnp.isfinite(c.t_next) & (it < s.max_iters),
+        body=body,
+        finalize=lambda c, it: dict(finish=c.finish, done=c.done))
 
 
-@functools.lru_cache(maxsize=32)
-def _batched_sim(statics: _WfStatics):
-    """Batched (vmap) workflow simulator for one static shape, in the sweep
-    layer's single-pytree calling convention (the sweep executor jits it
-    with buffer donation)."""
-    return jax.vmap(functools.partial(_simulate_one, s=statics))
+WORKFLOW_ENGINE = VecEngine("workflow_batch", _wf_build)
 
 
 # ---------------------------------------------------------------------------
@@ -240,14 +200,11 @@ def _edge_delay(payload_bytes: float, links: int, n_switches: int,
                 ov_dst: float) -> float:
     """Closed-form ``NetworkTopology.transfer_delay`` — same float ops, same
     order (incl. the C4 composed nesting overheads at both endpoints)."""
-    if links == 0:
-        return 0.0                               # co-located: ρ = 0 in Eq.(2)
-    per_link = payload_bytes * 8.0 / bw
     switch_lat = 0.0
     for _ in range(n_switches):                  # sum() over equal latencies
         switch_lat += switch_latency
-    overhead = ov_src + ov_dst
-    return links * per_link + switch_lat + overhead
+    return store_and_forward_delay(payload_bytes, links, bw, switch_lat,
+                                   ov_src + ov_dst)
 
 
 def _links_between(g_src: int, g_dst: int, host_of_guest, rack_of_host
@@ -347,29 +304,8 @@ def pad_stack(specs: Sequence[WorkflowSpec]) -> WorkflowSpec:
                           for f in WorkflowSpec._fields))
 
 
-def simulate_specs(specs: Sequence[WorkflowSpec], *,
-                   use_pallas: bool | str = False,
-                   max_iters: Optional[int] = None,
-                   chunk_size: Optional[int] = None,
-                   devices=None,
-                   donate: bool = True,
-                   with_report: bool = False):
-    """Run a batch of workflow cells through the sweep execution layer.
-
-    Returns ``finish [B, T]`` (inf = never finished — deadlocked DAG),
-    ``done [B, T]`` MI, and per-cell loop ``iterations``; with
-    ``with_report=True`` returns ``(stats, SweepReport)``.
-
-    Cells are bucketed by predicted event count (submissions + stage
-    completions per cell), dispatched in bounded chunks with donated
-    buffers, and sharded across ``devices`` — all bit-identical to the
-    monolithic single-dispatch call (see :mod:`repro.core.sweep`).
-    ``use_pallas`` resolves through ``kernels.ops.resolve_use_pallas``
-    (CPU falls back to the jnp reduction with a one-time warning).
-    """
-    from ..kernels.ops import resolve_use_pallas
-    from .sweep import execute_sweep
-    use_pallas = resolve_use_pallas(use_pallas)
+def _prepare_specs(specs: Sequence[WorkflowSpec], *, use_pallas: bool,
+                   max_iters: Optional[int] = None) -> BatchPlan:
     batched = pad_stack(specs)
     T, S = batched.kind.shape[1:]
     G = batched.gmips.shape[1]
@@ -381,12 +317,23 @@ def simulate_specs(specs: Sequence[WorkflowSpec], *,
     # Predicted loop length ≈ per-cell live stages + submissions (cells of
     # one grid share padded shapes but not DAG population or arrivals).
     pred = np.asarray(batched.n_stage, np.int64).sum(axis=1) + T
-    with jax.experimental.enable_x64():
-        out, report = execute_sweep(
-            _batched_sim(statics), batched,
-            chunk_size=chunk_size, devices=devices, donate=donate,
-            predicted_cost=pred)
-    return (out, report) if with_report else out
+    return BatchPlan(batched, statics, predicted_cost=pred)
+
+
+simulate_specs = make_batch_entry(
+    WORKFLOW_ENGINE, _prepare_specs, backends=(), name="simulate_specs",
+    doc="""\
+    Run a batch of workflow cells through the sweep execution layer.
+
+    Returns ``finish [B, T]`` (inf = never finished — deadlocked DAG),
+    ``done [B, T]`` MI, and per-cell loop ``iterations``; with
+    ``with_report=True`` returns ``(stats, SweepReport)``.
+
+    Cells are bucketed by predicted event count, dispatched in bounded
+    chunks with donated buffers, and sharded across ``devices`` — all
+    bit-identical to the monolithic single-dispatch call (see
+    :mod:`repro.core.vec_engine` / :mod:`repro.core.sweep`).
+    """)
 
 
 # ---------------------------------------------------------------------------
@@ -477,57 +424,6 @@ def _case_study_vec(backend: SimBackend, **kw):
 
 # -- generic batched DAG workflows ("workflow_batch" kind) ---------------------
 
-def _workflow_batch_build(nodes, edges, payload, guest_of, guest_mips,
-                          guest_pes, guest_overhead, guest_bw, host_of_guest,
-                          rack_of_host, link_bw, switch_latency, activations,
-                          seed, arrival_rate, deadline):
-    """Template DAGs + per-cell (payload, seed) broadcast for one grid."""
-    from .workflow import generic_dag
-    payloads = np.atleast_1d(np.asarray(payload, np.float64))
-    seeds = np.atleast_1d(np.asarray(seed, np.int64))
-    B = int(np.broadcast_shapes(payloads.shape, seeds.shape)[0])
-    payloads = np.broadcast_to(payloads, (B,))
-    seeds = np.broadcast_to(seeds, (B,))
-    if guest_bw is None:
-        guest_bw = [link_bw] * len(guest_mips)
-    if guest_overhead is None:
-        guest_overhead = [0.0] * len(guest_mips)
-    specs, arrivals, dag_lists = [], [], []
-    for b in range(B):
-        arr = arrival_times(activations, int(seeds[b]), arrival_rate)
-        dags = [generic_dag(list(nodes), list(edges), float(payloads[b]))
-                for _ in range(activations)]
-        if deadline is not None:
-            for dag in dags:
-                for cl in dag:
-                    cl.deadline = deadline
-        gof = [int(guest_of[i]) for _ in range(activations)
-               for i in range(len(nodes))]
-        specs.append(build_spec(
-            dags, gof, arr, guest_mips=guest_mips, guest_pes=guest_pes,
-            guest_overhead=guest_overhead, guest_bw=guest_bw,
-            host_of_guest=host_of_guest, rack_of_host=rack_of_host,
-            link_bw=link_bw, switch_latency=switch_latency))
-        arrivals.append(arr)
-        dag_lists.append(dags)
-    return specs, arrivals, dag_lists, B
-
-
-def _workflow_result(finish, arrivals, activations, n_nodes, submit, deadline):
-    """Per-activation makespans + deadline misses from flat finish times."""
-    B = finish.shape[0]
-    makespans = np.empty((B, activations))
-    for b in range(B):
-        for a in range(activations):
-            seg = finish[b, a * n_nodes:(a + 1) * n_nodes]
-            makespans[b, a] = np.max(seg) - arrivals[b][a]
-    # A task that never finishes (deadlocked DAG) has no finish-time check
-    # in the OO engine either — both engines report missed=False for it.
-    missed = np.isfinite(finish) & (
-        (finish - submit) > (np.inf if deadline is None else deadline))
-    return makespans, missed
-
-
 @scenario("workflow_batch", backends=("vec",))
 def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
                         payload: float = 0.0, guest_of, guest_mips,
@@ -550,11 +446,9 @@ def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
     ``missed_deadline [B, T]``, ``iterations [B]``; with
     ``with_report=True`` returns ``(dict, SweepReport)``.
     """
-    guest_pes = guest_pes if guest_pes is not None else [1.0] * len(guest_mips)
-    host_of_guest = (host_of_guest if host_of_guest is not None
-                     else list(range(len(guest_mips))))
-    rack_of_host = (rack_of_host if rack_of_host is not None
-                    else [0] * (max(host_of_guest) + 1))
+    guest_pes, guest_overhead, guest_bw, host_of_guest, rack_of_host = \
+        _normalize_guests(guest_mips, guest_pes, guest_overhead, guest_bw,
+                          host_of_guest, rack_of_host, link_bw)
     specs, arrivals, _, B = _workflow_batch_build(
         nodes, edges, payload, guest_of, guest_mips, guest_pes,
         guest_overhead, guest_bw, host_of_guest, rack_of_host, link_bw,
@@ -581,64 +475,17 @@ def _workflow_batch_oo(backend: SimBackend, *, nodes, edges,
                        deadline: Optional[float] = None,
                        **_ignored) -> Dict[str, np.ndarray]:
     """Reference semantics for ``workflow_batch``: loop the OO event engine
-    over every cell (what the vec path replaces with one vmap call)."""
-    from .datacenter import Broker, Datacenter
-    from .entities import Host, Vm
-    from .network import NetworkTopology
-    from .scheduler import CloudletSchedulerTimeShared
-    guest_pes = guest_pes if guest_pes is not None else [1.0] * len(guest_mips)
-    host_of_guest = (host_of_guest if host_of_guest is not None
-                     else list(range(len(guest_mips))))
-    rack_of_host = (rack_of_host if rack_of_host is not None
-                    else [0] * (max(host_of_guest) + 1))
-    if guest_bw is None:
-        guest_bw = [link_bw] * len(guest_mips)
-    if guest_overhead is None:
-        guest_overhead = [0.0] * len(guest_mips)
-
-    specs, all_arrivals, dag_lists, B = _workflow_batch_build(
-        nodes, edges, payload, guest_of, guest_mips, guest_pes,
-        guest_overhead, guest_bw, host_of_guest, rack_of_host, link_bw,
-        switch_latency, activations, seed, arrival_rate, deadline)
-    n_nodes, G = len(nodes), len(guest_mips)
-    n_hosts = len(rack_of_host)
-    finish = np.full((B, n_nodes * activations), np.inf)
-    missed = np.zeros((B, n_nodes * activations), bool)
-    for b in range(B):
-        sim = backend.make_simulation()
-        # Hosts sized to grant every resident guest its full MIPS (the vec
-        # path's static-granted contract).
-        hosts = []
-        for h in range(n_hosts):
-            resident = [g for g in range(G) if host_of_guest[g] == h]
-            pes_needed = max(int(sum(guest_pes[g] for g in resident)), 1)
-            mips = max([guest_mips[g] for g in resident], default=1000.0)
-            hosts.append(Host(num_pes=pes_needed, mips=mips, ram=1e12,
-                              bw=1e18, guest_scheduler="time", name=f"h{h}"))
-        topo = NetworkTopology(link_bw=link_bw, switch_latency=switch_latency)
-        for r in sorted(set(rack_of_host)):
-            topo.add_rack(r, [hosts[h] for h in range(n_hosts)
-                              if rack_of_host[h] == r])
-        dc = Datacenter(sim, hosts, topology=topo)
-        broker = Broker(sim, dc)
-        guests = []
-        for g in range(G):
-            vm = Vm(CloudletSchedulerTimeShared(), num_pes=int(guest_pes[g]),
-                    mips=float(guest_mips[g]), ram=1.0, bw=float(guest_bw[g]),
-                    virt_overhead=float(guest_overhead[g]))
-            broker.add_guest(vm, on_host=hosts[host_of_guest[g]])
-            guests.append(vm)
-        for a, dag in enumerate(dag_lists[b]):
-            t = all_arrivals[b][a]
-            for i, cl in enumerate(dag):
-                cl.activation_id = a
-                broker.submit(cl, guests[int(guest_of[i])], at=t)
-        sim.run()
-        for ti, cl in enumerate(cl for dag in dag_lists[b] for cl in dag):
-            finish[b, ti] = cl.finish_time if cl.finish_time >= 0 else np.inf
-            missed[b, ti] = cl.missed_deadline
-    submit = np.stack([np.asarray(sp.submit) for sp in specs])
-    makespans, _ = _workflow_result(finish, all_arrivals, activations,
-                                    n_nodes, submit, deadline)
-    return dict(finish=finish, makespans=makespans, missed_deadline=missed,
-                iterations=np.zeros((B,), np.int32))
+    (:func:`repro.core.workflow._workflow_batch_oo_impl`) over every cell —
+    what the vec engine replaces with one vmap call."""
+    from .workflow import _workflow_batch_oo_impl
+    guest_pes, guest_overhead, guest_bw, host_of_guest, rack_of_host = \
+        _normalize_guests(guest_mips, guest_pes, guest_overhead, guest_bw,
+                          host_of_guest, rack_of_host, link_bw)
+    return _workflow_batch_oo_impl(
+        backend, nodes=nodes, edges=edges, payload=payload,
+        guest_of=guest_of, guest_mips=guest_mips, guest_pes=guest_pes,
+        guest_overhead=guest_overhead, guest_bw=guest_bw,
+        host_of_guest=host_of_guest, rack_of_host=rack_of_host,
+        link_bw=link_bw, switch_latency=switch_latency,
+        activations=activations, seed=seed, arrival_rate=arrival_rate,
+        deadline=deadline)

@@ -19,6 +19,8 @@ import enum
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
+import numpy as np
+
 from .entities import Cloudlet, CloudletStatus
 from .network import Packet
 
@@ -171,3 +173,130 @@ def generic_dag(nodes: List[float], edges: List[tuple],
     for c in cls:
         c.length = sum(s.length for s in c.stages if s.kind == StageKind.EXEC)
     return cls
+
+
+def _normalize_guests(guest_mips, guest_pes, guest_overhead, guest_bw,
+                      host_of_guest, rack_of_host, link_bw):
+    """Fill the optional guest/topology arguments' documented defaults —
+    shared by the vec and OO ``workflow_batch`` handlers."""
+    G = len(guest_mips)
+    guest_pes = guest_pes if guest_pes is not None else [1.0] * G
+    guest_overhead = (guest_overhead if guest_overhead is not None
+                      else [0.0] * G)
+    guest_bw = guest_bw if guest_bw is not None else [link_bw] * G
+    host_of_guest = (host_of_guest if host_of_guest is not None
+                     else list(range(G)))
+    rack_of_host = (rack_of_host if rack_of_host is not None
+                    else [0] * (max(host_of_guest) + 1))
+    return guest_pes, guest_overhead, guest_bw, host_of_guest, rack_of_host
+
+
+def _workflow_batch_build(nodes, edges, payload, guest_of, guest_mips,
+                          guest_pes, guest_overhead, guest_bw, host_of_guest,
+                          rack_of_host, link_bw, switch_latency, activations,
+                          seed, arrival_rate, deadline):
+    """Template DAGs + per-cell (payload, seed) broadcast for one grid."""
+    from .vec_workflow import arrival_times, build_spec
+    payloads = np.atleast_1d(np.asarray(payload, np.float64))
+    seeds = np.atleast_1d(np.asarray(seed, np.int64))
+    B = int(np.broadcast_shapes(payloads.shape, seeds.shape)[0])
+    payloads = np.broadcast_to(payloads, (B,))
+    seeds = np.broadcast_to(seeds, (B,))
+    # Callers run _normalize_guests first; all guest args arrive filled.
+    specs, arrivals, dag_lists = [], [], []
+    for b in range(B):
+        arr = arrival_times(activations, int(seeds[b]), arrival_rate)
+        dags = [generic_dag(list(nodes), list(edges), float(payloads[b]))
+                for _ in range(activations)]
+        if deadline is not None:
+            for dag in dags:
+                for cl in dag:
+                    cl.deadline = deadline
+        gof = [int(guest_of[i]) for _ in range(activations)
+               for i in range(len(nodes))]
+        specs.append(build_spec(
+            dags, gof, arr, guest_mips=guest_mips, guest_pes=guest_pes,
+            guest_overhead=guest_overhead, guest_bw=guest_bw,
+            host_of_guest=host_of_guest, rack_of_host=rack_of_host,
+            link_bw=link_bw, switch_latency=switch_latency))
+        arrivals.append(arr)
+        dag_lists.append(dags)
+    return specs, arrivals, dag_lists, B
+
+
+def _workflow_result(finish, arrivals, activations, n_nodes, submit, deadline):
+    """Per-activation makespans + deadline misses from flat finish times."""
+    B = finish.shape[0]
+    makespans = np.empty((B, activations))
+    for b in range(B):
+        for a in range(activations):
+            seg = finish[b, a * n_nodes:(a + 1) * n_nodes]
+            makespans[b, a] = np.max(seg) - arrivals[b][a]
+    # A task that never finishes (deadlocked DAG) has no finish-time check
+    # in the OO engine either — both engines report missed=False for it.
+    missed = np.isfinite(finish) & (
+        (finish - submit) > (np.inf if deadline is None else deadline))
+    return makespans, missed
+
+
+
+def _workflow_batch_oo_impl(backend, *, nodes, edges, payload, guest_of,
+                            guest_mips, guest_pes, guest_overhead, guest_bw,
+                            host_of_guest, rack_of_host, link_bw,
+                            switch_latency, activations, seed, arrival_rate,
+                            deadline):
+    """Reference semantics for ``workflow_batch``: loop the OO event engine
+    over every cell (what ``vec_workflow``'s engine replaces with one vmap
+    call).  Registered in :mod:`repro.core.vec_workflow`, which owns the
+    shared cell builders."""
+    from .datacenter import Broker, Datacenter
+    from .entities import Host, Vm
+    from .network import NetworkTopology
+    from .scheduler import CloudletSchedulerTimeShared
+
+    specs, all_arrivals, dag_lists, B = _workflow_batch_build(
+        nodes, edges, payload, guest_of, guest_mips, guest_pes,
+        guest_overhead, guest_bw, host_of_guest, rack_of_host, link_bw,
+        switch_latency, activations, seed, arrival_rate, deadline)
+    n_nodes, G = len(nodes), len(guest_mips)
+    n_hosts = len(rack_of_host)
+    finish = np.full((B, n_nodes * activations), np.inf)
+    missed = np.zeros((B, n_nodes * activations), bool)
+    for b in range(B):
+        sim = backend.make_simulation()
+        # Hosts sized to grant every resident guest its full MIPS (the vec
+        # path's static-granted contract).
+        hosts = []
+        for h in range(n_hosts):
+            resident = [g for g in range(G) if host_of_guest[g] == h]
+            pes_needed = max(int(sum(guest_pes[g] for g in resident)), 1)
+            mips = max([guest_mips[g] for g in resident], default=1000.0)
+            hosts.append(Host(num_pes=pes_needed, mips=mips, ram=1e12,
+                              bw=1e18, guest_scheduler="time", name=f"h{h}"))
+        topo = NetworkTopology(link_bw=link_bw, switch_latency=switch_latency)
+        for r in sorted(set(rack_of_host)):
+            topo.add_rack(r, [hosts[h] for h in range(n_hosts)
+                              if rack_of_host[h] == r])
+        dc = Datacenter(sim, hosts, topology=topo)
+        broker = Broker(sim, dc)
+        guests = []
+        for g in range(G):
+            vm = Vm(CloudletSchedulerTimeShared(), num_pes=int(guest_pes[g]),
+                    mips=float(guest_mips[g]), ram=1.0, bw=float(guest_bw[g]),
+                    virt_overhead=float(guest_overhead[g]))
+            broker.add_guest(vm, on_host=hosts[host_of_guest[g]])
+            guests.append(vm)
+        for a, dag in enumerate(dag_lists[b]):
+            t = all_arrivals[b][a]
+            for i, cl in enumerate(dag):
+                cl.activation_id = a
+                broker.submit(cl, guests[int(guest_of[i])], at=t)
+        sim.run()
+        for ti, cl in enumerate(cl for dag in dag_lists[b] for cl in dag):
+            finish[b, ti] = cl.finish_time if cl.finish_time >= 0 else np.inf
+            missed[b, ti] = cl.missed_deadline
+    submit = np.stack([np.asarray(sp.submit) for sp in specs])
+    makespans, _ = _workflow_result(finish, all_arrivals, activations,
+                                    n_nodes, submit, deadline)
+    return dict(finish=finish, makespans=makespans, missed_deadline=missed,
+                iterations=np.zeros((B,), np.int32))

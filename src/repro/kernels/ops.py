@@ -15,6 +15,7 @@ tests, TPU-lowering dry runs).
 from __future__ import annotations
 
 import warnings
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -79,6 +80,77 @@ def next_event_op(times: jax.Array, mask: jax.Array | None = None, *,
     if interpret is None:
         interpret = not pallas_native()
     return next_event(times, mask, interpret=interpret)
+
+
+# -- masked next-event-style reductions (the vec engines' shared ops) ----------
+#
+# Every vectorized engine reduces "which candidate happens next" to a masked
+# min/argmin/argmax over an SoA candidate array.  These are the one canonical
+# implementation (previously three private copies in vec_cluster / vec_power /
+# vec_workflow), with the fused Pallas kernel behind the single ``use_pallas``
+# switch.  Contracts (asserted by tests/test_masked_ops.py):
+#
+#   * reduction is over the **last** axis; ``mask=False`` slots are ignored;
+#   * an all-masked (or empty-of-finite) input returns ``(inf, 0)`` exactly
+#     like ``jnp.min``/``jnp.argmin`` over an all-inf array;
+#   * ties break to the **first occurrence**, identically on the jnp and
+#     Pallas paths (selection decisions are part of the engines' bit-
+#     exactness contract);
+#   * the jnp and Pallas paths agree bit-for-bit (min is exact).
+
+
+def _masked(values, mask, fill):
+    values = jnp.asarray(values)
+    if mask is None:
+        return values
+    return jnp.where(mask, values, jnp.asarray(fill, values.dtype))
+
+
+def masked_min(values, mask=None, *, use_pallas: bool = False):
+    """Masked min over the last axis (``inf`` when everything is masked)."""
+    if use_pallas:
+        return next_event_op(values, mask)[0]
+    return jnp.min(_masked(values, mask, jnp.inf), axis=-1)
+
+
+def masked_argmin(values, mask=None, *, use_pallas: bool = False):
+    """First-occurrence masked argmin over the last axis (0 when all masked)."""
+    if use_pallas:
+        return next_event_op(values, mask)[1]
+    return jnp.argmin(_masked(values, mask, jnp.inf), axis=-1)
+
+
+def masked_argmax(values, mask=None, *, use_pallas: bool = False):
+    """First-occurrence masked argmax over the last axis (0 when all masked).
+
+    The Pallas path reduces ``-values`` through the next-event kernel; the
+    first occurrence of the minimum of ``-v`` is the first occurrence of the
+    maximum of ``v``, so both paths share ``jnp.argmax``'s tie rule.
+    """
+    if use_pallas:
+        return next_event_op(-values, mask)[1]
+    return jnp.argmax(_masked(values, mask, -jnp.inf), axis=-1)
+
+
+@dataclass(frozen=True)
+class MaskedOps:
+    """The masked-reduction ops bound to one resolved ``use_pallas`` switch.
+
+    The :mod:`repro.core.vec_engine` driver hands an instance to every
+    engine's ``build`` so scenario definitions write ``ops.min(...)`` /
+    ``ops.argmin(...)`` without re-plumbing the Pallas opt-in.
+    """
+
+    use_pallas: bool = False
+
+    def min(self, values, mask=None):
+        return masked_min(values, mask, use_pallas=self.use_pallas)
+
+    def argmin(self, values, mask=None):
+        return masked_argmin(values, mask, use_pallas=self.use_pallas)
+
+    def argmax(self, values, mask=None):
+        return masked_argmax(values, mask, use_pallas=self.use_pallas)
 
 
 def wkv6_op(r: jax.Array, k: jax.Array, v: jax.Array, logw: jax.Array,

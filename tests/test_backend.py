@@ -34,7 +34,8 @@ def test_unknown_scenario_raises():
 def test_scenario_kinds_registered():
     kinds = scenario_kinds()
     for k in ("consolidation", "fleet", "fleet_batch", "case_study",
-              "cloudlet_batch", "workflow_batch"):
+              "cloudlet_batch", "workflow_batch", "power_batch",
+              "netdc_batch"):
         assert k in kinds, kinds
 
 
@@ -59,6 +60,37 @@ def test_scenario_unsupported_still_raised_for_partial_kinds():
             run_scenario("_oo_only_probe", backend="vec")
     finally:
         _SCENARIOS.pop("_oo_only_probe", None)
+
+
+def test_scenario_unsupported_names_supporting_backends():
+    """ISSUE 5 satellite: the error tells the user which backends *do*
+    implement the kind — including the aliases that reach them — instead
+    of leaving them to grep the registry."""
+    from repro.core.backend import _SCENARIOS, scenario, supporting_backends
+    try:
+        @scenario("_named_probe", backends=("oo", "legacy"))
+        def _probe(backend, **kw):
+            return "ran"
+        assert supporting_backends("_named_probe") == ["legacy", "oo"]
+        with pytest.raises(ScenarioUnsupported,
+                           match=r"not implemented on backend 'vec'; "
+                                 r"supported backends: 'legacy', 'oo' "
+                                 r"\(aliases: '6g'→'legacy', '7g'→'oo'\)"):
+            run_scenario("_named_probe", backend="vec")
+    finally:
+        _SCENARIOS.pop("_named_probe", None)
+
+
+def test_supporting_backends_expands_wildcard():
+    from repro.core.backend import (_SCENARIOS, available_backends, scenario,
+                                    supporting_backends)
+    try:
+        @scenario("_any_probe")                       # backends=("*",)
+        def _probe(backend, **kw):
+            return "ran"
+        assert supporting_backends("_any_probe") == available_backends()
+    finally:
+        _SCENARIOS.pop("_any_probe", None)
 
 
 def test_case_study_runs_on_both_kernels():

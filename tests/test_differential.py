@@ -2,8 +2,8 @@
 
 Every batched scenario kind the substrate registers on *both* the ``oo``
 and ``vec`` backends (``fleet_batch``, ``workflow_batch``,
-``cloudlet_batch``, ``consolidation_batch``, ``power_batch``) runs here
-through one generic harness: a seeded generator draws a random scenario
+``cloudlet_batch``, ``consolidation_batch``, ``power_batch``,
+``netdc_batch``) runs here through one generic harness: a seeded generator draws a random scenario
 config, both backends run it, and a per-kind comparator asserts the
 agreement contract — **bit-exact** for deterministic scenarios
 (fleet-deterministic, power) and **ε-close** where the engines share the
@@ -148,6 +148,28 @@ def _cmp_consolidation(oo, vec):
                   rtol=1e-12)
 
 
+def _gen_netdc(rng):
+    return dict(seeds=rng.integers(0, 1000, 3),
+                n_dcs=int(rng.integers(2, 6)),
+                n_jobs=int(rng.integers(8, 40)),
+                locality_weight=float(rng.uniform(0.5, 4.0)),
+                offline_dc=int(rng.integers(-1, 2)),
+                hop_latency_s=float(rng.uniform(0.0, 0.1)),
+                mean_gap_s=float(rng.uniform(0.5, 4.0)))
+
+
+def _run_netdc(backend, params):
+    return run_scenario("netdc_batch", backend=backend, **params)
+
+
+def _cmp_netdc(oo, vec):
+    # Every output, bit-exact — and the key sets must actually match
+    # (modulo the vec loop's iteration counter), so a dropped/renamed
+    # output can't silently shrink the comparison.
+    assert set(vec) - {"iterations"} == set(oo), sorted(set(vec) ^ set(oo))
+    _assert_exact(oo, vec, keys=sorted(oo))
+
+
 def _gen_power(rng):
     lo = float(rng.uniform(0.1, 0.4))
     return dict(seeds=rng.integers(0, 1000, 3),
@@ -175,6 +197,7 @@ CASES = {
     "consolidation_batch": (_gen_consolidation, _run_consolidation,
                             _cmp_consolidation),
     "power_batch": (_gen_power, _run_power, _cmp_power),
+    "netdc_batch": (_gen_netdc, _run_netdc, _cmp_netdc),
 }
 
 

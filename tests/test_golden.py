@@ -102,8 +102,19 @@ def _power_case():
                 events=[[k, a, h] for k, a, h in mgr.events])
 
 
+def _netdc_case():
+    out = run_scenario(
+        "netdc_batch", backend="vec", seeds=[0, 1, 2, 3], n_dcs=4,
+        n_jobs=32, locality_weight=np.array([1.0, 1.0, 2.5, 2.5]),
+        offline_dc=np.array([-1, 1, -1, 1]))
+    return dict(config=dict(n_dcs=4, n_jobs=32, seeds=4,
+                            sweep="locality_weight × offline_dc"),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
 CASES = {
     "fleet_batch": _fleet_case,
+    "netdc_batch": _netdc_case,
     "workflow_batch": _workflow_case,
     "cloudlet_batch": _cloudlet_case,
     "consolidation_batch": _consolidation_case,

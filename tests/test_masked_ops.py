@@ -1,0 +1,101 @@
+"""Direct unit tests for the canonical masked reductions (ISSUE 5 satellite:
+the one implementation in ``repro.kernels.ops`` that replaced the three
+private copies in vec_cluster / vec_power / vec_workflow).
+
+Contracts: last-axis reduction, ``(inf, 0)`` on all-masked input,
+first-occurrence tie-breaking, and bit-exact jnp-vs-Pallas agreement.
+"""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.ops import (MaskedOps, masked_argmax, masked_argmin,
+                               masked_min, resolve_use_pallas)
+
+
+def _x64():
+    return jax.experimental.enable_x64()
+
+
+def test_masked_min_basic_and_mask():
+    with _x64():
+        v = jnp.asarray([3.0, 1.0, 2.0, 0.5])
+        assert float(masked_min(v)) == 0.5
+        m = jnp.asarray([True, True, True, False])
+        assert float(masked_min(v, m)) == 1.0
+        assert int(masked_argmin(v, m)) == 1
+        assert int(masked_argmax(v, m)) == 0
+
+
+def test_all_masked_returns_inf_and_index_zero():
+    """An all-masked row behaves exactly like jnp.min/argmin over all-inf:
+    (inf, 0) — the engines rely on this for 'no candidate events left'."""
+    with _x64():
+        v = jnp.asarray([5.0, 7.0, 9.0])
+        m = jnp.zeros(3, bool)
+        assert np.isinf(float(masked_min(v, m)))
+        assert int(masked_argmin(v, m)) == 0
+        assert int(masked_argmax(v, m)) == 0
+
+
+def test_first_occurrence_tie_breaking():
+    with _x64():
+        v = jnp.asarray([4.0, 2.0, 2.0, 4.0])
+        assert int(masked_argmin(v)) == 1
+        assert int(masked_argmax(v)) == 0
+        # masked ties: the first *eligible* occurrence wins
+        m = jnp.asarray([True, False, True, True])
+        assert int(masked_argmin(v, m)) == 2
+        assert int(masked_argmax(v, m)) == 0
+        assert int(masked_argmax(v, jnp.asarray([False, True, True, True]))) \
+            == 3
+
+
+def test_last_axis_reduction_with_leading_dims():
+    with _x64():
+        v = jnp.asarray([[3.0, 1.0], [2.0, 5.0]])
+        assert np.array_equal(np.asarray(masked_min(v)), [1.0, 2.0])
+        assert np.array_equal(np.asarray(masked_argmin(v)), [1, 0])
+        assert np.array_equal(np.asarray(masked_argmax(v)), [0, 1])
+
+
+@pytest.mark.parametrize("op", [masked_min, masked_argmin, masked_argmax])
+def test_jnp_vs_pallas_agree_bitwise(op):
+    """The Pallas (interpret-mode) path must agree bit-for-bit with the jnp
+    path — value *and* tie-broken index — over randomized masked inputs
+    (duplicates injected to exercise the tie rule)."""
+    rng = np.random.default_rng(42)
+    with _x64():
+        for trial in range(5):
+            n = int(rng.integers(2, 40))
+            v = rng.choice([0.25, 1.5, 3.0, 7.25], size=n)  # forced ties
+            m = rng.random(n) < 0.7
+            a = np.asarray(op(jnp.asarray(v), jnp.asarray(m)))
+            b = np.asarray(op(jnp.asarray(v), jnp.asarray(m),
+                              use_pallas=True))
+            assert np.array_equal(a, b), f"trial {trial}: {a} != {b}"
+
+
+def test_maskedops_binds_the_switch():
+    with _x64():
+        v = jnp.asarray([2.0, 1.0, 1.0])
+        for up in (False, True):
+            ops = MaskedOps(use_pallas=up)
+            assert float(ops.min(v)) == 1.0
+            assert int(ops.argmin(v)) == 1
+            assert int(ops.argmax(v)) == 0
+
+
+def test_resolve_use_pallas_cpu_fallback():
+    """On CPU, True falls back to the jnp path (one-time warning);
+    'force' stays on; False stays off."""
+    assert resolve_use_pallas(False) is False
+    assert resolve_use_pallas("force") is True
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        resolved = resolve_use_pallas(True)
+    import jax as _jax
+    assert resolved is (_jax.default_backend() in ("tpu", "gpu"))

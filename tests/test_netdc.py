@@ -1,0 +1,177 @@
+"""Multi-datacenter routing (``netdc_batch``) — scenario-level tests.
+
+The cross-backend differential suite and the golden fixture already pin
+oo≡vec bit-identity on random configs; here we check the scenario's
+*semantics*: the closed-form inter-DC delay matrix, hand-computable routing
+decisions, the locality-weight and outage axes, and sweep routing.
+"""
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario, run_sweep
+from repro.core.netdc import build_cells, netdc_workload, route_job
+from repro.core.network import InterDCTopology, store_and_forward_delay
+
+
+def _run(backend="vec", **kw):
+    base = dict(seeds=[0], n_dcs=4, n_jobs=24)
+    base.update(kw)
+    return run_scenario("netdc_batch", backend=backend, **base)
+
+
+# -- inter-DC topology ---------------------------------------------------------
+
+def test_interdc_delay_matrix_closed_form():
+    topo = InterDCTopology(4, link_bw=1e9, hop_latency_s=0.01)
+    p = 125e6                                 # 1 Gb payload → 1 s per link
+    # co-located: free; ring neighbours: 1 link; others: backbone, 2 links
+    assert topo.transfer_delay(2, 2, p) == 0.0
+    assert topo.transfer_delay(0, 1, p) == 1.0 + 0.01
+    assert topo.transfer_delay(0, 2, p) == 2.0 + 0.02
+    assert topo.transfer_delay(0, 3, p) == 1.0 + 0.01    # ring wrap-around
+    m = topo.delay_matrix(p)
+    assert m.shape == (4, 4) and np.array_equal(m, m.T)
+    assert np.all(np.diag(m) == 0.0)
+    # the same closed form the rack topology uses
+    assert m[0, 2] == store_and_forward_delay(p, 2, 1e9, 0.02)
+
+
+def test_delay_rows_bitwise_equals_scalar_form():
+    """The vectorized routing-table build is the same IEEE arithmetic as
+    the scalar closed form — entry for entry, bit for bit."""
+    topo = InterDCTopology(5, link_bw=7e8, hop_latency_s=0.013)
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 5, 17)
+    payload = rng.uniform(1e6, 5e8, 17)
+    rows = topo.delay_rows(src, payload)
+    for j in range(17):
+        for d in range(5):
+            assert rows[j, d] == topo.transfer_delay(int(src[j]), d,
+                                                     float(payload[j]))
+
+
+def test_interdc_explicit_matrices_override_ring():
+    lat = np.full((2, 2), 0.5)
+    topo = InterDCTopology(2, bw=np.full((2, 2), 2e9), latency_s=lat,
+                           links=[[0, 3], [3, 0]])
+    assert topo.transfer_delay(0, 1, 1e6) == 3 * (1e6 * 8.0 / 2e9) + 0.5
+
+
+# -- workload + routing rule ---------------------------------------------------
+
+def test_workload_is_deterministic_and_sane():
+    import random
+    a = netdc_workload(random.Random(7), 16, 3, mean_gap_s=1.0,
+                       length_mi=(1e3, 2e3), payload_mb=(1.0, 2.0))
+    b = netdc_workload(random.Random(7), 16, 3, mean_gap_s=1.0,
+                       length_mi=(1e3, 2e3), payload_mb=(1.0, 2.0))
+    for k in a:
+        assert np.array_equal(a[k], b[k]), k
+    assert np.all(np.diff(a["submit"]) >= 0)          # nondecreasing
+    assert np.all((a["src"] >= 0) & (a["src"] < 3))
+    assert np.all(a["length"] >= 1e3) and np.all(a["payload"] >= 1e6)
+
+
+def test_route_job_picks_earliest_finish_first_occurrence():
+    free = [10.0, 0.0, 0.0]
+    arr = np.asarray([1.0, 1.0, 1.0])
+    exec_row = np.asarray([1.0, 2.0, 2.0])
+    bias = np.zeros(3)
+    online = np.ones(3, bool)
+    d, fin = route_job(free, arr, exec_row, bias, online)
+    assert (d, fin) == (1, 3.0)                       # tie with DC2 → first
+    d, _ = route_job(free, arr, exec_row, bias,
+                     np.asarray([True, False, True]))
+    assert d == 2                                     # mask respected
+
+
+def test_two_job_queueing_hand_computed():
+    """Two identical co-located jobs on one fast DC: the second queues
+    behind the first (single FIFO server)."""
+    out = _run(n_dcs=2, n_jobs=2, seeds=[5], dc_mips=[1000.0, 1000.0],
+               locality_weight=1e9)   # never leave the source DC
+    cells, _ = build_cells(seeds=[5], n_dcs=2, n_jobs=2,
+                           dc_mips=np.asarray([1000.0, 1000.0]),
+                           link_bw=10e9, hop_latency_s=0.02,
+                           locality_weight=1e9, offline_dc=-1,
+                           mean_gap_s=2.0, length_mi=(2e3, 2e4),
+                           payload_mb=(10.0, 200.0))
+    c = cells[0]
+    assert np.array_equal(out["dst"][0], c.src)       # locality pinned
+    expect = []
+    free = [0.0, 0.0]
+    for j in range(2):
+        d = int(c.src[j])
+        start = max(free[d], float(c.submit[j]))      # xfer = 0 at home
+        fin = start + float(c.exec_s[j, d])
+        free[d] = fin
+        expect.append(fin)
+    assert np.allclose(out["finish"][0], expect, rtol=0, atol=0)
+
+
+# -- scenario axes -------------------------------------------------------------
+
+def test_locality_weight_pins_jobs_home():
+    out = _run(locality_weight=1e12)
+    assert int(out["remote_jobs"][0]) == 0
+    assert float(out["xfer_total_s"][0]) == 0.0
+
+
+def test_offline_dc_never_receives_jobs_and_outage_costs():
+    out = _run(seeds=[3], offline_dc=1)
+    assert not np.any(out["dst"] == 1)
+    assert np.all(out["dc_jobs"][:, 1] == 0)
+    # losing a DC can't improve the makespan of the same workload
+    base = _run(seeds=[3])
+    assert float(out["makespan"][0]) >= float(base["makespan"][0])
+
+
+def test_higher_weight_reduces_remote_traffic_monotonically():
+    out = _run(seeds=[0, 0, 0], locality_weight=[1.0, 3.0, 1e12])
+    r = out["remote_jobs"]
+    assert r[0] >= r[1] >= r[2] == 0
+
+
+def test_offline_source_still_served_remotely():
+    """Jobs originating at an offline DC must be routed somewhere online."""
+    out = _run(seeds=[11], offline_dc=0)
+    assert np.all(np.isfinite(out["finish"]))
+    assert np.all(out["dst"] != 0)
+
+
+def test_validation_errors():
+    with pytest.raises(ValueError, match="offline_dc"):
+        _run(offline_dc=4)
+    with pytest.raises(ValueError, match="dc_mips"):
+        _run(dc_mips=[1000.0])
+    with pytest.raises(ValueError, match="n_jobs"):
+        _run(n_jobs=0)
+
+
+# -- batching / sweep routing --------------------------------------------------
+
+def test_empty_batch_short_circuits():
+    out, rep = run_sweep("netdc_batch", backend="vec", seeds=[])
+    assert rep.n_cells == 0 and out["finish"].shape[0] == 0
+
+
+def test_chunked_equals_monolithic_bitwise():
+    kw = dict(seeds=np.arange(6), locality_weight=1.5, n_dcs=4, n_jobs=24)
+    mono = _run(**kw)
+    chunked, rep = run_sweep("netdc_batch", backend="vec", chunk_size=2,
+                             **kw)
+    assert rep.n_chunks == 3
+    for k in mono:
+        assert np.array_equal(np.asarray(mono[k]), np.asarray(chunked[k])), k
+
+
+def test_oo_backend_reports_host_sweep():
+    res, rep = run_sweep("netdc_batch", backend="oo", seeds=[0, 1])
+    assert rep.n_cells == 2 and rep.active_lane_fraction == 1.0
+
+
+def test_use_pallas_force_is_bit_identical():
+    base = _run(seeds=[2, 3])
+    forced = _run(seeds=[2, 3], use_pallas="force")
+    for k in base:
+        assert np.array_equal(np.asarray(base[k]), np.asarray(forced[k])), k

@@ -326,8 +326,9 @@ def test_run_sweep_rejection_messages():
         def _probe(backend, **kw):
             return "bare result"                     # no SweepReport
         with pytest.raises(ScenarioUnsupported,
-                           match=r"_sweep_probe.*no 'vec' implementation"
-                                 r".*available on: \['oo'\]"):
+                           match=r"_sweep_probe.*not implemented on backend "
+                                 r"'vec'.*supported backends: 'oo' "
+                                 r"\(aliases: '7g'→'oo'\)"):
             run_sweep("_sweep_probe", backend="vec")
         # a handler that swallows with_report but returns no report must
         # also be rejected — never a bare result the caller mis-unpacks
