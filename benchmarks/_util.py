@@ -3,12 +3,56 @@
 Output contract (one row per measurement):  ``name,us_per_call,derived``
 where ``derived`` carries the benchmark-specific figure of merit
 (improvement %, MB allocated, makespan error, …).
+
+Sweep-layer benches also share two contracts defined here:
+
+  * ``report_fields(rep)`` — the uniform ``SweepReport`` slice every BENCH
+    JSON records (devices, chunking, refill/retire counters, observed
+    active-lane fraction), so the perf gate can read any record the same
+    way;
+  * ``parse_lanes(spec, quick)`` — the ``--lanes`` scaling flag: a
+    comma-separated lane-count curve for benches that sweep batch size
+    (default 256 → 4096 → 65536; quick mode trims the tail).
 """
 from __future__ import annotations
 
 import time
 import tracemalloc
 from typing import Any, Callable, Tuple
+
+DEFAULT_LANE_CURVE = (256, 4096, 65536)
+QUICK_LANE_CURVE = (256, 1024)
+
+
+def parse_lanes(spec: str = "", quick: bool = False) -> Tuple[int, ...]:
+    """Lane-count curve from a ``--lanes`` flag value ("256,4096,...")."""
+    if spec:
+        lanes = tuple(int(s) for s in spec.split(",") if s.strip())
+        if not lanes or any(v <= 0 for v in lanes):
+            raise ValueError(f"bad --lanes spec: {spec!r}")
+        return lanes
+    return QUICK_LANE_CURVE if quick else DEFAULT_LANE_CURVE
+
+
+def report_fields(rep) -> dict:
+    """The SweepReport slice every BENCH JSON records, uniformly.
+
+    ``observed_active_lane_fraction`` is the gated occupancy figure —
+    actual lane-iterations over dispatched lane-iterations — as opposed to
+    the cost model's prediction (``active_lane_fraction_predicted``)."""
+    return dict(
+        devices=rep.devices, chunk_size=rep.chunk_size,
+        n_chunks=rep.n_chunks, bucketed=rep.bucketed, donated=rep.donated,
+        sharding=rep.sharding, compacted=rep.compacted,
+        refills=rep.refills, retires=rep.retires, segments=rep.segments,
+        peak_lanes=rep.peak_lanes,
+        observed_active_lane_fraction=(
+            round(rep.active_lane_fraction_observed, 4)
+            if rep.active_lane_fraction_observed is not None else None),
+        active_lane_fraction_predicted=(
+            round(rep.active_lane_fraction_predicted, 4)
+            if rep.active_lane_fraction_predicted is not None else None),
+    )
 
 
 def time_call(fn: Callable[[], Any], repeats: int = 1) -> Tuple[float, Any]:

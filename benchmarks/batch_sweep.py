@@ -36,7 +36,7 @@ import numpy as np
 from repro.core.backend import get_backend
 from repro.core.cluster import FleetConfig, FleetSim, StepCost
 
-from ._util import emit
+from ._util import emit, report_fields
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_substrate.json"
 
@@ -157,13 +157,11 @@ def run(quick: bool = False) -> dict:
                 goodput_mean=round(float(oo_good.mean()), 5)),
         **flavours,
         sweep=dict(
-            devices=vec_report.devices, chunk_size=vec_report.chunk_size,
-            n_chunks=vec_report.n_chunks, bucketed=vec_report.bucketed,
-            donated=vec_report.donated,
             active_lane_fraction=round(
                 vec_report.active_lane_fraction, 4),
             active_lane_fraction_monolithic=round(
-                vec_report.active_lane_fraction_monolithic, 4)),
+                vec_report.active_lane_fraction_monolithic, 4),
+            **report_fields(vec_report)),
         validation=dict(goodput_rel_diff_vec_vs_oo=round(float(rel), 5)))
     emit("batch_sweep/oo_loop", oo_wall / b * 1e6,
          f"wall_s={oo_wall:.2f};events_per_s={oo_events / oo_wall:.0f};"

@@ -6,10 +6,24 @@ committed baseline (``benchmarks/baselines/*.json``) and exits non-zero
 when any tracked ratio drops more than ``--threshold`` (default 25%)
 below the baseline.
 
-Tracked keys: every top-level section carrying a ``speedup_vs_oo`` or
-``speedup_vs_monolithic`` entry (``vec``, ``vec_fast``, ``vec_pallas``,
-``sweep``, ...) — so new flavours and new benchmark records are gated
-automatically once a baseline is committed.
+Tracked keys: every top-level section carrying a ``speedup_vs_oo``,
+``speedup_vs_monolithic``, or ``speedup_vs_bucketed`` entry (``vec``,
+``vec_fast``, ``vec_pallas``, ``sweep``, ``compact``, ...) — so new
+flavours and new benchmark records are gated automatically once a
+baseline is committed.
+
+Two compaction-specific gates ride along:
+
+  * ``events_per_s`` — useful lane-iterations per second (in sections
+    that also record ``observed_active_lane_fraction``), gated as a
+    ratio against the baseline's rate with the same threshold.  Unlike
+    the speedup ratios this is machine-dependent, so quick baselines must
+    be regenerated when the runner class changes (the device-count match
+    below catches topology changes, the threshold absorbs runner noise);
+  * ``observed_active_lane_fraction`` — any *current* section with
+    ``compacted: true`` must keep its observed fraction ≥ 0.95.  This is
+    an absolute floor, not a baseline ratio: a dense resident batch is
+    the compacting scheduler's entire contract.
 
 Speedups are only comparable like-for-like by device count: a section
 recording ``devices`` is gated only when it matches the baseline's
@@ -38,7 +52,11 @@ import pathlib
 import sys
 from typing import Dict, List, Tuple
 
-TRACKED_KEYS = ("speedup_vs_oo", "speedup_vs_monolithic")
+TRACKED_KEYS = ("speedup_vs_oo", "speedup_vs_monolithic",
+                "speedup_vs_bucketed")
+RATE_KEY = "events_per_s"               # machine-dependent, ratio-gated
+FRACTION_KEY = "observed_active_lane_fraction"
+FRACTION_FLOOR = 0.95                   # absolute floor for compacted runs
 
 
 def tracked_sections(record: Dict) -> Dict[str, Dict]:
@@ -54,6 +72,17 @@ def tracked_ratio(section: Dict) -> Tuple[str, float]:
         if key in section:
             return key, float(section[key])
     raise KeyError(f"no tracked key in section: {sorted(section)}")
+
+
+def rate_sections(record: Dict) -> Dict[str, Dict]:
+    """flavour name -> section, for every section carrying ``events_per_s``
+    alongside the observed-fraction field — i.e. the sweep-schedule
+    sections written via ``_util.report_fields`` (older records carry
+    ad-hoc ``events_per_s`` figures that were never gated; scoping on the
+    field pair keeps them that way)."""
+    return {name: section for name, section in record.items()
+            if isinstance(section, dict) and RATE_KEY in section
+            and FRACTION_KEY in section}
 
 
 def tracked_ratios(record: Dict) -> Dict[str, float]:
@@ -101,6 +130,44 @@ def check_pair(current: Dict, baseline: Dict, threshold: float
         key, ratio = tracked_ratio(cur[name])
         notes.append(f"{bench}/{name}: no baseline yet "
                      f"({ratio:.2f}x recorded, not gated)")
+
+    # Machine-dependent throughput rates (events/s), ratio-gated against
+    # the committed baseline — same device-match and threshold rules.
+    cur_r, base_r = rate_sections(current), rate_sections(baseline)
+    for name, base_sec in sorted(base_r.items()):
+        base_rate = float(base_sec[RATE_KEY])
+        if name not in cur_r:
+            failures.append(f"{bench}/{name}: {RATE_KEY} missing from "
+                            f"current record (baseline {base_rate:.0f})")
+            continue
+        cur_rate = float(cur_r[name][RATE_KEY])
+        cur_dev = cur_r[name].get("devices")
+        base_dev = base_sec.get("devices")
+        if cur_dev is not None and base_dev is not None \
+                and cur_dev != base_dev:
+            notes.append(f"{bench}/{name}: device-count mismatch (current "
+                         f"{cur_dev} vs baseline {base_dev}) — "
+                         f"{RATE_KEY} not gated")
+            continue
+        floor = base_rate * (1.0 - threshold)
+        verdict = "FAIL" if cur_rate < floor else "ok"
+        msg = (f"{bench}/{name}: {RATE_KEY} {cur_rate:.0f} vs baseline "
+               f"{base_rate:.0f} (floor {floor:.0f}) {verdict}")
+        (failures if verdict == "FAIL" else notes).append(msg)
+
+    # Absolute occupancy floor: every compacted section in the *current*
+    # record must keep the resident batch ≥ FRACTION_FLOOR dense.
+    for name, sec in sorted(current.items()):
+        if not (isinstance(sec, dict) and sec.get("compacted")
+                and FRACTION_KEY in sec):
+            continue
+        frac = float(sec[FRACTION_KEY])
+        if frac < FRACTION_FLOOR:
+            failures.append(f"{bench}/{name}: {FRACTION_KEY} {frac:.3f} "
+                            f"below absolute floor {FRACTION_FLOOR}")
+        else:
+            notes.append(f"{bench}/{name}: {FRACTION_KEY} {frac:.3f} "
+                         f"≥ floor {FRACTION_FLOOR} ok")
     return failures, notes
 
 

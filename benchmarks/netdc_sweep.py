@@ -23,7 +23,7 @@ import time
 
 import numpy as np
 
-from ._util import emit
+from ._util import emit, report_fields
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_netdc.json"
 
@@ -80,11 +80,11 @@ def run(quick: bool = False) -> dict:
                 remote_jobs_total=int(oo["remote_jobs"].sum())),
         vec=dict(
             wall_s=round(vec_wall, 4), compile_s=round(compile_s, 4),
-            devices=report.devices, chunk_size=report.chunk_size,
             active_lane_fraction=(round(report.active_lane_fraction, 4)
                                   if report.active_lane_fraction else None),
             bit_exact_vs_oo=True,
-            speedup_vs_oo=round(oo_wall / vec_wall, 2)),
+            speedup_vs_oo=round(oo_wall / vec_wall, 2),
+            **report_fields(report)),
     )
     emit("netdc_sweep/oo_loop", oo_wall / b * 1e6,
          f"wall_s={oo_wall:.2f};makespan_mean={oo['makespan'].mean():.1f}s")

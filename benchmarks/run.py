@@ -12,16 +12,21 @@ Benchmarks (paper artifact → module):
   §6→ML     → cluster_sim        (fleet goodput vs MTBF/ckpt/stragglers)
   beyond    → batch_sweep        (sweep-layer fleet sweep vs OO loop → BENCH_substrate.json)
   beyond    → workflow_sweep     (vmap case-study DAG grid vs OO loop → BENCH_workflow.json)
-  beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap → BENCH_sweep.json)
+  beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap + lane-scaling curve → BENCH_sweep.json)
   beyond    → power_sweep        (elastic-datacenter energy/SLA sweep vs OO loop → BENCH_power.json)
   beyond    → netdc_sweep        (multi-DC routing sweep vs OO loop → BENCH_netdc.json)
+  beyond    → compaction_sweep   (compacting lane scheduler vs bucketing → BENCH_compaction.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
+
+``--lanes`` overrides the lane-count curve for benches that sweep batch
+size (``sweep_runner``), e.g. ``--lanes 256,4096,65536``.
 
 ``check_regression.py`` (not a suite) gates the recorded speedups in CI.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -31,11 +36,14 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="reduced sizes")
     ap.add_argument("--only", type=str, default="",
                     help="comma-separated subset of benchmark names")
+    ap.add_argument("--lanes", type=str, default="",
+                    help="lane-count curve for batch-size-scaling benches "
+                         "(comma-separated, e.g. 256,4096,65536)")
     args = ap.parse_args()
 
-    from . import (batch_sweep, case_study, cluster_sim, consolidation,
-                   engine_micro, netdc_sweep, power_sweep, sweep_runner,
-                   vec_speedup, workflow_sweep)
+    from . import (batch_sweep, case_study, cluster_sim, compaction_sweep,
+                   consolidation, engine_micro, netdc_sweep, power_sweep,
+                   sweep_runner, vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -47,6 +55,7 @@ def main() -> None:
         "sweep_runner": sweep_runner.run,
         "power_sweep": power_sweep.run,
         "netdc_sweep": netdc_sweep.run,
+        "compaction_sweep": compaction_sweep.run,
     }
     try:
         from . import dryrun_report
@@ -62,7 +71,10 @@ def main() -> None:
             print(f"# unknown benchmark: {name}", file=sys.stderr)
             continue
         print(f"# --- {name} ---")
-        suites[name](quick=args.quick)
+        kw = {"quick": args.quick}
+        if "lanes" in inspect.signature(suites[name]).parameters:
+            kw["lanes"] = args.lanes
+        suites[name](**kw)
     print(f"# total benchmark time: {time.perf_counter() - t0:.1f}s")
 
 

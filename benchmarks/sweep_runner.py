@@ -1,12 +1,12 @@
-"""Sweep-runner benchmark: the sweep layer's schedule vs a monolithic vmap.
+"""Sweep-runner benchmark: the sweep layer's schedules vs a monolithic vmap.
 
 The sweep execution layer (``core.sweep``) exists to beat the one-dispatch
 ``jit(vmap(...))`` baseline on divergent grids: a vmapped ``while_loop``
 runs every lane to the slowest lane's iteration count, so a grid whose
 cells differ in predicted length wastes (1 − active-lane fraction) of its
-lane-iterations.  This cell measures exactly that delta on the fleet
-sweep's MTBF × ckpt-cadence grid — the same engine, same cells, same bits
-out, scheduled two ways:
+lane-iterations.  This cell measures that delta on the fleet sweep's
+MTBF × ckpt-cadence grid — the same engine, same cells, same bits out,
+scheduled two ways:
 
   * ``monolithic`` — one chunk, one device dispatch (PR-2-era behaviour),
   * ``sweep``      — divergence-bucketed chunks with donated buffers over
@@ -16,6 +16,16 @@ out, scheduled two ways:
 (``check_regression.py`` gates it against ``benchmarks/baselines/``); the
 record also keeps both schedules' active-lane fractions so a policy change
 that wins wall time by luck while losing lane occupancy is visible.
+
+The ``scaling`` section extends the record with a lane-count curve
+(``--lanes``, default 256 → 4096 → 65536): bucketed vs the compacting
+lane scheduler (``compact=True``) on the within-class prediction-blind
+grid compaction targets (few MTBF classes × many seeds, no checkpoints —
+see ``compaction_sweep``).  Each point records useful lane-iterations per
+second and the observed active-lane fraction; past 16k lanes only the
+compact side runs (the bucketed comparison is established at 4096 and
+would double a multi-minute point).  This is where the ≥65k-lane
+sustained-occupancy acceptance point lives.
 
 Writes ``BENCH_sweep.json`` at the repo root.
 """
@@ -29,12 +39,15 @@ import numpy as np
 
 from repro.core.cluster import FleetConfig, StepCost
 
-from ._util import emit
+from ._util import emit, parse_lanes, report_fields
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_sweep.json"
 
 COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
                 overlap_collective=0.6)
+
+# Past this lane count the bucketed side is skipped in the scaling curve.
+_BUCKETED_SCALING_CAP = 16384
 
 
 def _grid(b: int):
@@ -47,6 +60,16 @@ def _grid(b: int):
     mt = np.repeat(mtbfs, len(ckpts) * reps)[:b]
     ck = np.tile(np.repeat(ckpts, reps), len(mtbfs))[:b]
     seeds = np.tile(np.arange(reps), b)[:b]
+    return mt, ck, seeds
+
+
+def _scale_grid(b: int, steps: int):
+    """Scaling-curve grid: MTBF classes × seeds, no checkpoints — the
+    predicted cost ranks the classes but is blind to each seed's full-redo
+    failure draws (the compaction bench's adversarial family)."""
+    mt = np.repeat([1e6, 20.0, 10.0, 6.0], max(b // 4, 1))[:b]
+    ck = np.full(b, 10 * steps)
+    seeds = np.arange(b)
     return mt, ck, seeds
 
 
@@ -71,7 +94,47 @@ def _timed_pair(cfg, steps, mt, ck, seeds):
     return walls, outs
 
 
-def run(quick: bool = False) -> dict:
+def _scaling_point(cfg, lanes: int, steps: int) -> dict:
+    """One lane-scaling measurement: bucketed (≤ cap) vs compact."""
+    from repro.core.vec_cluster import simulate_fleet_batch
+    mt, ck, seeds = _scale_grid(lanes, steps)
+    run = lambda s, **kw: simulate_fleet_batch(
+        COST, cfg, steps, seeds=s, mtbf_hours=mt, ckpt_every=ck,
+        with_report=True, **kw)
+    # Resident batch grows with the grid (tail waste ∝ lanes/grid) up to
+    # 256; the 30-iteration budget keeps per-retire waste a few % of the
+    # ~400-iteration mean lane.
+    compact_kw = dict(compact=True, chunk_size=max(32, min(256, lanes // 8)),
+                      segment_iters=30)
+    repeats = 2 if lanes <= 4096 else 1
+    entry = dict(lanes=lanes, total_steps=steps)
+    sides = [("compact", compact_kw)]
+    if lanes <= _BUCKETED_SCALING_CAP:
+        sides.insert(0, ("bucketed", {}))
+    results = {}
+    for name, kw in sides:
+        run(seeds + 1, **kw)                     # compile/warm this shape
+        wall = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            results[name] = run(seeds, **kw)
+            wall = min(wall, time.perf_counter() - t0)
+        out, rep = results[name]
+        events = int(np.sum(rep.lane_iterations))
+        entry[name] = dict(wall_s=round(wall, 4),
+                           events_per_s=round(events / wall, 1),
+                           **report_fields(rep))
+    if "bucketed" in results:                    # same schedule, same bits
+        buck, comp = results["bucketed"][0], results["compact"][0]
+        for k in buck:
+            assert np.array_equal(buck[k], comp[k]), \
+                f"scaling: compact changed {k!r} vs bucketed at {lanes}"
+        entry["compact"]["speedup_vs_bucketed"] = round(
+            entry["bucketed"]["wall_s"] / entry["compact"]["wall_s"], 2)
+    return entry
+
+
+def run(quick: bool = False, lanes: str = "") -> dict:
     # Quick mode keeps the full cell count and trims steps: at tiny grids
     # the delta between schedules drowns in per-dispatch overhead and the
     # CI gate would be gating noise.
@@ -97,15 +160,14 @@ def run(quick: bool = False) -> dict:
                     n_spares=cfg.n_spares, quick=quick,
                     sweep="mtbf_hours × ckpt_every × seed"),
         monolithic=dict(
-            wall_s=round(mono_wall, 4), devices=mono_rep.devices,
-            chunk_size=mono_rep.chunk_size,
-            active_lane_fraction=round(mono_rep.active_lane_fraction, 4)),
+            wall_s=round(mono_wall, 4),
+            active_lane_fraction=round(mono_rep.active_lane_fraction, 4),
+            **report_fields(mono_rep)),
         sweep=dict(
-            wall_s=round(sweep_wall, 4), devices=sweep_rep.devices,
-            chunk_size=sweep_rep.chunk_size, n_chunks=sweep_rep.n_chunks,
-            bucketed=sweep_rep.bucketed, donated=sweep_rep.donated,
+            wall_s=round(sweep_wall, 4),
             active_lane_fraction=round(sweep_rep.active_lane_fraction, 4),
-            speedup_vs_monolithic=round(mono_wall / sweep_wall, 2)),
+            speedup_vs_monolithic=round(mono_wall / sweep_wall, 2),
+            **report_fields(sweep_rep)),
     )
     emit("sweep_runner/monolithic", mono_wall / b * 1e6,
          f"wall_s={mono_wall:.3f};"
@@ -115,6 +177,19 @@ def run(quick: bool = False) -> dict:
          f"devices={sweep_rep.devices};"
          f"active_frac={sweep_rep.active_lane_fraction:.3f};"
          f"speedup_vs_monolithic={mono_wall / sweep_wall:.2f}x")
+
+    record["scaling"] = []
+    for n in parse_lanes(lanes, quick):
+        entry = _scaling_point(cfg, n, steps=300)
+        record["scaling"].append(entry)
+        comp = entry["compact"]
+        speedup = comp.get("speedup_vs_bucketed")
+        emit(f"sweep_runner/scaling_{n}", comp["wall_s"] / n * 1e6,
+             f"events_per_s={comp['events_per_s']:.0f};"
+             f"active_frac={comp['observed_active_lane_fraction']:.3f};"
+             f"refills={comp['refills']};peak_lanes={comp['peak_lanes']}"
+             + (f";speedup_vs_bucketed={speedup:.2f}x" if speedup else ""))
+
     OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
     emit("sweep_runner/record", 0.0, f"written={OUT_PATH.name}")
     return record

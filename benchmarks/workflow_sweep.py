@@ -32,7 +32,7 @@ import numpy as np
 
 from repro.core.case_study import PAYLOAD_BIG, PAYLOAD_SMALL, run_case_study
 
-from ._util import emit
+from ._util import emit, report_fields
 
 OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_workflow.json"
 
@@ -123,13 +123,11 @@ def run(quick: bool = False) -> dict:
                 makespan_mean=round(float(oo_ms.mean()), 5)),
         **flavours,
         sweep=dict(
-            devices=vec_report.devices, chunk_size=vec_report.chunk_size,
-            n_chunks=vec_report.n_chunks, bucketed=vec_report.bucketed,
-            donated=vec_report.donated,
             active_lane_fraction=round(
                 vec_report.active_lane_fraction, 4),
             active_lane_fraction_monolithic=round(
-                vec_report.active_lane_fraction_monolithic, 4)))
+                vec_report.active_lane_fraction_monolithic, 4),
+            **report_fields(vec_report)))
     emit("workflow_sweep/oo_loop", oo_wall / b * 1e6,
          f"wall_s={oo_wall:.2f};makespan={oo_ms.mean():.4f}")
     OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")

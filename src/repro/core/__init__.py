@@ -7,7 +7,8 @@
 from .backend import (BackendError, ScenarioUnsupported, SimBackend,
                       available_backends, get_backend, run_scenario,
                       run_sweep, supporting_backends)
-from .sweep import SweepReport
+from .sweep import SweepReport, compact_sweep, execute_sweep
+from .search import CEMResult, cem_minimize, power_autoscaler_objective
 from .engine import SimEntity, Simulation
 from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
 from .entities import (Cloudlet, CloudletStatus, Container, CoreAttributes,

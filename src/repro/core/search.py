@@ -1,0 +1,176 @@
+"""Vectorized policy search — cross-entropy method over batched sweeps.
+
+The payoff of million-lane sweeps (ISSUE 6 / ROADMAP item 4): once one
+compiled sweep evaluates thousands of independent scenario cells, a whole
+*population* of candidate policies — scheduler thresholds, autoscaler
+parameters, placement weights — costs one dispatch per generation.  This is
+the vectorized counterpart of Helix's offline ILP layout search (ASPLOS'25,
+see SNIPPETS.md): instead of solving one exact program, sample a policy
+population, score every member against the same stochastic scenario seeds
+in one batched (optionally compacted) sweep, and refit the sampling
+distribution around the elites.
+
+:func:`cem_minimize` is deliberately engine-agnostic: the objective maps a
+population dict ``{param: values[P]}`` to scores ``[P]`` and may run
+anything — the intended shape is one :func:`repro.core.backend.run_sweep`
+call per generation (``compact=True`` keeps device memory O(chunk) while
+the population × seeds grid scales to 10^5+ lanes).
+:func:`power_autoscaler_objective` builds that objective for the elastic
+datacenter's scale-out/scale-in thresholds, the worked example
+(``examples/policy_search.py``) and the convergence tests use it.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
+    Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CEMResult:
+    """Outcome of one cross-entropy search run."""
+    best: Dict[str, float]          # best single sample seen (argmin score)
+    best_score: float
+    mean: Dict[str, float]          # final sampling-distribution mean
+    std: Dict[str, float]
+    generations: int
+    evaluations: int                # total objective samples scored
+    history: List[Dict[str, float]] = field(repr=False, default_factory=list)
+
+    @property
+    def converged(self) -> bool:
+        """Did the elite distribution actually tighten?  (The practical
+        convergence signal: the final stds collapsed well inside the
+        initial search box.)"""
+        return all(v < np.inf for v in self.std.values())
+
+
+def cem_minimize(objective: Callable[[Dict[str, np.ndarray]], Any],
+                 space: Mapping[str, Tuple[float, float]], *,
+                 pop_size: int = 32,
+                 n_generations: int = 10,
+                 elite_frac: float = 0.25,
+                 smoothing: float = 0.7,
+                 seed: int = 0,
+                 init_mean: Optional[Mapping[str, float]] = None,
+                 init_std: Optional[Mapping[str, float]] = None,
+                 callback: Optional[Callable] = None) -> CEMResult:
+    """Cross-entropy method over a bounded box, minimizing ``objective``.
+
+    ``objective(pop)`` receives ``{name: values[pop_size]}`` (every sampled
+    member at once — *one* vectorized evaluation per generation, e.g. one
+    compacted sweep) and returns per-member scores ``[pop_size]`` (lower is
+    better; NaN/inf members are treated as worst).  ``space`` maps each
+    parameter to its ``(lo, hi)`` bounds; samples are clipped into the box.
+
+    Per generation: draw a Gaussian population around the current mean/std,
+    score it, keep the top ``elite_frac``, and refit mean/std toward the
+    elites with exponential ``smoothing`` (new = α·elite + (1-α)·old).
+    ``callback(generation, population, scores)`` observes every generation.
+    """
+    names = list(space)
+    if not names:
+        raise ValueError("cem_minimize: empty search space")
+    lo = np.array([float(space[k][0]) for k in names])
+    hi = np.array([float(space[k][1]) for k in names])
+    if not np.all(hi > lo):
+        raise ValueError(f"cem_minimize: need hi > lo for every param "
+                         f"({dict(space)})")
+    mean = (np.array([float(init_mean[k]) for k in names])
+            if init_mean is not None else (lo + hi) / 2.0)
+    std = (np.array([float(init_std[k]) for k in names])
+           if init_std is not None else (hi - lo) / 2.0)
+    n_elite = max(1, int(round(elite_frac * pop_size)))
+    rng = np.random.default_rng(seed)
+
+    best = None
+    best_score = np.inf
+    history: List[Dict[str, float]] = []
+    for g in range(n_generations):
+        pop = np.clip(
+            rng.normal(mean, np.maximum(std, 1e-12), (pop_size, len(names))),
+            lo, hi)
+        pop_dict = {k: pop[:, i].copy() for i, k in enumerate(names)}
+        scores = np.asarray(objective(pop_dict), np.float64)
+        if scores.shape != (pop_size,):
+            raise ValueError(
+                f"objective returned shape {scores.shape}, "
+                f"expected ({pop_size},)")
+        ranked = np.argsort(np.where(np.isfinite(scores), scores, np.inf),
+                            kind="stable")
+        elites = pop[ranked[:n_elite]]
+        top = ranked[0]
+        if np.isfinite(scores[top]) and float(scores[top]) < best_score:
+            best_score = float(scores[top])
+            best = {k: float(pop[top, i]) for i, k in enumerate(names)}
+        mean = smoothing * elites.mean(axis=0) + (1.0 - smoothing) * mean
+        std = smoothing * elites.std(axis=0) + (1.0 - smoothing) * std
+        history.append(dict(
+            generation=float(g), best=float(scores[ranked[0]]),
+            elite_mean=float(scores[ranked[:n_elite]].mean()),
+            pop_mean=float(np.nanmean(np.where(np.isfinite(scores),
+                                               scores, np.nan)))))
+        if callback is not None:
+            callback(g, pop_dict, scores)
+    if best is None:
+        raise RuntimeError("cem_minimize: every sampled member scored "
+                           "non-finite — objective never succeeded")
+    return CEMResult(
+        best=best, best_score=best_score,
+        mean={k: float(mean[i]) for i, k in enumerate(names)},
+        std={k: float(std[i]) for i, k in enumerate(names)},
+        generations=n_generations,
+        evaluations=n_generations * pop_size,
+        history=history)
+
+
+def power_autoscaler_objective(*, seeds: Sequence[int] = (0, 1, 2),
+                               n_hosts: int = 8, n_vms: int = 24,
+                               n_samples: int = 48,
+                               sla_weight: float = 50.0,
+                               unserved_weight: float = 1e-4,
+                               compact: bool = True,
+                               **sweep_kw: Any) -> Callable:
+    """Fitness for the elastic datacenter's autoscaler thresholds.
+
+    Returns ``objective({"up_thr": [P], "lo_thr": [P]}) -> scores [P]``:
+    each population member is replicated across every seed, the whole
+    population × seeds grid runs as **one** batched ``power_batch`` sweep
+    (compacted by default — one dense compiled batch regardless of grid
+    size), and a member's score is its seed-mean of
+
+        energy_total_wh + sla_weight · sla_total_s
+                        + unserved_weight · unserved_mips_s.
+
+    Members whose thresholds invert (``lo_thr ≥ up_thr``) score ``inf`` —
+    the search box may allow them; the fitness rejects them.
+    """
+    from .backend import run_sweep
+    seeds = np.asarray(seeds, np.int64)
+    n_seeds = len(seeds)
+
+    def objective(pop: Dict[str, np.ndarray]) -> np.ndarray:
+        up = np.asarray(pop["up_thr"], np.float64)
+        lo = np.asarray(pop["lo_thr"], np.float64)
+        p = len(up)
+        valid = lo < up
+        if not valid.any():
+            return np.full(p, np.inf)
+        # Degenerate members still dispatch (keeps the grid one compiled
+        # shape) but with thresholds forced sane; their score is overridden.
+        up_g = np.repeat(np.where(valid, up, 0.9), n_seeds)
+        lo_g = np.repeat(np.where(valid, lo, 0.1), n_seeds)
+        out, _ = run_sweep(
+            "power_batch", seeds=np.tile(seeds, p), up_thr=up_g, lo_thr=lo_g,
+            n_hosts=n_hosts, n_vms=n_vms, n_samples=n_samples,
+            compact=compact, **sweep_kw)
+        cost = (np.asarray(out["energy_total_wh"], np.float64)
+                + sla_weight * np.asarray(out["sla_total_s"], np.float64)
+                + unserved_weight
+                * np.asarray(out["unserved_total_mips_s"], np.float64))
+        scores = cost.reshape(p, n_seeds).mean(axis=1)
+        return np.where(valid, scores, np.inf)
+
+    return objective

@@ -25,9 +25,16 @@ driver's host-looped cell batches):
     undone on output; per-lane results are unchanged — only co-residency
     changes.
   * **device sharding** — each chunk's lanes are split across
-    ``jax.devices()`` via ``jax.pmap`` (cells padded to a device multiple),
-    with a clean single-device ``jit`` fallback; results are bit-identical
-    either way.
+    ``jax.devices()`` via ``jax.pmap`` (cells padded to a device multiple)
+    or, with ``sharding="shard_map"``, via a jitted ``shard_map`` over a
+    1-D lane mesh (the multi-process-ready peer path), with a clean
+    single-device ``jit`` fallback; results are bit-identical every way.
+  * **lane compaction** — :func:`compact_sweep` keeps a fixed-size dense
+    resident batch and retires/refills lanes mid-flight from a host work
+    queue, streaming finished cells to an ``on_chunk`` consumer; device
+    memory is O(lanes) and the active-lane fraction approaches 1 by
+    construction (see ARCHITECTURE.md, "Streaming sweeps and the
+    compacting scheduler").
   * **buffer donation** — chunk inputs are donated (``donate_argnums``) so
     XLA may reuse their buffers for the chunk's outputs/temporaries instead
     of holding both live across the stream of chunks.
@@ -77,12 +84,33 @@ class SweepReport:
     donated: bool
     # Σ lane iterations / Σ_chunks (chunk max iterations × chunk lanes) —
     # the fraction of executed vmap-lane-iterations doing real work under
-    # the schedule actually run (1.0 = no lane ever idled).
+    # the schedule actually run (1.0 = no lane ever idled), measured from
+    # the *observed* per-lane iteration counts.
     active_lane_fraction: Optional[float] = None
     # Same statistic had the whole grid run as one dispatch — the
     # divergence a monolithic vmap(while_loop) suffers on this grid.
     active_lane_fraction_monolithic: Optional[float] = None
     lane_iterations: Optional[np.ndarray] = None
+    # The fraction the scheduler *expected* under the same chunk schedule,
+    # using predicted_cost as the iteration proxy — the gap between this
+    # and the observed fraction is the cost model's error.
+    active_lane_fraction_predicted: Optional[float] = None
+    # Multi-device executor flavour ("pmap" or "shard_map"); None when the
+    # dispatch ran on a single device.
+    sharding: Optional[str] = None
+    # Compacting-scheduler accounting (``compact_sweep``): lanes retired
+    # mid-flight, lanes refilled from the work queue, compiled segments
+    # dispatched, and the peak number of concurrently live lanes.
+    compacted: bool = False
+    refills: int = 0
+    retires: int = 0
+    segments: int = 0
+    peak_lanes: int = 0
+
+    @property
+    def active_lane_fraction_observed(self) -> Optional[float]:
+        """Alias: the observed fraction benches and gates key on."""
+        return self.active_lane_fraction
 
 
 def resolve_devices(devices: Any = None) -> Sequence[Any]:
@@ -104,32 +132,54 @@ def auto_chunk_size(n_cells: int, predicted_cost, n_devices: int) -> int:
 
     Chunking only pays when lanes diverge (a vmapped ``while_loop`` runs
     every lane to the chunk's max iteration count): with no cost spread
-    predicted — or too few cells to form several chunks — run monolithic.
-    Otherwise target ~8 chunks, floored at ``MIN_CHUNK`` lanes per device.
+    predicted (all-equal costs included) — or too few cells to form several
+    chunks — run monolithic.  Otherwise target ~8 chunks, floored at
+    ``MIN_CHUNK`` lanes per device, and *balance* the split: the chunk count
+    is fixed first and cells divided evenly across it, so the final chunk is
+    never left nearly empty (almost-all-pad dispatch waste).  ``n_devices``
+    is clamped to ``[1, n_cells]`` — a grid smaller than the device fleet
+    must not be rounded up to a chunk that is mostly padding.
     """
+    n_devices = max(1, min(int(n_devices), max(int(n_cells), 1)))
     if predicted_cost is None or n_cells < 2 * MIN_CHUNK * n_devices:
         return n_cells
     pred = np.asarray(predicted_cost, np.float64)
     lo = float(pred.min())
     if lo <= 0 or float(pred.max()) / lo <= _DIVERGENCE_SPREAD:
         return n_cells
-    chunk = max(MIN_CHUNK * n_devices, n_cells // 8)
-    return int(-(-chunk // n_devices) * n_devices)       # device multiple
+    raw = max(MIN_CHUNK * n_devices, n_cells // 8)
+    n_chunks = max(1, n_cells // raw)
+    chunk = -(-n_cells // n_chunks)                      # balanced split
+    chunk = int(-(-chunk // n_devices) * n_devices)      # device multiple
+    return n_cells if chunk >= n_cells else chunk
 
 
 @functools.lru_cache(maxsize=64)
-def _executor(fn: Callable, devices: tuple, donate: bool) -> Callable:
+def _executor(fn: Callable, devices: tuple, donate: bool,
+              sharding: str = "pmap") -> Callable:
     """Compiled dispatcher for one (engine fn, device placement) pair.
 
     ``fn`` takes a single params pytree with a leading lane axis; the
     engines hand us a per-statics-cached callable so this cache keys on a
-    stable object.  Multi-device wraps in ``pmap`` over exactly the given
-    devices (an explicit ``devices=`` list is a *placement*, not just a
-    count); both paths donate the chunk's input buffers when asked.
+    stable object.  Multi-device wraps either in ``pmap`` over exactly the
+    given devices (an explicit ``devices=`` list is a *placement*, not just
+    a count) or — ``sharding="shard_map"`` — in a jitted ``shard_map`` over
+    a 1-D ``lanes`` mesh, the multi-process-ready peer path (the lane axis
+    stays flat; no per-device fold).  All paths donate the chunk's input
+    buffers when asked.
     """
     import jax
     donate_argnums = (0,) if donate else ()
     if len(devices) > 1:
+        if sharding == "shard_map":
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import Mesh, PartitionSpec
+            mesh = Mesh(np.array(list(devices)), ("lanes",))
+            spec = PartitionSpec("lanes")
+            # check_rep=False: lax.while_loop has no replication rule yet.
+            lanes = shard_map(fn, mesh=mesh, in_specs=(spec,),
+                              out_specs=spec, check_rep=False)
+            return jax.jit(lanes, donate_argnums=donate_argnums)
         return jax.pmap(fn, devices=list(devices),
                         donate_argnums=donate_argnums)
     jitted = jax.jit(fn, donate_argnums=donate_argnums)
@@ -148,14 +198,18 @@ def _take(params, idx: np.ndarray):
         lambda leaf: np.take(np.asarray(leaf), idx, axis=0), params)
 
 
-def _dispatch(executor, chunk_params, n_devices: int):
-    """Run one chunk, sharding its lanes over devices when there are >1."""
+def _dispatch(executor, chunk_params, n_devices: int, fold: bool = True):
+    """Run one chunk, sharding its lanes over devices when there are >1.
+
+    ``pmap`` needs the lane axis folded into ``[device, lane/device]``;
+    a ``shard_map`` executor (``fold=False``) takes the flat lane axis.
+    """
     import jax
-    if n_devices > 1:
-        def fold(leaf):
+    if n_devices > 1 and fold:
+        def _fold(leaf):
             per = leaf.shape[0] // n_devices
             return leaf.reshape((n_devices, per) + leaf.shape[1:])
-        out = executor(jax.tree_util.tree_map(fold, chunk_params))
+        out = executor(jax.tree_util.tree_map(_fold, chunk_params))
         return {k: np.asarray(v).reshape((-1,) + np.asarray(v).shape[2:])
                 for k, v in out.items()}
     return {k: np.asarray(v) for k, v in executor(chunk_params).items()}
@@ -167,6 +221,8 @@ def execute_sweep(fn: Callable[[Any], Dict[str, Any]], params: Any, *,
                   predicted_cost=None,
                   donate: bool = True,
                   iterations_key: str = "iterations",
+                  sharding: str = "pmap",
+                  on_chunk: Optional[Callable] = None,
                   ):
     """Execute a vmapped simulation over its cell axis in scheduled chunks.
 
@@ -184,9 +240,17 @@ def execute_sweep(fn: Callable[[Any], Dict[str, Any]], params: Any, *,
     ``predicted_cost`` shows divergence); ``devices=None`` uses all local
     devices (an explicit list is honored as the placement).
     ``predicted_cost`` (one float per cell) buckets cells by predicted
-    length so short lanes don't idle behind long ones.
+    length so short lanes don't idle behind long ones.  ``sharding``
+    selects the multi-device executor (``"pmap"`` or ``"shard_map"``) —
+    both bit-identical to single-device dispatch.  ``on_chunk(cells,
+    outputs)`` streams each finished chunk to the consumer as it completes
+    (original cell indices + that chunk's raw output dict) instead of
+    making it wait for the monolithic return.
     """
     import jax
+    if sharding not in ("pmap", "shard_map"):
+        raise ValueError(
+            f"sharding must be 'pmap' or 'shard_map': {sharding!r}")
     leaves = jax.tree_util.tree_leaves(params)
     if not leaves:
         raise ValueError("execute_sweep: params pytree has no array leaves")
@@ -217,7 +281,8 @@ def execute_sweep(fn: Callable[[Any], Dict[str, Any]], params: Any, *,
     else:
         order = np.arange(n_cells)
 
-    executor = _executor(fn, devs, donate)
+    fold = sharding != "shard_map"
+    executor = _executor(fn, devs, donate, sharding)
     chunks, chunk_meta = [], []
     with warnings.catch_warnings():
         if donate:
@@ -228,32 +293,197 @@ def execute_sweep(fn: Callable[[Any], Dict[str, Any]], params: Any, *,
             if real < chunk_size:                    # pad: repeat final cell
                 idx = np.concatenate(
                     [idx, np.full(chunk_size - real, idx[-1], idx.dtype)])
-            out = _dispatch(executor, _take(params, idx), n_dev)
+            out = _dispatch(executor, _take(params, idx), n_dev, fold)
             chunks.append({k: v[:real] for k, v in out.items()})
             chunk_meta.append(real)
+            if on_chunk is not None:
+                on_chunk(idx[:real].copy(),
+                         {k: v[:real].copy() for k, v in out.items()})
 
     inv = np.argsort(order, kind="stable")
     outputs = {k: np.concatenate([c[k] for c in chunks])[inv]
                for k in chunks[0]}
 
+    spans = list(zip(range(0, n_cells, chunk_size), chunk_meta))
+
+    def _schedule_fraction(per_lane) -> Optional[float]:
+        """Σ real work / Σ_chunks (chunk max × chunk lanes) for one
+        per-lane work estimate, under the schedule actually run."""
+        per_lane = np.asarray(per_lane, np.float64)
+        if per_lane.shape != (n_cells,) or per_lane.max() <= 0:
+            return None
+        ordered = per_lane[order]
+        executed = sum(float(ordered[lo:lo + chunk_size].max()) * real
+                       for lo, real in spans)
+        return float(per_lane.sum()) / executed if executed > 0 else None
+
     frac = frac_mono = lane_iters = None
     if iterations_key in outputs:
         lane_iters = np.asarray(outputs[iterations_key], np.int64)
         if lane_iters.shape == (n_cells,) and lane_iters.max() > 0:
-            total = int(lane_iters.sum())
-            sorted_iters = lane_iters[order]
-            executed = sum(
-                int(sorted_iters[lo:lo + chunk_size].max()) * real
-                for lo, real in zip(range(0, n_cells, chunk_size),
-                                    chunk_meta))
-            frac = total / executed
-            frac_mono = total / (int(lane_iters.max()) * n_cells)
+            frac = _schedule_fraction(lane_iters)
+            frac_mono = (int(lane_iters.sum())
+                         / (int(lane_iters.max()) * n_cells))
+    frac_pred = (_schedule_fraction(predicted_cost)
+                 if predicted_cost is not None else None)
     report = SweepReport(
         n_cells=n_cells, chunk_size=chunk_size,
         n_chunks=len(chunk_meta), devices=n_dev, bucketed=bucketed,
         donated=donate, active_lane_fraction=frac,
         active_lane_fraction_monolithic=frac_mono,
-        lane_iterations=lane_iters)
+        lane_iterations=lane_iters,
+        active_lane_fraction_predicted=frac_pred,
+        sharding=sharding if n_dev > 1 else None)
+    return outputs, report
+
+
+def compact_sweep(step: Callable, params: Any, *,
+                  lanes: int,
+                  state_prototype: Any,
+                  n_devices: int = 1,
+                  predicted_cost=None,
+                  on_chunk: Optional[Callable] = None,
+                  iterations_key: str = "iterations",
+                  donated: bool = True,
+                  max_segments: Optional[int] = None):
+    """Compacting lane scheduler: a dense resident batch of ``lanes`` lanes,
+    refilled from a host-side work queue as lanes finish mid-flight.
+
+    ``step(lane_params, state, it, fresh) -> (state, it, done, j, out)`` is
+    a compiled *segment*: it merges fresh lanes' initial state over the
+    resident state, advances every lane's event loop by at most a fixed
+    iteration budget, and reports which lanes' loops have terminated
+    (``done``), how many iterations this segment executed per lane (``j``),
+    and each lane's finalized outputs (``out`` — only meaningful where
+    ``done``).  The vec engines build it via
+    :func:`repro.core.vec_engine.segment_step`.
+
+    The host loop retires ``done`` lanes (scattering their outputs into the
+    per-cell result arrays and streaming them to ``on_chunk(cells,
+    outputs)``), refills the freed slots with the next cells from the work
+    queue — longest-predicted-first, so stragglers start early — and
+    re-dispatches.  Device memory is O(``lanes``), independent of the grid
+    size, and the compiled batch is always dense: the active-lane fraction
+    approaches 1 by construction instead of depending on how well
+    ``predicted_cost`` ordered the grid.
+
+    Because lanes are independent and a retired lane's state/iteration pair
+    at its final segment equals the monolithic run's, outputs are
+    **bit-identical** to monolithic dispatch — the exactness contract of
+    the rest of this module extends to compaction (asserted by the
+    differential suite).
+
+    Returns ``(outputs, SweepReport)`` in original cell order, with
+    ``compacted=True`` and refill/retire/segment/peak-lane accounting.
+    """
+    import collections
+
+    import jax
+    tree = jax.tree_util
+    leaves = tree.tree_leaves(params)
+    if not leaves:
+        raise ValueError("compact_sweep: params pytree has no array leaves")
+    n_cells = int(np.shape(leaves[0])[0])
+    if n_cells == 0:
+        raise ValueError("compact_sweep: empty grid — route degenerate "
+                         "batches through execute_sweep")
+    n_devices = max(1, min(int(n_devices), n_cells))
+    L = max(1, min(int(lanes), n_cells))
+    L = -(-L // n_devices) * n_devices          # shards must split evenly
+
+    # LPT order: the longest-predicted cells enter the resident batch first
+    # so no straggler is discovered with an almost-drained queue.
+    order = (np.argsort(-np.asarray(predicted_cost, np.float64),
+                        kind="stable")
+             if predicted_cost is not None else np.arange(n_cells))
+    queue = collections.deque(int(c) for c in order)
+
+    slot_cell = np.zeros(L, np.int64)
+    alive = np.zeros(L, bool)
+    for s in range(L):
+        if queue:
+            slot_cell[s] = queue.popleft()
+            alive[s] = True
+        else:
+            # Pad slot (grid smaller than a device-multiple batch): run a
+            # duplicate of a real cell, never collect it.
+            slot_cell[s] = slot_cell[0]
+    peak_lanes = int(alive.sum())
+
+    params_np = tree.tree_map(np.asarray, params)
+    lane_params = tree.tree_map(lambda l: np.take(l, slot_cell, axis=0),
+                                params_np)
+    lane_leaves = tree.tree_leaves(lane_params)
+    src_leaves = tree.tree_leaves(params_np)
+    state = tree.tree_map(
+        lambda sd: np.zeros((L,) + tuple(sd.shape), sd.dtype),
+        state_prototype)
+    it = np.zeros(L, np.int32)
+    fresh = np.ones(L, bool)
+
+    outputs: Optional[Dict[str, np.ndarray]] = None
+    lane_iters = np.zeros(n_cells, np.int64)
+    segments = refills = retires = executed = 0
+    with warnings.catch_warnings():
+        if donated:
+            warnings.filterwarnings("ignore", message=_DONATION_MSG.pattern)
+        while alive.any():
+            state, it, done, j, out = step(lane_params, state, it, fresh)
+            done_np = np.asarray(done)
+            j_max = int(np.asarray(j).max())
+            segments += 1
+            executed += L * j_max
+            newly = done_np & alive
+            fresh = np.zeros(L, bool)
+            if newly.any():
+                out_np = {k: np.asarray(v) for k, v in out.items()}
+                if outputs is None:
+                    outputs = {
+                        k: np.zeros((n_cells,) + v.shape[1:], v.dtype)
+                        for k, v in out_np.items()}
+                cells = slot_cell[newly]
+                for k, v in out_np.items():
+                    outputs[k][cells] = v[newly]
+                if iterations_key in out_np:
+                    lane_iters[cells] = np.asarray(
+                        out_np[iterations_key][newly], np.int64)
+                retires += len(cells)
+                if on_chunk is not None:
+                    on_chunk(cells.copy(),
+                             {k: v[newly].copy() for k, v in out_np.items()})
+                for s in np.flatnonzero(newly):
+                    if queue:
+                        c = queue.popleft()
+                        slot_cell[s] = c
+                        for lp, src in zip(lane_leaves, src_leaves):
+                            lp[s] = src[c]
+                        fresh[s] = True
+                        refills += 1
+                    else:
+                        alive[s] = False
+            elif j_max == 0:
+                raise RuntimeError(
+                    "compact_sweep: no lane progressed and none finished — "
+                    "the engine's cond never clears under this budget")
+            if max_segments is not None and segments > max_segments:
+                raise RuntimeError(
+                    f"compact_sweep: exceeded max_segments={max_segments}")
+
+    frac = frac_mono = None
+    iters = lane_iters if lane_iters.max() > 0 else None
+    if iters is not None and executed > 0:
+        total = int(iters.sum())
+        frac = total / executed
+        frac_mono = total / (int(iters.max()) * n_cells)
+    report = SweepReport(
+        n_cells=n_cells, chunk_size=L, n_chunks=segments,
+        devices=n_devices, bucketed=predicted_cost is not None,
+        donated=donated, active_lane_fraction=frac,
+        active_lane_fraction_monolithic=frac_mono,
+        lane_iterations=iters,
+        sharding="shard_map" if n_devices > 1 else None,
+        compacted=True, refills=refills, retires=retires,
+        segments=segments, peak_lanes=peak_lanes)
     return outputs, report
 
 

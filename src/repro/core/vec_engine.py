@@ -54,6 +54,7 @@ example; ``vec_netdc`` is the smallest real definition in the tree.
 from __future__ import annotations
 
 import functools
+import itertools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, NamedTuple, Optional
 
@@ -63,7 +64,8 @@ import numpy as np
 
 from ..kernels.ops import MaskedOps, resolve_use_pallas
 from .backend import scenario
-from .sweep import SweepReport, execute_sweep
+from .sweep import (MIN_CHUNK, SweepReport, compact_sweep, execute_sweep,
+                    resolve_devices)
 
 
 class Loop(NamedTuple):
@@ -115,6 +117,119 @@ def batched_sim(engine: VecEngine, statics: Any) -> Callable:
     return jax.vmap(functools.partial(run_one, engine, statics=statics))
 
 
+# -- compacting-scheduler segment step -----------------------------------------
+
+# Host sinks for the in-graph retire tap, keyed by the id the compiled step
+# receives as a traced operand — so the jitted step itself stays cacheable
+# across sweeps (the sink changes, the executable does not).
+_PROGRESS_SINKS: Dict[int, Callable] = {}
+_progress_ids = itertools.count(1)
+
+
+def _emit_progress(sink_id, done, j) -> None:
+    cb = _PROGRESS_SINKS.get(int(np.asarray(sink_id)))
+    if cb is not None:
+        cb(np.asarray(done), np.asarray(j))
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_sim(engine: VecEngine, statics: Any, budget: int) -> Callable:
+    """vmapped segment body: resume/merge, advance ≤ ``budget`` iterations,
+    report termination + finalized outputs."""
+    ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
+
+    def seg_one(params, state, it, fresh):
+        loop = engine.build(params, statics, ops)
+        # A fresh lane adopts its new cell's initial state; a resident lane
+        # resumes exactly where the previous segment paused it.  The merge
+        # is a leafwise where(), so resuming never re-runs any iteration —
+        # the state/iteration trajectory equals the monolithic run's.
+        state = jax.tree_util.tree_map(
+            lambda a, b: jnp.where(fresh, a, b), loop.init, state)
+        it = jnp.where(fresh, jnp.asarray(0, jnp.int32), it)
+
+        def cond(c):
+            return loop.cond(c[0], c[1]) & (c[2] < budget)
+
+        def body(c):
+            s, i, j = c
+            return loop.body(s, i), i + 1, j + 1
+
+        state, it, j = jax.lax.while_loop(
+            cond, body, (state, it, jnp.asarray(0, jnp.int32)))
+        done = ~loop.cond(state, it)
+        out = dict(loop.finalize(state, it))
+        out.setdefault("iterations", it)
+        return state, it, done, j, out
+
+    return jax.vmap(seg_one)
+
+
+@functools.lru_cache(maxsize=64)
+def segment_step(engine: VecEngine, statics: Any, budget: int,
+                 devices: tuple, donate: bool = True,
+                 tap: bool = False) -> Callable:
+    """Compiled segment dispatcher for the compacting scheduler.
+
+    ``step(lane_params, state, it, fresh, sink_id) -> (state, it, done, j,
+    out)`` — :func:`repro.core.sweep.compact_sweep`'s step contract plus a
+    trailing sink id for the retire tap.  Cached per (engine, statics,
+    budget, placement): refills re-enter the same executable, so recompiles
+    happen once per shape, never per refill.  The in-graph retire tap is
+    compiled in only when ``tap`` is set (an ordered ``io_callback``
+    serializes the device stream — dead weight when no sink is listening).
+    Multi-device wraps the vmap in
+    ``shard_map`` over a 1-D ``lanes`` mesh (flat lane axis, multi-process-
+    ready); state and iteration buffers are donated across segments so the
+    resident batch owns one set of device buffers.
+    """
+    from jax.experimental import io_callback
+    core = _segment_sim(engine, statics, budget)
+    donate_argnums = (1, 2) if donate else ()
+    if len(devices) > 1:
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import Mesh, PartitionSpec
+        mesh = Mesh(np.array(list(devices)), ("lanes",))
+        spec = PartitionSpec("lanes")
+        # check_rep=False: lax.while_loop has no replication rule yet.
+        sharded = shard_map(core, mesh=mesh, in_specs=(spec,) * 4,
+                            out_specs=spec, check_rep=False)
+
+        def stepped(lane_params, state, it, fresh, sink_id):
+            del sink_id                # retire tap is single-device only
+            return sharded(lane_params, state, it, fresh)
+        return jax.jit(stepped, donate_argnums=donate_argnums)
+
+    def stepped(lane_params, state, it, fresh, sink_id):
+        state, it, done, j, out = core(lane_params, state, it, fresh)
+        if tap:
+            # In-graph retire tap: streams (done mask, per-lane segment
+            # iters) to the registered host sink as the device stream
+            # advances.  The payload is bool/int32 only — the io_callback
+            # delivery thread does not inherit the dispatcher's
+            # thread-local enable_x64, so 64-bit floats would be
+            # canonicalized (silently downcast) in flight.  Result
+            # payloads therefore always travel as returned arrays
+            # (bit-exact); the callback carries only canonicalization-safe
+            # progress signals.
+            io_callback(_emit_progress, None, sink_id, done, j,
+                        ordered=True)
+        else:
+            del sink_id
+        return state, it, done, j, out
+    return jax.jit(stepped, donate_argnums=donate_argnums)
+
+
+def state_prototype(engine: VecEngine, statics: Any, params: Any):
+    """Shape/dtype pytree of one cell's loop state — via ``eval_shape``, so
+    no device computation runs.  Callers must be under the same x64 regime
+    as the dispatch (``run_plan`` enters it)."""
+    ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
+    one = jax.tree_util.tree_map(lambda a: np.asarray(a)[0], params)
+    return jax.eval_shape(
+        lambda p: engine.build(p, statics, ops).init, one)
+
+
 class BatchPlan(NamedTuple):
     """What ``prepare`` hands the driver: data + schedule for one batch."""
 
@@ -162,17 +277,85 @@ def resolve_precision(precision: str) -> bool:
     return precision == "fast"
 
 
+DEFAULT_COMPACT_LANES = 256     # resident batch when chunk_size is not given
+DEFAULT_SEGMENT_ITERS = 64      # per-segment iteration budget default
+
+
+def run_compact(engine: VecEngine, plan: BatchPlan, *, chunk_size=None,
+                devices=None, donate: bool = True, segment_iters=None,
+                on_chunk: Optional[Callable] = None,
+                progress: Optional[Callable] = None):
+    """Execute a :class:`BatchPlan` through the compacting lane scheduler.
+
+    ``chunk_size`` is the resident lane count (device memory is O(it));
+    ``segment_iters`` the per-segment iteration budget.  ``on_chunk(cells,
+    raw_outputs)`` streams each retired batch; ``progress(done_mask,
+    segment_iters)`` — when given — fires from *inside* the compiled step
+    via ``io_callback`` as each segment's retire mask materializes.
+    Callers must already be under ``enable_x64`` (``run_plan`` is).
+    """
+    params, statics = plan.params, plan.statics
+    n_cells = int(np.shape(jax.tree_util.tree_leaves(params)[0])[0])
+    devs = tuple(resolve_devices(devices))
+    devs = devs[:n_cells] if len(devs) > n_cells else devs
+    budget = int(segment_iters) if segment_iters else DEFAULT_SEGMENT_ITERS
+    lanes = (int(chunk_size) if chunk_size else
+             min(n_cells, max(DEFAULT_COMPACT_LANES, MIN_CHUNK * len(devs))))
+    sid = 0
+    if progress is not None and len(devs) == 1:
+        sid = next(_progress_ids)
+        _PROGRESS_SINKS[sid] = progress
+    step5 = segment_step(engine, statics, budget, devs, donate,
+                         tap=sid != 0)
+    sid_arr = np.int32(sid)
+
+    def step(lane_params, state, it, fresh):
+        return step5(lane_params, state, it, fresh, sid_arr)
+
+    try:
+        return compact_sweep(
+            step, params, lanes=lanes,
+            state_prototype=state_prototype(engine, statics, params),
+            n_devices=len(devs), predicted_cost=plan.predicted_cost,
+            on_chunk=on_chunk, donated=donate)
+    finally:
+        if sid:
+            jax.effects_barrier()       # drain the ordered tap before unhook
+            _PROGRESS_SINKS.pop(sid, None)
+
+
 def run_plan(engine: VecEngine, plan, *, chunk_size=None, devices=None,
-             donate: bool = True, with_report: bool = False):
-    """Execute a :class:`BatchPlan` through the sweep layer under x64."""
+             donate: bool = True, with_report: bool = False,
+             compact: bool = False, segment_iters=None,
+             sharding: Optional[str] = None,
+             on_chunk: Optional[Callable] = None,
+             progress: Optional[Callable] = None):
+    """Execute a :class:`BatchPlan` through the sweep layer under x64.
+
+    ``compact=True`` routes through the compacting lane scheduler
+    (:func:`run_compact`) — bit-identical outputs, O(chunk) device memory,
+    streaming retires.  Otherwise chunked dispatch (:func:`execute_sweep`)
+    with ``sharding`` selecting the multi-device executor ("pmap" default,
+    "shard_map" peer).  ``on_chunk(cells, raw_outputs)`` streams finished
+    cells on either path; the payload is the engine's *raw* output dict
+    (before ``plan.finalize``), keyed by original cell indices.
+    """
     if isinstance(plan, Done):
         out, report = plan.outputs, empty_report(donate)
     else:
+        n_cells = int(np.shape(jax.tree_util.tree_leaves(plan.params)[0])[0])
         with jax.experimental.enable_x64():
-            out, report = execute_sweep(
-                batched_sim(engine, plan.statics), plan.params,
-                chunk_size=chunk_size, devices=devices, donate=donate,
-                predicted_cost=plan.predicted_cost)
+            if compact and n_cells > 0:
+                out, report = run_compact(
+                    engine, plan, chunk_size=chunk_size, devices=devices,
+                    donate=donate, segment_iters=segment_iters,
+                    on_chunk=on_chunk, progress=progress)
+            else:
+                out, report = execute_sweep(
+                    batched_sim(engine, plan.statics), plan.params,
+                    chunk_size=chunk_size, devices=devices, donate=donate,
+                    predicted_cost=plan.predicted_cost,
+                    sharding=sharding or "pmap", on_chunk=on_chunk)
         if plan.finalize is not None:
             out = plan.finalize(out)
     return (out, report) if with_report else out
@@ -187,19 +370,27 @@ def make_batch_entry(engine: VecEngine, prepare: Callable, *,
     ``prepare(*args, use_pallas=<resolved bool>, **kw)`` returns a
     :class:`BatchPlan` (or :class:`Done`).  The produced entry adds the
     uniform sweep controls (``use_pallas``, ``chunk_size``, ``devices``,
-    ``donate``, ``with_report``) to ``prepare``'s own signature and is
-    registered as the ``kind`` handler for ``backends`` (pass ``backends=()``
-    to skip registration, e.g. when a hand-written handler dispatches on
-    input shape first).
+    ``donate``, ``with_report``, ``compact``, ``segment_iters``,
+    ``sharding``, ``on_chunk``, ``progress``) to ``prepare``'s own
+    signature and is registered as the ``kind`` handler for ``backends``
+    (pass ``backends=()`` to skip registration, e.g. when a hand-written
+    handler dispatches on input shape first).
     """
     kind = kind or engine.kind
 
     def entry(*args, use_pallas: bool | str = False, chunk_size=None,
               devices=None, donate: bool = True, with_report: bool = False,
+              compact: bool = False, segment_iters=None,
+              sharding: Optional[str] = None,
+              on_chunk: Optional[Callable] = None,
+              progress: Optional[Callable] = None,
               **kw):
         plan = prepare(*args, use_pallas=resolve_use_pallas(use_pallas), **kw)
         return run_plan(engine, plan, chunk_size=chunk_size, devices=devices,
-                        donate=donate, with_report=with_report)
+                        donate=donate, with_report=with_report,
+                        compact=compact, segment_iters=segment_iters,
+                        sharding=sharding, on_chunk=on_chunk,
+                        progress=progress)
 
     entry.__name__ = name or f"simulate_{kind}"
     entry.__qualname__ = entry.__name__

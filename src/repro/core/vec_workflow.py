@@ -370,13 +370,16 @@ def run_case_study_vec(*, virt: str = "V", placement: str = "II",
                        use_pallas: bool | str = False,
                        chunk_size: Optional[int] = None,
                        devices=None,
-                       with_report: bool = False):
+                       with_report: bool = False,
+                       **sweep_kw):
     """Vectorized §6 case study — same contract as the OO
     ``run_case_study``.  Scalar parameters return one ``CaseStudyResult``;
     passing a sequence for any of ``virt``/``placement``/``payload``/``seed``
     broadcasts them to a cell grid and returns a list of results computed in
     **one** compiled vmap call (the whole Figure 5 / Table 3 grid at once),
-    scheduled by the sweep layer (``chunk_size``/``devices``;
+    scheduled by the sweep layer (``chunk_size``/``devices`` plus any
+    further sweep controls — ``compact``, ``segment_iters``, ``sharding``,
+    ``on_chunk`` — forwarded to :func:`simulate_specs`;
     ``with_report=True`` additionally returns the ``SweepReport``).
     """
     from .case_study import PAYLOAD_BIG, CaseStudyResult
@@ -398,7 +401,7 @@ def run_case_study_vec(*, virt: str = "V", placement: str = "II",
         cell_arrivals.append(arr)
     out, report = simulate_specs(specs, use_pallas=use_pallas,
                                  chunk_size=chunk_size, devices=devices,
-                                 with_report=True)
+                                 with_report=True, **sweep_kw)
 
     from .case_study import cell_theoretical
     results = []
@@ -436,7 +439,8 @@ def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
                         use_pallas: bool | str = False,
                         chunk_size: Optional[int] = None,
                         devices=None,
-                        with_report: bool = False):
+                        with_report: bool = False,
+                        **sweep_kw):
     """Batched generic-DAG workflows through the sweep execution layer.
 
     ``nodes`` are EXEC lengths (MI), ``edges`` are ``(src, dst)`` index
@@ -455,7 +459,7 @@ def _workflow_batch_vec(backend: SimBackend, *, nodes, edges,
         switch_latency, activations, seed, arrival_rate, deadline)
     out, report = simulate_specs(specs, use_pallas=use_pallas,
                                  chunk_size=chunk_size, devices=devices,
-                                 with_report=True)
+                                 with_report=True, **sweep_kw)
     submit = np.stack([np.asarray(sp.submit) for sp in specs])
     makespans, missed = _workflow_result(out["finish"], arrivals, activations,
                                          len(nodes), submit, deadline)

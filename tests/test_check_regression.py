@@ -98,6 +98,78 @@ def test_speedup_vs_monolithic_sections_tracked():
     assert failures == []
 
 
+def test_speedup_vs_bucketed_sections_tracked():
+    """The compaction record's tracked key gates like speedup_vs_oo."""
+    base = {"benchmark": "compaction_sweep", "config": {"quick": True},
+            "compact": {"speedup_vs_bucketed": 2.0, "devices": 1}}
+    cur = {"benchmark": "compaction_sweep", "config": {"quick": True},
+           "compact": {"speedup_vs_bucketed": 1.0, "devices": 1}}
+    failures, _ = check_pair(cur, base, 0.25)
+    assert len(failures) == 1 and "speedup_vs_bucketed" in failures[0]
+    failures, _ = check_pair(base, base, 0.25)
+    assert failures == []
+
+
+def _rate_record(eps, frac=0.97, devices=1, compacted=True):
+    return {"benchmark": "compaction_sweep", "config": {"quick": True},
+            "compact": {"events_per_s": eps, "devices": devices,
+                        "compacted": compacted,
+                        "observed_active_lane_fraction": frac}}
+
+
+def test_events_per_s_gated_as_ratio():
+    base = _rate_record(1_000_000.0)
+    ok, _ = check_pair(_rate_record(800_000.0), base, 0.25)
+    assert ok == []                              # -20% within threshold
+    bad, _ = check_pair(_rate_record(700_000.0), base, 0.25)
+    assert len(bad) == 1 and "events_per_s" in bad[0]
+
+
+def test_events_per_s_missing_from_current_fails():
+    base = _rate_record(1_000_000.0)
+    cur = _rate_record(1_000_000.0)
+    del cur["compact"]["events_per_s"]
+    failures, _ = check_pair(cur, base, 0.25)
+    assert failures and "events_per_s missing" in failures[0]
+
+
+def test_events_per_s_device_mismatch_not_gated():
+    base = _rate_record(1_000_000.0, devices=1)
+    cur = _rate_record(100_000.0, devices=8)
+    failures, notes = check_pair(cur, base, 0.25)
+    assert failures == []
+    assert any("events_per_s not gated" in n for n in notes)
+
+
+def test_events_per_s_without_fraction_field_not_gated():
+    """Ad-hoc events_per_s figures in older records stay ungated: the rate
+    gate is scoped to sections written via _util.report_fields."""
+    base = _rate_record(1_000_000.0)
+    cur = _rate_record(100_000.0)
+    for rec in (base, cur):
+        del rec["compact"]["observed_active_lane_fraction"]
+    failures, _ = check_pair(cur, base, 0.25)
+    assert failures == []
+
+
+def test_compacted_fraction_floor():
+    """A compacted section below 0.95 observed occupancy fails outright —
+    an absolute floor, independent of any baseline value."""
+    base = _rate_record(1_000_000.0, frac=0.97)
+    bad, _ = check_pair(_rate_record(1_000_000.0, frac=0.93), base, 0.25)
+    assert any("below absolute floor" in f for f in bad)
+    ok, notes = check_pair(_rate_record(1_000_000.0, frac=0.96), base, 0.25)
+    assert ok == []
+    assert any("floor" in n for n in notes)
+
+
+def test_fraction_floor_skips_uncompacted_sections():
+    base = _rate_record(1_000_000.0, frac=0.5, compacted=False)
+    failures, _ = check_pair(_rate_record(1_000_000.0, frac=0.5,
+                                          compacted=False), base, 0.25)
+    assert failures == []
+
+
 def test_cli_exit_codes(tmp_path):
     """Acceptance: the CLI exits non-zero on a >25% speedup degradation."""
     base = tmp_path / "base.json"
@@ -131,7 +203,8 @@ def test_committed_baselines_are_consistent():
     root = pathlib.Path(__file__).resolve().parents[1]
     for name in ("substrate.json", "substrate_quick.json",
                  "workflow.json", "workflow_quick.json",
-                 "sweep.json", "sweep_quick.json"):
+                 "sweep.json", "sweep_quick.json",
+                 "compaction.json", "compaction_quick.json"):
         rec = json.loads((root / "benchmarks" / "baselines" / name)
                          .read_text())
         assert tracked_ratios(rec), name

@@ -207,12 +207,43 @@ def _check(kind, seed):
     cmp(run("oo", params), run("vec", params))
 
 
+# The batched vec kinds that route through run_plan also run under the
+# compacting lane scheduler; consolidation_batch is a host loop (the
+# compact control does not apply there).
+COMPACT_KINDS = ("fleet_batch", "workflow_batch", "cloudlet_batch",
+                 "power_batch", "netdc_batch")
+
+
+def _check_compact(kind, seed):
+    """Compaction is a schedule: vec+compact must be **bit-identical** to
+    the monolithic vec dispatch on every kind — including the ε-contract
+    kinds, where the engine is the same and only the schedule changes."""
+    gen, run, _ = CASES[kind]
+    params = gen(np.random.default_rng(seed))
+    mono = run("vec", params)
+    compact = run("vec", dict(params, compact=True, chunk_size=3,
+                              segment_iters=5))
+    keys = sorted(set(mono) & set(compact))
+    assert keys
+    for k in keys:
+        a, b = np.asarray(mono[k]), np.asarray(compact[k])
+        assert a.shape == b.shape, f"{k}: shape {a.shape} vs {b.shape}"
+        assert np.array_equal(a, b), \
+            f"{k}: compacting schedule changed bits vs monolithic"
+
+
 # -- always-on deterministic parametrization -----------------------------------
 
 @pytest.mark.parametrize("trial", range(3))
 @pytest.mark.parametrize("kind", sorted(CASES))
 def test_differential(kind, trial):
     _check(kind, 7919 * trial + sum(map(ord, kind)))
+
+
+@pytest.mark.parametrize("trial", range(2))
+@pytest.mark.parametrize("kind", COMPACT_KINDS)
+def test_differential_compact(kind, trial):
+    _check_compact(kind, 7919 * trial + sum(map(ord, kind)))
 
 
 def test_covers_every_dual_backend_batched_kind():

@@ -1,0 +1,93 @@
+"""Cross-entropy policy search (repro.core.search) — convergence contracts.
+
+The CEM driver's promise: one vectorized objective call per generation
+(the batched-sweep shape), monotone-ish improvement on smooth objectives,
+and convergence on the power-autoscaler toy objective it exists for.
+"""
+import numpy as np
+import pytest
+
+from repro.core.search import (CEMResult, cem_minimize,
+                               power_autoscaler_objective)
+
+
+def test_cem_converges_on_quadratic():
+    calls = []
+
+    def objective(pop):
+        calls.append(len(pop["x"]))
+        return (pop["x"] - 0.3) ** 2 + (pop["y"] + 1.0) ** 2
+
+    res = cem_minimize(objective, {"x": (-2, 2), "y": (-2, 2)},
+                       pop_size=48, n_generations=15, seed=1)
+    assert isinstance(res, CEMResult)
+    assert abs(res.best["x"] - 0.3) < 0.05
+    assert abs(res.best["y"] + 1.0) < 0.05
+    assert res.best_score < 1e-2
+    # one vectorized evaluation per generation, whole population at once
+    assert calls == [48] * 15
+    assert res.evaluations == 48 * 15
+    # the sampling distribution tightened around the optimum
+    assert res.std["x"] < 0.5 and res.std["y"] < 0.5
+    assert res.history[-1]["elite_mean"] <= res.history[0]["elite_mean"]
+
+
+def test_cem_respects_bounds_and_seeds_deterministic():
+    def objective(pop):
+        assert (pop["x"] >= 0.0).all() and (pop["x"] <= 1.0).all()
+        return (pop["x"] - 5.0) ** 2        # optimum outside the box
+
+    a = cem_minimize(objective, {"x": (0.0, 1.0)}, pop_size=16,
+                     n_generations=5, seed=7)
+    b = cem_minimize(objective, {"x": (0.0, 1.0)}, pop_size=16,
+                     n_generations=5, seed=7)
+    assert a.best == b.best and a.best_score == b.best_score
+    assert a.best["x"] <= 1.0               # clipped into the box
+
+
+def test_cem_treats_nonfinite_scores_as_worst():
+    def objective(pop):
+        s = (pop["x"] - 0.5) ** 2
+        return np.where(pop["x"] < 0.0, np.inf, s)
+
+    res = cem_minimize(objective, {"x": (-1.0, 1.0)}, pop_size=32,
+                       n_generations=8, seed=3)
+    assert abs(res.best["x"] - 0.5) < 0.1
+
+
+def test_cem_rejects_bad_inputs():
+    with pytest.raises(ValueError, match="empty search space"):
+        cem_minimize(lambda pop: [], {})
+    with pytest.raises(ValueError, match="hi > lo"):
+        cem_minimize(lambda pop: [], {"x": (1.0, 1.0)})
+    with pytest.raises(ValueError, match="shape"):
+        cem_minimize(lambda pop: np.zeros(3), {"x": (0, 1)}, pop_size=4,
+                     n_generations=1)
+
+
+def test_cem_converges_on_power_autoscaler_toy():
+    """The acceptance objective: tuning the elastic datacenter's scale
+    thresholds via compacted power_batch sweeps must find a configuration
+    at least as good as the search box's default (its center), and the
+    elite population must improve across generations."""
+    objective = power_autoscaler_objective(
+        seeds=(0, 1), n_hosts=8, n_vms=16, n_samples=24, segment_iters=12)
+    space = {"up_thr": (0.55, 0.98), "lo_thr": (0.05, 0.5)}
+    res = cem_minimize(objective, space, pop_size=12, n_generations=4,
+                       seed=0)
+    assert np.isfinite(res.best_score)
+    assert space["up_thr"][0] <= res.best["up_thr"] <= space["up_thr"][1]
+    assert res.best["lo_thr"] < res.best["up_thr"]
+    # no worse than the box-center default policy on the same seeds
+    center = objective({"up_thr": np.array([0.765]),
+                        "lo_thr": np.array([0.275])})
+    assert res.best_score <= float(center[0]) + 1e-9
+    assert res.history[-1]["elite_mean"] <= res.history[0]["elite_mean"]
+
+
+def test_power_objective_rejects_inverted_thresholds():
+    objective = power_autoscaler_objective(seeds=(0,), n_hosts=8, n_vms=16,
+                                           n_samples=16)
+    scores = objective({"up_thr": np.array([0.8, 0.2]),
+                        "lo_thr": np.array([0.3, 0.6])})
+    assert np.isfinite(scores[0]) and np.isinf(scores[1])

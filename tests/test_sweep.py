@@ -204,9 +204,33 @@ def test_auto_chunk_size_policy():
     assert auto_chunk_size(24, np.r_[np.full(12, 1.0), np.full(12, 9.0)],
                            1) == 24
     # divergent large grid: ~8 chunks, floored at MIN_CHUNK lanes/device
-    # and aligned to a device multiple
+    # and aligned to a device multiple; the split is *balanced* so the last
+    # chunk is never nearly all padding (5 × 54 covers 256 with 14 pad
+    # lanes total, vs 48-lane chunks leaving a 16-real/32-pad tail).
     assert auto_chunk_size(256, np.linspace(1, 10, 256), 1) == 32
-    assert auto_chunk_size(256, np.linspace(1, 10, 256), 3) == 48
+    assert auto_chunk_size(256, np.linspace(1, 10, 256), 3) == 54
+
+
+def test_auto_chunk_size_degenerate_cases():
+    """Grids smaller than the device fleet and all-equal predictions must
+    never produce a chunk bigger than the grid (pure pad waste)."""
+    divergent = np.linspace(1, 10, 8)
+    # fewer cells than devices: clamp, run monolithic
+    assert auto_chunk_size(8, divergent, 16) == 8
+    assert auto_chunk_size(1, np.array([5.0]), 4) == 1
+    assert auto_chunk_size(0, None, 4) == 0
+    # all-equal cost never chunks, whatever the device count
+    for nd in (1, 3, 16, 1000):
+        assert auto_chunk_size(256, np.full(256, 7.0), nd) == 256
+    # zero/negative predictions: no spread information, monolithic
+    assert auto_chunk_size(256, np.zeros(256), 1) == 256
+    # the balanced chunk never exceeds the grid
+    for n in (33, 64, 100, 256, 1000):
+        for nd in (1, 2, 3, 7):
+            c = auto_chunk_size(n, np.linspace(1, 10, n), nd)
+            assert 1 <= c <= n, (n, nd, c)
+            if c < n:
+                assert c % min(nd, n) == 0, (n, nd, c)
 
 
 def test_run_host_sweep_orders_and_restores():
