@@ -35,24 +35,15 @@ def parse_lanes(spec: str = "", quick: bool = False) -> Tuple[int, ...]:
 
 
 def report_fields(rep) -> dict:
-    """The SweepReport slice every BENCH JSON records, uniformly.
+    """The SweepReport slice every BENCH JSON records, uniformly — now the
+    report's own :meth:`repro.core.sweep.SweepReport.report_fields` (kept
+    as a free function so bench records and the perf gate share one
+    spelling regardless of how they got the report).
 
     ``observed_active_lane_fraction`` is the gated occupancy figure —
     actual lane-iterations over dispatched lane-iterations — as opposed to
     the cost model's prediction (``active_lane_fraction_predicted``)."""
-    return dict(
-        devices=rep.devices, chunk_size=rep.chunk_size,
-        n_chunks=rep.n_chunks, bucketed=rep.bucketed, donated=rep.donated,
-        sharding=rep.sharding, compacted=rep.compacted,
-        refills=rep.refills, retires=rep.retires, segments=rep.segments,
-        peak_lanes=rep.peak_lanes,
-        observed_active_lane_fraction=(
-            round(rep.active_lane_fraction_observed, 4)
-            if rep.active_lane_fraction_observed is not None else None),
-        active_lane_fraction_predicted=(
-            round(rep.active_lane_fraction_predicted, 4)
-            if rep.active_lane_fraction_predicted is not None else None),
-    )
+    return rep.report_fields()
 
 
 def time_call(fn: Callable[[], Any], repeats: int = 1) -> Tuple[float, Any]:

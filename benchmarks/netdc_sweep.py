@@ -35,11 +35,13 @@ def _grid(b: int):
     return np.arange(b), w, off
 
 
-def _run(backend: str, seeds, w, off, n_jobs: int, **kw):
-    from repro.core.backend import run_scenario
-    return run_scenario("netdc_batch", backend=backend, seeds=seeds,
-                        n_dcs=8, n_jobs=n_jobs, locality_weight=w,
-                        offline_dc=off, **kw)
+def _run(backend: str, seeds, w, off, n_jobs: int, with_report=False):
+    from repro.core.backend import run_scenario, run_sweep
+    params = dict(seeds=seeds, n_dcs=8, n_jobs=n_jobs, locality_weight=w,
+                  offline_dc=off)
+    if with_report:          # typed sweep API → ScenarioResult
+        return run_sweep("netdc_batch", params, backend=backend)
+    return run_scenario("netdc_batch", backend=backend, **params)
 
 
 def run(quick: bool = False) -> dict:

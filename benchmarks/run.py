@@ -15,6 +15,7 @@ Benchmarks (paper artifact → module):
   beyond    → sweep_runner       (sweep-layer schedule vs monolithic vmap + lane-scaling curve → BENCH_sweep.json)
   beyond    → power_sweep        (elastic-datacenter energy/SLA sweep vs OO loop → BENCH_power.json)
   beyond    → netdc_sweep        (multi-DC routing sweep vs OO loop → BENCH_netdc.json)
+  beyond    → llmserve_sweep     (geo LLM-serving sweep vs OO loop → BENCH_llmserve.json)
   beyond    → compaction_sweep   (compacting lane scheduler vs bucketing → BENCH_compaction.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
@@ -42,8 +43,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, compaction_sweep,
-                   consolidation, engine_micro, netdc_sweep, power_sweep,
-                   sweep_runner, vec_speedup, workflow_sweep)
+                   consolidation, engine_micro, llmserve_sweep, netdc_sweep,
+                   power_sweep, sweep_runner, vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -55,6 +56,7 @@ def main() -> None:
         "sweep_runner": sweep_runner.run,
         "power_sweep": power_sweep.run,
         "netdc_sweep": netdc_sweep.run,
+        "llmserve_sweep": llmserve_sweep.run,
         "compaction_sweep": compaction_sweep.run,
     }
     try:

@@ -1,0 +1,94 @@
+"""Vectorized LLM model-placement search — CEM over compacted sweeps.
+
+  PYTHONPATH=src python examples/llm_placement.py [--generations 20]
+
+Helix (ASPLOS'25) phrases model placement — which heterogeneous, geo
+distributed machines host which pipeline stages — as a mixed-integer
+program handed to Gurobi.  This example searches the same space with the
+repo's vectorized stack instead: each machine gets a continuous *random
+key*, every sampled key vector decodes to a valid placement
+(``placement_from_keys`` — distinct machines, correct shape, no repair),
+and the whole population × seeds grid of candidate layouts is scored as
+**one** compacted ``llmserve_batch`` sweep per generation
+(``llmserve_placement_objective``).  At the defaults that is
+
+    population 128 × 4 seeds × 20 generations = 10,240 simulated lanes,
+
+a handful of device dispatches instead of ten thousand Python event loops.
+The score per member is seed-mean ``latency + 0.5·TTFT + 100·drops``; the
+baseline is the throughput-greedy default layout (fastest prefill machines
+dealt stage-major).
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pop", type=int, default=128)
+    ap.add_argument("--generations", type=int, default=20)
+    ap.add_argument("--seeds", type=int, default=4)
+    ap.add_argument("--machines", type=int, default=12)
+    ap.add_argument("--stages", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=48)
+    args = ap.parse_args()
+
+    from repro.core.backend import run_sweep
+    from repro.core.llmserve import default_machines
+    from repro.core.search import (cem_minimize, llmserve_placement_objective,
+                                   placement_from_keys)
+
+    M, S = args.machines, args.stages
+    seeds = np.arange(args.seeds)
+    scenario_kw = dict(mean_gap_s=0.4, offline_frac=0.5,
+                       decode_tokens=(16, 90_000))
+    objective = llmserve_placement_objective(
+        seeds=seeds, n_machines=M, n_regions=3, n_stages=S,
+        n_requests=args.requests, compact=True, chunk_size=256,
+        segment_iters=args.requests, **scenario_kw)
+
+    # Baseline: the throughput-greedy default layout is exactly the
+    # random-key decoding applied to the machines' prefill rates.
+    greedy_keys = default_machines(M)["prompt_tls"]
+    base_score = float(objective(
+        {f"key_{m}": np.array([greedy_keys[m]]) for m in range(M)})[0])
+    print(f"throughput-greedy baseline score: {base_score:.4f}")
+
+    lanes = args.pop * args.seeds * args.generations
+    print(f"CEM placement search: {args.pop} layouts × {args.seeds} seeds × "
+          f"{args.generations} generations = {lanes:,} lanes")
+    t0 = time.perf_counter()
+    res = cem_minimize(
+        objective, {f"key_{m}": (0.0, 1.0) for m in range(M)},
+        pop_size=args.pop, n_generations=args.generations, seed=0,
+        callback=lambda g, pop, sc: print(
+            f"  gen {g + 1:2d}  best={np.nanmin(sc):.4f}  "
+            f"pop_mean={np.nanmean(sc):.4f}"))
+    wall = time.perf_counter() - t0
+
+    keys = np.array([res.best[f"key_{m}"] for m in range(M)])
+    best_pl = placement_from_keys(keys, max(1, M // S), S)
+    print(f"\nsearched {res.evaluations:,} layouts in {wall:.1f}s "
+          f"({lanes / wall:,.0f} lanes/s)")
+    print(f"best score {res.best_score:.4f} vs greedy {base_score:.4f} "
+          f"({100 * (1 - res.best_score / base_score):+.1f}%)")
+    print("best placement [pipeline, stage] -> machine id:")
+    print(best_pl)
+
+    # Replay the winning layout once (plain sweep) for its serving metrics.
+    out, _ = run_sweep("llmserve_batch", dict(
+        seeds=seeds, placement=best_pl, n_machines=M, n_regions=3,
+        n_stages=S, n_requests=args.requests, **scenario_kw))
+    print(f"replay: served={out['served'].mean():.1f}/{args.requests} "
+          f"ttft={out['ttft_mean_s'].mean():.3f}s "
+          f"latency={out['latency_mean_s'].mean():.3f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Geo-distributed LLM serving: arrival-rate × outage sweep, OO vs vec.
+
+  PYTHONPATH=src python examples/llm_serving.py [--backend vec]
+
+The ``llmserve_batch`` scenario (modeled after Helix, ASPLOS'25): a large
+model is sharded into pipeline stages placed on heterogeneous machines
+(A100/L4/T4-like throughput and KV-cache profiles) across geo-distributed
+regions joined by a WAN.  A broker routes each request — online stream +
+offline batch, each with prompt and decode token budgets — to the serving
+pipeline minimizing its locality-weighted completion time under a
+store-and-forward relay model, with KV-cache eligibility and occupancy
+pressure; requests no pipeline can hold are dropped.
+
+This example sweeps seed × mean inter-arrival gap × regional outage
+through the **typed sweep API**:
+
+    result = run_sweep("llmserve_batch", params, config=SweepConfig(...))
+
+``result`` is a ``ScenarioResult`` — it unpacks like the familiar
+``(outputs, report)`` pair and also carries ``.kind``/``.backend``/
+``.summary()``.  With ``--backend vec`` every lane runs inside one
+jit/vmap loop with outputs **bit-identical** to the OO event-driven
+broker (``--check`` runs both and verifies).
+"""
+import argparse
+import pathlib
+import sys
+import time
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", choices=["oo", "legacy", "vec"],
+                    default="vec")
+    ap.add_argument("--lanes", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--machines", type=int, default=12)
+    ap.add_argument("--check", action="store_true",
+                    help="also run the OO broker and assert bit-equality")
+    args = ap.parse_args()
+
+    from repro.core.backend import run_sweep
+    from repro.core.sweep import SweepConfig
+
+    gaps = np.array([0.2, 0.5, 1.0, 2.0])
+    outages = np.array([-1, -1, 1, -1])
+    b = args.lanes
+    params = dict(
+        seeds=np.arange(b),
+        mean_gap_s=np.tile(gaps, (b + 3) // 4)[:b],
+        offline_region=np.tile(outages, (b + 3) // 4)[:b],
+        n_machines=args.machines, n_regions=3, n_stages=2,
+        n_requests=args.requests,
+        decode_tokens=(16, 90_000))      # straddles KV capacity → drops
+
+    t0 = time.perf_counter()
+    result = run_sweep("llmserve_batch", params, backend=args.backend,
+                       config=SweepConfig(chunk_size=max(b // 2, 1)))
+    wall = time.perf_counter() - t0
+    out, report = result                 # ScenarioResult unpacks as a pair
+    print(f"{b} lanes × {args.requests} requests × {args.machines} machines "
+          f"on {result.backend!r} ({result.kind}): {wall:.2f}s "
+          f"(chunks={report.n_chunks}, devices={report.devices})\n")
+
+    if args.check:
+        oo, _ = run_sweep("llmserve_batch", params, backend="oo")
+        for k in set(oo) & set(out):
+            assert np.array_equal(np.asarray(oo[k]), np.asarray(out[k])), k
+        print("bit-equality vs the OO event-driven broker: OK\n")
+
+    print("gap_s  outage  served  dropped  ttft_mean_s  slo_viol  util%")
+    for g in gaps:
+        for o in (-1, 1):
+            m = (params["mean_gap_s"] == g) & (params["offline_region"] == o)
+            if not m.any():
+                continue
+            util = out["utilization"][m].mean()
+            print(f"{g:5.1f}  {'  region1' if o >= 0 else '     none'}"
+                  f"  {out['served'][m].mean():6.1f}"
+                  f"  {out['dropped'][m].mean():7.1f}"
+                  f"  {out['ttft_mean_s'][m].mean():11.3f}"
+                  f"  {out['slo_violations'][m].mean():8.1f}"
+                  f"  {100 * util:5.1f}")
+    print("\nA regional outage knocks out every pipeline with a stage "
+          "there — the survivors absorb what fits in their KV caches "
+          "(utilization falls, TTFT spikes) and drop the overflow.")
+
+
+if __name__ == "__main__":
+    main()

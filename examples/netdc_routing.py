@@ -45,9 +45,11 @@ def main():
     off = np.tile(outages, (b + 3) // 4)[:b]
 
     t0 = time.perf_counter()
-    out, report = run_sweep("netdc_batch", backend=args.backend,
-                            seeds=seeds, n_dcs=args.dcs, n_jobs=args.jobs,
-                            locality_weight=w, offline_dc=off)
+    out, report = run_sweep(
+        "netdc_batch",
+        dict(seeds=seeds, n_dcs=args.dcs, n_jobs=args.jobs,
+             locality_weight=w, offline_dc=off),
+        backend=args.backend)
     wall = time.perf_counter() - t0
     print(f"{b} lanes × {args.jobs} jobs × {args.dcs} DCs on "
           f"{args.backend!r}: {wall:.2f}s "

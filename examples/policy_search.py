@@ -42,11 +42,13 @@ def fleet_ckpt_objective(seeds=(0, 1, 2, 3), total_steps=120, **sweep_kw):
 
     def objective(pop):
         ck = np.maximum(np.rint(pop["ckpt_every"]), 1.0)
+        from repro.core.sweep import SweepConfig
         out, _ = run_sweep(
-            "fleet_batch", cost=cost, cfg=cfg, total_steps=total_steps,
-            seeds=np.tile(seeds, len(ck)),
-            ckpt_every=np.repeat(ck, len(seeds)),
-            compact=True, **sweep_kw)
+            "fleet_batch",
+            dict(cost=cost, cfg=cfg, total_steps=total_steps,
+                 seeds=np.tile(seeds, len(ck)),
+                 ckpt_every=np.repeat(ck, len(seeds))),
+            config=SweepConfig(compact=True, **sweep_kw))
         return np.asarray(out["wallclock_s"],
                           np.float64).reshape(len(ck), len(seeds)).mean(1)
 

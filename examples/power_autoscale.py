@@ -44,9 +44,10 @@ def main():
 
     t0 = time.perf_counter()
     out, report = run_sweep(
-        "power_batch", backend=args.backend, seeds=seeds, up_thr=up,
-        lo_thr=0.3, cooldown=8, n_hosts=16, n_vms=96, n_samples=args.samples,
-        init_active=2)
+        "power_batch",
+        dict(seeds=seeds, up_thr=up, lo_thr=0.3, cooldown=8, n_hosts=16,
+             n_vms=96, n_samples=args.samples, init_active=2),
+        backend=args.backend)
     wall = time.perf_counter() - t0
 
     print(f"backend={args.backend}  lanes={len(seeds)}  wall={wall:.2f}s  "

@@ -4,11 +4,12 @@
 # consolidation (C5 workloads), case study (C6), plus the beyond-paper
 # vectorized engines and the ML-fleet cluster layer — all selected through
 # the standardized SimBackend substrate (see ARCHITECTURE.md).
-from .backend import (BackendError, ScenarioUnsupported, SimBackend,
-                      available_backends, get_backend, run_scenario,
-                      run_sweep, supporting_backends)
-from .sweep import SweepReport, compact_sweep, execute_sweep
-from .search import CEMResult, cem_minimize, power_autoscaler_objective
+from .backend import (BackendError, ScenarioResult, ScenarioUnsupported,
+                      SimBackend, available_backends, get_backend,
+                      run_scenario, run_sweep, supporting_backends)
+from .sweep import SweepConfig, SweepReport, compact_sweep, execute_sweep
+from .search import (CEMResult, cem_minimize, llmserve_placement_objective,
+                     placement_from_keys, power_autoscaler_objective)
 from .engine import SimEntity, Simulation
 from .events import Event, HeapEventQueue, LinkedListEventQueue, Tag
 from .entities import (Cloudlet, CloudletStatus, Container, CoreAttributes,

@@ -47,9 +47,13 @@ importing :mod:`repro.core` stays light and free of cycles.
 """
 from __future__ import annotations
 
+import difflib
 import importlib
+import warnings
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Iterable, List, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Tuple
+
+import numpy as np
 
 from .engine import Simulation
 from .engine_oo import LegacySimulation
@@ -148,6 +152,8 @@ _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.vec_power",
     "repro.core.netdc",
     "repro.core.vec_netdc",
+    "repro.core.llmserve",
+    "repro.core.vec_llmserve",
 )
 _loaded = False
 
@@ -189,6 +195,18 @@ def supporting_backends(kind: str) -> List[str]:
     return sorted(b for b in table if b in _BACKENDS)
 
 
+def _supported_msg(kind: str) -> str:
+    """`supported backends: ... (aliases: ...)` — the uniform tail every
+    kind/backend rejection carries, so the caller always learns where the
+    scenario IS available and which registered aliases reach it."""
+    supported = supporting_backends(kind)
+    aliases = ", ".join(f"{a!r}→{c!r}" for a, c in sorted(_ALIASES.items())
+                        if c in supported)
+    return (f"supported backends: "
+            f"{', '.join(repr(b) for b in supported) or 'none'}"
+            + (f" (aliases: {aliases})" if aliases else ""))
+
+
 def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
     _load_scenarios()
     table = _SCENARIOS.get(kind)
@@ -197,14 +215,9 @@ def _scenario_handler(kind: str, backend_name: str) -> Callable[..., Any]:
             f"unknown scenario kind {kind!r}; known: {scenario_kinds()}")
     handler = table.get(backend_name, table.get("*"))
     if handler is None:
-        supported = supporting_backends(kind)
-        aliases = ", ".join(f"{a!r}→{c!r}" for a, c in sorted(_ALIASES.items())
-                            if c in supported)
         raise ScenarioUnsupported(
             f"scenario {kind!r} is not implemented on backend "
-            f"{backend_name!r}; supported backends: "
-            f"{', '.join(repr(b) for b in supported) or 'none'}"
-            + (f" (aliases: {aliases})" if aliases else ""))
+            f"{backend_name!r}; {_supported_msg(kind)}")
     return handler
 
 
@@ -213,24 +226,153 @@ def run_scenario(kind: str, *, backend: str = "oo", **params: Any) -> Any:
     return get_backend(backend).run_scenario(kind, **params)
 
 
-def run_sweep(kind: str, *, backend: str = "vec", **params: Any):
-    """Sweep-aware batch entry point: run a *batched* scenario kind and
-    return ``(result, SweepReport)``.
+class ScenarioResult(tuple):
+    """The uniform result every batched kind returns from :func:`run_sweep`.
 
-    Equivalent to ``run_scenario(kind, backend=..., with_report=True,
-    **params)`` — batched handlers (``fleet_batch``, ``workflow_batch``,
-    ``cloudlet_batch`` cells, ``case_study`` grids, ``consolidation_batch``)
-    accept the sweep controls ``chunk_size=`` and ``devices=`` and route
-    execution through :mod:`repro.core.sweep`.  A kind/backend pair with no
-    sweep path raises (``TypeError`` from the handler's signature, or
-    :class:`ScenarioUnsupported` if a permissive handler swallowed
-    ``with_report``) — never a bare result the caller would mis-unpack.
+    Behaves as the historical ``(outputs, report)`` 2-tuple — existing
+    ``out, rep = run_sweep(...)`` call sites unpack unchanged — while
+    exposing the typed contract: ``.outputs`` (the per-cell output dict),
+    ``.report`` (the :class:`~repro.core.sweep.SweepReport` schedule
+    record), ``.report_fields()`` (the uniform BENCH/consumer slice), and
+    ``.summary()`` (a scalar digest of every numeric output).
     """
-    from .sweep import SweepReport
-    res = get_backend(backend).run_scenario(kind, with_report=True, **params)
+
+    def __new__(cls, outputs: Any, report: Any, *, kind: str = "",
+                backend: str = "") -> "ScenarioResult":
+        self = tuple.__new__(cls, (outputs, report))
+        self.kind = kind
+        self.backend = backend
+        return self
+
+    @property
+    def outputs(self) -> Any:
+        return self[0]
+
+    @property
+    def report(self) -> Any:
+        return self[1]
+
+    def report_fields(self) -> Dict[str, Any]:
+        """The uniform ``SweepReport`` slice (devices, chunking, compaction
+        counters, observed active-lane fraction) — what BENCH JSONs record."""
+        return self.report.report_fields()
+
+    def summary(self) -> Dict[str, Any]:
+        """Scalar digest: the finite-mean of every numeric output array,
+        plus the run's identity (kind, backend, cell count)."""
+        s: Dict[str, Any] = {"kind": self.kind, "backend": self.backend,
+                             "n_cells": self.report.n_cells}
+        out = self.outputs
+        items = sorted(out.items()) if isinstance(out, Mapping) else ()
+        for k, v in items:
+            a = np.asarray(v)
+            if a.dtype.kind not in "bifu" or a.size == 0:
+                continue
+            finite = a[np.isfinite(a.astype(np.float64))]
+            s[k] = float(finite.mean()) if finite.size else None
+        return s
+
+    def __repr__(self) -> str:  # the tuple repr hides the typed contract
+        return (f"ScenarioResult(kind={self.kind!r}, "
+                f"backend={self.backend!r}, n_cells={self.report.n_cells})")
+
+
+# One-time deprecation notice for loose sweep-control kwargs (the pre-
+# SweepConfig calling convention); tests reset it to observe the warning.
+_warned_legacy_controls = False
+
+
+def run_sweep(kind: str, params: Mapping[str, Any] | None = None, *,
+              backend: str = "vec", config: Any = None,
+              **kwargs: Any) -> ScenarioResult:
+    """Sweep-aware batch entry point — run a *batched* scenario kind and
+    return a :class:`ScenarioResult` (an ``(outputs, SweepReport)`` pair
+    with the typed accessors).
+
+    The typed calling convention separates scenario parameters from sweep
+    scheduling::
+
+        run_sweep("netdc_batch", dict(seeds=range(64), n_dcs=8),
+                  config=SweepConfig(compact=True, chunk_size=32))
+
+    ``params`` holds only scenario parameters (a sweep-control key inside
+    it is rejected, pointing at ``config=``); ``config`` is a
+    :class:`~repro.core.sweep.SweepConfig` whose non-default fields are
+    forwarded as the uniform control kwargs every batched handler accepts.
+
+    The pre-config convention — controls mixed into ``**kwargs``
+    (``run_sweep(kind, chunk_size=8, seeds=...)``) — still works via a
+    shim: control-named kwargs are folded into a ``SweepConfig`` with a
+    one-time ``DeprecationWarning``, near-miss typos of control names are
+    rejected with a did-you-mean, and the rest pass through as scenario
+    params.  A kind/backend pair with no sweep path raises (``TypeError``
+    from the handler's signature, or :class:`ScenarioUnsupported` if a
+    permissive handler swallowed ``with_report``) — never a bare result
+    the caller would mis-unpack.
+    """
+    global _warned_legacy_controls
+    from .sweep import SweepConfig, SweepReport
+    if config is not None and not isinstance(config, SweepConfig):
+        raise TypeError(
+            f"config must be a SweepConfig, got {type(config).__name__}; "
+            f"scenario parameters go in the params dict")
+    control_names = SweepConfig.field_names()
+    if params is not None:
+        if not isinstance(params, Mapping):
+            raise TypeError(
+                f"params must be a mapping of scenario parameters, got "
+                f"{type(params).__name__}")
+        misplaced = sorted(set(params) & set(control_names))
+        if misplaced:
+            raise TypeError(
+                f"sweep control(s) {misplaced} belong in "
+                f"config=SweepConfig(...), not in the params dict")
+        if kwargs:
+            hints = []
+            for k in sorted(kwargs):
+                close = difflib.get_close_matches(
+                    k, list(control_names) + list(params), n=1, cutoff=0.6)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise TypeError(
+                f"run_sweep got unexpected keyword(s) {', '.join(hints)}; "
+                f"with a params dict, scenario parameters go inside it and "
+                f"sweep controls in config=SweepConfig(...)")
+        scenario_params = dict(params)
+    else:
+        controls = {k: kwargs.pop(k) for k in list(kwargs)
+                    if k in control_names}
+        for k in kwargs:
+            close = difflib.get_close_matches(k, control_names, n=1,
+                                              cutoff=0.8)
+            if close:
+                raise TypeError(
+                    f"run_sweep got unexpected keyword {k!r} — did you "
+                    f"mean the SweepConfig field {close[0]!r}?")
+        if controls:
+            if config is not None:
+                raise TypeError(
+                    f"pass sweep controls either via config=SweepConfig(...)"
+                    f" or as legacy kwargs, not both ({sorted(controls)} "
+                    f"given alongside config=)")
+            if not _warned_legacy_controls:
+                _warned_legacy_controls = True
+                warnings.warn(
+                    "passing sweep controls as loose run_sweep kwargs "
+                    f"({sorted(controls)}) is deprecated — use "
+                    "run_sweep(kind, params, config=SweepConfig(...))",
+                    DeprecationWarning, stacklevel=2)
+            config = SweepConfig.from_kwargs(**controls)
+        scenario_params = kwargs
+    if config is None:
+        config = SweepConfig()
+    res = get_backend(backend).run_scenario(
+        kind, with_report=True, **scenario_params, **config.to_kwargs())
     if not (isinstance(res, tuple) and len(res) == 2
             and isinstance(res[1], SweepReport)):
         raise ScenarioUnsupported(
             f"scenario {kind!r} has no sweep-aware path on backend "
-            f"{backend!r} (handler returned no SweepReport)")
-    return res
+            f"{backend!r} (handler returned no SweepReport); "
+            f"{_supported_msg(kind)}")
+    return ScenarioResult(res[0], res[1], kind=kind,
+                          backend=canonical_name(backend))

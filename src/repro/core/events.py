@@ -47,6 +47,9 @@ class Tag(enum.Enum):
     HOST_POWER_OFF = enum.auto()
     CONSOLIDATE = enum.auto()
     AUTOSCALE = enum.auto()             # elastic-datacenter scaling interval
+    # LLM serving (request-level broker)
+    REQUEST_SUBMIT = enum.auto()
+    REQUEST_RETURN = enum.auto()
     # Cluster (ML-fleet) layer
     NODE_FAILURE = enum.auto()
     NODE_RECOVER = enum.auto()

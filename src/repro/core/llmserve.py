@@ -1,0 +1,490 @@
+"""Geo-distributed LLM serving — the ``llmserve_batch`` scenario.
+
+The flagship "millions of users, heavy traffic" workload (ROADMAP item 1),
+modeled after Helix (ASPLOS'25): a large model is sharded into pipeline
+stages placed on **heterogeneous machines** (A100/L4/T4-like throughput and
+KV-cache/VRAM profiles) spread across **geo-distributed regions** joined by
+an inter-region WAN (:class:`repro.core.network.InterDCTopology`, the same
+closed-form store-and-forward arithmetic as the multi-DC scenario).
+Requests arrive from an **online** feeder (a stochastic stream with uniform
+inter-arrival gaps) and an **offline** feeder (a batch submitted at t=0),
+each carrying a prompt (prefill) and a decode token budget.  A broker
+routes every request — at its submission event — to the serving *pipeline*
+(one machine per stage) that minimizes its locality-weighted completion
+time under a store-and-forward relay model:
+
+  * ingress WAN transfer of the prompt to the first stage's region;
+  * per stage, FIFO queueing behind the work already committed to that
+    machine, then a prompt+decode service occupancy proportional to the
+    stage's layer count over the machine's token-layers/s rates;
+  * inter-stage activation transfers between the stage regions;
+  * egress of the response back to the request's region.
+
+KV-cache occupancy enters twice: a request is **eligible** for a pipeline
+only when its context (prompt + decode tokens) fits the smallest KV
+capacity along the pipeline, and a precomputed occupancy-pressure bias
+(``kv_penalty_s · kv_need / kv_capacity``) steers load toward pipelines
+with VRAM headroom.  A request no pipeline can serve (KV overflow, or a
+regional outage via ``offline_region``) is dropped.  TTFT (time to first
+token) is the last stage's prompt completion plus a first-token egress.
+
+This module owns everything both backends share — the libm-free workload
+feeders (golden-fixture bit-stability), per-cell routing tables (service /
+hop / egress / bias matrices, all precomputed host-side so neither backend
+multiplies inside its decision loop — no FMA-contraction hazard), the
+routing rule itself, and the host-side summary — plus the OO reference:
+a broker entity driving REQUEST_SUBMIT/REQUEST_RETURN events through a
+``Simulation``.  The vec implementation (:mod:`repro.core.vec_llmserve`)
+is a :class:`~repro.core.vec_engine.VecEngine` over the same tables.
+
+Exactness contract (differential suite + golden fixture): ``oo`` and
+``vec`` agree **bit-exactly** on every output — the decision arithmetic is
+adds/max/compares over shared precomputed f64 tables, and ties break to
+the lowest pipeline index on both paths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Sequence
+
+import numpy as np
+
+from .backend import SimBackend, scenario
+from .engine import SimEntity, Simulation
+from .events import Event, Tag
+from .network import InterDCTopology
+
+# Per-machine serving profiles: (class name, prompt token-layers/s,
+# decode token-layers/s, KV-cache capacity in tokens).  Helix's cluster
+# mixes high-end and commodity GPUs; machines cycle through these classes.
+MACHINE_CLASSES = (
+    ("A100", 8.0e5, 3.2e4, 160_000),
+    ("L4", 2.4e5, 1.2e4, 80_000),
+    ("T4", 1.0e5, 6.0e3, 48_000),
+)
+
+# WAN payload model (bytes): prompt ingress and response egress scale with
+# the token budgets; activations between pipeline stages scale with the
+# prompt (hidden-state snapshot); the first generated token is one small
+# packet.  All payload arithmetic happens host-side in the tables.
+IN_BYTES_PER_TOKEN = 2048.0
+ACT_BYTES_PER_TOKEN = 16384.0
+OUT_BYTES_PER_TOKEN = 2048.0
+FIRST_TOKEN_BYTES = 2048.0
+
+
+def default_machines(n_machines: int) -> Dict[str, np.ndarray]:
+    """Heterogeneous default cluster: machines cycle the Helix-like classes."""
+    cls = [MACHINE_CLASSES[m % len(MACHINE_CLASSES)]
+           for m in range(n_machines)]
+    return dict(
+        name=np.asarray([c[0] for c in cls]),
+        prompt_tls=np.asarray([c[1] for c in cls], np.float64),
+        decode_tls=np.asarray([c[2] for c in cls], np.float64),
+        kv_tokens=np.asarray([c[3] for c in cls], np.int64))
+
+
+def machine_regions(n_machines: int, n_regions: int) -> np.ndarray:
+    """Machines sit in contiguous region blocks (Helix's geo clusters)."""
+    return np.asarray([m * n_regions // n_machines
+                       for m in range(n_machines)], np.int64)
+
+
+def default_placement(prompt_tls: np.ndarray, n_pipelines: int,
+                      n_stages: int) -> np.ndarray:
+    """Greedy layout: sort machines by prefill speed (stable, descending)
+    and deal them stage-major, so the fastest machines serve the earliest
+    stages and every pipeline gets a comparable mix."""
+    order = np.argsort(-np.asarray(prompt_tls, np.float64), kind="stable")
+    need = n_pipelines * n_stages
+    if need > len(order):
+        raise ValueError(
+            f"placement needs {need} machines "
+            f"({n_pipelines} pipelines × {n_stages} stages), "
+            f"cluster has {len(order)}")
+    return np.asarray(order[:need].reshape(n_stages, n_pipelines).T,
+                      np.int64)
+
+
+def llmserve_workload(seed: int, n_requests: int, n_regions: int, *,
+                      mean_gap_s: float, offline_frac: float,
+                      prompt_tokens, decode_tokens) -> Dict[str, Any]:
+    """One seed's request stream: the offline feeder's batch (all submitted
+    at t=0) followed by the online feeder's stream (nondecreasing uniform
+    inter-arrival gaps), each request with a uniform source region and
+    integer prompt/decode token budgets.
+
+    Drawn vectorized from a ``PCG64`` generator, and deliberately
+    libm-free (``uniform``/``integers`` + a ``cumsum`` of gaps — no
+    ``exponential``): the stream is the scenario's sole stochastic input,
+    and avoiding platform-dependent transcendental rounding keeps the
+    committed golden fixtures bit-stable across machines.  Submit times
+    are nondecreasing in request order, so both backends process requests
+    in the same array order.  Host-side cost matters here: cell prep is
+    the vec backend's wall-clock floor (the compiled sweep itself is
+    milliseconds), so the feeders must not loop in Python.
+    """
+    n_offline = int(round(float(offline_frac) * n_requests))
+    rng = np.random.Generator(np.random.PCG64(int(seed)))
+    submit = np.zeros(n_requests, np.float64)
+    n_online = n_requests - n_offline
+    if n_online > 1:
+        gaps = rng.uniform(0.0, 2.0 * float(mean_gap_s), n_online - 1)
+        submit[n_offline + 1:] = np.cumsum(gaps)
+    return dict(submit=submit,
+                src=rng.integers(0, n_regions, n_requests,
+                                 np.int32),
+                prompt_tok=rng.integers(*prompt_tokens, n_requests,
+                                        np.int64),
+                decode_tok=rng.integers(*decode_tokens, n_requests,
+                                        np.int64),
+                online=np.arange(n_requests) >= n_offline)
+
+
+@dataclass(frozen=True)
+class LLMServeCell:
+    """One cell's precomputed routing tables — shared verbatim by the OO
+    broker and the vec engine, so decision bit-identity reduces to both
+    backends evaluating the same adds/max/compares over the same doubles."""
+    submit: np.ndarray        # [J]       f64 nondecreasing submission times
+    src: np.ndarray           # [J]       i32 source region per request
+    prompt_tok: np.ndarray    # [J]       i64
+    decode_tok: np.ndarray    # [J]       i64
+    online: np.ndarray        # [J]       bool online-feeder flag
+    kv_need: np.ndarray       # [J]       i64 context tokens (prompt+decode)
+    svc: np.ndarray           # [J, P, S] f64 per-stage service occupancy
+    hop: np.ndarray           # [J, P, S] f64 arrival WAN delay into stage s
+    tail: np.ndarray          # [J, P]    f64 response egress delay
+    first_extra: np.ndarray   # [J, P]    f64 last-stage prefill + 1st-token
+    wan: np.ndarray           # [J, P]    f64 total WAN time (hops + egress)
+    bias: np.ndarray          # [J, P]    f64 locality + KV-pressure penalty
+    eligible: np.ndarray      # [J, P]    bool KV fit ∧ all machines online
+    placement: np.ndarray     # [P, S]    i64 machine id per pipeline stage
+    n_machines: int
+    slo_ttft_s: float
+
+
+def build_cell(seed: int, placement: np.ndarray,
+               machines: Dict[str, np.ndarray], regions: np.ndarray,
+               topo: InterDCTopology, *, n_requests: int, n_regions: int,
+               n_layers: int, mean_gap_s: float, locality_weight: float,
+               offline_region: int, offline_frac: float, slo_ttft_s: float,
+               kv_penalty_s: float, prompt_tokens, decode_tokens
+               ) -> LLMServeCell:
+    """Workload + routing tables for one (seed, placement, axes) cell."""
+    wl = llmserve_workload(
+        int(seed), n_requests, n_regions,
+        mean_gap_s=float(mean_gap_s), offline_frac=offline_frac,
+        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens)
+    pl = np.asarray(placement, np.int64)               # [P, S]
+    n_pipes, n_stages = pl.shape
+    p_tok = wl["prompt_tok"].astype(np.float64)        # [J]
+    d_tok = wl["decode_tok"].astype(np.float64)
+    layers = float(n_layers) / float(n_stages)         # layers per stage
+    # Service occupancy per (request, pipeline, stage): prefill then decode
+    # at the stage machine's token-layers/s rates.
+    prompt_svc = (p_tok[:, None, None] * layers
+                  / machines["prompt_tls"][pl][None])  # [J, P, S]
+    decode_svc = (d_tok[:, None, None] * layers
+                  / machines["decode_tls"][pl][None])
+    svc = prompt_svc + decode_svc
+    # WAN legs: ingress into stage 0, activation hops between consecutive
+    # stage regions, response egress from the last stage.
+    m_region = regions[pl]                             # [P, S]
+    ingress_rows = topo.delay_rows(wl["src"],
+                                   p_tok * IN_BYTES_PER_TOKEN)  # [J, R]
+    act_bytes = p_tok * ACT_BYTES_PER_TOKEN
+    hop = np.zeros((n_requests, n_pipes, n_stages), np.float64)
+    hop[:, :, 0] = ingress_rows[:, m_region[:, 0]]
+    for s in range(1, n_stages):
+        hop[:, :, s] = topo.delay_pairs(m_region[None, :, s - 1],
+                                        m_region[None, :, s],
+                                        act_bytes[:, None])
+    tail = topo.delay_pairs(m_region[None, :, -1], wl["src"][:, None],
+                            (d_tok * OUT_BYTES_PER_TOKEN)[:, None])  # [J, P]
+    first_extra = prompt_svc[:, :, -1] + topo.delay_pairs(
+        m_region[None, :, -1], wl["src"][:, None], FIRST_TOKEN_BYTES)
+    wan = hop.sum(axis=2) + tail
+    # KV-cache occupancy: hard eligibility against the pipeline's smallest
+    # capacity, plus a precomputed pressure bias toward VRAM headroom.
+    kv_need = wl["prompt_tok"] + wl["decode_tok"]      # [J] i64
+    pipe_kv = machines["kv_tokens"][pl].min(axis=1)    # [P] i64
+    bias = ((float(locality_weight) - 1.0) * wan
+            + float(kv_penalty_s)
+            * (kv_need.astype(np.float64)[:, None]
+               / pipe_kv.astype(np.float64)[None, :]))
+    pipe_online = np.all(m_region != int(offline_region), axis=1)  # [P]
+    eligible = (kv_need[:, None] <= pipe_kv[None, :]) & pipe_online[None, :]
+    return LLMServeCell(
+        submit=wl["submit"], src=wl["src"], prompt_tok=wl["prompt_tok"],
+        decode_tok=wl["decode_tok"], online=wl["online"], kv_need=kv_need,
+        svc=svc, hop=hop, tail=tail, first_extra=first_extra, wan=wan,
+        bias=bias, eligible=eligible, placement=pl,
+        n_machines=len(regions), slo_ttft_s=float(slo_ttft_s))
+
+
+def route_request(free, cell: LLMServeCell, j: int):
+    """The routing rule, scalar form (the OO broker's inner loop): for each
+    eligible pipeline run the store-and-forward relay recurrence
+
+        depart(s) = max(free[p][s], depart(s-1) + hop[s]) + svc[s]
+
+    and pick the first-occurrence argmin of ``finish + bias`` (strict
+    ``<``).  The vec engine evaluates the identical expression vectorized
+    (``ops.argmin``); both tie-break to the lowest pipeline index.
+
+    Returns ``(pipeline, finish, ttft, per-stage departures)`` —
+    ``(-1, inf, inf, None)`` when no pipeline is eligible (dropped).
+    """
+    n_pipes, n_stages = cell.placement.shape
+    best, best_score = -1, np.inf
+    best_fin, best_ttft, best_dep = np.inf, np.inf, None
+    for p in range(n_pipes):
+        if not cell.eligible[j, p]:
+            continue
+        d = cell.submit[j]
+        start_last = d
+        dep = []
+        for s in range(n_stages):
+            a = d + cell.hop[j, p, s]
+            start_last = free[p][s] if free[p][s] > a else a
+            d = start_last + cell.svc[j, p, s]
+            dep.append(d)
+        fin = d + cell.tail[j, p]
+        score = fin + cell.bias[j, p]
+        if score < best_score:
+            best, best_score, best_fin = p, score, fin
+            best_ttft = start_last + cell.first_extra[j, p]
+            best_dep = dep
+    return best, best_fin, best_ttft, best_dep
+
+
+def summarize(out: Dict[str, Any], cells: Sequence[LLMServeCell]
+              ) -> Dict[str, Any]:
+    """Batch-level serving metrics from per-request ``dst``/``finish``/
+    ``ttft`` and the per-slot KV counters — one shared numpy routine so
+    every aggregate (guarded means, argmax tie-breaks, busy-time scatters)
+    is computed identically for both backends."""
+    out = dict(out)
+    dst = out["dst"] = np.asarray(out["dst"], np.int64)          # [B, J]
+    finish = out["finish"] = np.asarray(out["finish"], np.float64)
+    ttft = out["ttft"] = np.asarray(out["ttft"], np.float64)
+    kv_used = out["kv_used"] = np.asarray(out["kv_used"], np.int64)
+    b, n_requests = dst.shape
+    n_pipes = kv_used.shape[1]
+    n_machines = cells[0].n_machines if cells else 0
+    submit = np.stack([c.submit for c in cells])
+    decode_tok = np.stack([c.decode_tok for c in cells])
+    slo = np.asarray([c.slo_ttft_s for c in cells], np.float64)[:, None]
+    served_m = dst >= 0                                          # [B, J]
+    served = out["served"] = served_m.sum(axis=-1)
+    out["dropped"] = n_requests - served
+    out["makespan"] = np.max(np.where(served_m, finish, 0.0), axis=-1)
+    lat_total = out["latency_total_s"] = np.sum(
+        np.where(served_m, finish - submit, 0.0), axis=-1)
+    denom = np.maximum(served, 1)
+    out["latency_mean_s"] = np.where(served > 0, lat_total / denom, 0.0)
+    ttft_total = np.sum(np.where(served_m, ttft, 0.0), axis=-1)
+    out["ttft_mean_s"] = np.where(served > 0, ttft_total / denom, 0.0)
+    out["slo_violations"] = np.sum(served_m & (ttft > slo), axis=-1)
+    out["tokens_out"] = np.sum(np.where(served_m, decode_tok, 0), axis=-1)
+    p_iota = np.arange(n_pipes)
+    out["pipe_requests"] = np.sum(dst[:, :, None] == p_iota, axis=1)
+    busy = np.zeros((b, n_machines), np.float64)
+    kv_m = np.zeros((b, n_machines), np.int64)
+    wan_total = np.zeros(b, np.float64)
+    picked = np.clip(dst, 0, None)
+    for i, c in enumerate(cells):
+        rows = np.flatnonzero(served_m[i])
+        stage_svc = c.svc[rows, picked[i, rows]]          # [n, S]
+        stage_mach = c.placement[picked[i, rows]]         # [n, S]
+        np.add.at(busy[i], stage_mach.ravel(), stage_svc.ravel())
+        np.add.at(kv_m[i], c.placement.ravel(), kv_used[i].ravel())
+        wan_total[i] = c.wan[rows, picked[i, rows]].sum()
+    out["machine_busy_s"] = busy
+    out["kv_assigned_tokens"] = kv_m
+    out["wan_delay_total_s"] = wan_total
+    span = np.maximum(out["makespan"], 1e-300)[:, None]
+    out["utilization"] = np.where(out["makespan"][:, None] > 0,
+                                  busy / span, 0.0)
+    out["busiest_machine"] = np.argmax(busy, axis=-1)
+    return out
+
+
+def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
+                n_stages: int = 2, n_pipelines: Optional[int] = None,
+                n_layers: int = 32, n_requests: int = 64, placement=None,
+                machines: Optional[Dict[str, np.ndarray]] = None,
+                mean_gap_s=1.0, locality_weight=1.0, offline_region=-1,
+                offline_frac: float = 0.25, slo_ttft_s: float = 5.0,
+                kv_penalty_s: float = 0.5, link_bw: float = 10e9,
+                hop_latency_s: float = 0.03, prompt_tokens=(64, 1024),
+                decode_tokens=(16, 512)):
+    """Validated per-cell table construction — the shared front half of
+    both backends' batch handlers.
+
+    ``seeds`` and the sweep axes ``mean_gap_s`` / ``locality_weight`` /
+    ``offline_region`` broadcast to the batch; ``placement`` is one
+    ``[P, S]`` machine-id layout shared by every cell or a batched
+    ``[B, P, S]`` (one layout per cell — the placement-search grid).
+    """
+    if n_requests < 1 or n_regions < 1 or n_stages < 1:
+        raise ValueError(
+            "llmserve_batch needs n_requests ≥ 1, n_regions ≥ 1 and "
+            "n_stages ≥ 1")
+    if not 0.0 <= float(offline_frac) <= 1.0:
+        raise ValueError(f"offline_frac must be in [0, 1]: {offline_frac!r}")
+    machines = dict(machines) if machines is not None \
+        else default_machines(int(n_machines))
+    n_machines = len(machines["prompt_tls"])
+    for key in ("prompt_tls", "decode_tls"):
+        machines[key] = np.asarray(machines[key], np.float64)
+        if machines[key].shape != (n_machines,) or \
+                not np.all(machines[key] > 0):
+            raise ValueError(
+                f"machines[{key!r}] must be {n_machines} positive rates")
+    machines["kv_tokens"] = np.asarray(machines["kv_tokens"], np.int64)
+    regions = machine_regions(n_machines, int(n_regions))
+    if placement is None:
+        n_pipelines = (int(n_pipelines) if n_pipelines
+                       else max(1, n_machines // int(n_stages)))
+        placement = default_placement(machines["prompt_tls"],
+                                      n_pipelines, int(n_stages))
+    pl = np.asarray(placement, np.int64)
+    if pl.ndim == 2:
+        pl = pl[None]
+    if pl.ndim != 3 or pl.shape[1] < 1 or pl.shape[2] < 1:
+        raise ValueError(
+            f"placement must be [P, S] or [B, P, S] machine ids, got "
+            f"shape {np.shape(placement)}")
+    if pl.min(initial=0) < 0 or pl.max(initial=0) >= n_machines:
+        raise ValueError(
+            f"placement machine ids must be in [0, {n_machines})")
+    flat = np.sort(pl.reshape(pl.shape[0], -1), axis=1)
+    if pl.shape[0] and np.any(flat[:, 1:] == flat[:, :-1]):
+        raise ValueError("placement must assign distinct machines "
+                         "(each machine hosts one pipeline stage)")
+    from .vec_engine import broadcast_cells
+    seeds, axes, b = broadcast_cells(seeds, dict(
+        mean_gap_s=mean_gap_s, locality_weight=locality_weight,
+        offline_region=offline_region,
+        _placement=np.zeros(pl.shape[0])))
+    pl = np.broadcast_to(pl, (b,) + pl.shape[1:]) if b else pl[:0]
+    offs = axes["offline_region"].astype(np.int64)
+    if b and np.max(offs) >= n_regions:
+        raise ValueError(f"offline_region must be < n_regions={n_regions}")
+    topo = InterDCTopology(int(n_regions), link_bw=link_bw,
+                           hop_latency_s=hop_latency_s)
+    cells = [build_cell(
+        int(seeds[i]), pl[i], machines, regions, topo,
+        n_requests=int(n_requests), n_regions=int(n_regions),
+        n_layers=int(n_layers),
+        mean_gap_s=float(axes["mean_gap_s"][i]),
+        locality_weight=float(axes["locality_weight"][i]),
+        offline_region=int(offs[i]), offline_frac=float(offline_frac),
+        slo_ttft_s=float(slo_ttft_s), kv_penalty_s=float(kv_penalty_s),
+        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens)
+        for i in range(b)]
+    return cells, b
+
+
+def empty_llmserve_outputs(n_machines: int) -> Dict[str, np.ndarray]:
+    zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int64)
+    zjf, zji = np.empty((0, 0), np.float64), np.empty((0, 0), np.int64)
+    zm_f = np.empty((0, n_machines), np.float64)
+    zm_i = np.empty((0, n_machines), np.int64)
+    return dict(dst=zji, finish=zjf, ttft=zjf,
+                kv_used=np.empty((0, 0, 0), np.int64),
+                served=zi, dropped=zi, makespan=zf, latency_total_s=zf,
+                latency_mean_s=zf, ttft_mean_s=zf, slo_violations=zi,
+                tokens_out=zi, pipe_requests=zji, machine_busy_s=zm_f,
+                kv_assigned_tokens=zm_i, wan_delay_total_s=zf,
+                utilization=zm_f, busiest_machine=zi,
+                iterations=np.empty((0,), np.int32))
+
+
+# -- OO reference: an event-driven broker inside a Simulation ------------------
+
+class LLMServeBroker(SimEntity):
+    """Routes each request at its REQUEST_SUBMIT event and collects its
+    REQUEST_RETURN — the discrete-event reference the vec engine compiles
+    into one ``lax.while_loop``."""
+
+    def __init__(self, sim: Simulation, cell: LLMServeCell):
+        super().__init__(sim, "llmserve-broker")
+        self.cell = cell
+        n_pipes, n_stages = cell.placement.shape
+        n = len(cell.submit)
+        self.free = [[0.0] * n_stages for _ in range(n_pipes)]
+        self.kv_used = np.zeros((n_pipes, n_stages), np.int64)
+        self.dst = np.full(n, -1, np.int64)
+        self.finish = np.full(n, np.inf)
+        self.ttft = np.full(n, np.inf)
+        self.completed = 0
+
+    def start(self) -> None:
+        for j, t in enumerate(self.cell.submit):
+            self.sim.schedule(float(t), Tag.REQUEST_SUBMIT, self, data=j)
+
+    def process_event(self, ev: Event) -> None:
+        c = self.cell
+        if ev.tag is Tag.REQUEST_SUBMIT:
+            j = ev.data
+            p, fin, ttft, dep = route_request(self.free, c, j)
+            if p < 0:                      # no eligible pipeline: dropped
+                return
+            self.free[p] = dep
+            self.kv_used[p] += c.kv_need[j]
+            self.dst[j] = p
+            self.finish[j] = fin
+            self.ttft[j] = ttft
+            self.sim.schedule(float(fin), Tag.REQUEST_RETURN, self, data=j)
+        elif ev.tag is Tag.REQUEST_RETURN:
+            self.completed += 1
+
+
+@scenario("llmserve_batch", backends=("legacy", "oo"))
+def _llmserve_batch_oo(backend: SimBackend, *, seeds=(0,),
+                       n_machines: int = 6, n_regions: int = 3,
+                       n_stages: int = 2, n_pipelines=None,
+                       n_layers: int = 32, n_requests: int = 64,
+                       placement=None, machines=None, mean_gap_s=1.0,
+                       locality_weight=1.0, offline_region=-1,
+                       offline_frac: float = 0.25, slo_ttft_s: float = 5.0,
+                       kv_penalty_s: float = 0.5, link_bw: float = 10e9,
+                       hop_latency_s: float = 0.03,
+                       prompt_tokens=(64, 1024), decode_tokens=(16, 512),
+                       chunk_size: Optional[int] = None,
+                       with_report: bool = False, **_ignored):
+    """Reference semantics for ``llmserve_batch``: one event-driven broker
+    simulation per cell, through the sweep layer's host path (so
+    ``run_sweep`` sees a populated report)."""
+    from .sweep import run_host_sweep
+    from .vec_engine import empty_report
+    cells, b = build_cells(
+        seeds=seeds, n_machines=n_machines, n_regions=n_regions,
+        n_stages=n_stages, n_pipelines=n_pipelines, n_layers=n_layers,
+        n_requests=n_requests, placement=placement, machines=machines,
+        mean_gap_s=mean_gap_s, locality_weight=locality_weight,
+        offline_region=offline_region, offline_frac=offline_frac,
+        slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
+        hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
+        decode_tokens=decode_tokens)
+    if b == 0:
+        out = empty_llmserve_outputs(n_machines)
+        del out["iterations"]                    # the vec loop's counter
+        return (out, empty_report(donate=False)) if with_report else out
+
+    def run_cell(i: int):
+        sim = backend.make_simulation()
+        broker = LLMServeBroker(sim, cells[i])
+        sim.run()
+        assert broker.completed == int((broker.dst >= 0).sum()), \
+            "llmserve: lost REQUEST_RETURNs"
+        return dict(dst=broker.dst, finish=broker.finish,
+                    ttft=broker.ttft, kv_used=broker.kv_used)
+
+    rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
+    out = summarize({k: np.stack([r[k] for r in rows]) for k in rows[0]},
+                    cells)
+    return (out, report) if with_report else out

@@ -187,6 +187,20 @@ class InterDCTopology:
         return np.where(links == 0, 0.0,
                         links * per_link + self.latency_s[src])
 
+    def delay_pairs(self, src, dst, payload_bytes):
+        """Elementwise delays for broadcast (source, destination, payload)
+        triples — the LLM-serving tables' building block (pipeline-stage
+        hops between fixed region pairs over per-request payloads).  Same
+        IEEE arithmetic, same order, as :meth:`transfer_delay`'s scalar
+        form (asserted by tests)."""
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int64)
+        payload = np.asarray(payload_bytes, np.float64)
+        links = self.links[src, dst]
+        per_link = payload * 8.0 / self.bw[src, dst]
+        return np.where(links == 0, 0.0,
+                        links * per_link + self.latency_s[src, dst])
+
 
 def theoretical_makespan(lengths_mi: List[float], mips: float, overhead: float,
                          network_hops: int, payload_bytes: float,

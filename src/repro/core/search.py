@@ -148,6 +148,7 @@ def power_autoscaler_objective(*, seeds: Sequence[int] = (0, 1, 2),
     the search box may allow them; the fitness rejects them.
     """
     from .backend import run_sweep
+    from .sweep import SweepConfig
     seeds = np.asarray(seeds, np.int64)
     n_seeds = len(seeds)
 
@@ -163,14 +164,104 @@ def power_autoscaler_objective(*, seeds: Sequence[int] = (0, 1, 2),
         up_g = np.repeat(np.where(valid, up, 0.9), n_seeds)
         lo_g = np.repeat(np.where(valid, lo, 0.1), n_seeds)
         out, _ = run_sweep(
-            "power_batch", seeds=np.tile(seeds, p), up_thr=up_g, lo_thr=lo_g,
-            n_hosts=n_hosts, n_vms=n_vms, n_samples=n_samples,
-            compact=compact, **sweep_kw)
+            "power_batch",
+            dict(seeds=np.tile(seeds, p), up_thr=up_g, lo_thr=lo_g,
+                 n_hosts=n_hosts, n_vms=n_vms, n_samples=n_samples),
+            config=SweepConfig(compact=compact, **sweep_kw))
         cost = (np.asarray(out["energy_total_wh"], np.float64)
                 + sla_weight * np.asarray(out["sla_total_s"], np.float64)
                 + unserved_weight
                 * np.asarray(out["unserved_total_mips_s"], np.float64))
         scores = cost.reshape(p, n_seeds).mean(axis=1)
         return np.where(valid, scores, np.inf)
+
+    return objective
+
+
+def placement_from_keys(keys: np.ndarray, n_pipelines: int,
+                        n_stages: int) -> np.ndarray:
+    """Decode a continuous per-machine key vector into a valid
+    ``llmserve_batch`` placement.
+
+    The random-key trick that makes a combinatorial layout CEM-searchable:
+    sort machines by key (stable, descending — ties keep machine order),
+    take the first ``n_pipelines · n_stages``, and deal them stage-major
+    (matching :func:`repro.core.llmserve.default_placement`, which is
+    exactly this decoding applied to the prompt throughputs).  Every real
+    vector decodes to a *valid* placement — distinct machines, in range —
+    so the Gaussian population never needs repair or rejection.
+
+    ``keys`` may be ``[M]`` (one placement) or ``[P_pop, M]`` (one per
+    population member, returning ``[P_pop, n_pipelines, n_stages]``).
+    """
+    keys = np.asarray(keys, np.float64)
+    batched = keys.ndim == 2
+    keys2 = keys if batched else keys[None]
+    need = int(n_pipelines) * int(n_stages)
+    if keys2.shape[-1] < need:
+        raise ValueError(
+            f"placement_from_keys: {keys2.shape[-1]} machine keys cannot "
+            f"fill {n_pipelines}×{n_stages} pipeline stages")
+    order = np.argsort(-keys2, axis=-1, kind="stable")[:, :need]
+    pl = np.transpose(
+        order.reshape(-1, int(n_stages), int(n_pipelines)), (0, 2, 1))
+    return pl if batched else pl[0]
+
+
+def llmserve_placement_objective(*, seeds: Sequence[int] = (0, 1),
+                                 n_machines: int = 12, n_regions: int = 3,
+                                 n_stages: int = 2,
+                                 n_pipelines: Optional[int] = None,
+                                 n_requests: int = 48,
+                                 ttft_weight: float = 0.5,
+                                 drop_weight: float = 100.0,
+                                 compact: bool = True,
+                                 **kwargs: Any) -> Callable:
+    """Fitness for the LLM-serving *model placement* — the vectorized
+    stand-in for Helix's Gurobi ILP layout search (ASPLOS'25).
+
+    Returns ``objective({"key_0": [P], ..., "key_{M-1}": [P]}) -> [P]``:
+    each member's per-machine keys decode to a placement
+    (:func:`placement_from_keys`), the population × seeds grid of layouts
+    runs as **one** batched ``llmserve_batch`` sweep (compacted by default),
+    and a member's score is its seed-mean of
+
+        latency_mean_s + ttft_weight · ttft_mean_s
+                       + drop_weight · dropped.
+
+    ``kwargs`` split by name: :class:`~repro.core.sweep.SweepConfig`
+    fields (``chunk_size``, ``segment_iters``, …) configure the sweep,
+    everything else (``mean_gap_s``, ``offline_frac``, …) passes through
+    to the scenario.  Pair with a ``{f"key_{{m}}": (0.0, 1.0) for m in
+    range(n_machines)}`` search box.
+    """
+    from .backend import run_sweep
+    from .sweep import SweepConfig
+    seeds = np.asarray(seeds, np.int64)
+    n_seeds = len(seeds)
+    n_pipes = (int(n_pipelines) if n_pipelines
+               else max(1, int(n_machines) // int(n_stages)))
+    cfg_names = SweepConfig.field_names()
+    config = SweepConfig(compact=compact, **{
+        k: v for k, v in kwargs.items() if k in cfg_names})
+    scenario_kw = {k: v for k, v in kwargs.items() if k not in cfg_names}
+
+    def objective(pop: Dict[str, np.ndarray]) -> np.ndarray:
+        keys = np.stack(
+            [np.asarray(pop[f"key_{m}"], np.float64)
+             for m in range(int(n_machines))], axis=1)       # [P, M]
+        p = keys.shape[0]
+        placements = placement_from_keys(keys, n_pipes, int(n_stages))
+        out, _ = run_sweep(
+            "llmserve_batch",
+            dict(seeds=np.tile(seeds, p),
+                 placement=np.repeat(placements, n_seeds, axis=0),
+                 n_machines=n_machines, n_regions=n_regions,
+                 n_stages=n_stages, n_requests=n_requests, **scenario_kw),
+            config=config)
+        cost = (np.asarray(out["latency_mean_s"], np.float64)
+                + ttft_weight * np.asarray(out["ttft_mean_s"], np.float64)
+                + drop_weight * np.asarray(out["dropped"], np.float64))
+        return cost.reshape(p, n_seeds).mean(axis=1)
 
     return objective

@@ -52,6 +52,8 @@ execution layer").
 """
 from __future__ import annotations
 
+import dataclasses
+import difflib
 import functools
 import re
 import warnings
@@ -111,6 +113,120 @@ class SweepReport:
     def active_lane_fraction_observed(self) -> Optional[float]:
         """Alias: the observed fraction benches and gates key on."""
         return self.active_lane_fraction
+
+    def report_fields(self) -> Dict[str, Any]:
+        """The uniform schedule slice every consumer records — BENCH JSONs,
+        example printers, the perf gate — so any record reads the same way.
+
+        ``observed_active_lane_fraction`` is the gated occupancy figure —
+        actual lane-iterations over dispatched lane-iterations — as opposed
+        to the cost model's prediction
+        (``active_lane_fraction_predicted``)."""
+        return dict(
+            devices=self.devices, chunk_size=self.chunk_size,
+            n_chunks=self.n_chunks, bucketed=self.bucketed,
+            donated=self.donated, sharding=self.sharding,
+            compacted=self.compacted, refills=self.refills,
+            retires=self.retires, segments=self.segments,
+            peak_lanes=self.peak_lanes,
+            observed_active_lane_fraction=(
+                round(self.active_lane_fraction_observed, 4)
+                if self.active_lane_fraction_observed is not None else None),
+            active_lane_fraction_predicted=(
+                round(self.active_lane_fraction_predicted, 4)
+                if self.active_lane_fraction_predicted is not None else None),
+        )
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """How to *schedule* a sweep — every control knob the batched entry
+    points accept, separated from the scenario's own parameters.
+
+    ``run_sweep(kind, params, config=SweepConfig(...))`` is the typed entry
+    point; each field maps 1:1 onto the uniform controls every
+    :func:`repro.core.vec_engine.make_batch_entry` entry takes:
+
+      * ``compact`` — route through the compacting lane scheduler
+        (O(chunk) device memory, streaming retires, bit-identical);
+      * ``chunk_size`` — lanes per dispatch (compact: resident lane count);
+      * ``segment_iters`` — compact-mode per-segment iteration budget;
+      * ``devices`` — ``None``/"auto" = all local, int n = first n, or an
+        explicit placement list;
+      * ``sharding`` — multi-device executor, ``"pmap"`` or ``"shard_map"``;
+      * ``on_chunk`` / ``progress`` — streaming consumers;
+      * ``precision`` — ``"exact"`` (bit-identical f64) or ``"fast"`` (f32
+        loop) where the engine offers the opt-in; ``None`` defers to the
+        engine default;
+      * ``use_pallas`` — fused next-event kernel opt-in (``True`` /
+        ``"force"``);
+      * ``donate`` — donate chunk input buffers to XLA.
+
+    Only fields that differ from their defaults are forwarded to the
+    handler (:meth:`to_kwargs`), so a default config adds nothing to any
+    signature — handlers without e.g. a ``precision`` parameter never see
+    the key.
+    """
+
+    compact: bool = False
+    chunk_size: Optional[int] = None
+    segment_iters: Optional[int] = None
+    devices: Any = None
+    sharding: Optional[str] = None
+    on_chunk: Optional[Callable] = None
+    progress: Optional[Callable] = None
+    precision: Optional[str] = None
+    use_pallas: Any = False
+    donate: bool = True
+
+    def __post_init__(self):
+        if self.sharding not in (None, "pmap", "shard_map"):
+            raise ValueError(
+                f"sharding must be None, 'pmap' or 'shard_map': "
+                f"{self.sharding!r}")
+        if self.precision not in (None, "exact", "fast"):
+            raise ValueError(
+                f"precision must be None, 'exact' or 'fast': "
+                f"{self.precision!r}")
+        for name in ("chunk_size", "segment_iters"):
+            v = getattr(self, name)
+            if v is not None and int(v) < 1:
+                raise ValueError(f"{name} must be ≥ 1: {v!r}")
+
+    @classmethod
+    def field_names(cls) -> tuple:
+        return tuple(f.name for f in dataclasses.fields(cls))
+
+    @classmethod
+    def from_kwargs(cls, **kwargs: Any) -> "SweepConfig":
+        """Build a config from loose control kwargs (the legacy-shim path),
+        rejecting unknown keys with a did-you-mean suggestion."""
+        names = cls.field_names()
+        unknown = sorted(set(kwargs) - set(names))
+        if unknown:
+            hints = []
+            for k in unknown:
+                close = difflib.get_close_matches(k, names, n=1, cutoff=0.6)
+                hints.append(f"{k!r}" + (f" (did you mean {close[0]!r}?)"
+                                         if close else ""))
+            raise TypeError(
+                f"SweepConfig got unknown field(s): {', '.join(hints)}; "
+                f"valid fields: {', '.join(names)}")
+        return cls(**kwargs)
+
+    def to_kwargs(self) -> Dict[str, Any]:
+        """The non-default fields, as the uniform control kwargs every
+        batched entry point accepts — defaults are omitted so handlers
+        only ever see knobs the caller actually set."""
+        out = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v is not f.default and v != f.default:
+                out[f.name] = v
+        return out
+
+    def replace(self, **changes: Any) -> "SweepConfig":
+        return dataclasses.replace(self, **changes)
 
 
 def resolve_devices(devices: Any = None) -> Sequence[Any]:

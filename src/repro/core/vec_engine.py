@@ -75,12 +75,23 @@ class Loop(NamedTuple):
     it) -> dict`` all run traced; ``it`` is the driver-owned int32 iteration
     counter.  ``finalize`` may return an ``iterations`` entry to override
     the driver's count (e.g. a step dispatched before the loop).
+
+    ``trip_count`` (optional) promises ``cond(state, it) == (it <
+    trip_count)`` — the loop runs a *static* number of iterations.  The
+    monolithic driver then lowers to ``fori_loop`` instead of
+    ``while_loop``: under ``vmap`` a while-loop body is select-masked on
+    every carry leaf each iteration (lanes may disagree on ``cond``),
+    which for large per-request output carries is pure overhead when all
+    lanes provably run the same count.  The body sequence is identical
+    either way, so outputs stay bit-exact; the compacting scheduler keeps
+    the while-loop form (its lanes genuinely pause mid-stream).
     """
 
     init: Any
     cond: Callable[[Any, Any], Any]
     body: Callable[[Any, Any], Any]
     finalize: Callable[[Any, Any], Dict[str, Any]]
+    trip_count: Optional[int] = None
 
 
 @dataclass(frozen=True)
@@ -96,14 +107,22 @@ def run_one(engine: VecEngine, params: Any, statics: Any) -> Dict[str, Any]:
     ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
     loop = engine.build(params, statics, ops)
 
-    def cond(c):
-        return loop.cond(c[0], c[1])
+    if loop.trip_count is not None:
+        # Static trip count → fori_loop (lowers to scan): vmap batches the
+        # body directly, with none of while_loop's per-leaf select masking.
+        state = jax.lax.fori_loop(
+            0, int(loop.trip_count),
+            lambda i, s: loop.body(s, jnp.asarray(i, jnp.int32)), loop.init)
+        it = jnp.asarray(int(loop.trip_count), jnp.int32)
+    else:
+        def cond(c):
+            return loop.cond(c[0], c[1])
 
-    def body(c):
-        return loop.body(c[0], c[1]), c[1] + 1
+        def body(c):
+            return loop.body(c[0], c[1]), c[1] + 1
 
-    state, it = jax.lax.while_loop(cond, body,
-                                   (loop.init, jnp.asarray(0, jnp.int32)))
+        state, it = jax.lax.while_loop(cond, body,
+                                       (loop.init, jnp.asarray(0, jnp.int32)))
     out = dict(loop.finalize(state, it))
     out.setdefault("iterations", it)
     return out

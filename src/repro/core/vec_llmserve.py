@@ -1,0 +1,197 @@
+"""Vectorized geo-distributed LLM serving — ``llmserve_batch`` as a VecEngine.
+
+One routing decision per loop iteration, in submission order, over the
+precomputed tables of :mod:`repro.core.llmserve`: the per-stage flow-shop
+relay recurrence unrolls at trace time (``n_stages`` is a static), so the
+compiled body is a short chain of gathers, adds, maxes and one masked
+argmin — no multiplies (everything that needs one, service times, WAN
+legs, the KV/locality bias, was multiplied host-side into the tables), so
+nothing XLA:CPU could FMA-contract, and ``ops.argmin`` shares the OO
+broker's first-occurrence tie rule.  ``oo`` and ``vec`` therefore agree
+bit-exactly on every output (differential suite + golden fixture).
+
+The KV-occupancy counters ride in the carry as i64 (x64 is enabled around
+every dispatch) and the all-ineligible (dropped request) case is handled
+with ``where`` guards: ``ops.argmin`` returns index 0 on an empty mask —
+a valid gather index — and ``any_elig`` masks every committed output.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .llmserve import build_cells, empty_llmserve_outputs, summarize
+from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
+
+
+class _Statics(NamedTuple):
+    n_requests: int
+    n_pipelines: int
+    n_stages: int
+    use_pallas: bool
+
+
+class _Params(NamedTuple):
+    """The routing tables the compiled loop reads, packed row-per-request
+    (cell axis first); the remaining per-cell arrays stay host-side for
+    :func:`summarize`.
+
+    Packing everything the body needs for request ``it`` into one
+    ``[J, K]`` tensor turns the loop's per-iteration table access into a
+    *single* dynamic slice (instead of eight separate gathers across
+    eight operands) — measurably faster on CPU where per-op dispatch
+    dominates this small body, and bit-preserving: the doubles are the
+    same, only their storage layout changes.  Layout per row (see
+    :func:`_pack_cells`): ``submit | svc[P·S] | hop[P·S] | tail[P] |
+    first_extra[P] | bias[P] | eligible[P] | kv_need``."""
+    packed: jnp.ndarray       # [J, K]    f64
+
+
+def _pack_cells(cells) -> np.ndarray:
+    """The whole batch's tables as the ``[B, J, K]`` row layout
+    ``_llmserve_build`` unpacks (statically) each iteration — assembled
+    with one stack per field, not one concatenate per cell (host prep is
+    the vec path's wall-clock floor)."""
+    b, j = len(cells), len(cells[0].submit)
+    p, s = cells[0].placement.shape
+    ps = p * s
+    packed = np.empty((b, j, 2 + 2 * ps + 4 * p), np.float64)
+    fields = (
+        (1, lambda c: c.submit[:, None]),
+        (ps, lambda c: c.svc.reshape(j, ps)),
+        (ps, lambda c: c.hop.reshape(j, ps)),
+        (p, lambda c: c.tail),
+        (p, lambda c: c.first_extra),
+        (p, lambda c: c.bias),
+        (p, lambda c: c.eligible),                 # 0.0 / 1.0
+        (1, lambda c: c.kv_need[:, None]),         # exact ≤ 2^53
+    )
+    lo = 0
+    for width, get in fields:
+        view = packed[:, :, lo:lo + width]
+        for i, c in enumerate(cells):
+            view[i] = get(c)
+        lo += width
+    return packed
+
+
+class _Carry(NamedTuple):
+    free: jnp.ndarray         # [P, S] f64 time each pipeline stage drains
+    kv_used: jnp.ndarray      # [P, S] i64 KV tokens committed per slot
+    dst: jnp.ndarray          # [J] i32 chosen pipeline (-1 = dropped)
+    finish: jnp.ndarray       # [J] f64 response completion time
+    ttft: jnp.ndarray         # [J] f64 time to first token
+
+
+def _llmserve_build(cell, s: _Statics, ops) -> Loop:
+    """One request routed per iteration: the vectorized form of
+    :func:`repro.core.llmserve.route_request`, all pipelines at once."""
+    pipes = jnp.arange(s.n_pipelines)
+    P, S = s.n_pipelines, s.n_stages
+    ps = P * S
+
+    def body(c: _Carry, it) -> _Carry:
+        # One dynamic slice fetches everything request `it` needs; the
+        # splits below are static (fused into the gather by XLA).
+        row = cell.packed[it]                         # [K]
+        submit = row[0]
+        svc = row[1:1 + ps].reshape(P, S)
+        hop = row[1 + ps:1 + 2 * ps].reshape(P, S)
+        tail = row[1 + 2 * ps:1 + 2 * ps + P]
+        first_extra = row[1 + 2 * ps + P:1 + 2 * ps + 2 * P]
+        bias = row[1 + 2 * ps + 2 * P:1 + 2 * ps + 3 * P]
+        elig = row[1 + 2 * ps + 3 * P:1 + 2 * ps + 4 * P] > 0.5
+        kv_need = row[-1].astype(c.kv_used.dtype)
+        # Store-and-forward relay through the pipeline stages (unrolled at
+        # trace time): depart(s) = max(free[s], depart(s-1)+hop[s]) + svc[s].
+        d = jnp.broadcast_to(submit, (P,))
+        start_last = d
+        deps = []
+        for st in range(S):
+            arr = d + hop[:, st]
+            start_last = jnp.maximum(c.free[:, st], arr)
+            d = start_last + svc[:, st]
+            deps.append(d)
+        dep = jnp.stack(deps, axis=1)                 # [P, S]
+        fin = d + tail
+        score = fin + bias
+        pick = ops.argmin(score, elig)
+        ok = jnp.any(elig)
+        sel = (pipes[:, None] == pick) & ok           # [P, S]
+        inf = jnp.asarray(jnp.inf, fin.dtype)
+        return _Carry(
+            free=jnp.where(sel, dep, c.free),
+            kv_used=c.kv_used + jnp.where(sel, kv_need, 0),
+            dst=c.dst.at[it].set(
+                jnp.where(ok, pick, -1).astype(jnp.int32)),
+            finish=c.finish.at[it].set(jnp.where(ok, fin[pick], inf)),
+            ttft=c.ttft.at[it].set(
+                jnp.where(ok, start_last[pick] + first_extra[pick], inf)))
+
+    dtype = cell.packed.dtype
+    return Loop(
+        init=_Carry(free=jnp.zeros((P, S), dtype),
+                    kv_used=jnp.zeros((P, S), jnp.int64),
+                    dst=jnp.full((s.n_requests,), -1, jnp.int32),
+                    finish=jnp.full((s.n_requests,), jnp.inf, dtype),
+                    ttft=jnp.full((s.n_requests,), jnp.inf, dtype)),
+        cond=lambda c, it: it < s.n_requests,
+        body=body,
+        finalize=lambda c, it: dict(dst=c.dst, finish=c.finish,
+                                    ttft=c.ttft, kv_used=c.kv_used),
+        trip_count=s.n_requests)
+
+
+LLMSERVE_ENGINE = VecEngine("llmserve_batch", _llmserve_build)
+
+
+def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
+                      n_regions: int = 3, n_stages: int = 2,
+                      n_pipelines=None, n_layers: int = 32,
+                      n_requests: int = 64, placement=None, machines=None,
+                      mean_gap_s=1.0, locality_weight=1.0,
+                      offline_region=-1, offline_frac: float = 0.25,
+                      slo_ttft_s: float = 5.0, kv_penalty_s: float = 0.5,
+                      link_bw: float = 10e9, hop_latency_s: float = 0.03,
+                      prompt_tokens=(64, 1024), decode_tokens=(16, 512)):
+    cells, b = build_cells(
+        seeds=seeds, n_machines=n_machines, n_regions=n_regions,
+        n_stages=n_stages, n_pipelines=n_pipelines, n_layers=n_layers,
+        n_requests=n_requests, placement=placement, machines=machines,
+        mean_gap_s=mean_gap_s, locality_weight=locality_weight,
+        offline_region=offline_region, offline_frac=offline_frac,
+        slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
+        hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
+        decode_tokens=decode_tokens)
+    if b == 0:
+        return Done(empty_llmserve_outputs(int(n_machines)))
+    params = _Params(packed=_pack_cells(cells))
+    n_pipes, n_st = cells[0].placement.shape
+    # Every lane routes exactly n_requests requests: nothing to bucket.
+    return BatchPlan(params,
+                     _Statics(int(n_requests), int(n_pipes), int(n_st),
+                              bool(use_pallas)),
+                     finalize=lambda out: summarize(out, cells))
+
+
+simulate_llmserve_batch = make_batch_entry(
+    LLMSERVE_ENGINE, _prepare_llmserve, name="simulate_llmserve_batch",
+    doc="""\
+    Batched geo-distributed LLM serving through the sweep layer.
+
+    ``seeds`` and the sweep axes ``mean_gap_s`` / ``locality_weight`` /
+    ``offline_region`` (scalars or arrays broadcast against ``seeds``)
+    define the batch; ``placement`` may additionally carry a leading cell
+    axis (``[B, P, S]``) for placement-search grids.  Each cell's request
+    stream and routing tables come from :mod:`repro.core.llmserve` and are
+    shared verbatim with the OO reference broker.  Returns per-request
+    ``dst``/``finish``/``ttft`` and per-slot ``kv_used`` plus the shared
+    serving summary (``served``, ``dropped``, ``makespan``,
+    ``latency_mean_s``, ``ttft_mean_s``, ``slo_violations``,
+    ``tokens_out``, ``pipe_requests``, ``machine_busy_s``,
+    ``kv_assigned_tokens``, ``utilization``, ``wan_delay_total_s``, …);
+    ``with_report=True`` adds the ``SweepReport``.  Bit-exact vs the
+    ``oo``/``legacy`` backends on every output.
+    """)

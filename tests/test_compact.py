@@ -18,6 +18,7 @@ import numpy as np
 import pytest
 
 from repro.core.backend import run_sweep
+from repro.core.sweep import SweepConfig
 from repro.core.cluster import FleetConfig, StepCost
 from repro.core.vec_cluster import simulate_fleet_batch
 
@@ -269,10 +270,11 @@ def test_compact_sweep_rejects_empty_grid():
 
 def test_run_sweep_compact_through_registry(mono):
     """The scenario registry forwards the new controls end to end."""
-    out, rep = run_sweep("fleet_batch", cost=COST, cfg=FLEET_CFG,
-                         total_steps=60, seeds=SEEDS, mtbf_hours=MTBF,
-                         ckpt_every=CKPT, compact=True, chunk_size=8,
-                         segment_iters=7)
+    out, rep = run_sweep(
+        "fleet_batch",
+        dict(cost=COST, cfg=FLEET_CFG, total_steps=60, seeds=SEEDS,
+             mtbf_hours=MTBF, ckpt_every=CKPT),
+        config=SweepConfig(compact=True, chunk_size=8, segment_iters=7))
     assert rep.compacted and rep.refills == B - 8
     for k in mono:
         assert np.array_equal(mono[k], out[k]), k

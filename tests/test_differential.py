@@ -3,7 +3,8 @@
 Every batched scenario kind the substrate registers on *both* the ``oo``
 and ``vec`` backends (``fleet_batch``, ``workflow_batch``,
 ``cloudlet_batch``, ``consolidation_batch``, ``power_batch``,
-``netdc_batch``) runs here through one generic harness: a seeded generator draws a random scenario
+``netdc_batch``, ``llmserve_batch``) runs here through one generic
+harness: a seeded generator draws a random scenario
 config, both backends run it, and a per-kind comparator asserts the
 agreement contract — **bit-exact** for deterministic scenarios
 (fleet-deterministic, power) and **ε-close** where the engines share the
@@ -170,6 +171,32 @@ def _cmp_netdc(oo, vec):
     _assert_exact(oo, vec, keys=sorted(oo))
 
 
+def _gen_llmserve(rng):
+    n_stages = int(rng.integers(1, 4))
+    n_machines = int(rng.integers(n_stages, 4 * n_stages + 1))
+    return dict(seeds=rng.integers(0, 1000, 3),
+                n_machines=n_machines, n_regions=int(rng.integers(1, 5)),
+                n_stages=n_stages, n_requests=int(rng.integers(8, 40)),
+                mean_gap_s=float(rng.uniform(0.1, 3.0)),
+                locality_weight=float(rng.uniform(0.5, 4.0)),
+                offline_region=int(rng.integers(-1, 2)),
+                offline_frac=float(rng.uniform(0.0, 1.0)),
+                kv_penalty_s=float(rng.uniform(0.0, 2.0)),
+                # straddle the pipeline KV capacities so drops occur
+                decode_tokens=(16, int(rng.integers(512, 200_000))))
+
+
+def _run_llmserve(backend, params):
+    return run_scenario("llmserve_batch", backend=backend, **params)
+
+
+def _cmp_llmserve(oo, vec):
+    # Every output, bit-exact (same key-set contract as netdc): the
+    # decision arithmetic is shared f64 tables + adds/max/compares.
+    assert set(vec) - {"iterations"} == set(oo), sorted(set(vec) ^ set(oo))
+    _assert_exact(oo, vec, keys=sorted(oo))
+
+
 def _gen_power(rng):
     lo = float(rng.uniform(0.1, 0.4))
     return dict(seeds=rng.integers(0, 1000, 3),
@@ -198,6 +225,7 @@ CASES = {
                             _cmp_consolidation),
     "power_batch": (_gen_power, _run_power, _cmp_power),
     "netdc_batch": (_gen_netdc, _run_netdc, _cmp_netdc),
+    "llmserve_batch": (_gen_llmserve, _run_llmserve, _cmp_llmserve),
 }
 
 
@@ -211,7 +239,7 @@ def _check(kind, seed):
 # compacting lane scheduler; consolidation_batch is a host loop (the
 # compact control does not apply there).
 COMPACT_KINDS = ("fleet_batch", "workflow_batch", "cloudlet_batch",
-                 "power_batch", "netdc_batch")
+                 "power_batch", "netdc_batch", "llmserve_batch")
 
 
 def _check_compact(kind, seed):

@@ -112,9 +112,23 @@ def _netdc_case():
                 outputs={k: np.asarray(v).tolist() for k, v in out.items()})
 
 
+def _llmserve_case():
+    out = run_scenario(
+        "llmserve_batch", backend="vec", seeds=[0, 1, 2, 3],
+        n_machines=6, n_regions=3, n_stages=2, n_requests=32,
+        mean_gap_s=np.array([0.5, 0.5, 2.0, 2.0]),
+        offline_region=np.array([-1, 1, -1, 1]),
+        decode_tokens=(16, 90_000))       # straddles KV capacity → drops
+    return dict(config=dict(n_machines=6, n_regions=3, n_stages=2,
+                            n_requests=32, seeds=4,
+                            sweep="mean_gap_s × offline_region"),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
 CASES = {
     "fleet_batch": _fleet_case,
     "netdc_batch": _netdc_case,
+    "llmserve_batch": _llmserve_case,
     "workflow_batch": _workflow_case,
     "cloudlet_batch": _cloudlet_case,
     "consolidation_batch": _consolidation_case,

@@ -1,0 +1,208 @@
+"""Geo-distributed LLM serving (``llmserve_batch``) — scenario tests.
+
+Covers the shared model layer (workload feeders, routing tables, the
+InterDC ``delay_pairs`` arithmetic), the OO broker vs vec engine
+bit-exactness contract (drops, outages, batched placements), sweep
+routing (chunked/compact schedules, ``ScenarioResult``), and the
+serving-metric invariants of :func:`repro.core.llmserve.summarize`.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario, run_sweep
+from repro.core.llmserve import (LLMServeCell, build_cells,
+                                 default_machines, default_placement,
+                                 llmserve_workload, machine_regions)
+from repro.core.network import InterDCTopology
+from repro.core.sweep import SweepConfig
+
+
+def _run(backend="vec", **kw):
+    kw.setdefault("seeds", (0, 1))
+    kw.setdefault("n_requests", 24)
+    return run_scenario("llmserve_batch", backend=backend, **kw)
+
+
+# -- model layer ---------------------------------------------------------------
+
+def test_delay_pairs_matches_scalar_transfer_delay():
+    """delay_pairs is the scalar closed form, vectorized: bit-exact."""
+    topo = InterDCTopology(5, link_bw=7e9, hop_latency_s=0.013)
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 5, 40)
+    dst = rng.integers(0, 5, 40)
+    payload = rng.uniform(1e3, 1e9, 40)
+    got = topo.delay_pairs(src, dst, payload)
+    want = np.array([topo.transfer_delay(int(s), int(t), float(p))
+                     for s, t, p in zip(src, dst, payload)])
+    assert np.array_equal(got, want)
+
+
+def test_workload_feeders():
+    wl = llmserve_workload(5, 40, 3, mean_gap_s=1.0,
+                           offline_frac=0.3, prompt_tokens=(64, 1024),
+                           decode_tokens=(16, 512))
+    assert (wl["submit"][:12] == 0.0).all()        # offline batch at t=0
+    assert not wl["online"][:12].any() and wl["online"][12:].all()
+    assert (np.diff(wl["submit"]) >= 0).all()      # nondecreasing stream
+    assert wl["src"].max() < 3 and wl["prompt_tok"].min() >= 64
+
+
+def test_default_placement_is_fastest_first_and_distinct():
+    m = default_machines(9)
+    pl = default_placement(m["prompt_tls"], 4, 2)
+    assert pl.shape == (4, 2)
+    assert len(np.unique(pl)) == 8
+    # stage 0 of pipeline 0 gets the fastest prefill machine
+    assert m["prompt_tls"][pl[0, 0]] == m["prompt_tls"].max()
+    with pytest.raises(ValueError, match="cluster has"):
+        default_placement(m["prompt_tls"], 5, 2)
+
+
+def test_build_cells_validation():
+    with pytest.raises(ValueError, match="n_requests"):
+        build_cells(seeds=(0,), n_requests=0)
+    with pytest.raises(ValueError, match="offline_frac"):
+        build_cells(seeds=(0,), offline_frac=1.5)
+    with pytest.raises(ValueError, match="machine ids"):
+        build_cells(seeds=(0,), placement=[[0, 99]])
+    with pytest.raises(ValueError, match="distinct"):
+        build_cells(seeds=(0,), placement=[[0, 1], [1, 2]])
+    with pytest.raises(ValueError, match="offline_region"):
+        build_cells(seeds=(0,), offline_region=7)
+    with pytest.raises(ValueError, match=r"\[P, S\]"):
+        build_cells(seeds=(0,), placement=[0, 1])
+
+
+def test_cell_tables_shapes_and_eligibility():
+    cells, b = build_cells(seeds=(0,), n_machines=6, n_regions=3,
+                           n_stages=2, n_requests=10, offline_region=0)
+    assert b == 1
+    c = cells[0]
+    assert isinstance(c, LLMServeCell)
+    assert c.svc.shape == c.hop.shape == (10, 3, 2)
+    assert c.tail.shape == c.bias.shape == c.eligible.shape == (10, 3)
+    # any pipeline touching region 0 is knocked out for every request
+    regions = machine_regions(6, 3)
+    down = (regions[c.placement] == 0).any(axis=1)
+    assert not c.eligible[:, down].any()
+
+
+# -- backend agreement ---------------------------------------------------------
+
+CFG = dict(seeds=(0, 1, 2), n_requests=32, n_machines=9, n_regions=3,
+           n_stages=3, mean_gap_s=(0.3, 1.0, 3.0),
+           decode_tokens=(16, 90_000))            # straddles KV → drops
+
+
+def _assert_all_equal(a, b, what):
+    for k in set(a) & set(b):
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+            f"{what}: {k} differs"
+
+
+def test_three_backends_bit_exact():
+    oo = _run("oo", **CFG)
+    vec = _run("vec", **CFG)
+    legacy = _run("legacy", **CFG)
+    _assert_all_equal(oo, vec, "oo vs vec")
+    _assert_all_equal(oo, legacy, "oo vs legacy")
+    assert (oo["served"] + oo["dropped"] == CFG["n_requests"]).all()
+    assert oo["dropped"].sum() > 0 and oo["served"].sum() > 0
+
+
+def test_dropped_requests_marked_consistently():
+    out = _run("vec", **CFG)
+    dropped = out["dst"] < 0
+    assert np.isinf(out["finish"][dropped]).all()
+    assert np.isinf(out["ttft"][dropped]).all()
+    assert np.isfinite(out["finish"][~dropped]).all()
+    assert (out["ttft"][~dropped] <= out["finish"][~dropped]).all()
+
+
+def test_batched_placements_one_layout_per_cell():
+    rng = np.random.default_rng(0)
+    pls = np.stack([rng.permutation(8)[:6].reshape(2, 3).T
+                    for _ in range(5)])            # [5, 3, 2]
+    oo = _run("oo", seeds=np.zeros(5, np.int64), n_machines=8,
+              placement=pls)
+    vec = _run("vec", seeds=np.zeros(5, np.int64), n_machines=8,
+               placement=pls)
+    _assert_all_equal(oo, vec, "batched placement")
+    # layouts genuinely differ → at least two distinct makespans
+    assert len(np.unique(oo["makespan"])) > 1
+
+
+def test_use_pallas_force_is_bit_identical():
+    base = _run("vec", seeds=(4, 5))
+    forced = _run("vec", seeds=(4, 5), use_pallas="force")
+    _assert_all_equal(base, forced, "pallas vs jnp")
+
+
+# -- sweep routing -------------------------------------------------------------
+
+def test_chunked_and_compact_bit_identical():
+    params = dict(seeds=np.arange(6), n_requests=20,
+                  mean_gap_s=np.tile([0.5, 2.0], 3))
+    mono = _run("vec", **params)
+    chunked, rep = run_sweep("llmserve_batch", params,
+                             config=SweepConfig(chunk_size=2))
+    assert rep.n_chunks == 3
+    _assert_all_equal(mono, chunked, "chunked")
+    compact, rep2 = run_sweep(
+        "llmserve_batch", params,
+        config=SweepConfig(compact=True, chunk_size=2, segment_iters=6))
+    assert rep2.compacted and rep2.refills == 4
+    # equal-length lanes: the compacting scheduler wastes nothing
+    assert rep2.active_lane_fraction_observed == 1.0
+    _assert_all_equal(mono, compact, "compact")
+
+
+def test_run_sweep_scenario_result_both_backends():
+    for backend in ("vec", "oo"):
+        res = run_sweep("llmserve_batch",
+                        dict(seeds=(0, 1), n_requests=12), backend=backend)
+        assert res.kind == "llmserve_batch" and res.backend == backend
+        assert res.report.n_cells == 2
+        assert res.summary()["served"] >= 0
+        assert "observed_active_lane_fraction" in res.report_fields()
+
+
+def test_empty_batch_short_circuits():
+    out, rep = run_sweep("llmserve_batch", dict(seeds=[]))
+    assert rep.n_cells == 0 and out["dst"].shape[0] == 0
+    oo = _run("oo", seeds=[])
+    assert set(out) - {"iterations"} == set(oo)
+
+
+# -- summary invariants --------------------------------------------------------
+
+def test_summary_invariants():
+    out = _run("vec", **CFG)
+    served_m = out["dst"] >= 0
+    assert np.array_equal(out["pipe_requests"].sum(axis=1), out["served"])
+    # every served request's context is committed once per pipeline stage
+    cells, _ = build_cells(**CFG)
+    for i, c in enumerate(cells):
+        kv_expect = c.kv_need[served_m[i]].sum() * c.placement.shape[1]
+        assert out["kv_assigned_tokens"][i].sum() == kv_expect
+        assert out["kv_used"][i].sum() == \
+            c.kv_need[served_m[i]].sum() * c.placement.shape[1]
+    assert (out["utilization"] >= 0).all() and (out["utilization"] <= 1).all()
+    assert (out["tokens_out"] <= CFG["n_requests"] * 90_000).all()
+    busiest = out["machine_busy_s"][np.arange(3), out["busiest_machine"]]
+    assert (busiest == out["machine_busy_s"].max(axis=1)).all()
+
+
+def test_outage_reroutes_or_drops():
+    """Taking a region offline must never leave requests routed through it."""
+    out = _run("vec", seeds=(0,), n_machines=6, n_regions=3,
+               offline_region=1, n_requests=20)
+    cells, _ = build_cells(seeds=(0,), n_machines=6, n_regions=3,
+                           offline_region=1, n_requests=20)
+    regions = machine_regions(6, 3)
+    c = cells[0]
+    for j, p in enumerate(out["dst"][0]):
+        if p >= 0:
+            assert (regions[c.placement[p]] != 1).all()

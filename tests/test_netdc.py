@@ -9,6 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.backend import run_scenario, run_sweep
+from repro.core.sweep import SweepConfig
 from repro.core.netdc import build_cells, netdc_workload, route_job
 from repro.core.network import InterDCTopology, store_and_forward_delay
 
@@ -158,8 +159,8 @@ def test_empty_batch_short_circuits():
 def test_chunked_equals_monolithic_bitwise():
     kw = dict(seeds=np.arange(6), locality_weight=1.5, n_dcs=4, n_jobs=24)
     mono = _run(**kw)
-    chunked, rep = run_sweep("netdc_batch", backend="vec", chunk_size=2,
-                             **kw)
+    chunked, rep = run_sweep("netdc_batch", kw, backend="vec",
+                             config=SweepConfig(chunk_size=2))
     assert rep.n_chunks == 3
     for k in mono:
         assert np.array_equal(np.asarray(mono[k]), np.asarray(chunked[k])), k

@@ -10,7 +10,7 @@ import numpy as np
 import pytest
 
 from repro.core.backend import run_scenario, run_sweep, scenario_kinds
-from repro.core.sweep import SweepReport
+from repro.core.sweep import SweepConfig, SweepReport
 
 CFG = dict(seeds=[0, 1, 2], n_hosts=8, n_vms=32, n_samples=48,
            up_thr=0.8, lo_thr=0.3, cooldown=2)
@@ -55,12 +55,12 @@ def test_run_sweep_report_populated_both_backends():
 
 def test_chunked_and_sharded_fallback_bit_identical():
     mono = run_scenario("power_batch", backend="vec", **CFG)
-    chunked, rep = run_sweep("power_batch", backend="vec", chunk_size=2,
-                             **CFG)
+    chunked, rep = run_sweep("power_batch", CFG, backend="vec",
+                             config=SweepConfig(chunk_size=2))
     assert rep.n_chunks == 2 and rep.chunk_size == 2
     _assert_all_equal(mono, chunked, "chunked vs monolithic")
-    sharded, rep1 = run_sweep("power_batch", backend="vec", devices=1,
-                              chunk_size=1, **CFG)
+    sharded, rep1 = run_sweep("power_batch", CFG, backend="vec",
+                              config=SweepConfig(devices=1, chunk_size=1))
     assert rep1.devices == 1
     _assert_all_equal(mono, sharded, "sharded-fallback vs monolithic")
 

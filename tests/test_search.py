@@ -8,6 +8,8 @@ import numpy as np
 import pytest
 
 from repro.core.search import (CEMResult, cem_minimize,
+                               llmserve_placement_objective,
+                               placement_from_keys,
                                power_autoscaler_objective)
 
 
@@ -91,3 +93,37 @@ def test_power_objective_rejects_inverted_thresholds():
     scores = objective({"up_thr": np.array([0.8, 0.2]),
                         "lo_thr": np.array([0.3, 0.6])})
     assert np.isfinite(scores[0]) and np.isinf(scores[1])
+
+
+def test_placement_from_keys_decodes_valid_layouts():
+    from repro.core.llmserve import default_machines, default_placement
+    m = default_machines(8)
+    # the default layout IS the decoding applied to prompt throughputs
+    assert np.array_equal(placement_from_keys(m["prompt_tls"], 4, 2),
+                          default_placement(m["prompt_tls"], 4, 2))
+    rng = np.random.default_rng(0)
+    keys = rng.uniform(0, 1, (10, 8))
+    pls = placement_from_keys(keys, 3, 2)
+    assert pls.shape == (10, 3, 2)
+    for pl in pls:                       # always valid: distinct, in range
+        assert len(np.unique(pl)) == 6 and pl.min() >= 0 and pl.max() < 8
+    with pytest.raises(ValueError, match="machine keys"):
+        placement_from_keys(keys[:, :4], 3, 2)
+
+
+def test_cem_improves_llmserve_placement():
+    """The ILP stand-in: CEM over random-key placements must find a layout
+    no worse than the throughput-greedy default on the same seeds."""
+    objective = llmserve_placement_objective(
+        seeds=(0, 1), n_machines=9, n_stages=3, n_requests=24,
+        mean_gap_s=0.5, segment_iters=16)
+    space = {f"key_{m}": (0.0, 1.0) for m in range(9)}
+    res = cem_minimize(objective, space, pop_size=10, n_generations=4,
+                       seed=0)
+    assert np.isfinite(res.best_score)
+    from repro.core.llmserve import default_machines
+    default_keys = default_machines(9)["prompt_tls"]
+    default_score = objective(
+        {f"key_{m}": np.array([default_keys[m]]) for m in range(9)})
+    assert res.best_score <= float(default_score[0]) + 1e-9
+    assert res.history[-1]["elite_mean"] <= res.history[0]["elite_mean"]

@@ -17,7 +17,8 @@ import pytest
 
 from repro.core.backend import run_scenario, run_sweep
 from repro.core.cluster import FleetConfig, StepCost
-from repro.core.sweep import SweepReport, auto_chunk_size, run_host_sweep
+from repro.core.sweep import (SweepConfig, SweepReport, auto_chunk_size,
+                              run_host_sweep)
 from repro.core.vec_cluster import simulate_fleet_batch
 
 COST = StepCost(compute_s=1.2, memory_s=0.5, collective_s=0.4,
@@ -136,7 +137,8 @@ def test_cloudlet_cells_chunked_bit_identical():
         guest_mips=rng.uniform(500, 1500, (Bc, G)),
         guest_pes=np.full((Bc, G), 2.0))
     mono = run_scenario("cloudlet_batch", backend="vec", **kw)
-    chunked, rep = run_sweep("cloudlet_batch", chunk_size=3, **kw)
+    chunked, rep = run_sweep("cloudlet_batch", kw,
+                             config=SweepConfig(chunk_size=3))
     assert rep.n_chunks == 4
     assert np.array_equal(mono, chunked)
     # and the cells contract matches the OO engine per cell (inf-safe)
