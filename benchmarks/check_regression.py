@@ -32,11 +32,18 @@ baseline would otherwise hide a real per-device regression — and the other
 direction would fail spuriously).  Mismatches are reported as notes and
 skipped.
 
-Usage (pairs of current/baseline paths):
+A separate ``--chaos BENCH_chaos.json`` mode health-gates the soak
+artifact from ``examples/soak_chaos.py`` with absolute assertions (no
+baseline): clean rounds quarantined nothing, and chaos rounds measured a
+finite fault-recovery time.  It composes with the pair gates or runs
+alone.
+
+Usage (pairs of current/baseline paths, optional chaos report):
 
   python -m benchmarks.check_regression \
       BENCH_substrate.json benchmarks/baselines/substrate_quick.json \
-      BENCH_workflow.json  benchmarks/baselines/workflow_quick.json
+      BENCH_workflow.json  benchmarks/baselines/workflow_quick.json \
+      --chaos BENCH_chaos.json
 
 Quick-mode CI runs must gate against quick-mode baselines (the configs are
 embedded in each record and mismatches are reported); absolute wall times
@@ -171,17 +178,57 @@ def check_pair(current: Dict, baseline: Dict, threshold: float
     return failures, notes
 
 
+def check_chaos(record: Dict) -> Tuple[List[str], List[str]]:
+    """Gate one chaos-soak report (``examples/soak_chaos.py`` artifact).
+
+    Absolute health assertions, no baseline needed: clean rounds must not
+    quarantine lanes (a quarantined clean lane means the simulator itself
+    produced non-finite outputs), chaos rounds must exist and must have
+    *measured* fault recovery — at least one node-crash window followed by
+    a served request on the recovered target, with a finite mean.
+    """
+    failures, notes = [], []
+    if record.get("report") != "soak_chaos":
+        return [f"not a chaos report (report={record.get('report')!r})"], []
+    t = record.get("totals", {})
+    if t.get("clean_quarantined", -1) != 0:
+        failures.append(f"clean rounds quarantined "
+                        f"{t.get('clean_quarantined')} lane(s); expected 0")
+    if t.get("chaos_rounds", 0) < 1:
+        failures.append("no chaos rounds in report")
+    if t.get("recovery_windows", 0) < 1:
+        failures.append("no node-crash recovery windows recorded")
+    if t.get("recovery_measured", 0) < 1:
+        failures.append("no recovery window was measured (stream never "
+                        "reached a recovered target)")
+    mean = t.get("recovery_mean_s")
+    if not (isinstance(mean, (int, float)) and mean == mean):
+        failures.append(f"recovery_mean_s missing/non-finite: {mean!r}")
+    if not failures:
+        notes.append(
+            f"chaos: {t.get('chaos_rounds')} chaos round(s), recovery "
+            f"measured on {t.get('recovery_measured')}/"
+            f"{t.get('recovery_windows')} window(s), mean {mean:.2f}s, "
+            f"retries {t.get('retries')}, clean quarantined 0")
+    return failures, notes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         description="fail (exit 1) when a tracked speedup ratio degrades "
                     "more than --threshold vs its committed baseline")
-    ap.add_argument("paths", nargs="+",
+    ap.add_argument("paths", nargs="*",
                     help="pairs: CURRENT BASELINE [CURRENT BASELINE ...]")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="allowed fractional degradation (default 0.25)")
+    ap.add_argument("--chaos", type=pathlib.Path, default=None,
+                    help="chaos-soak report JSON to health-gate "
+                         "(absolute assertions, no baseline)")
     args = ap.parse_args(argv)
     if len(args.paths) % 2:
         ap.error("paths must come in CURRENT BASELINE pairs")
+    if not args.paths and args.chaos is None:
+        ap.error("need CURRENT BASELINE pairs and/or --chaos PATH")
 
     all_failures = []
     for i in range(0, len(args.paths), 2):
@@ -202,6 +249,17 @@ def main(argv=None) -> int:
         for f in failures:
             print(f"REGRESSION {f}")
         all_failures += failures
+    if args.chaos is not None:
+        if not args.chaos.exists():
+            all_failures.append(f"{args.chaos}: chaos report missing "
+                                "(soak did not run?)")
+        else:
+            failures, notes = check_chaos(json.loads(args.chaos.read_text()))
+            for n in notes:
+                print(f"# {n}")
+            for f in failures:
+                print(f"CHAOS {args.chaos}: {f}")
+            all_failures += failures
     if all_failures:
         print(f"{len(all_failures)} perf regression(s) beyond "
               f"{args.threshold:.0%} threshold", file=sys.stderr)

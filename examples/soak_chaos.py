@@ -1,0 +1,75 @@
+"""Chaos/soak run over the streaming sweep API — the CI chaos artifact.
+
+  PYTHONPATH=src python examples/soak_chaos.py [--quick] [--out BENCH_chaos.json]
+
+Alternates clean and chaos rounds of the ``netdc_batch`` workload through
+:func:`repro.core.soak.run_soak`: every round streams through the
+compacting lane scheduler with quarantine armed, chaos rounds inject a
+seeded :func:`~repro.core.faults.make_chaos_plan` (datacenter crash
+windows, WAN degradation, transient request failures) with a retry
+policy + timeout failover, and each round's rolling health metrics —
+events/s, active fraction, served/dropped/retry counts, SLA violations,
+per-window recovery times, quarantined lanes — land in a JSON snapshot.
+
+CI runs ``--quick`` and gates the artifact with
+``python -m benchmarks.check_regression --chaos BENCH_chaos.json``:
+clean rounds must quarantine nothing, chaos rounds must measure recovery.
+"""
+import argparse
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small CI-sized soak (4 rounds × 8 lanes)")
+    ap.add_argument("--backend", choices=["oo", "legacy", "vec"],
+                    default="vec")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--lanes", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--dcs", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", type=pathlib.Path,
+                    default=pathlib.Path("BENCH_chaos.json"))
+    args = ap.parse_args()
+
+    from repro.core.soak import run_soak
+
+    rounds = args.rounds or (4 if args.quick else 8)
+    lanes = args.lanes or (8 if args.quick else 64)
+    jobs = args.jobs or (32 if args.quick else 96)
+
+    def show(r):
+        rec = ", ".join("-" if x != x else f"{x:.1f}s" for x in r.recovery_s)
+        print(f"round {r.round}  {'CHAOS' if r.chaos else 'clean'}  "
+              f"{r.events_per_s:8.0f} ev/s  active {r.active_fraction:.2f}  "
+              f"served {r.served}  dropped {r.dropped}  "
+              f"retries {r.retries}  sla {r.sla_violations}  "
+              f"quarantined {r.quarantined}"
+              + (f"  recovery [{rec}]" if r.chaos else ""))
+
+    report = run_soak(
+        backend=args.backend, rounds=rounds, cells_per_round=lanes,
+        n_targets=args.dcs, n_jobs=jobs, seed0=args.seed,
+        chunk_size=min(lanes, 16), snapshot_path=args.out, progress=show)
+
+    t = report.totals()
+    print(f"\nsoak complete: {t['rounds']} rounds ({t['chaos_rounds']} "
+          f"chaos), {t['cells']} cells, {t['events']} events in "
+          f"{t['wall_s']:.1f}s")
+    print(f"served {t['served']}  dropped {t['dropped']}  retries "
+          f"{t['retries']}  sla_violations {t['sla_violations']}")
+    print(f"quarantined: clean {t['clean_quarantined']}, chaos "
+          f"{t['chaos_quarantined']}; recovery measured on "
+          f"{t['recovery_measured']}/{t['recovery_windows']} windows"
+          + (f" (mean {t['recovery_mean_s']:.1f}s)"
+             if t['recovery_mean_s'] is not None else ""))
+    print(f"chaos report written to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

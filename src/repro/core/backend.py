@@ -277,6 +277,67 @@ class ScenarioResult(tuple):
                 f"backend={self.backend!r}, n_cells={self.report.n_cells})")
 
 
+# -- scenario-parameter validation (run_sweep entry) --------------------------
+
+# Parameters that must be strictly positive wherever given — rates,
+# capacities, MTBFs.  A zero or negative entry produces silent nonsense
+# (division by zero, instant-failure storms) only *after* a sweep compiles
+# and dispatches; rejecting at entry names the axis and index instead.
+_POSITIVE_PARAMS = frozenset({
+    "mean_gap_s", "link_bw", "dc_mips", "host_mips", "vm_mips",
+    "guest_mips", "mtbf_hours", "mtbf_hours_node", "degrade_mtbf_hours",
+    "interval", "total_steps", "n_samples",
+})
+# Parameters that must be >= 0 (delays, penalties, weights).
+_NONNEGATIVE_PARAMS = frozenset({
+    "hop_latency_s", "slo_ttft_s", "kv_penalty_s", "payload_mb",
+    "locality_weight", "up_thr", "lo_thr", "cooldown", "offline_frac",
+})
+# float params where +inf is a legitimate sentinel (NaN never is).
+_INF_OK = frozenset({"timeout_s", "budget_s"})
+
+
+def validate_scenario_params(kind: str, params: Mapping[str, Any]) -> None:
+    """Reject non-finite or sign-invalid scenario parameter arrays before
+    anything compiles, naming the offending key and index.
+
+    Best-effort by construction: non-numeric parameters (config
+    dataclasses, fault plans, callables, strings) pass through untouched;
+    every float array is NaN-checked (and inf-checked unless the key
+    legitimately uses ``inf`` as a sentinel), and keys in the
+    positive/non-negative registries get their sign constraint enforced.
+    """
+    for key, val in params.items():
+        try:
+            arr = np.asarray(val)
+        except Exception:
+            continue
+        if arr.dtype.kind == "f":
+            bad = np.isnan(arr) if key in _INF_OK else ~np.isfinite(arr)
+            if bad.any():
+                idx = np.unravel_index(int(np.argmax(bad)), arr.shape)
+                loc = "".join(f"[{i}]" for i in idx)
+                raise ValueError(
+                    f"run_sweep({kind!r}): params[{key!r}]{loc} = "
+                    f"{arr[idx]} — scenario parameters must be finite")
+        if arr.dtype.kind not in "fiu" or arr.size == 0:
+            continue
+        if key in _POSITIVE_PARAMS:
+            bad = ~(arr > 0)
+        elif key in _NONNEGATIVE_PARAMS:
+            bad = ~(arr >= 0)
+        else:
+            continue
+        if bad.any():
+            idx = np.unravel_index(int(np.argmax(bad)), arr.shape)
+            loc = "".join(f"[{i}]" for i in idx)
+            bound = ("> 0 (a positive rate/capacity/MTBF)"
+                     if key in _POSITIVE_PARAMS else ">= 0")
+            raise ValueError(
+                f"run_sweep({kind!r}): params[{key!r}]{loc} = {arr[idx]} "
+                f"— must be {bound}")
+
+
 # One-time deprecation notice for loose sweep-control kwargs (the pre-
 # SweepConfig calling convention); tests reset it to observe the warning.
 _warned_legacy_controls = False
@@ -366,6 +427,7 @@ def run_sweep(kind: str, params: Mapping[str, Any] | None = None, *,
         scenario_params = kwargs
     if config is None:
         config = SweepConfig()
+    validate_scenario_params(kind, scenario_params)
     res = get_backend(backend).run_scenario(
         kind, with_report=True, **scenario_params, **config.to_kwargs())
     if not (isinstance(res, tuple) and len(res) == 2

@@ -27,6 +27,7 @@ import numpy as np
 from .backend import SimBackend, get_backend, scenario
 from .engine import SimEntity, Simulation
 from .events import Event, Tag
+from .faults import FaultPlan
 from .selection import MaximumScore, MinimumScore
 
 
@@ -94,15 +95,70 @@ class RunStats:
         return self.ideal_s / self.wallclock_s if self.wallclock_s else 0.0
 
 
+def fleet_fault_windows(fault_plan: Optional[FaultPlan], n_total: int
+                        ) -> tuple:
+    """Validated ``((node, t_start, t_end), …)`` planned-outage windows —
+    the one compiled fault view both fleet backends consume.
+
+    The fleet already *has* stochastic MTBF failures; a
+    :class:`~repro.core.faults.FaultPlan` adds **planned** per-node outage
+    windows on top (maintenance, preemption, a known-bad tray).  Only
+    ``node`` events with an explicit target and a finite end are
+    meaningful here, and per-node windows must not overlap (the OO engine
+    tracks one outage per node at a time).
+
+    Bit-exactness domain (asserted by the differential suite): with the
+    stochastic machinery quiesced (``straggler_sigma=0``, MTBF/degrade
+    horizons beyond the run, ``n_spares=0``) and windows that are not
+    step-aligned, are separated by more than ``restart_s``, and last
+    longer than ``restart_s``, the OO engine and the vec engine agree
+    bit-for-bit on every output.  Outside that domain the plan still
+    applies — accuracy then follows the engines' documented statistical
+    contract.
+    """
+    if fault_plan is None:
+        return ()
+    for kind in ("link", "region", "transient"):
+        if fault_plan.has(kind):
+            raise ValueError(
+                f"fleet_batch supports only 'node' fault windows (planned "
+                f"node outages), got a {kind!r} event")
+    fault_plan.check_targets("node", n_total, "node")
+    tgt, ts, te, _sev = fault_plan.select("node")
+    if (tgt < 0).any():
+        raise ValueError(
+            "fleet_batch fault windows need an explicit node target "
+            "(target=-1 would down the whole fleet)")
+    if not np.isfinite(te).all():
+        raise ValueError("fleet_batch fault windows must have a finite "
+                         "t_end (the node must eventually recover)")
+    windows = sorted(zip(tgt.tolist(), ts.tolist(), te.tolist()))
+    for (n0, s0, e0), (n1, s1, e1) in zip(windows, windows[1:]):
+        if n0 == n1 and s1 < e0:
+            raise ValueError(
+                f"fleet_batch fault windows on node {n0} overlap "
+                f"([{s0}, {e0}) and [{s1}, {e1})): one outage per node "
+                f"at a time")
+    return tuple(windows)
+
+
 class FleetSim(SimEntity):
-    """Synchronous-training fleet: one event per step; failures by MTBF."""
+    """Synchronous-training fleet: one event per step; failures by MTBF.
+
+    ``fault_windows`` (from :func:`fleet_fault_windows`) adds planned
+    per-node outages: the window edges arrive as priority ``-1``
+    NODE_FAILURE/NODE_RECOVER events tagged ``("plan", nid)`` — same
+    rollback/replacement path as a stochastic failure, but RNG-neutral
+    (no bias redraw on recovery, no MTBF reschedule), so a plan never
+    perturbs the stochastic stream the unfaulted run draws."""
 
     def __init__(self, sim: Simulation, cost: StepCost, cfg: FleetConfig,
-                 total_steps: int):
+                 total_steps: int, fault_windows: tuple = ()):
         super().__init__(sim, "fleet")
         self.cost = cost
         self.cfg = cfg
         self.total_steps = total_steps
+        self.fault_windows = fault_windows
         self.rng = np.random.default_rng(cfg.seed)
         n = cfg.n_nodes + cfg.n_spares
         self.node_ok = np.ones(n, dtype=bool)
@@ -123,6 +179,11 @@ class FleetSim(SimEntity):
     # -- scheduling ---------------------------------------------------------
     def start(self) -> None:
         self._schedule_failures()
+        for nid, ts, te in self.fault_windows:
+            self.sim.schedule(ts, Tag.NODE_FAILURE, self,
+                              data=("plan", nid), priority=-1)
+            self.sim.schedule(te, Tag.NODE_RECOVER, self,
+                              data=("plan", nid), priority=-1)
         self.sim.schedule(0.0, Tag.STEP_DONE, self, data=("begin", self._gen))
 
     def _schedule_failures(self) -> None:
@@ -189,14 +250,16 @@ class FleetSim(SimEntity):
     def process_event(self, ev: Event) -> None:
         now = ev.time
         if ev.tag is Tag.NODE_FAILURE:
-            nid = ev.data
+            planned = isinstance(ev.data, tuple)
+            nid = ev.data[1] if planned else ev.data
             if not self.node_ok[nid]:
                 return
             was_active = bool(self.node_active[nid])
             self.node_ok[nid] = False
             self.stats.failures += 1
-            self.sim.schedule(now + self.cfg.repair_hours * 3600.0,
-                              Tag.NODE_RECOVER, self, data=nid)
+            if not planned:     # a plan window recovers at its own t_end
+                self.sim.schedule(now + self.cfg.repair_hours * 3600.0,
+                                  Tag.NODE_RECOVER, self, data=nid)
             if was_active:
                 self._gen += 1                 # kill the in-flight step chain
                 self._replace_node(nid, now, evict=False)
@@ -219,14 +282,16 @@ class FleetSim(SimEntity):
                               Tag.ELASTIC_RESIZE, self, data=("degrade", nid))
             return
         if ev.tag is Tag.NODE_RECOVER:
-            nid = ev.data
+            planned = isinstance(ev.data, tuple)
+            nid = ev.data[1] if planned else ev.data
             self.node_ok[nid] = True
             self.slow_count[nid] = 0        # fresh hardware: no straggler debt
-            self.node_bias[nid] = float(np.exp(
-                self.rng.normal(0.0, self.cfg.straggler_sigma / 2)))
-            mtbf_s = self.cfg.mtbf_hours_node * 3600.0
-            self.sim.schedule(now + float(self.rng.exponential(mtbf_s)),
-                              Tag.NODE_FAILURE, self, data=nid)
+            if not planned:     # plan recovery is RNG-neutral: same hardware
+                self.node_bias[nid] = float(np.exp(
+                    self.rng.normal(0.0, self.cfg.straggler_sigma / 2)))
+                mtbf_s = self.cfg.mtbf_hours_node * 3600.0
+                self.sim.schedule(now + float(self.rng.exponential(mtbf_s)),
+                                  Tag.NODE_FAILURE, self, data=nid)
             # Active-count invariant: re-activate only if this node isn't
             # already counted active (duplicate/stale recover events) and a
             # spare wasn't already promoted into its slot — the fleet never
@@ -261,10 +326,12 @@ class FleetSim(SimEntity):
 @scenario("fleet", backends=("legacy", "oo"))
 def _fleet_scenario(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
                     total_steps: int = 2000,
-                    max_wallclock_s: float = 30 * 86400.0) -> RunStats:
+                    max_wallclock_s: float = 30 * 86400.0,
+                    fault_plan: Optional[FaultPlan] = None) -> RunStats:
     """Event-driven fleet run on the backend's discrete-event kernel."""
     sim = backend.make_simulation()
-    fleet = FleetSim(sim, cost, cfg, total_steps)
+    windows = fleet_fault_windows(fault_plan, cfg.n_nodes + cfg.n_spares)
+    fleet = FleetSim(sim, cost, cfg, total_steps, fault_windows=windows)
     end = sim.run(until=max_wallclock_s)
     if fleet.stats.wallclock_s == 0.0:
         fleet.stats.wallclock_s = end
@@ -295,6 +362,7 @@ def _fleet_batch_oo(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
                     seeds=(0,), mtbf_hours=None,
                     ckpt_every=None, straggler_sigma=None,
                     max_wallclock_s: float = 30 * 86400.0,
+                    fault_plan: Optional[FaultPlan] = None,
                     **_ignored):
     """Reference semantics for the batched sweep: loop the OO FleetSim over
     every scenario point (what ``vec_cluster``'s engine replaces with one
@@ -315,7 +383,8 @@ def _fleet_batch_oo(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
         c = replace(cfg, seed=int(seeds[i]), **over)
         rows.append(_fleet_scenario(backend, cost=cost, cfg=c,
                                     total_steps=total_steps,
-                                    max_wallclock_s=max_wallclock_s))
+                                    max_wallclock_s=max_wallclock_s,
+                                    fault_plan=fault_plan))
     return {k: np.asarray([getattr(r, k) for r in rows])
             for k in ("wallclock_s", "steps_done", "failures", "restarts",
                       "evictions", "lost_steps", "stall_s", "ckpt_s",

@@ -9,6 +9,16 @@ from typing import Any, Callable, Dict, List, Optional
 
 from .events import Event, EventQueue, HeapEventQueue, Tag
 
+#: Watchdog default — far above any legitimate scenario in this repo (the
+#: largest OO runs dispatch ~10^5 events) yet cheap to hit in a sane time
+#: when a scenario schedules pathologically (self-rescheduling at a fixed
+#: clock, zero-delay ping-pong, ...).
+DEFAULT_MAX_EVENTS = 10_000_000
+
+
+class SimulationStalled(RuntimeError):
+    """The event loop exceeded its ``max_events`` watchdog budget."""
+
 
 class SimEntity:
     """Base class for simulated actors (datacenters, brokers, cluster managers)."""
@@ -30,15 +40,22 @@ class Simulation:
 
     ``queue_cls`` is injectable so benchmarks can run the *same* scenario on
     the 7G heap queue and the ≤6G linked-list queue (paper Table 2 axis).
+
+    ``max_events`` is a watchdog: when the cumulative ``events_processed``
+    crosses it, ``run`` raises :class:`SimulationStalled` (with the current
+    clock, the pending-queue head and the event counts) instead of looping
+    forever on a pathological schedule.
     """
 
-    def __init__(self, queue_cls: type = HeapEventQueue):
+    def __init__(self, queue_cls: type = HeapEventQueue,
+                 max_events: int = DEFAULT_MAX_EVENTS):
         self.queue: EventQueue = queue_cls()
         self.clock = 0.0
         self.entities: List[SimEntity] = []
         self._terminated = False
         self._started = False
         self.events_processed = 0
+        self.max_events = int(max_events)
 
     # -- entity management ----------------------------------------------------
     def register(self, ent: SimEntity) -> None:
@@ -83,11 +100,26 @@ class Simulation:
             ev = self.queue.pop()
             self.clock = ev.time
             self.events_processed += 1
+            if self.events_processed > self.max_events:
+                raise self._stalled(ev)
             if ev.tag is Tag.SIM_END:
                 break
             if ev.dst is not None:
                 ev.dst.process_event(ev)
         return self.clock
+
+    def _stalled(self, ev: Event) -> SimulationStalled:
+        head = self.queue.peek() if self.queue else None
+        head_s = (f"{head.tag} -> "
+                  f"{getattr(head.dst, 'name', head.dst)} at t={head.time}"
+                  if head is not None else "empty")
+        return SimulationStalled(
+            f"simulation exceeded max_events={self.max_events} at "
+            f"t={self.clock} (last dispatched: {ev.tag} -> "
+            f"{getattr(ev.dst, 'name', ev.dst)}; pending head: {head_s}; "
+            f"events_processed={self.events_processed}) — a scenario is "
+            f"scheduling pathologically, or raise max_events for "
+            f"legitimately huge runs")
 
     def terminate(self) -> None:
         self._terminated = True

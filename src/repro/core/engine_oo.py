@@ -84,8 +84,8 @@ class LegacyConsolidationManager(ConsolidationManager):
 class LegacySimulation(Simulation):
     """6G-flavoured kernel: linked-list queue + size()-based emptiness test."""
 
-    def __init__(self):
-        super().__init__(queue_cls=LinkedListEventQueue)
+    def __init__(self, **kw):
+        super().__init__(queue_cls=LinkedListEventQueue, **kw)
 
     def run(self, until: float = float("inf")) -> float:
         # Same dispatch semantics as Simulation.run (peek-before-pop so runs
@@ -104,6 +104,8 @@ class LegacySimulation(Simulation):
             ev = self.queue.pop()
             self.clock = ev.time
             self.events_processed += 1
+            if self.events_processed > self.max_events:
+                raise self._stalled(ev)
             if ev.tag is Tag.SIM_END:
                 break
             if ev.dst is not None:

@@ -44,14 +44,16 @@ the lowest pipeline index on both paths.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
 
 from .backend import SimBackend, scenario
 from .engine import SimEntity, Simulation
 from .events import Event, Tag
+from .faults import FaultInjector, FaultPlan, RetryPolicy, apply_transient
 from .network import InterDCTopology
 
 # Per-machine serving profiles: (class name, prompt token-layers/s,
@@ -141,11 +143,33 @@ def llmserve_workload(seed: int, n_requests: int, n_regions: int, *,
                 online=np.arange(n_requests) >= n_offline)
 
 
+class LLMFaults(NamedTuple):
+    """Per-cell fault context (present iff the cell was built faulted).
+
+    The vec engine never reads this — its fault view is baked into
+    ``LLMServeCell.eligible`` — while the OO broker replays ``windows``
+    (machine crash windows; region outages pre-expanded to their member
+    machines) live through a :class:`~repro.core.faults.FaultInjector`
+    and re-derives the same eligibility from ``base_eligible`` + per-
+    machine down counters.  ``perm`` is the stable sort that put the cell
+    into effective-submit order (``sorted = orig[perm]``)."""
+    windows: tuple            # ((machine, t_start, t_end), ...)
+    base_eligible: np.ndarray  # [J, P] bool KV fit ∧ static region mask
+    gave_up: np.ndarray       # [J] bool transient retries/budget exhausted
+    attempts: np.ndarray      # [J] i64 attempts made per request (>= 1)
+    perm: np.ndarray          # [J] i64 stable effective-submit order
+    timeout_s: float          # drop when no pipeline finishes inside this
+
+
 @dataclass(frozen=True)
 class LLMServeCell:
     """One cell's precomputed routing tables — shared verbatim by the OO
     broker and the vec engine, so decision bit-identity reduces to both
-    backends evaluating the same adds/max/compares over the same doubles."""
+    backends evaluating the same adds/max/compares over the same doubles.
+    Under a :class:`~repro.core.faults.FaultPlan` the per-request rows are
+    in effective-submit order and ``eligible`` folds in machine/region
+    down windows and given-up requests (the vec fault view); ``fx``
+    carries what the OO broker needs to reproduce it from live events."""
     submit: np.ndarray        # [J]       f64 nondecreasing submission times
     src: np.ndarray           # [J]       i32 source region per request
     prompt_tok: np.ndarray    # [J]       i64
@@ -162,6 +186,7 @@ class LLMServeCell:
     placement: np.ndarray     # [P, S]    i64 machine id per pipeline stage
     n_machines: int
     slo_ttft_s: float
+    fx: Optional[LLMFaults] = None
 
 
 def build_cell(seed: int, placement: np.ndarray,
@@ -169,13 +194,28 @@ def build_cell(seed: int, placement: np.ndarray,
                topo: InterDCTopology, *, n_requests: int, n_regions: int,
                n_layers: int, mean_gap_s: float, locality_weight: float,
                offline_region: int, offline_frac: float, slo_ttft_s: float,
-               kv_penalty_s: float, prompt_tokens, decode_tokens
-               ) -> LLMServeCell:
+               kv_penalty_s: float, prompt_tokens, decode_tokens,
+               fault_plan: Optional[FaultPlan] = None,
+               retry: Optional[RetryPolicy] = None,
+               timeout_s: float = math.inf) -> LLMServeCell:
     """Workload + routing tables for one (seed, placement, axes) cell."""
     wl = llmserve_workload(
         int(seed), n_requests, n_regions,
         mean_gap_s=float(mean_gap_s), offline_frac=offline_frac,
         prompt_tokens=prompt_tokens, decode_tokens=decode_tokens)
+    faulted = fault_plan is not None or math.isfinite(timeout_s)
+    gave_up = attempts = perm = None
+    plan = fault_plan if fault_plan is not None else FaultPlan()
+    if faulted:
+        # Transient failures resolve at the *original* submit times, then
+        # a stable sort restores nondecreasing effective-submit order —
+        # the shared event order both backends process.
+        res = apply_transient(plan, retry, wl["submit"],
+                              seed=plan.seed * 1_000_003 + int(seed))
+        perm = np.argsort(res.eff_submit, kind="stable")
+        wl = {k: v[perm] for k, v in wl.items()}
+        wl["submit"] = res.eff_submit[perm]
+        gave_up, attempts = res.gave_up[perm], res.attempts[perm]
     pl = np.asarray(placement, np.int64)               # [P, S]
     n_pipes, n_stages = pl.shape
     p_tok = wl["prompt_tok"].astype(np.float64)        # [J]
@@ -189,7 +229,9 @@ def build_cell(seed: int, placement: np.ndarray,
                   / machines["decode_tls"][pl][None])
     svc = prompt_svc + decode_svc
     # WAN legs: ingress into stage 0, activation hops between consecutive
-    # stage regions, response egress from the last stage.
+    # stage regions, response egress from the last stage.  Active ``link``
+    # fault windows (global for this scenario) stretch every WAN leg of
+    # the requests submitted inside them by the severity factor.
     m_region = regions[pl]                             # [P, S]
     ingress_rows = topo.delay_rows(wl["src"],
                                    p_tok * IN_BYTES_PER_TOKEN)  # [J, R]
@@ -202,8 +244,14 @@ def build_cell(seed: int, placement: np.ndarray,
                                         act_bytes[:, None])
     tail = topo.delay_pairs(m_region[None, :, -1], wl["src"][:, None],
                             (d_tok * OUT_BYTES_PER_TOKEN)[:, None])  # [J, P]
-    first_extra = prompt_svc[:, :, -1] + topo.delay_pairs(
-        m_region[None, :, -1], wl["src"][:, None], FIRST_TOKEN_BYTES)
+    first_delay = topo.delay_pairs(m_region[None, :, -1],
+                                   wl["src"][:, None], FIRST_TOKEN_BYTES)
+    if plan.has("link"):
+        wan_f = plan.degrade_factor(wl["submit"], 1)[:, 0]       # [J]
+        hop *= wan_f[:, None, None]
+        tail *= wan_f[:, None]
+        first_delay *= wan_f[:, None]
+    first_extra = prompt_svc[:, :, -1] + first_delay
     wan = hop.sum(axis=2) + tail
     # KV-cache occupancy: hard eligibility against the pipeline's smallest
     # capacity, plus a precomputed pressure bias toward VRAM headroom.
@@ -215,32 +263,61 @@ def build_cell(seed: int, placement: np.ndarray,
                / pipe_kv.astype(np.float64)[None, :]))
     pipe_online = np.all(m_region != int(offline_region), axis=1)  # [P]
     eligible = (kv_need[:, None] <= pipe_kv[None, :]) & pipe_online[None, :]
+    fx = None
+    if faulted:
+        base_eligible = eligible
+        # Machine crash windows + region outages (expanded to member
+        # machines) take whole pipelines down for the requests submitted
+        # inside them; both views — this baked table and the OO broker's
+        # live counters — evaluate the same half-open windows.
+        down = plan.down_mask("node", wl["submit"], len(regions))
+        if plan.has("region"):
+            down |= plan.down_mask(
+                "region", wl["submit"], n_regions)[:, regions]
+        pipe_up = ~np.any(down[:, pl], axis=2)                   # [J, P]
+        eligible = base_eligible & pipe_up & ~gave_up[:, None]
+        windows = []
+        tgt, ts, te, _ = plan.select("node")
+        windows += list(zip(tgt.tolist(), ts.tolist(), te.tolist()))
+        r_tgt, r_ts, r_te, _ = plan.select("region")
+        for r, a, z in zip(r_tgt.tolist(), r_ts.tolist(), r_te.tolist()):
+            windows += [(int(m), a, z)
+                        for m in np.flatnonzero(regions == r)]
+        fx = LLMFaults(windows=tuple(windows),
+                       base_eligible=base_eligible, gave_up=gave_up,
+                       attempts=attempts, perm=perm,
+                       timeout_s=float(timeout_s))
     return LLMServeCell(
         submit=wl["submit"], src=wl["src"], prompt_tok=wl["prompt_tok"],
         decode_tok=wl["decode_tok"], online=wl["online"], kv_need=kv_need,
         svc=svc, hop=hop, tail=tail, first_extra=first_extra, wan=wan,
         bias=bias, eligible=eligible, placement=pl,
-        n_machines=len(regions), slo_ttft_s=float(slo_ttft_s))
+        n_machines=len(regions), slo_ttft_s=float(slo_ttft_s), fx=fx)
 
 
-def route_request(free, cell: LLMServeCell, j: int):
+def route_request(free, cell: LLMServeCell, j: int, eligible=None,
+                  deadline: float = math.inf):
     """The routing rule, scalar form (the OO broker's inner loop): for each
     eligible pipeline run the store-and-forward relay recurrence
 
         depart(s) = max(free[p][s], depart(s-1) + hop[s]) + svc[s]
 
     and pick the first-occurrence argmin of ``finish + bias`` (strict
-    ``<``).  The vec engine evaluates the identical expression vectorized
+    ``<``) among pipelines finishing by ``deadline`` (timeout failover).
+    The vec engine evaluates the identical expression vectorized
     (``ops.argmin``); both tie-break to the lowest pipeline index.
+    ``eligible`` overrides the cell's precomputed row (the faulted OO
+    broker passes its live mask).
 
     Returns ``(pipeline, finish, ttft, per-stage departures)`` —
     ``(-1, inf, inf, None)`` when no pipeline is eligible (dropped).
     """
     n_pipes, n_stages = cell.placement.shape
+    elig = cell.eligible[j] if eligible is None else eligible
     best, best_score = -1, np.inf
     best_fin, best_ttft, best_dep = np.inf, np.inf, None
     for p in range(n_pipes):
-        if not cell.eligible[j, p]:
+        if not elig[p]:
             continue
         d = cell.submit[j]
         start_last = d
@@ -251,6 +328,8 @@ def route_request(free, cell: LLMServeCell, j: int):
             d = start_last + cell.svc[j, p, s]
             dep.append(d)
         fin = d + cell.tail[j, p]
+        if fin > deadline:
+            continue
         score = fin + cell.bias[j, p]
         if score < best_score:
             best, best_score, best_fin = p, score, fin
@@ -308,6 +387,16 @@ def summarize(out: Dict[str, Any], cells: Sequence[LLMServeCell]
     out["utilization"] = np.where(out["makespan"][:, None] > 0,
                                   busy / span, 0.0)
     out["busiest_machine"] = np.argmax(busy, axis=-1)
+    if cells and cells[0].fx is not None:
+        # Faulted runs: per-request arrays go back to original submission
+        # order (the cells were stable-sorted by effective submit), and
+        # the summary gains the effective submits + retry counts.
+        inv = np.stack([np.argsort(c.fx.perm) for c in cells])
+        for k in ("dst", "finish", "ttft"):
+            out[k] = np.take_along_axis(out[k], inv, axis=-1)
+        out["submit"] = np.take_along_axis(submit, inv, axis=-1)
+        out["retries"] = np.stack(
+            [np.sum(c.fx.attempts - 1) for c in cells])
     return out
 
 
@@ -319,7 +408,10 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
                 offline_frac: float = 0.25, slo_ttft_s: float = 5.0,
                 kv_penalty_s: float = 0.5, link_bw: float = 10e9,
                 hop_latency_s: float = 0.03, prompt_tokens=(64, 1024),
-                decode_tokens=(16, 512)):
+                decode_tokens=(16, 512),
+                fault_plan: Optional[FaultPlan] = None,
+                retry: Optional[RetryPolicy] = None,
+                timeout_s: float = math.inf):
     """Validated per-cell table construction — the shared front half of
     both backends' batch handlers.
 
@@ -334,6 +426,9 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
             "n_stages ≥ 1")
     if not 0.0 <= float(offline_frac) <= 1.0:
         raise ValueError(f"offline_frac must be in [0, 1]: {offline_frac!r}")
+    if not timeout_s > 0:
+        raise ValueError(
+            f"llmserve_batch: timeout_s must be > 0: {timeout_s}")
     machines = dict(machines) if machines is not None \
         else default_machines(int(n_machines))
     n_machines = len(machines["prompt_tls"])
@@ -345,6 +440,12 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
                 f"machines[{key!r}] must be {n_machines} positive rates")
     machines["kv_tokens"] = np.asarray(machines["kv_tokens"], np.int64)
     regions = machine_regions(n_machines, int(n_regions))
+    if fault_plan is not None:
+        fault_plan.check_targets("node", n_machines, "machine")
+        fault_plan.check_targets("region", int(n_regions), "region")
+        if np.any(fault_plan.select("link")[0] >= 0):
+            raise ValueError(
+                "llmserve_batch link faults are WAN-wide: use target=-1")
     if placement is None:
         n_pipelines = (int(n_pipelines) if n_pipelines
                        else max(1, n_machines // int(n_stages)))
@@ -383,24 +484,29 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
         locality_weight=float(axes["locality_weight"][i]),
         offline_region=int(offs[i]), offline_frac=float(offline_frac),
         slo_ttft_s=float(slo_ttft_s), kv_penalty_s=float(kv_penalty_s),
-        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens)
+        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens,
+        fault_plan=fault_plan, retry=retry, timeout_s=float(timeout_s))
         for i in range(b)]
     return cells, b
 
 
-def empty_llmserve_outputs(n_machines: int) -> Dict[str, np.ndarray]:
+def empty_llmserve_outputs(n_machines: int, faulted: bool = False
+                           ) -> Dict[str, np.ndarray]:
     zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int64)
     zjf, zji = np.empty((0, 0), np.float64), np.empty((0, 0), np.int64)
     zm_f = np.empty((0, n_machines), np.float64)
     zm_i = np.empty((0, n_machines), np.int64)
-    return dict(dst=zji, finish=zjf, ttft=zjf,
-                kv_used=np.empty((0, 0, 0), np.int64),
-                served=zi, dropped=zi, makespan=zf, latency_total_s=zf,
-                latency_mean_s=zf, ttft_mean_s=zf, slo_violations=zi,
-                tokens_out=zi, pipe_requests=zji, machine_busy_s=zm_f,
-                kv_assigned_tokens=zm_i, wan_delay_total_s=zf,
-                utilization=zm_f, busiest_machine=zi,
-                iterations=np.empty((0,), np.int32))
+    out = dict(dst=zji, finish=zjf, ttft=zjf,
+               kv_used=np.empty((0, 0, 0), np.int64),
+               served=zi, dropped=zi, makespan=zf, latency_total_s=zf,
+               latency_mean_s=zf, ttft_mean_s=zf, slo_violations=zi,
+               tokens_out=zi, pipe_requests=zji, machine_busy_s=zm_f,
+               kv_assigned_tokens=zm_i, wan_delay_total_s=zf,
+               utilization=zm_f, busiest_machine=zi,
+               iterations=np.empty((0,), np.int32))
+    if faulted:
+        out.update(submit=zjf, retries=zi)
+    return out
 
 
 # -- OO reference: an event-driven broker inside a Simulation ------------------
@@ -421,6 +527,19 @@ class LLMServeBroker(SimEntity):
         self.finish = np.full(n, np.inf)
         self.ttft = np.full(n, np.inf)
         self.completed = 0
+        # Under a fault plan eligibility is *live*: machine crash windows
+        # arrive as NODE_FAILURE/NODE_RECOVER events (priority -1, so a
+        # same-time submit sees the flip), overlapping windows nest via
+        # per-machine down counters — the event-driven twin of the
+        # precomputed ``cell.eligible`` table the vec engine reads.
+        self.down_ct = [0] * cell.n_machines
+        if cell.fx is not None and cell.fx.windows:
+            FaultInjector(sim, cell.fx.windows, self._apply_fault)
+
+    def _apply_fault(self, target: int, down: bool) -> None:
+        delta = 1 if down else -1
+        for m in ([target] if target >= 0 else range(len(self.down_ct))):
+            self.down_ct[m] += delta
 
     def start(self) -> None:
         for j, t in enumerate(self.cell.submit):
@@ -430,7 +549,18 @@ class LLMServeBroker(SimEntity):
         c = self.cell
         if ev.tag is Tag.REQUEST_SUBMIT:
             j = ev.data
-            p, fin, ttft, dep = route_request(self.free, c, j)
+            fx = c.fx
+            if fx is None:
+                elig, deadline = None, math.inf
+            else:
+                if fx.gave_up[j]:
+                    return                 # dropped: dst/finish/ttft stay
+                elig = [fx.base_eligible[j, p]
+                        and not any(self.down_ct[m] for m in c.placement[p])
+                        for p in range(len(self.free))]
+                deadline = c.submit[j] + fx.timeout_s
+            p, fin, ttft, dep = route_request(self.free, c, j, elig,
+                                              deadline)
             if p < 0:                      # no eligible pipeline: dropped
                 return
             self.free[p] = dep
@@ -454,6 +584,9 @@ def _llmserve_batch_oo(backend: SimBackend, *, seeds=(0,),
                        kv_penalty_s: float = 0.5, link_bw: float = 10e9,
                        hop_latency_s: float = 0.03,
                        prompt_tokens=(64, 1024), decode_tokens=(16, 512),
+                       fault_plan: Optional[FaultPlan] = None,
+                       retry: Optional[RetryPolicy] = None,
+                       timeout_s: float = np.inf,
                        chunk_size: Optional[int] = None,
                        with_report: bool = False, **_ignored):
     """Reference semantics for ``llmserve_batch``: one event-driven broker
@@ -469,9 +602,12 @@ def _llmserve_batch_oo(backend: SimBackend, *, seeds=(0,),
         offline_region=offline_region, offline_frac=offline_frac,
         slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
         hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
-        decode_tokens=decode_tokens)
+        decode_tokens=decode_tokens, fault_plan=fault_plan, retry=retry,
+        timeout_s=timeout_s)
     if b == 0:
-        out = empty_llmserve_outputs(n_machines)
+        out = empty_llmserve_outputs(
+            n_machines, faulted=fault_plan is not None
+            or np.isfinite(timeout_s))
         del out["iterations"]                    # the vec loop's counter
         return (out, empty_report(donate=False)) if with_report else out
 

@@ -28,15 +28,17 @@ tables, and ties break to the lowest datacenter index on both paths.
 """
 from __future__ import annotations
 
+import math
 import random
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence
+from typing import Any, Dict, NamedTuple, Optional, Sequence
 
 import numpy as np
 
 from .backend import SimBackend, scenario
 from .engine import SimEntity, Simulation
 from .events import Event, Tag
+from .faults import FaultInjector, FaultPlan, RetryPolicy, apply_transient
 from .network import InterDCTopology
 
 
@@ -71,52 +73,111 @@ def netdc_workload(rng: random.Random, n_jobs: int, n_dcs: int, *,
                 payload=np.asarray(payload, np.float64))
 
 
+class NetdcFaults(NamedTuple):
+    """Per-cell fault context (present iff the cell was built faulted).
+
+    The vec engine never reads this — its fault view is baked into
+    ``NetdcCell.online`` — while the OO broker replays ``windows`` live
+    through a :class:`~repro.core.faults.FaultInjector` and re-derives the
+    same candidate mask from ``static_online`` + per-DC down counters.
+    ``perm`` is the stable sort that put the cell into effective-submit
+    order (``sorted = orig[perm]``); summaries unsort through it."""
+    windows: tuple            # ((target, t_start, t_end), ...) node windows
+    static_online: np.ndarray  # [D] bool offline_dc mask (no fault fold)
+    gave_up: np.ndarray       # [J] bool transient retries/budget exhausted
+    attempts: np.ndarray      # [J] i64 attempts made per job (>= 1)
+    perm: np.ndarray          # [J] i64 stable effective-submit order
+    timeout_s: float          # drop a job no DC can finish inside this
+
+
 @dataclass(frozen=True)
 class NetdcCell:
     """One cell's precomputed routing tables — shared verbatim by the OO
     broker and the vec engine, so decision bit-identity reduces to both
-    backends evaluating the same adds/max/compares over the same doubles."""
-    submit: np.ndarray        # [J] f64 nondecreasing submission times
+    backends evaluating the same adds/max/compares over the same doubles.
+    Under a :class:`~repro.core.faults.FaultPlan` the per-job rows are in
+    effective-submit order and ``online`` folds in node-down windows and
+    given-up jobs (the vec fault view); ``fx`` carries what the OO broker
+    needs to reproduce that mask from live events instead."""
+    submit: np.ndarray        # [J] f64 nondecreasing (effective) submits
     src: np.ndarray           # [J] i32 source DC per job
     length: np.ndarray        # [J] f64 MI
     payload: np.ndarray       # [J] f64 bytes
     xfer: np.ndarray          # [J, D] f64 WAN transfer delay to each DC
     exec_s: np.ndarray        # [J, D] f64 execution time on each DC
     bias: np.ndarray          # [J, D] f64 (locality_weight - 1) · xfer
-    online: np.ndarray        # [D] bool candidate mask
+    online: np.ndarray        # [J, D] bool per-job candidate mask
+    fx: Optional[NetdcFaults] = None
 
 
 def build_cell(seed: int, n_dcs: int, n_jobs: int, dc_mips: np.ndarray,
                topo: InterDCTopology, locality_weight: float,
                offline_dc: int, *, mean_gap_s: float, length_mi,
-               payload_mb) -> NetdcCell:
+               payload_mb, fault_plan: Optional[FaultPlan] = None,
+               retry: Optional[RetryPolicy] = None,
+               timeout_s: float = math.inf) -> NetdcCell:
     """Workload + routing tables for one (seed, weight, outage) cell."""
     wl = netdc_workload(random.Random(int(seed)), n_jobs, n_dcs,
                         mean_gap_s=mean_gap_s, length_mi=length_mi,
                         payload_mb=payload_mb)
-    xfer = topo.delay_rows(wl["src"], wl["payload"])
-    online = np.ones(n_dcs, bool)
+    online0 = np.ones(n_dcs, bool)
     if offline_dc >= 0:
-        online[offline_dc] = False
+        online0[offline_dc] = False
+    if fault_plan is None and not math.isfinite(timeout_s):
+        xfer = topo.delay_rows(wl["src"], wl["payload"])
+        return NetdcCell(
+            submit=wl["submit"], src=wl["src"], length=wl["length"],
+            payload=wl["payload"], xfer=xfer,
+            exec_s=wl["length"][:, None] / dc_mips[None, :],
+            bias=(float(locality_weight) - 1.0) * xfer,
+            online=np.repeat(online0[None, :], n_jobs, axis=0))
+
+    plan = fault_plan if fault_plan is not None else FaultPlan()
+    # Transient failures resolve at the *original* submit times, then a
+    # stable sort restores nondecreasing effective-submit order — the
+    # shared event order both backends process (heap time/serial ties ==
+    # stable-sort ties because the OO broker schedules in row order).
+    out = apply_transient(plan, retry, wl["submit"],
+                          seed=plan.seed * 1_000_003 + int(seed))
+    perm = np.argsort(out.eff_submit, kind="stable")
+    submit = out.eff_submit[perm]
+    src, length = wl["src"][perm], wl["length"][perm]
+    payload, gave_up = wl["payload"][perm], out.gave_up[perm]
+    xfer = topo.delay_rows(src, payload)
+    if plan.has("link"):
+        xfer = xfer * plan.degrade_factor(submit, n_dcs)
+    online = np.repeat(online0[None, :], n_jobs, axis=0)
+    windows = ()
+    if plan.has("node"):
+        online &= ~plan.down_mask("node", submit, n_dcs)
+        tgt, ts, te, _ = plan.select("node")
+        windows = tuple(zip(tgt.tolist(), ts.tolist(), te.tolist()))
+    online &= ~gave_up[:, None]
     return NetdcCell(
-        submit=wl["submit"], src=wl["src"], length=wl["length"],
-        payload=wl["payload"], xfer=xfer,
-        exec_s=wl["length"][:, None] / dc_mips[None, :],
-        bias=(float(locality_weight) - 1.0) * xfer,
-        online=online)
+        submit=submit, src=src, length=length, payload=payload, xfer=xfer,
+        exec_s=length[:, None] / dc_mips[None, :],
+        bias=(float(locality_weight) - 1.0) * xfer, online=online,
+        fx=NetdcFaults(windows=windows, static_online=online0,
+                       gave_up=gave_up, attempts=out.attempts[perm],
+                       perm=perm, timeout_s=float(timeout_s)))
 
 
-def route_job(free: Sequence[float], arr, exec_row, bias_row, online):
+def route_job(free: Sequence[float], arr, exec_row, bias_row, online,
+              deadline: float = math.inf):
     """The routing rule, scalar form (the OO broker's inner loop): pick the
     first-occurrence argmin of ``max(free[d], arr[d]) + exec[d] + bias[d]``
-    over online DCs.  The vec engine evaluates the identical expression
-    vectorized (``ops.argmin``); both tie-break to the lowest index."""
+    over online DCs that can finish by ``deadline`` (timeout failover —
+    ``-1`` when none can).  The vec engine evaluates the identical
+    expression vectorized (``ops.argmin``); both tie-break to the lowest
+    index."""
     best, best_score, best_fin = -1, np.inf, np.inf
     for d in range(len(free)):
         if not online[d]:
             continue
         start = free[d] if free[d] > arr[d] else arr[d]
         fin = start + exec_row[d]
+        if fin > deadline:
+            continue
         score = fin + bias_row[d]
         if score < best_score:
             best, best_score, best_fin = d, score, fin
@@ -127,7 +188,14 @@ def summarize(out: Dict[str, Any], cells: Sequence[NetdcCell]
               ) -> Dict[str, Any]:
     """Batch-level metrics from per-job ``finish``/``dst`` — one shared
     numpy routine so every aggregate (pairwise sums, argmax tie-breaks) is
-    computed identically for both backends."""
+    computed identically for both backends.
+
+    Every aggregate is masked to served jobs (``dst >= 0``); with no
+    faults every job is served and the ``where`` masks are identity, so
+    the arithmetic — and the committed golden fixtures — are unchanged
+    bit-for-bit.  Under faults the per-job arrays (``finish``/``dst``
+    plus the added ``submit``) are unsorted back to original job order,
+    and the summary gains ``served``/``dropped``/``retries`` counts."""
     out = dict(out)
     finish = out["finish"] = np.asarray(out["finish"], np.float64)
     dst = out["dst"] = np.asarray(out["dst"], np.int64)
@@ -137,17 +205,28 @@ def summarize(out: Dict[str, Any], cells: Sequence[NetdcCell]
     xfer = np.stack([c.xfer for c in cells])
     exec_s = np.stack([c.exec_s for c in cells])
     d_iota = np.arange(xfer.shape[-1])
-    remote = dst != src
-    out["makespan"] = np.max(finish, axis=-1)
-    out["response_total_s"] = np.sum(finish - submit, axis=-1)
+    srv = dst >= 0
+    remote = srv & (dst != src)
+    out["makespan"] = np.max(np.where(srv, finish, -np.inf), axis=-1)
+    out["response_total_s"] = np.sum(
+        np.where(srv, finish - submit, 0.0), axis=-1)
     out["remote_jobs"] = np.sum(remote, axis=-1)
     out["remote_bytes"] = np.sum(np.where(remote, payload, 0.0), axis=-1)
-    out["xfer_total_s"] = np.sum(
-        np.take_along_axis(xfer, dst[..., None], -1)[..., 0], axis=-1)
+    out["xfer_total_s"] = np.sum(np.where(srv, np.take_along_axis(
+        xfer, np.maximum(dst, 0)[..., None], -1)[..., 0], 0.0), axis=-1)
     out["dc_jobs"] = np.sum(dst[:, :, None] == d_iota, axis=1)
     out["dc_busy_s"] = np.sum(
         np.where(dst[:, :, None] == d_iota, exec_s, 0.0), axis=1)
     out["busiest_dc"] = np.argmax(out["dc_busy_s"], axis=-1)
+    if cells and cells[0].fx is not None:
+        inv = np.stack([np.argsort(c.fx.perm) for c in cells])
+        for k in ("finish", "dst"):
+            out[k] = np.take_along_axis(out[k], inv, axis=-1)
+        out["submit"] = np.take_along_axis(submit, inv, axis=-1)
+        out["served"] = np.sum(srv, axis=-1)
+        out["dropped"] = srv.shape[-1] - out["served"]
+        out["retries"] = np.stack(
+            [np.sum(c.fx.attempts - 1) for c in cells])
     return out
 
 
@@ -155,7 +234,10 @@ def summarize(out: Dict[str, Any], cells: Sequence[NetdcCell]
 
 def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
                 hop_latency_s: float, locality_weight, offline_dc: int,
-                mean_gap_s: float, length_mi, payload_mb):
+                mean_gap_s: float, length_mi, payload_mb,
+                fault_plan: Optional[FaultPlan] = None,
+                retry: Optional[RetryPolicy] = None,
+                timeout_s: float = math.inf):
     """Validated per-cell table construction — the shared front half of
     both backends' batch handlers."""
     if n_jobs < 1 or n_dcs < 1:
@@ -164,6 +246,14 @@ def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
                else np.asarray(dc_mips, np.float64))
     if dc_mips.shape != (n_dcs,) or not np.all(dc_mips > 0):
         raise ValueError(f"dc_mips must be {n_dcs} positive capacities")
+    if not timeout_s > 0:
+        raise ValueError(f"netdc_batch: timeout_s must be > 0: {timeout_s}")
+    if fault_plan is not None:
+        if fault_plan.has("region"):
+            raise ValueError("netdc_batch has no region concept — use "
+                             "'node' faults on datacenter targets")
+        fault_plan.check_targets("node", n_dcs, "datacenter")
+        fault_plan.check_targets("link", n_dcs, "datacenter")
     from .vec_engine import broadcast_cells
     seeds, axes, b = broadcast_cells(seeds, dict(
         locality_weight=locality_weight, offline_dc=offline_dc))
@@ -178,19 +268,24 @@ def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
     cells = [build_cell(int(seeds[i]), n_dcs, n_jobs, dc_mips, topo,
                         float(weights[i]), int(offs[i]),
                         mean_gap_s=mean_gap_s, length_mi=length_mi,
-                        payload_mb=payload_mb)
+                        payload_mb=payload_mb, fault_plan=fault_plan,
+                        retry=retry, timeout_s=timeout_s)
              for i in range(b)]
     return cells, b
 
 
-def empty_netdc_outputs(n_dcs: int) -> Dict[str, np.ndarray]:
+def empty_netdc_outputs(n_dcs: int, faulted: bool = False
+                        ) -> Dict[str, np.ndarray]:
     zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int64)
     zjf, zji = np.empty((0, 0), np.float64), np.empty((0, 0), np.int64)
-    return dict(finish=zjf, dst=zji, makespan=zf, response_total_s=zf,
-                remote_jobs=zi, remote_bytes=zf, xfer_total_s=zf,
-                dc_jobs=np.empty((0, n_dcs), np.int64),
-                dc_busy_s=np.empty((0, n_dcs), np.float64), busiest_dc=zi,
-                iterations=np.empty((0,), np.int32))
+    out = dict(finish=zjf, dst=zji, makespan=zf, response_total_s=zf,
+               remote_jobs=zi, remote_bytes=zf, xfer_total_s=zf,
+               dc_jobs=np.empty((0, n_dcs), np.int64),
+               dc_busy_s=np.empty((0, n_dcs), np.float64), busiest_dc=zi,
+               iterations=np.empty((0,), np.int32))
+    if faulted:
+        out.update(submit=zjf, served=zi, dropped=zi, retries=zi)
+    return out
 
 
 # -- OO reference: an event-driven broker inside a Simulation ------------------
@@ -204,10 +299,24 @@ class MultiDCBroker(SimEntity):
         super().__init__(sim, "netdc-broker")
         self.cell = cell
         n = len(cell.submit)
-        self.free = [0.0] * cell.xfer.shape[1]
+        n_dcs = cell.xfer.shape[1]
+        self.free = [0.0] * n_dcs
         self.finish = np.full(n, np.inf)
         self.dst = np.full(n, -1, np.int64)
         self.completed = 0
+        # Under a fault plan the candidate mask is *live*: node windows
+        # arrive as NODE_FAILURE/NODE_RECOVER events (priority -1, so a
+        # same-time submit sees the flip) and overlapping windows nest via
+        # per-DC down counters — the event-driven twin of the precomputed
+        # ``cell.online`` table the vec engine reads.
+        self.down_ct = [0] * n_dcs
+        if cell.fx is not None and cell.fx.windows:
+            FaultInjector(sim, cell.fx.windows, self._apply_fault)
+
+    def _apply_fault(self, target: int, down: bool) -> None:
+        delta = 1 if down else -1
+        for d in ([target] if target >= 0 else range(len(self.down_ct))):
+            self.down_ct[d] += delta
 
     def start(self) -> None:
         for j, t in enumerate(self.cell.submit):
@@ -217,9 +326,20 @@ class MultiDCBroker(SimEntity):
         c = self.cell
         if ev.tag is Tag.CLOUDLET_SUBMIT:
             j = ev.data
+            fx = c.fx
+            if fx is None:
+                online, deadline = c.online[j], np.inf
+            else:
+                if fx.gave_up[j]:
+                    return                         # dropped: dst/finish stay
+                online = [fx.static_online[d] and self.down_ct[d] == 0
+                          for d in range(len(self.free))]
+                deadline = c.submit[j] + fx.timeout_s
             arr = c.submit[j] + c.xfer[j]          # [D] WAN arrival times
             d, fin = route_job(self.free, arr, c.exec_s[j], c.bias[j],
-                               c.online)
+                               online, deadline)
+            if d < 0:
+                return                             # no feasible DC: dropped
             self.free[d] = fin
             self.dst[j] = d
             self.finish[j] = fin
@@ -235,6 +355,9 @@ def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
                     link_bw: float = 10e9, hop_latency_s: float = 0.02,
                     mean_gap_s: float = 2.0, length_mi=(2e3, 2e4),
                     payload_mb=(10.0, 200.0),
+                    fault_plan: Optional[FaultPlan] = None,
+                    retry: Optional[RetryPolicy] = None,
+                    timeout_s: float = np.inf,
                     chunk_size: Optional[int] = None,
                     with_report: bool = False, **_ignored):
     """Reference semantics for ``netdc_batch``: one event-driven broker
@@ -246,9 +369,12 @@ def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
         seeds=seeds, n_dcs=n_dcs, n_jobs=n_jobs, dc_mips=dc_mips,
         link_bw=link_bw, hop_latency_s=hop_latency_s,
         locality_weight=locality_weight, offline_dc=offline_dc,
-        mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb)
+        mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb,
+        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s)
     if b == 0:
-        out = empty_netdc_outputs(n_dcs)
+        out = empty_netdc_outputs(
+            n_dcs, faulted=fault_plan is not None
+            or np.isfinite(timeout_s))
         del out["iterations"]                    # the vec loop's counter
         return (out, empty_report(donate=False)) if with_report else out
 
@@ -256,7 +382,8 @@ def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
         sim = backend.make_simulation()
         broker = MultiDCBroker(sim, cells[i])
         sim.run()
-        assert broker.completed == n_jobs, "netdc: lost CLOUDLET_RETURNs"
+        assert broker.completed == int(np.sum(broker.dst >= 0)), \
+            "netdc: lost CLOUDLET_RETURNs"
         return dict(finish=broker.finish, dst=broker.dst)
 
     rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)

@@ -23,6 +23,7 @@ from typing import Callable, Deque, Dict, List, Optional, Sequence, Tuple
 from .engine import SimEntity
 from .entities import Cloudlet, CoreAttributes, GuestEntity, Host, HostEntity, Vm
 from .events import Tag
+from .faults import FaultPlan
 from .scheduler import CloudletSchedulerTimeShared
 from .selection import (MaximumScore, MinimumScore, RandomSelection,
                         SelectionPolicy, least_power_efficient,
@@ -527,6 +528,38 @@ def elastic_demand_trace(rng: random.Random, n_samples: int) -> List[float]:
     return out
 
 
+def power_fault_table(fault_plan: Optional[FaultPlan], n_hosts: int,
+                      n_samples: int, interval: float) -> Optional[np.ndarray]:
+    """``[K, H]`` bool: host ``h`` failed during interval ``k`` — the one
+    compiled fault view both power backends consume.
+
+    The scenario is time-stepped, so windows resolve at the interval
+    decision times ``k·interval`` under the plan's half-open rule (a
+    window starting exactly at ``k·interval`` is visible to interval
+    ``k``).  The OO path replays rows of this table as priority ``-1``
+    events at the changed intervals; the vec loop indexes it directly —
+    same table, same rule, bit-exact either way.
+    """
+    if fault_plan is None:
+        return None
+    for kind in ("link", "region", "transient"):
+        if fault_plan.has(kind):
+            raise ValueError(
+                f"power_batch supports only 'node' fault windows "
+                f"(host crashes), got a {kind!r} event")
+    fault_plan.check_targets("node", n_hosts, "host")
+    times = np.arange(n_samples, dtype=np.float64) * float(interval)
+    tbl = fault_plan.down_mask("node", times, n_hosts)
+    dead = np.all(tbl, axis=1)
+    if dead.any():
+        k = int(np.argmax(dead))
+        raise ValueError(
+            f"power_batch: fault plan fails all {n_hosts} hosts during "
+            f"interval {k} (t={k * float(interval)}) — at least one host "
+            f"must survive")
+    return tbl
+
+
 class ElasticDatacenterManager:
     """Threshold autoscaler over a fleet of :class:`PowerHost`\\ s — the OO
     reference for the ``power_batch`` scenario (the decision/accounting
@@ -602,6 +635,7 @@ class ElasticDatacenterManager:
         self.scale_out_events = 0
         self.scale_in_events = 0
         self.cooldown = 0
+        self.failed = np.zeros(H, bool)    # live host-crash mask (faults)
         self.events: List[Tuple[int, str, int]] = []   # (k, action, host)
         # initial placement: first ``init_active`` hosts on, even VM split
         for i, h in enumerate(hosts):
@@ -640,6 +674,27 @@ class ElasticDatacenterManager:
         assert not pool, "rebalance lost VMs"
         return moved
 
+    # -- fault handling ----------------------------------------------------
+    def apply_fault_mask(self, failed: Sequence[bool]) -> None:
+        """Adopt one row of :func:`power_fault_table` (degraded-capacity
+        operation).  Newly failed hosts power off and shed their VMs; if
+        no active host would remain, the most efficient surviving host is
+        kept alive; one rebalance absorbs the displaced VMs (counted as
+        migrations).  Cooldown is deliberately untouched — a crash is not
+        a scaling action.  The vec loop applies the identical rule from
+        the same table, so faulted runs stay bit-exact."""
+        self.failed = np.asarray(failed, bool).copy()
+        before = [h.active for h in self.hosts]
+        for h, f in zip(self.hosts, self.failed):
+            if f and h.active:
+                h.active = False
+        if not any(h.active for h in self.hosts):
+            i = self._pick_on.select(
+                [i for i in range(len(self.hosts)) if not self.failed[i]])
+            self.hosts[i].active = True
+        if [h.active for h in self.hosts] != before:
+            self.migrations += self._rebalance()
+
     # -- one interval ------------------------------------------------------
     def step(self, k: int) -> None:
         H = len(self.hosts)
@@ -663,15 +718,17 @@ class ElasticDatacenterManager:
         # -- autoscale decision (end of interval; affects interval k+1) ----
         active_idx = [i for i, h in enumerate(self.hosts) if h.active]
         n_act = len(active_idx)
+        avail = H - int(self.failed.sum())    # degraded capacity under faults
         can = self.cooldown == 0
         any_over = any(utils[i] > self.up_thr for i in active_idx)
         all_under = max(utils[i] for i in active_idx) < self.lo_thr
-        want_out = can and any_over and n_act < H
+        want_out = can and any_over and n_act < avail
         want_in = (can and not want_out and all_under
                    and n_act > self.min_active)
         if want_out:
             i = self._pick_on.select(
-                [i for i in range(H) if not self.hosts[i].active])
+                [i for i in range(H)
+                 if not self.hosts[i].active and not self.failed[i]])
             self.hosts[i].active = True
             self.scale_out_events += 1
             self.events.append((k, "out", i))
@@ -816,15 +873,48 @@ class _AutoscaleEntity(SimEntity):
             self.mgr.step(self._k)
             self._k += 1
             if self._k < self.n_intervals:
-                self.sim.schedule(ev.time + self.mgr.interval, Tag.AUTOSCALE,
+                # k·interval, not ev.time + interval: the absolute form lands
+                # on exactly the timestamps _HostFaultEntity schedules at, so
+                # a priority -1 crash event at k·interval always sorts ahead
+                # of interval k's AUTOSCALE.
+                self.sim.schedule(self._k * self.mgr.interval, Tag.AUTOSCALE,
                                   self)
+
+
+class _HostFaultEntity(SimEntity):
+    """Replays the changed rows of a :func:`power_fault_table` as priority
+    ``-1`` events, so the manager adopts interval ``k``'s crash mask before
+    that interval's AUTOSCALE step runs.  Scheduling only *changed* rows is
+    equivalent to applying every row: at an unchanged interval
+    ``apply_fault_mask`` is the identity (no newly-failed active host, no
+    empty active set), which is also why the vec loop may apply the table
+    unconditionally each interval and still agree bit-for-bit."""
+
+    def __init__(self, sim, mgr: "ElasticDatacenterManager",
+                 fail_tbl: np.ndarray):
+        super().__init__(sim, "host-faults")
+        self.mgr = mgr
+        self.fail_tbl = fail_tbl
+
+    def start(self) -> None:
+        prev = np.zeros(self.fail_tbl.shape[1], bool)
+        for k, row in enumerate(self.fail_tbl):
+            if np.any(row != prev):
+                self.sim.schedule(k * self.mgr.interval, Tag.NODE_FAILURE,
+                                  self, data=k, priority=-1)
+            prev = row
+
+    def process_event(self, ev) -> None:
+        if ev.tag is Tag.NODE_FAILURE:
+            self.mgr.apply_fault_mask(self.fail_tbl[ev.data])
 
 
 def _run_elastic_cell(backend, *, seed: int, n_hosts: int,
                       n_vms: int, n_samples: int, interval: float,
                       host_mips: float, vm_mips: float, up_thr: float,
                       lo_thr: float, cooldown: int, min_active: int,
-                      init_active, model_mix: str, n_points: int) -> Dict:
+                      init_active, model_mix: str, n_points: int,
+                      fail_tbl: Optional[np.ndarray] = None) -> Dict:
     hosts, vms, trace = make_elastic_scenario(
         n_hosts, n_vms, seed=seed, n_samples=n_samples,
         host_mips=host_mips, vm_mips=vm_mips, model_mix=model_mix)
@@ -834,6 +924,8 @@ def _run_elastic_cell(backend, *, seed: int, n_hosts: int,
         interval=interval, n_points=n_points)
     sim = backend.make_simulation()
     _AutoscaleEntity(sim, mgr, n_samples)
+    if fail_tbl is not None:
+        _HostFaultEntity(sim, mgr, fail_tbl)
     sim.run()
     return mgr.result()
 
@@ -844,6 +936,7 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
                     vm_mips=1000.0, up_thr=0.8, lo_thr=0.3, cooldown=3,
                     min_active: int = 1, init_active=None,
                     model_mix: str = "mixed", n_points: int = 11,
+                    fault_plan: Optional[FaultPlan] = None,
                     chunk_size=None, with_report: bool = False, **_ignored):
     """Reference semantics for the power sweep: run the OO elastic manager
     (event-driven, one cell at a time) over every scenario point — what the
@@ -852,6 +945,7 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
     (Registered for legacy/oo in :mod:`repro.core.vec_power`.)"""
     from .sweep import run_host_sweep
     from .vec_engine import empty_report
+    fail_tbl = power_fault_table(fault_plan, n_hosts, n_samples, interval)
     seeds, axes, b = _broadcast_cells(seeds, dict(
         up_thr=up_thr, lo_thr=lo_thr, cooldown=cooldown, vm_mips=vm_mips))
     if b == 0:
@@ -865,7 +959,8 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
             vm_mips=float(axes["vm_mips"][i]),
             up_thr=float(axes["up_thr"][i]), lo_thr=float(axes["lo_thr"][i]),
             cooldown=int(axes["cooldown"][i]), min_active=min_active,
-            init_active=init_active, model_mix=model_mix, n_points=n_points)
+            init_active=init_active, model_mix=model_mix, n_points=n_points,
+            fail_tbl=fail_tbl)
 
     rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
     out = _finalize({k: np.stack([np.asarray(r[k]) for r in rows])

@@ -21,6 +21,7 @@ datacenter's scale-out/scale-in thresholds, the worked example
 """
 from __future__ import annotations
 
+import inspect
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
     Tuple
@@ -47,6 +48,21 @@ class CEMResult:
         return all(v < np.inf for v in self.std.values())
 
 
+def _callback_takes_info(cb: Callable) -> bool:
+    """Does a cem callback accept the 4th (info-dict) positional arg?"""
+    try:
+        sig = inspect.signature(cb)
+    except (TypeError, ValueError):        # builtins / C callables
+        return False
+    pos = 0
+    for p in sig.parameters.values():
+        if p.kind is p.VAR_POSITIONAL:
+            return True
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            pos += 1
+    return pos >= 4
+
+
 def cem_minimize(objective: Callable[[Dict[str, np.ndarray]], Any],
                  space: Mapping[str, Tuple[float, float]], *,
                  pop_size: int = 32,
@@ -68,7 +84,16 @@ def cem_minimize(objective: Callable[[Dict[str, np.ndarray]], Any],
     Per generation: draw a Gaussian population around the current mean/std,
     score it, keep the top ``elite_frac``, and refit mean/std toward the
     elites with exponential ``smoothing`` (new = α·elite + (1-α)·old).
-    ``callback(generation, population, scores)`` observes every generation.
+    ``callback(generation, population, scores)`` observes every generation
+    (a callback accepting a fourth argument also receives an info dict
+    with the generation's ``non_finite`` member count).
+
+    Non-finite scores (a NaN'd simulation, an ``inf``-rejected member)
+    never reach the elite fit: elites truncate to the finite members when
+    fewer than ``n_elite`` are finite, the per-generation ``non_finite``
+    count lands in ``history`` and the callback payload, and a generation
+    whose *every* member scores non-finite raises immediately with the
+    generation index.
     """
     names = list(space)
     if not names:
@@ -98,25 +123,36 @@ def cem_minimize(objective: Callable[[Dict[str, np.ndarray]], Any],
             raise ValueError(
                 f"objective returned shape {scores.shape}, "
                 f"expected ({pop_size},)")
-        ranked = np.argsort(np.where(np.isfinite(scores), scores, np.inf),
-                            kind="stable")
-        elites = pop[ranked[:n_elite]]
+        finite = np.isfinite(scores)
+        n_finite = int(finite.sum())
+        if n_finite == 0:
+            raise RuntimeError(
+                f"cem_minimize: generation {g}: all {pop_size} members "
+                f"scored non-finite — the objective never succeeded "
+                f"(check the search space bounds / scenario params)")
+        ranked = np.argsort(np.where(finite, scores, np.inf), kind="stable")
+        # Only finite members may shape the refit: a NaN/inf lane padding
+        # out the elite slice would poison the truncated-normal update.
+        n_keep = min(n_elite, n_finite)
+        elites = pop[ranked[:n_keep]]
         top = ranked[0]
-        if np.isfinite(scores[top]) and float(scores[top]) < best_score:
+        if float(scores[top]) < best_score:
             best_score = float(scores[top])
             best = {k: float(pop[top, i]) for i, k in enumerate(names)}
         mean = smoothing * elites.mean(axis=0) + (1.0 - smoothing) * mean
         std = smoothing * elites.std(axis=0) + (1.0 - smoothing) * std
         history.append(dict(
             generation=float(g), best=float(scores[ranked[0]]),
-            elite_mean=float(scores[ranked[:n_elite]].mean()),
-            pop_mean=float(np.nanmean(np.where(np.isfinite(scores),
-                                               scores, np.nan)))))
+            elite_mean=float(scores[ranked[:n_keep]].mean()),
+            pop_mean=float(np.mean(scores[finite])),
+            non_finite=float(pop_size - n_finite)))
         if callback is not None:
-            callback(g, pop_dict, scores)
-    if best is None:
-        raise RuntimeError("cem_minimize: every sampled member scored "
-                           "non-finite — objective never succeeded")
+            info = dict(non_finite=pop_size - n_finite, n_elite=n_keep)
+            if _callback_takes_info(callback):
+                callback(g, pop_dict, scores, info)
+            else:
+                callback(g, pop_dict, scores)
+    assert best is not None
     return CEMResult(
         best=best, best_score=best_score,
         mean={k: float(mean[i]) for i, k in enumerate(names)},

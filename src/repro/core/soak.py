@@ -1,0 +1,230 @@
+"""Chaos/soak harness over the streaming sweep API.
+
+:func:`run_soak` replays a scenario workload round after round through
+``run_sweep(config=SweepConfig(compact=True, quarantine=True,
+on_chunk=…))`` — alternating *clean* rounds with *chaos* rounds whose
+:func:`~repro.core.faults.make_chaos_plan` schedule crashes targets,
+degrades links and flips transient failures mid-stream — and distills
+each round into a :class:`SoakRound` of rolling health metrics:
+
+  * ``events_per_s`` — useful loop iterations per wall-clock second
+    (``Σ SweepReport.lane_iterations / wall``);
+  * ``active_fraction`` — mean fraction of targets online over the fault
+    schedule (1.0 on clean rounds);
+  * ``served`` / ``dropped`` / ``retries`` / ``sla_violations`` — the
+    resilience counters (every round runs with a finite ``timeout_s``, so
+    clean and chaos rounds report the same keys);
+  * ``recovery_s`` — per node-crash window, the gap between the window's
+    end and the first *served* request submitted after it that routed to
+    the recovered target (NaN when the stream never exercises it again);
+  * ``quarantined`` / ``retried_segments`` — the compacting scheduler's
+    self-robustness counters (a healthy soak keeps both at 0; the CI
+    chaos gate in ``benchmarks/check_regression.py --chaos`` enforces
+    the clean-round half of that).
+
+The harness targets ``netdc_batch`` by default (its faulted outputs carry
+the per-request ``submit``/``dst`` arrays the recovery metric needs) but
+any batched kind whose faulted outputs share those keys works.  After
+every round the cumulative report is re-written to ``snapshot_path`` as
+JSON, so a long soak always leaves a fresh artifact behind even if the
+process dies mid-run — that JSON is the chaos report CI uploads.
+"""
+from __future__ import annotations
+
+import json
+import math
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .faults import FaultPlan, RetryPolicy, make_chaos_plan
+
+
+def recovery_times(plan: FaultPlan, outputs: Mapping[str, Any]) -> List[float]:
+    """Per node-window recovery time from faulted per-request outputs.
+
+    For each ``node`` window in ``plan``: the first *served* request whose
+    (effective) submit time is at/after the window's ``t_end`` and whose
+    destination is the recovered target, minus ``t_end`` — i.e. how long
+    after the fault cleared the stream demonstrably used the target again.
+    ``target = -1`` windows accept any destination.  NaN when no such
+    request exists in the round (the stream ended first).
+    """
+    submit = np.asarray(outputs["submit"], np.float64)
+    dst = np.asarray(outputs["dst"])
+    served = dst >= 0
+    out: List[float] = []
+    tgt, _ts, te, _sev = plan.select("node")
+    for d, end in zip(tgt.tolist(), te.tolist()):
+        hit = served & (submit >= end)
+        if d >= 0:
+            hit = hit & (dst == d)
+        out.append(float(np.min(submit[hit]) - end) if hit.any()
+                   else math.nan)
+    return out
+
+
+@dataclass
+class SoakRound:
+    """Rolling health metrics for one soak round (see module docstring)."""
+    round: int
+    chaos: bool
+    cells: int
+    wall_s: float
+    events: int
+    events_per_s: float
+    streamed_cells: int
+    active_fraction: float
+    served: int
+    dropped: int
+    retries: int
+    sla_violations: int
+    quarantined: int
+    retried_segments: int
+    recovery_s: List[float] = field(default_factory=list)
+
+
+@dataclass
+class SoakReport:
+    """The whole soak: per-round metrics + the aggregate a CI gate reads."""
+    kind: str
+    backend: str
+    rounds: List[SoakRound] = field(default_factory=list)
+
+    def totals(self) -> Dict[str, Any]:
+        clean = [r for r in self.rounds if not r.chaos]
+        chaos = [r for r in self.rounds if r.chaos]
+        rec = [t for r in chaos for t in r.recovery_s if math.isfinite(t)]
+        return dict(
+            rounds=len(self.rounds),
+            chaos_rounds=len(chaos),
+            cells=sum(r.cells for r in self.rounds),
+            events=sum(r.events for r in self.rounds),
+            wall_s=sum(r.wall_s for r in self.rounds),
+            served=sum(r.served for r in self.rounds),
+            dropped=sum(r.dropped for r in self.rounds),
+            retries=sum(r.retries for r in self.rounds),
+            sla_violations=sum(r.sla_violations for r in self.rounds),
+            clean_quarantined=sum(r.quarantined for r in clean),
+            chaos_quarantined=sum(r.quarantined for r in chaos),
+            retried_segments=sum(r.retried_segments for r in self.rounds),
+            recovery_windows=sum(len(r.recovery_s) for r in chaos),
+            recovery_measured=len(rec),
+            recovery_mean_s=(float(np.mean(rec)) if rec else None),
+            recovery_max_s=(float(np.max(rec)) if rec else None))
+
+    def to_dict(self) -> Dict[str, Any]:
+        return dict(report="soak_chaos", kind=self.kind,
+                    backend=self.backend, totals=self.totals(),
+                    rounds=[asdict(r) for r in self.rounds])
+
+    def save(self, path) -> None:
+        # NaN is not valid JSON — encode unmeasured recoveries as null.
+        def clean(x):
+            if isinstance(x, float) and not math.isfinite(x):
+                return None
+            if isinstance(x, dict):
+                return {k: clean(v) for k, v in x.items()}
+            if isinstance(x, list):
+                return [clean(v) for v in x]
+            return x
+        with open(path, "w") as fh:
+            json.dump(clean(self.to_dict()), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
+             cells_per_round: int = 32, backend: str = "vec",
+             seed0: int = 0, n_targets: int = 6, n_jobs: int = 48,
+             mean_gap_s: float = 2.0, timeout_s: float = 600.0,
+             slo_s: float = 120.0, retry: Optional[RetryPolicy] = None,
+             chunk_size: Optional[int] = 16,
+             chaos_rounds: Optional[Sequence[int]] = None,
+             n_node_windows: int = 2, n_link_windows: int = 1,
+             transient_prob: float = 0.1,
+             extra_params: Optional[Mapping[str, Any]] = None,
+             snapshot_path=None, progress=None) -> SoakReport:
+    """Soak ``kind`` for ``rounds`` rounds of ``cells_per_round`` lanes.
+
+    Odd rounds are chaos rounds by default (override with an explicit
+    ``chaos_rounds`` index collection).  Every round draws fresh seeds
+    (``seed0 + round·cells_per_round + lane``) so the workload keeps
+    moving, and runs compacted + quarantined with an ``on_chunk`` tap —
+    the same streaming path a million-lane sweep uses.  Returns the
+    :class:`SoakReport`; when ``snapshot_path`` is given the cumulative
+    JSON snapshot is rewritten after *every* round.
+    """
+    from .backend import run_sweep
+    from .sweep import SweepConfig
+    if rounds < 1:
+        raise ValueError("rounds must be ≥ 1")
+    chaos_set = (set(range(1, rounds, 2)) if chaos_rounds is None
+                 else {int(r) for r in chaos_rounds})
+    retry = retry or RetryPolicy(max_retries=2, base_delay_s=mean_gap_s,
+                                 backoff=2.0, jitter_frac=0.25,
+                                 budget_s=timeout_s)
+    t_max = float(mean_gap_s) * float(n_jobs)     # ≈ workload horizon
+    report = SoakReport(kind=kind, backend=backend)
+
+    for r in range(rounds):
+        chaos = r in chaos_set
+        seeds = seed0 + r * cells_per_round + np.arange(cells_per_round)
+        params: Dict[str, Any] = dict(
+            seeds=seeds, n_dcs=n_targets, n_jobs=n_jobs,
+            mean_gap_s=mean_gap_s, timeout_s=timeout_s,
+            **dict(extra_params or {}))
+        plan = None
+        if chaos:
+            plan = make_chaos_plan(
+                seed0 + 7919 * (r + 1), t_max, n_targets=n_targets,
+                n_node_windows=n_node_windows,
+                n_link_windows=n_link_windows,
+                transient_prob=transient_prob)
+            params.update(fault_plan=plan, retry=retry)
+
+        streamed = 0
+
+        def tap(cells, _outs):
+            nonlocal streamed
+            streamed += len(cells)
+
+        t0 = time.perf_counter()
+        res = run_sweep(kind, params, backend=backend,
+                        config=SweepConfig(compact=True, quarantine=True,
+                                           chunk_size=chunk_size,
+                                           on_chunk=tap))
+        wall = time.perf_counter() - t0
+        out, rep = res.outputs, res.report
+        events = (int(np.sum(rep.lane_iterations))
+                  if rep.lane_iterations is not None else 0)
+        submit = np.asarray(out["submit"], np.float64)
+        dst = np.asarray(out["dst"])
+        finish = np.asarray(out["finish"], np.float64)
+        srv = dst >= 0
+        late = srv & (finish - submit > slo_s)
+        if chaos:
+            grid = np.linspace(0.0, t_max, 257)
+            active_frac = float(
+                1.0 - plan.down_mask("node", grid, n_targets).mean())
+        else:
+            active_frac = 1.0
+        report.rounds.append(SoakRound(
+            round=r, chaos=chaos, cells=int(cells_per_round), wall_s=wall,
+            events=events,
+            events_per_s=(events / wall if wall > 0 else 0.0),
+            streamed_cells=streamed,
+            active_fraction=active_frac,
+            served=int(np.sum(out["served"])),
+            dropped=int(np.sum(out["dropped"])),
+            retries=int(np.sum(out["retries"])),
+            sla_violations=int(np.sum(late)),
+            quarantined=int(rep.quarantined),
+            retried_segments=int(rep.retried_segments),
+            recovery_s=recovery_times(plan, out) if chaos else []))
+        if snapshot_path is not None:
+            report.save(snapshot_path)
+        if progress is not None:
+            progress(report.rounds[-1])
+    return report

@@ -108,6 +108,14 @@ class SweepReport:
     retires: int = 0
     segments: int = 0
     peak_lanes: int = 0
+    # Self-robustness accounting (``compact_sweep(..., quarantine=True)``):
+    # lanes whose state or outputs went NaN are quarantined — retired
+    # without results (their cells listed in ``quarantined_cells``, float
+    # outputs NaN-filled) so the rest of the grid streams on; a raising
+    # segment is re-dispatched once from host snapshots before giving up.
+    quarantined: int = 0
+    retried_segments: int = 0
+    quarantined_cells: Optional[np.ndarray] = None
 
     @property
     def active_lane_fraction_observed(self) -> Optional[float]:
@@ -128,7 +136,8 @@ class SweepReport:
             donated=self.donated, sharding=self.sharding,
             compacted=self.compacted, refills=self.refills,
             retires=self.retires, segments=self.segments,
-            peak_lanes=self.peak_lanes,
+            peak_lanes=self.peak_lanes, quarantined=self.quarantined,
+            retried_segments=self.retried_segments,
             observed_active_lane_fraction=(
                 round(self.active_lane_fraction_observed, 4)
                 if self.active_lane_fraction_observed is not None else None),
@@ -160,7 +169,10 @@ class SweepConfig:
         engine default;
       * ``use_pallas`` — fused next-event kernel opt-in (``True`` /
         ``"force"``);
-      * ``donate`` — donate chunk input buffers to XLA.
+      * ``donate`` — donate chunk input buffers to XLA;
+      * ``quarantine`` — compact-mode self-robustness: NaN'd lanes are
+        quarantined (``SweepReport.quarantined``) instead of poisoning
+        the run, and a raising segment is retried once.
 
     Only fields that differ from their defaults are forwarded to the
     handler (:meth:`to_kwargs`), so a default config adds nothing to any
@@ -178,6 +190,7 @@ class SweepConfig:
     precision: Optional[str] = None
     use_pallas: Any = False
     donate: bool = True
+    quarantine: bool = False
 
     def __post_init__(self):
         if self.sharding not in (None, "pmap", "shard_map"):
@@ -461,7 +474,8 @@ def compact_sweep(step: Callable, params: Any, *,
                   on_chunk: Optional[Callable] = None,
                   iterations_key: str = "iterations",
                   donated: bool = True,
-                  max_segments: Optional[int] = None):
+                  max_segments: Optional[int] = None,
+                  quarantine: bool = False):
     """Compacting lane scheduler: a dense resident batch of ``lanes`` lanes,
     refilled from a host-side work queue as lanes finish mid-flight.
 
@@ -491,6 +505,19 @@ def compact_sweep(step: Callable, params: Any, *,
 
     Returns ``(outputs, SweepReport)`` in original cell order, with
     ``compacted=True`` and refill/retire/segment/peak-lane accounting.
+
+    ``quarantine=True`` makes the scheduler self-robust instead of letting
+    one poisoned lane kill a million-lane run: after every segment the
+    resident state and each newly-done lane's outputs are scanned for NaN
+    (legitimate ``inf`` — dropped requests, never-served sentinels — is
+    *not* quarantined); offending lanes are retired without results, their
+    cells listed in ``SweepReport.quarantined_cells`` (float outputs
+    NaN-filled, count in ``quarantined``), and their slots refilled.  A
+    segment that *raises* is re-dispatched once from the host-side
+    state mirrors (``retried_segments`` counts the retry) before the
+    error propagates.  Every other lane's outputs are bit-identical to a
+    quarantine-less run: the host mirrors hold the same doubles the
+    device buffers did.
     """
     import collections
 
@@ -539,35 +566,72 @@ def compact_sweep(step: Callable, params: Any, *,
 
     outputs: Optional[Dict[str, np.ndarray]] = None
     lane_iters = np.zeros(n_cells, np.int64)
-    segments = refills = retires = executed = 0
+    segments = refills = retires = executed = retried = 0
+    quarantined_cells: list = []
     with warnings.catch_warnings():
         if donated:
             warnings.filterwarnings("ignore", message=_DONATION_MSG.pattern)
         while alive.any():
-            state, it, done, j, out = step(lane_params, state, it, fresh)
+            try:
+                state, it, done, j, out = step(lane_params, state, it, fresh)
+            except Exception:
+                if not quarantine:
+                    raise
+                # Under quarantine the carried state/it are host-side numpy
+                # mirrors (converted below), so the donated device buffers
+                # the failed dispatch consumed are re-creatable: retry the
+                # segment once before letting the error kill the run.
+                retried += 1
+                state, it, done, j, out = step(lane_params, state, it, fresh)
+            if quarantine:
+                state = tree.tree_map(np.asarray, state)
+                it = np.asarray(it)
             done_np = np.asarray(done)
             j_max = int(np.asarray(j).max())
             segments += 1
             executed += L * j_max
-            newly = done_np & alive
+            quar = np.zeros(L, bool)
+            if quarantine:
+                # NaN is the poison signal; inf is a legitimate sentinel
+                # (dropped requests, never-served finish times).  A live
+                # lane is judged by its state, a done lane by its outputs.
+                nan_state = np.zeros(L, bool)
+                for leaf in tree.tree_leaves(state):
+                    if np.issubdtype(leaf.dtype, np.floating):
+                        nan_state |= np.isnan(leaf.reshape(L, -1)).any(axis=1)
+                nan_out = np.zeros(L, bool)
+                for v in out.values():
+                    v = np.asarray(v)
+                    if np.issubdtype(v.dtype, np.floating):
+                        nan_out |= np.isnan(v.reshape(L, -1)).any(axis=1)
+                quar = alive & np.where(done_np, nan_out, nan_state)
+            newly = done_np & alive & ~quar
             fresh = np.zeros(L, bool)
-            if newly.any():
+            if newly.any() or quar.any():
                 out_np = {k: np.asarray(v) for k, v in out.items()}
                 if outputs is None:
                     outputs = {
                         k: np.zeros((n_cells,) + v.shape[1:], v.dtype)
                         for k, v in out_np.items()}
-                cells = slot_cell[newly]
-                for k, v in out_np.items():
-                    outputs[k][cells] = v[newly]
-                if iterations_key in out_np:
-                    lane_iters[cells] = np.asarray(
-                        out_np[iterations_key][newly], np.int64)
-                retires += len(cells)
-                if on_chunk is not None:
-                    on_chunk(cells.copy(),
-                             {k: v[newly].copy() for k, v in out_np.items()})
-                for s in np.flatnonzero(newly):
+                if newly.any():
+                    cells = slot_cell[newly]
+                    for k, v in out_np.items():
+                        outputs[k][cells] = v[newly]
+                    if iterations_key in out_np:
+                        lane_iters[cells] = np.asarray(
+                            out_np[iterations_key][newly], np.int64)
+                    retires += len(cells)
+                    if on_chunk is not None:
+                        on_chunk(cells.copy(),
+                                 {k: v[newly].copy()
+                                  for k, v in out_np.items()})
+                if quar.any():
+                    q_cells = slot_cell[quar]
+                    quarantined_cells.extend(int(c) for c in q_cells)
+                    for v in outputs.values():
+                        if np.issubdtype(v.dtype, np.floating):
+                            v[q_cells] = np.nan
+                for s in np.flatnonzero(newly | quar):
                     if queue:
                         c = queue.popleft()
                         slot_cell[s] = c
@@ -599,7 +663,10 @@ def compact_sweep(step: Callable, params: Any, *,
         lane_iterations=iters,
         sharding="shard_map" if n_devices > 1 else None,
         compacted=True, refills=refills, retires=retires,
-        segments=segments, peak_lanes=peak_lanes)
+        segments=segments, peak_lanes=peak_lanes,
+        quarantined=len(quarantined_cells), retried_segments=retried,
+        quarantined_cells=(np.asarray(quarantined_cells, np.int64)
+                           if quarantined_cells else None))
     return outputs, report
 
 

@@ -29,7 +29,8 @@ import numpy as np
 
 from ..kernels.ops import masked_argmax
 from .backend import SimBackend, scenario
-from .cluster import FleetConfig, RunStats, StepCost
+from .cluster import FleetConfig, RunStats, StepCost, fleet_fault_windows
+from .faults import FaultPlan
 from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry, \
     resolve_precision
 
@@ -57,6 +58,9 @@ class _Statics:
     degrade: bool = True
     sigma_zero: bool = False
     fast: bool = False
+    # Planned-outage windows from a FaultPlan (0 = no plan, pruning the
+    # whole fault subgraph so the unfaulted compiled graph is unchanged).
+    n_fault_windows: int = 0
 
     @property
     def n_total(self) -> int:
@@ -78,6 +82,14 @@ class _Params(NamedTuple):
     min_nodes: Any            # min_nodes_frac * n_nodes (float threshold)
     total_steps: Any
     max_wall_s: Any
+
+
+class _Faults(NamedTuple):
+    """Planned-outage windows (:func:`repro.core.cluster
+    .fleet_fault_windows`), one row per window, batch axis in front."""
+    node: Any                 # [W] i32 which node the window downs
+    start: Any                # [W] f64 outage start (half-open window)
+    end: Any                  # [W] f64 outage end
 
 
 class _Carry(NamedTuple):
@@ -104,9 +116,12 @@ class _Carry(NamedTuple):
 def _fleet_build(args, s: _Statics, ops) -> Loop:
     """One fleet scenario as a loop over step attempts (the driver's ``it``
     replaces the old carried counter for per-step RNG folding)."""
-    params, key = args
+    params, key, fx = args
     n = s.n_total
     kf, kd, kb, kstep, kevict = jax.random.split(key, 5)
+    if s.n_fault_windows:
+        # [n, W] membership mask: which windows belong to which node.
+        mine = fx.node == jnp.arange(n)[:, None]
 
     # Pre-drawn failure renewal process: node i's k-th outage starts at
     # fail_start[i, k] and ends repair_s later (cf. FleetSim's exponential
@@ -140,6 +155,9 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
         bias0 = _f32(bias0)
         if s.degrade:
             degrade_t = degrade_t.astype(jnp.float32)
+        if s.n_fault_windows:
+            fx = _Faults(node=fx.node, start=_f32(fx.start),
+                         end=_f32(fx.end))
 
     n_nodes_f = jnp.asarray(float(s.n_nodes), fail_start.dtype)
     k_last = s.k_fail_rounds - 1
@@ -162,7 +180,14 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
                         dtype=jnp.int32)
         r = jnp.minimum(ended, k_last)
         cur = round_start(r)
-        down = (cur <= c.t) & (c.t < cur + params.repair_s)
+        rdown = (cur <= c.t) & (c.t < cur + params.repair_s)
+        down = rdown
+        if s.n_fault_windows:
+            # Planned outages fold into the same down/next-fail/cascade
+            # machinery as the stochastic renewal process (half-open
+            # windows, matching the FaultPlan contract).
+            down = down | jnp.any(mine & (fx.start <= c.t)
+                                  & (c.t < fx.end), axis=1)
         up_sched = ~down
         up = up_sched & (c.t >= c.evict_until) if s.track_stragglers \
             else up_sched
@@ -171,7 +196,11 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
         # Next schedule failure strictly after now (inf once exhausted).
         nxt = round_start(jnp.minimum(r + 1, k_last))
         next_fail = jnp.where(cur > c.t, cur,
-                              jnp.where(down & (r < k_last), nxt, jnp.inf))
+                              jnp.where(rdown & (r < k_last), nxt, jnp.inf))
+        if s.n_fault_windows:
+            next_fail = jnp.minimum(next_fail, jnp.min(
+                jnp.where(mine & (fx.start > c.t), fx.start, jnp.inf),
+                axis=1))
         # Cascade check: did a then-active node fail inside the stall/
         # restart/ckpt window we just jumped over?  The OO engine processes
         # that NODE_FAILURE mid-window (gen bump): roll back to the last
@@ -181,6 +210,10 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
         f_window = jnp.min(jnp.where(
             c.was_active & (cur > c.watch_from) & (cur <= c.t),
             cur, jnp.inf))
+        if s.n_fault_windows:
+            f_window = jnp.minimum(f_window, jnp.min(jnp.where(
+                c.was_active[fx.node] & (fx.start > c.watch_from)
+                & (fx.start <= c.t), fx.start, jnp.inf)))
         cascade = jnp.isfinite(c.watch_from) & (f_window < c.t)
         # Active set: index-ordered prefix of up nodes, capped at n_nodes
         # (the OO engine's explicit spare promotion; iid biases make the
@@ -395,8 +428,10 @@ def _prepare_fleet(cost: StepCost, cfg: FleetConfig, total_steps: int = 2000,
                    mtbf_hours=None, ckpt_every=None, straggler_sigma=None,
                    max_wallclock_s: float = 30 * 86400.0,
                    k_fail_rounds: Optional[int] = None, k_degrade: int = 8,
-                   precision: str = "exact"):
+                   precision: str = "exact",
+                   fault_plan: Optional[FaultPlan] = None):
     fast = resolve_precision(precision)
+    windows = fleet_fault_windows(fault_plan, cfg.n_nodes + cfg.n_spares)
     seeds = np.asarray(seeds, np.uint32)
     params = _make_params(cost, cfg, total_steps, max_wallclock_s,
                           mtbf_hours=mtbf_hours, ckpt_every=ckpt_every,
@@ -429,13 +464,21 @@ def _prepare_fleet(cost: StepCost, cfg: FleetConfig, total_steps: int = 2000,
                               and cfg.straggler_window <= 10_000),
         degrade=bool(np.min(params.degrade_s) < 1e8 * 3600.0),
         sigma_zero=bool(np.all(params.sigma == 0.0)),
-        fast=fast)
+        fast=fast,
+        n_fault_windows=len(windows))
+    if windows:
+        w = np.asarray(windows, np.float64)            # [W, 3]
+        bcw = lambda a: np.broadcast_to(a, (b, len(windows))).copy()
+        fx = _Faults(node=bcw(w[:, 0].astype(np.int32)),
+                     start=bcw(w[:, 1]), end=bcw(w[:, 2]))
+    else:
+        fx = None
     with jax.experimental.enable_x64():
         # Keys and (for "fast") the pre-drawn schedules are built in the
         # x64 world either way, so both precisions see the same sample.
         keys = np.asarray(jax.vmap(jax.random.PRNGKey)(jnp.asarray(seeds)))
     return BatchPlan(
-        (params, keys), statics,
+        (params, keys, fx), statics,
         predicted_cost=_predicted_iters(params, statics.n_total))
 
 
@@ -456,17 +499,22 @@ simulate_fleet_batch = make_batch_entry(
     that exhausts its schedule simply stops failing); ``precision`` is
     ``"exact"`` (f64, bit-identical to the OO engine on deterministic
     configs) or ``"fast"`` (same f64 stochastic sample, f32 loop).
+    A ``fault_plan`` (:class:`~repro.core.faults.FaultPlan` of per-node
+    ``node`` windows) adds *planned* outages on top of the stochastic
+    MTBF process — see :func:`repro.core.cluster.fleet_fault_windows`
+    for the validation rules and the bit-exactness domain.
     """)
 
 
 def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,
                        total_steps: int = 2000, *,
                        max_wallclock_s: float = 30 * 86400.0,
-                       use_pallas: bool = False) -> RunStats:
+                       use_pallas: bool = False,
+                       fault_plan: Optional[FaultPlan] = None) -> RunStats:
     """Single-scenario convenience wrapper returning the OO ``RunStats``."""
     out = simulate_fleet_batch(cost, cfg, total_steps, seeds=[cfg.seed],
                                max_wallclock_s=max_wallclock_s,
-                               use_pallas=use_pallas)
+                               use_pallas=use_pallas, fault_plan=fault_plan)
     from dataclasses import fields
     return RunStats(**{f.name: (int if f.type == "int" else float)(
         out[f.name][0]) for f in fields(RunStats)})
@@ -478,7 +526,8 @@ def simulate_fleet_vec(cost: StepCost, cfg: FleetConfig,
 def _fleet_vec(backend: SimBackend, *, cost: StepCost, cfg: FleetConfig,
                total_steps: int = 2000,
                max_wallclock_s: float = 30 * 86400.0,
-               use_pallas: bool = False) -> RunStats:
+               use_pallas: bool = False,
+               fault_plan: Optional[FaultPlan] = None) -> RunStats:
     return simulate_fleet_vec(cost, cfg, total_steps,
                               max_wallclock_s=max_wallclock_s,
-                              use_pallas=use_pallas)
+                              use_pallas=use_pallas, fault_plan=fault_plan)

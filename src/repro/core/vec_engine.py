@@ -303,7 +303,8 @@ DEFAULT_SEGMENT_ITERS = 64      # per-segment iteration budget default
 def run_compact(engine: VecEngine, plan: BatchPlan, *, chunk_size=None,
                 devices=None, donate: bool = True, segment_iters=None,
                 on_chunk: Optional[Callable] = None,
-                progress: Optional[Callable] = None):
+                progress: Optional[Callable] = None,
+                quarantine: bool = False):
     """Execute a :class:`BatchPlan` through the compacting lane scheduler.
 
     ``chunk_size`` is the resident lane count (device memory is O(it));
@@ -336,7 +337,7 @@ def run_compact(engine: VecEngine, plan: BatchPlan, *, chunk_size=None,
             step, params, lanes=lanes,
             state_prototype=state_prototype(engine, statics, params),
             n_devices=len(devs), predicted_cost=plan.predicted_cost,
-            on_chunk=on_chunk, donated=donate)
+            on_chunk=on_chunk, donated=donate, quarantine=quarantine)
     finally:
         if sid:
             jax.effects_barrier()       # drain the ordered tap before unhook
@@ -348,7 +349,8 @@ def run_plan(engine: VecEngine, plan, *, chunk_size=None, devices=None,
              compact: bool = False, segment_iters=None,
              sharding: Optional[str] = None,
              on_chunk: Optional[Callable] = None,
-             progress: Optional[Callable] = None):
+             progress: Optional[Callable] = None,
+             quarantine: bool = False):
     """Execute a :class:`BatchPlan` through the sweep layer under x64.
 
     ``compact=True`` routes through the compacting lane scheduler
@@ -368,7 +370,8 @@ def run_plan(engine: VecEngine, plan, *, chunk_size=None, devices=None,
                 out, report = run_compact(
                     engine, plan, chunk_size=chunk_size, devices=devices,
                     donate=donate, segment_iters=segment_iters,
-                    on_chunk=on_chunk, progress=progress)
+                    on_chunk=on_chunk, progress=progress,
+                    quarantine=quarantine)
             else:
                 out, report = execute_sweep(
                     batched_sim(engine, plan.statics), plan.params,
@@ -390,7 +393,8 @@ def make_batch_entry(engine: VecEngine, prepare: Callable, *,
     :class:`BatchPlan` (or :class:`Done`).  The produced entry adds the
     uniform sweep controls (``use_pallas``, ``chunk_size``, ``devices``,
     ``donate``, ``with_report``, ``compact``, ``segment_iters``,
-    ``sharding``, ``on_chunk``, ``progress``) to ``prepare``'s own
+    ``sharding``, ``on_chunk``, ``progress``, ``quarantine``) to
+    ``prepare``'s own
     signature and is registered as the ``kind`` handler for ``backends``
     (pass ``backends=()`` to skip registration, e.g. when a hand-written
     handler dispatches on input shape first).
@@ -403,13 +407,14 @@ def make_batch_entry(engine: VecEngine, prepare: Callable, *,
               sharding: Optional[str] = None,
               on_chunk: Optional[Callable] = None,
               progress: Optional[Callable] = None,
+              quarantine: bool = False,
               **kw):
         plan = prepare(*args, use_pallas=resolve_use_pallas(use_pallas), **kw)
         return run_plan(engine, plan, chunk_size=chunk_size, devices=devices,
                         donate=donate, with_report=with_report,
                         compact=compact, segment_iters=segment_iters,
                         sharding=sharding, on_chunk=on_chunk,
-                        progress=progress)
+                        progress=progress, quarantine=quarantine)
 
     entry.__name__ = name or f"simulate_{kind}"
     entry.__qualname__ = entry.__name__

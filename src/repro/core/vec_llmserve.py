@@ -17,11 +17,13 @@ a valid gather index — and ``any_elig`` masks every committed output.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import FaultPlan, RetryPolicy
 from .llmserve import build_cells, empty_llmserve_outputs, summarize
 from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
 
@@ -31,6 +33,11 @@ class _Statics(NamedTuple):
     n_pipelines: int
     n_stages: int
     use_pallas: bool
+    # Static timeout lane (inf = off, keeping the unfaulted compiled graph
+    # byte-identical): pipelines that cannot finish a request within
+    # ``timeout`` of its submit drop out of the eligible set.  All other
+    # fault effects arrive pre-baked in the packed ``eligible`` column.
+    timeout: float = math.inf
 
 
 class _Params(NamedTuple):
@@ -116,6 +123,8 @@ def _llmserve_build(cell, s: _Statics, ops) -> Loop:
             deps.append(d)
         dep = jnp.stack(deps, axis=1)                 # [P, S]
         fin = d + tail
+        if math.isfinite(s.timeout):                  # static: timeout lane
+            elig = elig & (fin <= submit + s.timeout)
         score = fin + bias
         pick = ops.argmin(score, elig)
         ok = jnp.any(elig)
@@ -155,7 +164,10 @@ def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
                       offline_region=-1, offline_frac: float = 0.25,
                       slo_ttft_s: float = 5.0, kv_penalty_s: float = 0.5,
                       link_bw: float = 10e9, hop_latency_s: float = 0.03,
-                      prompt_tokens=(64, 1024), decode_tokens=(16, 512)):
+                      prompt_tokens=(64, 1024), decode_tokens=(16, 512),
+                      fault_plan: Optional[FaultPlan] = None,
+                      retry: Optional[RetryPolicy] = None,
+                      timeout_s: float = math.inf):
     cells, b = build_cells(
         seeds=seeds, n_machines=n_machines, n_regions=n_regions,
         n_stages=n_stages, n_pipelines=n_pipelines, n_layers=n_layers,
@@ -164,15 +176,21 @@ def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
         offline_region=offline_region, offline_frac=offline_frac,
         slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
         hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
-        decode_tokens=decode_tokens)
+        decode_tokens=decode_tokens, fault_plan=fault_plan, retry=retry,
+        timeout_s=timeout_s)
     if b == 0:
-        return Done(empty_llmserve_outputs(int(n_machines)))
+        return Done(empty_llmserve_outputs(
+            int(n_machines), faulted=fault_plan is not None
+            or math.isfinite(timeout_s)))
+    fx = cells[0].fx
     params = _Params(packed=_pack_cells(cells))
     n_pipes, n_st = cells[0].placement.shape
     # Every lane routes exactly n_requests requests: nothing to bucket.
     return BatchPlan(params,
                      _Statics(int(n_requests), int(n_pipes), int(n_st),
-                              bool(use_pallas)),
+                              bool(use_pallas),
+                              timeout=(fx.timeout_s if fx
+                                       else math.inf)),
                      finalize=lambda out: summarize(out, cells))
 
 
@@ -192,6 +210,11 @@ simulate_llmserve_batch = make_batch_entry(
     ``latency_mean_s``, ``ttft_mean_s``, ``slo_violations``,
     ``tokens_out``, ``pipe_requests``, ``machine_busy_s``,
     ``kv_assigned_tokens``, ``utilization``, ``wan_delay_total_s``, …);
-    ``with_report=True`` adds the ``SweepReport``.  Bit-exact vs the
-    ``oo``/``legacy`` backends on every output.
+    ``with_report=True`` adds the ``SweepReport``.
+    A ``fault_plan`` (:class:`~repro.core.faults.FaultPlan` of ``node`` /
+    ``region`` / ``link`` / ``transient`` windows), ``retry``
+    (:class:`~repro.core.faults.RetryPolicy`) and ``timeout_s`` inject
+    machine crashes, regional outages, WAN degradation and transient
+    request failures; faulted runs add ``submit`` / ``retries`` outputs.
+    Bit-exact vs the ``oo``/``legacy`` backends on every output.
     """)

@@ -15,11 +15,13 @@ bit-exactly on every output (differential suite + golden fixture).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+import math
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from .faults import FaultPlan, RetryPolicy
 from .netdc import build_cells, empty_netdc_outputs, summarize
 from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
 
@@ -28,6 +30,13 @@ class _Statics(NamedTuple):
     n_jobs: int
     n_dcs: int
     use_pallas: bool
+    # Fault view: ``timeout`` (inf = off) excludes candidates that cannot
+    # finish in time; ``guarded`` marks that rows of ``online`` may be
+    # all-False (node windows / given-up jobs), so commits need ``ok``
+    # where-guards.  Both default off so the unfaulted compiled graph is
+    # byte-identical to the pre-fault one (golden-fixture stability).
+    timeout: float = math.inf
+    guarded: bool = False
 
 
 class _Params(NamedTuple):
@@ -37,7 +46,7 @@ class _Params(NamedTuple):
     xfer: jnp.ndarray         # [J, D] f64
     exec_s: jnp.ndarray       # [J, D] f64
     bias: jnp.ndarray         # [J, D] f64
-    online: jnp.ndarray       # [D]    bool
+    online: jnp.ndarray       # [J, D] bool (folds node windows + give-ups)
 
 
 class _Carry(NamedTuple):
@@ -55,12 +64,22 @@ def _netdc_build(cell, s: _Statics, ops) -> Loop:
         arr = cell.submit[it] + cell.xfer[it]         # [D] WAN arrival times
         fin = jnp.maximum(c.free, arr) + cell.exec_s[it]
         score = fin + cell.bias[it]
-        pick = ops.argmin(score, cell.online)
+        elig = cell.online[it]
+        if math.isfinite(s.timeout):                  # static: timeout lane
+            elig = elig & (fin <= cell.submit[it] + s.timeout)
+        pick = ops.argmin(score, elig)
         chosen = fin[pick]
+        if not s.guarded:
+            return _Carry(
+                free=jnp.where(idx == pick, chosen, c.free),
+                dst=c.dst.at[it].set(pick.astype(jnp.int32)),
+                finish=c.finish.at[it].set(chosen))
+        ok = jnp.any(elig)                            # else job is dropped
         return _Carry(
-            free=jnp.where(idx == pick, chosen, c.free),
-            dst=c.dst.at[it].set(pick.astype(jnp.int32)),
-            finish=c.finish.at[it].set(chosen))
+            free=jnp.where(ok & (idx == pick), chosen, c.free),
+            dst=c.dst.at[it].set(
+                jnp.where(ok, pick.astype(jnp.int32), -1)),
+            finish=c.finish.at[it].set(jnp.where(ok, chosen, jnp.inf)))
 
     return Loop(
         init=_Carry(free=jnp.zeros((s.n_dcs,), cell.submit.dtype),
@@ -78,19 +97,29 @@ def _prepare_netdc(*, use_pallas: bool, seeds=(0,), n_dcs: int = 4,
                    n_jobs: int = 64, dc_mips=None, locality_weight=1.0,
                    offline_dc=-1, link_bw: float = 10e9,
                    hop_latency_s: float = 0.02, mean_gap_s: float = 2.0,
-                   length_mi=(2e3, 2e4), payload_mb=(10.0, 200.0)):
+                   length_mi=(2e3, 2e4), payload_mb=(10.0, 200.0),
+                   fault_plan: Optional[FaultPlan] = None,
+                   retry: Optional[RetryPolicy] = None,
+                   timeout_s: float = math.inf):
     cells, b = build_cells(
         seeds=seeds, n_dcs=n_dcs, n_jobs=n_jobs, dc_mips=dc_mips,
         link_bw=link_bw, hop_latency_s=hop_latency_s,
         locality_weight=locality_weight, offline_dc=offline_dc,
-        mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb)
+        mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb,
+        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s)
     if b == 0:
-        return Done(empty_netdc_outputs(n_dcs))
+        return Done(empty_netdc_outputs(
+            n_dcs, faulted=fault_plan is not None
+            or math.isfinite(timeout_s)))
+    fx = cells[0].fx
     params = _Params(*(np.stack([np.asarray(getattr(c, f)) for c in cells])
                        for f in _Params._fields))
     # Every lane runs exactly n_jobs iterations: nothing to bucket.
     return BatchPlan(params, _Statics(int(n_jobs), int(n_dcs),
-                                      bool(use_pallas)),
+                                      bool(use_pallas),
+                                      timeout=(fx.timeout_s if fx
+                                               else math.inf),
+                                      guarded=fx is not None),
                      finalize=lambda out: summarize(out, cells))
 
 
@@ -106,5 +135,11 @@ simulate_netdc_batch = make_batch_entry(
     summary metrics (``makespan``, ``response_total_s``, ``remote_jobs``,
     ``remote_bytes``, ``xfer_total_s``, ``dc_jobs``, ``dc_busy_s``,
     ``busiest_dc``); ``with_report=True`` adds the ``SweepReport``.
+    A ``fault_plan`` (:class:`~repro.core.faults.FaultPlan` of ``node`` /
+    ``link`` / ``transient`` windows), ``retry``
+    (:class:`~repro.core.faults.RetryPolicy`) and ``timeout_s`` inject
+    DC outages, WAN degradation and per-job transient failures; faulted
+    runs add ``submit`` / ``served`` / ``dropped`` / ``retries`` outputs
+    (dropped jobs report ``dst = -1``, ``finish = inf``).
     Bit-exact vs the ``oo``/``legacy`` backends on every output.
     """)

@@ -38,9 +38,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .backend import scenario
+from .faults import FaultPlan
 from .power import (_broadcast_cells, _empty_outputs, _finalize,
                     _finalize_accumulators, _power_batch_oo,
-                    make_power_fleet, power_points)
+                    make_power_fleet, power_fault_table, power_points)
 from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
 
 
@@ -53,6 +54,11 @@ class _Statics:
     n_vms: int
     min_active: int
     use_pallas: bool
+    # Static fault gate: when set, ``params.fail_tbl`` carries the [K, H]
+    # host-crash table and the body opens with the degraded-capacity block.
+    # Default off so the unfaulted compiled graph is byte-identical to the
+    # pre-fault one (golden-fixture stability).
+    faults: bool = False
 
 
 class _Params(NamedTuple):
@@ -68,6 +74,8 @@ class _Params(NamedTuple):
     vm_mips: Any        # [] per-VM capacity (MIPS)
     cooldown_k: Any     # [] i32 intervals to wait after a scaling action
     init_active: Any    # [] i32 hosts powered on at t=0
+    fail_tbl: Any = None   # [K, H] bool host crashed during interval k
+    #                        (None — an empty pytree leaf — when unfaulted)
 
 
 class _Carry(NamedTuple):
@@ -103,18 +111,39 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
     seg_iota = jnp.arange(s.n_points - 1)
 
     def body(c: _Carry, it) -> _Carry:
+        # -- host crashes (start of interval; static gate) -----------------
+        # Applying the table every interval is equivalent to the OO side's
+        # changed-rows-only events: at an unchanged interval the block is
+        # the identity (scale-out/keep-alive never activate a failed host,
+        # so ``active & ~failed == active`` between changes).  Mirrors
+        # ``ElasticDatacenterManager.apply_fault_mask`` op for op.
+        if s.faults:
+            failed = params.fail_tbl[it]                # [H] bool
+            act = c.active & ~failed
+            keep = ops.argmin(params.eff, ~failed)      # keep-alive pick
+            act = jnp.where(jnp.any(act), act, act | (idx == keep))
+            fchanged = jnp.any(act ^ c.active)
+            cnt = jnp.where(fchanged, _even_counts(act, s.n_vms), c.count)
+            fmoved = jnp.sum(jnp.maximum(cnt - c.count, 0), dtype=jnp.int32)
+            avail = jnp.sum((~failed).astype(jnp.int32))
+            on_mask = ~act & ~failed
+        else:
+            act, cnt = c.active, c.count
+            avail = H
+            on_mask = ~act
+
         # -- demand, utilization, energy, SLA (current placement) ----------
         # Multiplies here feed only divides, min/max, and compares — never
         # an add/sub, so XLA cannot FMA-contract (module docstring).
         d = params.trace[it] * params.vm_mips           # per-VM MIPS demand
-        demand = c.count.astype(params.cap.dtype) * d   # [H]
+        demand = cnt.astype(params.cap.dtype) * d       # [H]
         util = jnp.minimum(demand / params.cap, 1.0)
         # Exact energy accounting: which table segment, how far into it
         # (repro.core.power.table_segment, vectorized; fmod is exact).
         x = util * (s.n_points - 1)
         seg = jnp.minimum(x.astype(jnp.int32), s.n_points - 2)
         frac = jnp.where(x >= s.n_points - 1, 1.0, jnp.fmod(x, 1.0))
-        hot = (seg[:, None] == seg_iota) & c.active[:, None]   # [H, P-1]
+        hot = (seg[:, None] == seg_iota) & act[:, None]        # [H, P-1]
         seg_count = c.seg_count + hot.astype(jnp.int32)
         seg_frac = c.seg_frac + jnp.where(hot, frac[:, None], 0.0)
         over = demand > params.cap
@@ -125,23 +154,26 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
                                  - params.cap)
 
         # -- autoscale decision (end of interval; shapes interval k+1) -----
-        n_act = jnp.sum(c.active.astype(jnp.int32))
+        n_act = jnp.sum(act.astype(jnp.int32))
         can = c.cooldown == 0
-        any_over = jnp.any(c.active & (util > params.up_thr))
-        all_under = jnp.max(jnp.where(c.active, util, -jnp.inf)) \
+        any_over = jnp.any(act & (util > params.up_thr))
+        all_under = jnp.max(jnp.where(act, util, -jnp.inf)) \
             < params.lo_thr
-        want_out = can & any_over & (n_act < H)
+        want_out = can & any_over & (n_act < avail)
         want_in = can & ~want_out & all_under & (n_act > s.min_active)
         # energy-aware picks: cheapest inactive host on, dearest active off
-        pick_on = ops.argmin(params.eff, ~c.active)
-        pick_off = ops.argmax(params.eff, c.active)
+        pick_on = ops.argmin(params.eff, on_mask)
+        pick_off = ops.argmax(params.eff, act)
         active1 = jnp.where(
-            want_out, c.active | (idx == pick_on),
-            jnp.where(want_in, c.active & (idx != pick_off), c.active))
+            want_out, act | (idx == pick_on),
+            jnp.where(want_in, act & (idx != pick_off), act))
         changed = want_out | want_in
-        count1 = jnp.where(changed, _even_counts(active1, s.n_vms), c.count)
-        moved = jnp.sum(jnp.maximum(count1 - c.count, 0), dtype=jnp.int32)
+        count1 = jnp.where(changed, _even_counts(active1, s.n_vms), cnt)
+        moved = jnp.sum(jnp.maximum(count1 - cnt, 0), dtype=jnp.int32)
         one = jnp.asarray(1, jnp.int32)
+        migrations = c.migrations + jnp.where(changed, moved, 0)
+        if s.faults:
+            migrations = migrations + fmoved    # i32 adds commute exactly
         return _Carry(
             count=count1,
             active=active1,
@@ -149,7 +181,7 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
                                jnp.maximum(c.cooldown - 1, 0)),
             seg_count=seg_count, seg_frac=seg_frac,
             over_count=over_count, unserved=unserved,
-            migrations=c.migrations + jnp.where(changed, moved, 0),
+            migrations=migrations,
             scale_out=c.scale_out + jnp.where(want_out, one, 0),
             scale_in=c.scale_in + jnp.where(want_in, one, 0))
 
@@ -190,7 +222,8 @@ def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,)
                    host_mips: float = 8000.0, vm_mips=1000.0,
                    up_thr=0.8, lo_thr=0.3, cooldown=3,
                    min_active: int = 1, init_active: Optional[int] = None,
-                   model_mix: str = "mixed", n_points: int = 11):
+                   model_mix: str = "mixed", n_points: int = 11,
+                   fault_plan: Optional[FaultPlan] = None):
     min_active = max(int(min_active), 1)
     init_active = n_hosts if init_active is None else int(init_active)
     if not 1 <= min_active <= n_hosts:
@@ -210,6 +243,7 @@ def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,)
         raise ValueError(
             f"vm_mips (max {np.max(axes['vm_mips'])}) must be ≤ host_mips "
             f"({host_mips}): a VM must fit a time-shared host")
+    fail_tbl = power_fault_table(fault_plan, n_hosts, n_samples, interval)
     if b == 0:
         return Done(_empty_outputs(n_hosts))
 
@@ -231,9 +265,11 @@ def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,)
         lo_thr=axes["lo_thr"].astype(np.float64),
         vm_mips=axes["vm_mips"].astype(np.float64),
         cooldown_k=axes["cooldown"].astype(np.int32),
-        init_active=np.full(b, init_active, np.int32))
+        init_active=np.full(b, init_active, np.int32),
+        fail_tbl=None if fail_tbl is None else bc(fail_tbl))
     statics = _Statics(int(n_hosts), int(n_points), int(n_samples),
-                       int(n_vms), min_active, bool(use_pallas))
+                       int(n_vms), min_active, bool(use_pallas),
+                       faults=fail_tbl is not None)
     # All lanes run exactly n_samples iterations — no divergence to bucket.
     return BatchPlan(
         params, statics,
@@ -254,6 +290,11 @@ simulate_power_batch = make_batch_entry(
     plus their datacenter totals, integer ``migrations`` /
     ``scale_out_events`` / ``scale_in_events`` / ``final_active`` — and
     with ``with_report=True`` returns ``(stats, SweepReport)``.
+    A ``fault_plan`` (:class:`~repro.core.faults.FaultPlan` of ``node``
+    windows) crashes hosts for the covered intervals: crashed hosts power
+    off, shed their VMs (counted as migrations) and are excluded from
+    scale-out until recovery — degraded-capacity autoscaling, bit-exact
+    vs the ``oo``/``legacy`` backends.
 
     Execution goes through :mod:`repro.core.sweep` (bounded chunks with
     donated buffers, device sharding) — bit-identical to the monolithic

@@ -285,6 +285,105 @@ def test_covers_every_dual_backend_batched_kind():
         f"differential coverage out of sync with registry: {dual ^ set(CASES)}"
 
 
+# -- faulted cells: same contracts under an injected FaultPlan -----------------
+# Extra parametrizations on top of CASES (the registry-sync guard above
+# compares against CASES alone).  Each generator reuses its clean
+# counterpart and layers a seeded fault schedule within the scenario's
+# documented bit-exactness domain.
+
+def _gen_netdc_faulted(rng):
+    from repro.core.faults import RetryPolicy, make_chaos_plan
+    params = _gen_netdc(rng)
+    t_max = params["n_jobs"] * params["mean_gap_s"]
+    plan = make_chaos_plan(int(rng.integers(0, 1000)), t_max,
+                           n_targets=params["n_dcs"],
+                           n_node_windows=2, n_link_windows=1,
+                           transient_prob=float(rng.uniform(0.1, 0.5)))
+    return dict(params, fault_plan=plan, timeout_s=float(t_max * 4),
+                retry=RetryPolicy(max_retries=2, base_delay_s=0.25,
+                                  backoff=2.0, jitter_frac=0.25,
+                                  budget_s=t_max))
+
+
+def _gen_llmserve_faulted(rng):
+    from repro.core.faults import RetryPolicy, make_chaos_plan
+    params = _gen_llmserve(rng)
+    params["n_regions"] = int(rng.integers(2, 5))   # region outages need >1
+    t_max = params["n_requests"] * params["mean_gap_s"]
+    plan = make_chaos_plan(int(rng.integers(0, 1000)), t_max,
+                           n_targets=params["n_machines"],
+                           n_regions=params["n_regions"],
+                           n_node_windows=2, n_link_windows=1,
+                           n_region_windows=1,
+                           transient_prob=float(rng.uniform(0.1, 0.5)))
+    return dict(params, fault_plan=plan, timeout_s=float(t_max * 4),
+                retry=RetryPolicy(max_retries=2, base_delay_s=0.25,
+                                  backoff=1.5, jitter_frac=0.1,
+                                  budget_s=t_max))
+
+
+def _gen_power_faulted(rng):
+    # Host-crash windows only (power's fault surface); single-target
+    # windows over 8 hosts can never fail the whole datacenter at once.
+    from repro.core.faults import make_chaos_plan
+    params = _gen_power(rng)
+    plan = make_chaos_plan(int(rng.integers(0, 1000)),
+                           params["n_samples"] * 300.0,
+                           n_targets=params["n_hosts"],
+                           n_node_windows=3, n_link_windows=0,
+                           transient_prob=0.0)
+    return dict(params, fault_plan=plan)
+
+
+def _gen_fleet_faulted(rng):
+    """Planned outages inside the deterministic bit-exact domain: no
+    spares, explicit targets, finite non-overlapping windows longer than
+    ``restart_s`` and separated by more than it."""
+    from repro.core.cluster import FleetConfig
+    from repro.core.faults import FaultEvent, FaultPlan
+    params = _gen_fleet(rng)
+    cfg = FleetConfig(n_nodes=8, n_spares=0, straggler_sigma=0.0,
+                      mtbf_hours_node=1e9, degrade_mtbf_hours=1e9,
+                      straggler_evict_factor=1e9, restart_s=5.0)
+    nodes = rng.choice(cfg.n_nodes, 2, replace=False)
+    t = float(rng.uniform(5.0, 30.0))
+    events = []
+    for nid in nodes:
+        dur = float(rng.uniform(3.0, 8.0)) * cfg.restart_s
+        events.append(FaultEvent("node", t, t + dur, target=int(nid)))
+        t += dur + cfg.restart_s * float(rng.uniform(1.5, 3.0))
+    return dict(params, cfg=cfg, fault_plan=FaultPlan(events))
+
+
+FAULTED_CASES = {
+    "fleet_batch": (_gen_fleet_faulted, _run_fleet, _cmp_fleet),
+    "power_batch": (_gen_power_faulted, _run_power, _cmp_power),
+    "netdc_batch": (_gen_netdc_faulted, _run_netdc, _cmp_netdc),
+    "llmserve_batch": (_gen_llmserve_faulted, _run_llmserve, _cmp_llmserve),
+}
+
+
+@pytest.mark.parametrize("trial", range(2))
+@pytest.mark.parametrize("kind", sorted(FAULTED_CASES))
+def test_differential_faulted(kind, trial):
+    gen, run, cmp = FAULTED_CASES[kind]
+    params = gen(np.random.default_rng(7919 * trial + sum(map(ord, kind))))
+    cmp(run("oo", params), run("vec", params))
+
+
+@pytest.mark.parametrize("kind", sorted(FAULTED_CASES))
+def test_differential_faulted_compact(kind):
+    """Compaction stays a pure schedule under fault injection too."""
+    gen, run, _ = FAULTED_CASES[kind]
+    params = gen(np.random.default_rng(sum(map(ord, kind))))
+    mono = run("vec", params)
+    compact = run("vec", dict(params, compact=True, chunk_size=2,
+                              segment_iters=5))
+    for k in sorted(set(mono) & set(compact)):
+        assert np.array_equal(np.asarray(mono[k]), np.asarray(compact[k])), \
+            f"{k}: compacting schedule changed bits under faults"
+
+
 # -- hypothesis-driven property layer ------------------------------------------
 
 if HAVE_HYPOTHESIS:

@@ -1,0 +1,479 @@
+"""Unit suite for the fault-injection layer and its resilience plumbing.
+
+Covers the pieces end to end *below* the scenario level (the faulted
+scenario contracts live in ``test_differential.py`` / ``test_golden.py``):
+:class:`FaultPlan` validation and half-open window semantics, the
+retry/backoff arithmetic, :func:`apply_transient` determinism,
+:class:`FaultInjector` event ordering, the engine watchdog, CEM
+non-finite hardening, ``run_sweep`` parameter validation, the
+quarantine acceptance contract (one NaN-poisoned lane must not kill a
+sweep), per-scenario fault-plan validation, and the soak harness.
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.faults import (FaultEvent, FaultInjector, FaultPlan,
+                               RetryPolicy, apply_transient, make_chaos_plan)
+
+
+# -- FaultPlan validation ------------------------------------------------------
+
+def test_plan_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown kind 'gamma_ray'"):
+        FaultPlan([FaultEvent("gamma_ray", 0.0, 1.0)])
+
+
+@pytest.mark.parametrize("t_start", [-1.0, math.nan, math.inf])
+def test_plan_rejects_bad_t_start(t_start):
+    with pytest.raises(ValueError, match="t_start must be finite"):
+        FaultPlan([FaultEvent("node", t_start, 10.0)])
+
+
+@pytest.mark.parametrize("t_end", [0.5, 1.0, math.nan])
+def test_plan_rejects_empty_window(t_end):
+    with pytest.raises(ValueError, match="t_end must be > t_start"):
+        FaultPlan([FaultEvent("node", 1.0, t_end)])
+
+
+def test_plan_rejects_link_speedup():
+    with pytest.raises(ValueError, match="must be >= 1"):
+        FaultPlan([FaultEvent("link", 0.0, 1.0, severity=0.5)])
+
+
+@pytest.mark.parametrize("sev", [-0.1, 1.5, math.nan])
+def test_plan_rejects_bad_transient_probability(sev):
+    with pytest.raises(ValueError, match=r"probability in \[0, 1\]"):
+        FaultPlan([FaultEvent("transient", 0.0, 1.0, severity=sev)])
+
+
+def test_check_targets_rejects_out_of_range():
+    plan = FaultPlan([FaultEvent("node", 0.0, 1.0, target=5)])
+    with pytest.raises(ValueError, match="targets host 5, but only 4"):
+        plan.check_targets("node", 4, "host")
+    plan.check_targets("node", 6, "host")          # in range: fine
+    FaultPlan([FaultEvent("node", 0.0, 1.0)]).check_targets(
+        "node", 2, "host")                         # -1 = all: fine
+
+
+# -- half-open window semantics (the cross-backend contract) -------------------
+
+def test_down_mask_half_open():
+    plan = FaultPlan([FaultEvent("node", 10.0, 20.0, target=1)])
+    t = np.array([9.999, 10.0, 15.0, 19.999, 20.0])
+    m = plan.down_mask("node", t, 3)
+    assert m.shape == (5, 3)
+    # down exactly at t_start, back up exactly at t_end; only target 1
+    assert m[:, 1].tolist() == [False, True, True, True, False]
+    assert not m[:, 0].any() and not m[:, 2].any()
+
+
+def test_down_mask_target_all():
+    plan = FaultPlan([FaultEvent("node", 1.0, 2.0)])        # target=-1
+    assert plan.down_mask("node", [1.5], 4).all()
+
+
+def test_degrade_factor_products_and_identity():
+    plan = FaultPlan([FaultEvent("link", 0.0, 10.0, severity=2.0),
+                      FaultEvent("link", 5.0, 15.0, severity=3.0, target=1)])
+    f = plan.degrade_factor(np.array([7.0, 12.0, 20.0]), 2)
+    assert f[0].tolist() == [2.0, 6.0]     # overlap multiplies on target 1
+    assert f[1].tolist() == [1.0, 3.0]
+    assert f[2].tolist() == [1.0, 1.0]     # no active window -> identity
+
+
+def test_transient_prob_max_over_windows():
+    plan = FaultPlan([FaultEvent("transient", 0.0, 10.0, severity=0.2),
+                      FaultEvent("transient", 5.0, 15.0, severity=0.7)])
+    p = plan.transient_prob(np.array([2.0, 7.0, 12.0, 20.0]))
+    assert p.tolist() == [0.2, 0.7, 0.7, 0.0]
+
+
+def test_empty_plan_queries():
+    plan = FaultPlan()
+    assert not plan.down_mask("node", [0.0, 1.0], 3).any()
+    assert (plan.degrade_factor([0.0], 3) == 1.0).all()
+    assert (plan.transient_prob([0.0, 5.0]) == 0.0).all()
+    assert len(plan) == 0 and not plan.has("node")
+
+
+# -- RetryPolicy backoff arithmetic --------------------------------------------
+
+def test_retry_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        RetryPolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="backoff"):
+        RetryPolicy(backoff=0.5)
+    with pytest.raises(ValueError, match="jitter_frac"):
+        RetryPolicy(jitter_frac=1.0)
+    with pytest.raises(ValueError, match="base_delay_s"):
+        RetryPolicy(base_delay_s=-0.1)
+
+
+def test_delays_exact_powers_without_jitter():
+    p = RetryPolicy(max_retries=4, base_delay_s=0.5, backoff=2.0)
+    d = p.delays(np.zeros((1, 4)))
+    assert d.tolist() == [[0.5, 1.0, 2.0, 4.0]]
+
+
+def test_delays_jitter_bounds():
+    p = RetryPolicy(max_retries=3, base_delay_s=1.0, backoff=3.0,
+                    jitter_frac=0.25)
+    rng = np.random.default_rng(0)
+    d = p.delays(rng.uniform(-1.0, 1.0, (64, 3)))
+    base = np.array([1.0, 3.0, 9.0])
+    assert (d >= base * 0.75).all() and (d <= base * 1.25).all()
+    assert (d > 0).all()
+
+
+def test_delays_rejects_wrong_draw_count():
+    with pytest.raises(ValueError, match="expected 2 jitter draws"):
+        RetryPolicy(max_retries=2).delays(np.zeros((4, 3)))
+
+
+# -- apply_transient ------------------------------------------------------------
+
+def test_apply_transient_no_faults_is_identity():
+    plan = FaultPlan()
+    submit = np.array([0.0, 1.0, 2.0])
+    out = apply_transient(plan, RetryPolicy(max_retries=3), submit, seed=7)
+    assert np.array_equal(out.eff_submit, submit)
+    assert out.attempts.tolist() == [1, 1, 1]
+    assert not out.gave_up.any()
+    assert (out.prob == 0.0).all()
+
+
+def test_apply_transient_certain_failure_gives_up():
+    plan = FaultPlan([FaultEvent("transient", 0.0, 10.0, severity=1.0)])
+    out = apply_transient(plan, RetryPolicy(max_retries=2),
+                          np.array([1.0, 5.0]), seed=3)
+    assert out.gave_up.all()
+    assert out.attempts.tolist() == [3, 3]        # 1 first try + 2 retries
+    assert np.array_equal(out.eff_submit, [1.0, 5.0])   # never executes
+
+
+def test_apply_transient_deterministic_and_backend_free():
+    plan = FaultPlan([FaultEvent("transient", 0.0, 100.0, severity=0.5)])
+    pol = RetryPolicy(max_retries=3, base_delay_s=0.5, jitter_frac=0.3)
+    submit = np.linspace(0.0, 90.0, 200)
+    a = apply_transient(plan, pol, submit, seed=42)
+    b = apply_transient(plan, pol, submit, seed=42)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    c = apply_transient(plan, pol, submit, seed=43)
+    assert not np.array_equal(a.attempts, c.attempts)
+    # retried-but-served requests carry their backoff delay
+    retried = (a.attempts > 1) & ~a.gave_up
+    assert retried.any()
+    assert (a.eff_submit[retried] > submit[retried]).all()
+
+
+def test_apply_transient_budget_cuts_retries():
+    plan = FaultPlan([FaultEvent("transient", 0.0, 10.0, severity=1.0)])
+    pol = RetryPolicy(max_retries=5, base_delay_s=10.0, backoff=2.0,
+                      budget_s=25.0)
+    out = apply_transient(plan, pol, np.zeros(4), seed=0)
+    # cumulative delays 0, 10, 30, ... -> only attempts 1 and 2 fit 25s
+    assert out.attempts.tolist() == [2, 2, 2, 2]
+    assert out.gave_up.all()
+
+
+# -- FaultInjector: event ordering in the OO engine ----------------------------
+
+def test_fault_injector_half_open_priority():
+    """A workload event at exactly t_start must see the fault, and one at
+    exactly t_end must see the recovery (priority=-1 beats same-time
+    workload events at priority 0)."""
+    from repro.core.engine import SimEntity, Simulation
+    from repro.core.events import Tag
+
+    down = {0: False}
+    seen = []
+
+    class Probe(SimEntity):
+        def start(self):
+            for t in (5.0, 7.0, 9.0):
+                self.sim.schedule(t, Tag.CLOUDLET_SUBMIT, self)
+
+        def process_event(self, ev):
+            seen.append((self.sim.clock, down[0]))
+
+    sim = Simulation()
+    Probe(sim, "probe")
+    FaultInjector(sim, [(0, 5.0, 9.0)],
+                  lambda tgt, is_down: down.__setitem__(tgt, is_down))
+    sim.run()
+    assert seen == [(5.0, True), (7.0, True), (9.0, False)]
+
+
+def test_fault_injector_no_recovery_for_infinite_window():
+    from repro.core.engine import Simulation
+    sim = Simulation()
+    flips = []
+    FaultInjector(sim, [(2, 1.0, math.inf)],
+                  lambda tgt, is_down: flips.append((tgt, is_down)))
+    sim.run()
+    assert flips == [(2, True)]
+
+
+# -- engine watchdog ------------------------------------------------------------
+
+@pytest.mark.parametrize("sim_cls", ["Simulation", "LegacySimulation"])
+def test_watchdog_raises_on_pathological_schedule(sim_cls):
+    from repro.core.engine import SimEntity, Simulation, SimulationStalled
+    from repro.core.engine_oo import LegacySimulation
+    from repro.core.events import Tag
+
+    class PingPong(SimEntity):
+        def start(self):
+            self.sim.schedule(1.0, Tag.CLOUDLET_SUBMIT, self)
+
+        def process_event(self, ev):
+            self.sim.schedule(self.sim.clock, Tag.CLOUDLET_SUBMIT, self)
+
+    sim = {"Simulation": Simulation,
+           "LegacySimulation": LegacySimulation}[sim_cls](max_events=100)
+    PingPong(sim, "pathological")
+    with pytest.raises(SimulationStalled, match="max_events=100"):
+        sim.run()
+
+
+def test_watchdog_default_untouched_by_normal_runs():
+    from repro.core.backend import run_scenario
+    out = run_scenario("netdc_batch", backend="oo", seeds=[0], n_dcs=3,
+                       n_jobs=8)
+    assert int(np.sum(out["dc_jobs"])) == 8        # every job dispatched
+
+
+# -- CEM non-finite hardening ---------------------------------------------------
+
+def test_cem_tolerates_partial_nan_generations():
+    from repro.core.search import cem_minimize
+
+    def objective(pop):
+        x = pop["x"]
+        s = (x - 0.3) ** 2
+        return np.where(x > 0.8, np.nan, s)      # poison the upper tail
+
+    res = cem_minimize(objective, {"x": (0.0, 1.0)}, pop_size=32,
+                       n_generations=8, seed=5)
+    assert math.isfinite(res.best_score)
+    assert abs(float(res.best["x"]) - 0.3) < 0.1
+    assert all(math.isfinite(h["best"]) for h in res.history)
+
+
+def test_cem_raises_when_every_member_is_non_finite():
+    from repro.core.search import cem_minimize
+    with pytest.raises(RuntimeError, match="non-finite"):
+        cem_minimize(lambda pop: np.full_like(pop["x"], np.nan),
+                     {"x": (0.0, 1.0)}, pop_size=8, n_generations=3)
+
+
+# -- run_sweep parameter validation ---------------------------------------------
+
+def test_validate_rejects_nan_param():
+    from repro.core.backend import validate_scenario_params
+    with pytest.raises(ValueError,
+                       match=r"params\['mean_gap_s'\]\[1\] = nan"):
+        validate_scenario_params(
+            "netdc_batch", dict(mean_gap_s=np.array([1.0, np.nan])))
+
+
+def test_validate_rejects_nonpositive_rate():
+    from repro.core.backend import validate_scenario_params
+    with pytest.raises(ValueError, match="must be > 0"):
+        validate_scenario_params("netdc_batch", dict(mean_gap_s=0.0))
+
+
+def test_validate_inf_sentinels_and_objects_pass():
+    from repro.core.backend import validate_scenario_params
+    validate_scenario_params("netdc_batch", dict(
+        timeout_s=math.inf, fault_plan=FaultPlan(), retry=RetryPolicy()))
+    with pytest.raises(ValueError, match="timeout_s"):
+        validate_scenario_params("netdc_batch", dict(timeout_s=math.nan))
+
+
+def test_run_sweep_validates_at_entry():
+    from repro.core.backend import run_sweep
+    with pytest.raises(ValueError, match=r"run_sweep\('netdc_batch'\)"):
+        run_sweep("netdc_batch", dict(seeds=[0], mean_gap_s=np.nan),
+                  backend="vec")
+
+
+# -- quarantine acceptance: one poisoned lane must not kill the sweep ----------
+
+def _counting_step(vals, iters_needed):
+    """Synthetic segment step: lane i needs ``iters_needed[i]`` iterations,
+    accumulating ``vals[i]`` per iteration (NaN vals poison the state)."""
+    budget = 4
+
+    def step(lane_params, state, it, fresh):
+        v, need = lane_params
+        state = np.where(fresh, 0.0, state)
+        it = np.where(fresh, 0, it)
+        j = np.minimum(need.astype(np.int64) - it, budget)
+        j = np.maximum(j, 0)
+        state = state + v * j
+        it = it + j
+        done = it >= need
+        return state, it, done, j, {"total": state.copy()}
+
+    return step
+
+
+def test_quarantine_retires_nan_lane():
+    from repro.core.sweep import compact_sweep
+    vals = np.ones(8)
+    vals[3] = np.nan                       # the poisoned lane
+    need = np.full(8, 10)
+    out, rep = compact_sweep(
+        _counting_step(vals, need), (vals, need), lanes=4,
+        state_prototype=np.zeros(()), quarantine=True)
+    assert rep.quarantined == 1
+    assert rep.quarantined_cells.tolist() == [3]
+    healthy = np.delete(np.arange(8), 3)
+    assert np.array_equal(out["total"][healthy], np.full(7, 10.0))
+    assert np.isnan(out["total"][3])       # NaN-filled, not fabricated
+
+
+def test_quarantine_retires_never_finishing_nan_lane():
+    """NaN *state* (the lane would spin forever) is quarantined too —
+    retirement must not wait for ``done``."""
+    from repro.core.sweep import compact_sweep
+    vals = np.ones(6)
+    vals[0] = np.nan
+    need = np.full(6, 10)
+    need[0] = 10 ** 9                      # would never finish
+    out, rep = compact_sweep(
+        _counting_step(vals, need), (vals, need), lanes=3,
+        state_prototype=np.zeros(()), quarantine=True, max_segments=50)
+    assert rep.quarantined == 1 and rep.quarantined_cells.tolist() == [0]
+    assert np.array_equal(out["total"][1:], np.full(5, 10.0))
+
+
+def test_no_quarantine_propagates_nan():
+    from repro.core.sweep import compact_sweep
+    vals = np.ones(4)
+    vals[2] = np.nan
+    need = np.full(4, 8)
+    out, rep = compact_sweep(
+        _counting_step(vals, need), (vals, need), lanes=2,
+        state_prototype=np.zeros(()))
+    assert rep.quarantined == 0
+    assert np.isnan(out["total"][2])
+
+
+# -- per-scenario plan validation ----------------------------------------------
+
+def test_power_fault_table_contract():
+    from repro.core.power import power_fault_table
+    assert power_fault_table(None, 4, 8, 300.0) is None
+    plan = FaultPlan([FaultEvent("node", 300.0, 900.0, target=2)])
+    tbl = power_fault_table(plan, 4, 8, 300.0)
+    assert tbl.shape == (8, 4)
+    # half-open at decision times k*300: down at k=1,2, up at k=3
+    assert tbl[:, 2].tolist() == [False, True, True, False] + [False] * 4
+    with pytest.raises(ValueError, match="only 'node' fault windows"):
+        power_fault_table(FaultPlan([FaultEvent("link", 0.0, 1.0)]),
+                          4, 8, 300.0)
+    with pytest.raises(ValueError, match="fails all 4 hosts"):
+        power_fault_table(FaultPlan([FaultEvent("node", 0.0, 1.0)]),
+                          4, 8, 300.0)
+
+
+def test_fleet_fault_windows_contract():
+    from repro.core.cluster import fleet_fault_windows
+    assert fleet_fault_windows(None, 8) == ()
+    plan = FaultPlan([FaultEvent("node", 50.0, 100.0, target=3),
+                      FaultEvent("node", 10.0, 40.0, target=1)])
+    w = fleet_fault_windows(plan, 8)
+    assert w == ((1, 10.0, 40.0), (3, 50.0, 100.0))     # sorted
+    with pytest.raises(ValueError, match="only 'node' fault windows"):
+        fleet_fault_windows(
+            FaultPlan([FaultEvent("transient", 0.0, 1.0, severity=0.5)]), 8)
+    with pytest.raises(ValueError, match="explicit node target"):
+        fleet_fault_windows(FaultPlan([FaultEvent("node", 0.0, 1.0)]), 8)
+    with pytest.raises(ValueError, match="finite t_end"):
+        fleet_fault_windows(
+            FaultPlan([FaultEvent("node", 0.0, target=1)]), 8)
+    with pytest.raises(ValueError, match="overlap"):
+        fleet_fault_windows(FaultPlan([
+            FaultEvent("node", 0.0, 10.0, target=1),
+            FaultEvent("node", 5.0, 15.0, target=1)]), 8)
+
+
+def test_netdc_rejects_region_plans():
+    from repro.core.backend import run_scenario
+    plan = FaultPlan([FaultEvent("region", 0.0, 1.0, target=0)])
+    with pytest.raises(ValueError, match="region"):
+        run_scenario("netdc_batch", backend="oo", seeds=[0], n_dcs=3,
+                     n_jobs=4, fault_plan=plan)
+
+
+def test_llmserve_rejects_per_endpoint_link_plans():
+    from repro.core.backend import run_scenario
+    plan = FaultPlan([FaultEvent("link", 0.0, 1.0, target=2)])
+    with pytest.raises(ValueError, match="link"):
+        run_scenario("llmserve_batch", backend="oo", seeds=[0],
+                     n_machines=4, n_regions=2, n_stages=1, n_requests=4,
+                     fault_plan=plan)
+
+
+# -- chaos-plan generator -------------------------------------------------------
+
+def test_make_chaos_plan_seeded_and_bounded():
+    a = make_chaos_plan(7, 100.0, n_targets=4, n_node_windows=3,
+                        n_link_windows=2, transient_prob=0.3)
+    b = make_chaos_plan(7, 100.0, n_targets=4, n_node_windows=3,
+                        n_link_windows=2, transient_prob=0.3)
+    assert a.events == b.events                    # seeded determinism
+    kinds = [e.kind for e in a.events]
+    assert kinds.count("node") == 3 and kinds.count("link") == 2
+    assert kinds.count("transient") == 1
+    assert (a.t_start >= 0.0).all() and (a.t_end <= 100.0 + 1e-9).all()
+    tgt = a.select("node")[0]
+    assert ((tgt >= 0) & (tgt < 4)).all()
+    c = make_chaos_plan(8, 100.0, n_targets=4)
+    assert c.events != a.events
+
+
+# -- soak harness ---------------------------------------------------------------
+
+def test_run_soak_smoke(tmp_path):
+    from repro.core.soak import run_soak
+    snap = tmp_path / "soak.json"
+    rep = run_soak(rounds=2, cells_per_round=4, n_jobs=12, chunk_size=2,
+                   seed0=3, snapshot_path=snap)
+    assert [r.chaos for r in rep.rounds] == [False, True]
+    t = rep.totals()
+    assert t["rounds"] == 2 and t["chaos_rounds"] == 1
+    assert t["cells"] == 8 and t["events"] > 0
+    assert t["served"] + t["dropped"] == 2 * 4 * 12
+    assert t["clean_quarantined"] == 0
+    assert t["recovery_windows"] == 2              # default node windows
+    # every round streamed all its cells through on_chunk
+    assert all(r.streamed_cells == r.cells for r in rep.rounds)
+    # chaos rounds took targets down for part of the horizon
+    assert 0.0 < rep.rounds[1].active_fraction < 1.0
+    assert rep.rounds[0].active_fraction == 1.0
+    # the snapshot is strict JSON (NaN encoded as null) and round-trips
+    stored = json.loads(snap.read_text())
+    assert stored["report"] == "soak_chaos"
+    assert stored["totals"]["cells"] == 8
+    for r in stored["rounds"][1]["recovery_s"]:
+        assert r is None or r >= 0.0
+
+
+def test_recovery_times_metric():
+    from repro.core.soak import recovery_times
+    plan = FaultPlan([FaultEvent("node", 0.0, 10.0, target=1),
+                      FaultEvent("node", 0.0, 50.0, target=0)])
+    outputs = dict(submit=np.array([5.0, 12.0, 30.0, 60.0]),
+                   dst=np.array([1, 1, -1, 2]))
+    rec = recovery_times(plan, outputs)
+    # window on node 1 ends at 10 -> first served on node 1 after: t=12
+    assert rec[0] == pytest.approx(2.0)
+    # node 0 never serves after 50 -> unmeasured
+    assert math.isnan(rec[1])

@@ -125,8 +125,32 @@ def _llmserve_case():
                 outputs={k: np.asarray(v).tolist() for k, v in out.items()})
 
 
+def _netdc_chaos_case():
+    # The faulted path frozen end to end: a fixed chaos plan (node crash,
+    # WAN degradation, transient failures) + retry policy + timeout, run
+    # on the OO broker (the vec engine must match it bit-exactly — the
+    # differential suite holds that line; this fixture pins the numbers).
+    from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
+    plan = FaultPlan([
+        FaultEvent("node", 10.0, 30.0, target=1),
+        FaultEvent("node", 40.0, 55.0, target=0),
+        FaultEvent("link", 20.0, 50.0, severity=3.0),
+        FaultEvent("transient", 0.0, 64.0, severity=0.4),
+    ], seed=11)
+    retry = RetryPolicy(max_retries=2, base_delay_s=0.5, backoff=2.0,
+                        jitter_frac=0.25, budget_s=60.0)
+    out = run_scenario(
+        "netdc_batch", backend="oo", seeds=[0, 1, 2], n_dcs=4, n_jobs=32,
+        mean_gap_s=2.0, fault_plan=plan, retry=retry, timeout_s=240.0)
+    return dict(config=dict(n_dcs=4, n_jobs=32, seeds=3, mean_gap_s=2.0,
+                            timeout_s=240.0, plan="2 node + link + transient",
+                            retry="2x exp backoff, 25% jitter, 60s budget"),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
 CASES = {
     "fleet_batch": _fleet_case,
+    "netdc_chaos": _netdc_chaos_case,
     "netdc_batch": _netdc_case,
     "llmserve_batch": _llmserve_case,
     "workflow_batch": _workflow_case,
