@@ -16,6 +16,7 @@ Benchmarks (paper artifact → module):
   beyond    → power_sweep        (elastic-datacenter energy/SLA sweep vs OO loop → BENCH_power.json)
   beyond    → netdc_sweep        (multi-DC routing sweep vs OO loop → BENCH_netdc.json)
   beyond    → llmserve_sweep     (geo LLM-serving sweep vs OO loop → BENCH_llmserve.json)
+  beyond    → storage_sweep      (replicated-store sweep + trace replay vs OO loop → BENCH_storage.json)
   beyond    → compaction_sweep   (compacting lane scheduler vs bucketing → BENCH_compaction.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
@@ -44,7 +45,8 @@ def main() -> None:
 
     from . import (batch_sweep, case_study, cluster_sim, compaction_sweep,
                    consolidation, engine_micro, llmserve_sweep, netdc_sweep,
-                   power_sweep, sweep_runner, vec_speedup, workflow_sweep)
+                   power_sweep, storage_sweep, sweep_runner, vec_speedup,
+                   workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -57,6 +59,7 @@ def main() -> None:
         "power_sweep": power_sweep.run,
         "netdc_sweep": netdc_sweep.run,
         "llmserve_sweep": llmserve_sweep.run,
+        "storage_sweep": storage_sweep.run,
         "compaction_sweep": compaction_sweep.run,
     }
     try:

@@ -1,0 +1,150 @@
+"""storage benchmark: the replicated-object-store sweep, OO broker vs vec.
+
+The workload is the ISSUE-9 acceptance scenario: a 256-lane
+seed × placement-weight × node-outage sweep of batched replicated-object
+placement (``storage_batch``, 2-way replication committing at quorum 2)
+over heterogeneous per-node write bandwidths.  The OO backend runs one
+event-driven broker simulation per cell (``storage.StorageBroker`` inside
+a Simulation); the vec backend (``core.vec_storage``) unrolls the replica
+and fault-window loops into a single jit-compiled ``lax.while_loop``
+under ``vmap``, routed through the sweep execution layer.  Both produce
+**bit-identical** outputs (asserted below — the benchmark doubles as an
+exactness check).
+
+A trace-replay leg rides along: the committed sample stream
+(``tests/data/sample_trace.jsonl``) is parsed fresh and replayed on both
+backends via :func:`repro.core.trace.params_from_trace`, asserting the
+replay is bit-identical across parses and across backends — the same
+contract ``tests/test_trace.py`` holds, exercised here on every perf run.
+
+``speedup_vs_oo`` is the tracked figure of merit (``check_regression.py``
+gates it against ``benchmarks/baselines/storage{,_quick}.json``).
+
+Writes ``BENCH_storage.json`` at the repo root; emits the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from ._util import emit, report_fields
+
+_ROOT = pathlib.Path(__file__).resolve().parents[1]
+OUT_PATH = _ROOT / "BENCH_storage.json"
+TRACE_PATH = _ROOT / "tests" / "data" / "sample_trace.jsonl"
+
+
+def _grid(b: int):
+    """seed × placement-weight × single-node-outage cells."""
+    w = np.tile([1.0, 1.5, 2.5, 1.0], (b + 3) // 4)[:b]
+    off = np.tile([-1, -1, -1, 2], (b + 3) // 4)[:b]
+    return np.arange(b), w, off
+
+
+def _run(backend: str, seeds, w, off, n_objects: int, with_report=False):
+    from repro.core.backend import run_scenario, run_sweep
+    params = dict(seeds=seeds, n_nodes=8, n_objects=n_objects,
+                  n_replicas=2, quorum=2, placement_weight=w,
+                  offline_node=off)
+    if with_report:          # typed sweep API → ScenarioResult
+        return run_sweep("storage_batch", params, backend=backend)
+    return run_scenario("storage_batch", backend=backend, **params)
+
+
+def _replay_trace() -> dict:
+    """Replay the committed sample stream on both backends, twice each."""
+    from repro.core.backend import run_sweep
+    from repro.core.trace import load_trace, params_from_trace
+
+    def once(backend):
+        t0 = time.perf_counter()
+        out = run_sweep(
+            "storage_batch",
+            params_from_trace("storage_batch", load_trace(TRACE_PATH),
+                              n_replicas=2, quorum=2),
+            backend=backend).outputs
+        return out, time.perf_counter() - t0
+
+    runs = {b: [once(b) for _ in range(2)] for b in ("oo", "vec")}
+    ref = runs["oo"][0][0]
+    for b, pair in runs.items():
+        for out, _ in pair:
+            for k in ref:
+                assert np.array_equal(np.asarray(ref[k]),
+                                      np.asarray(out[k]), equal_nan=True), \
+                    f"trace replay drifted on {b}/{k}"
+    return dict(trace=TRACE_PATH.name,
+                n_objects=int(np.asarray(ref["finish"]).shape[-1]),
+                replays_bit_identical=True,
+                oo_wall_s=round(min(w for _, w in runs["oo"]), 4),
+                vec_wall_s=round(min(w for _, w in runs["vec"]), 4))
+
+
+def run(quick: bool = False) -> dict:
+    b = 256
+    n_objects = 48 if quick else 160
+    seeds, w, off = _grid(b)
+
+    # OO reference: best-of-2 (warm the lazy registry first).
+    _run("oo", seeds[:1], w[:1], off[:1], 4)
+    oo_wall, oo = float("inf"), None
+    for _ in range(2):
+        t0 = time.perf_counter()
+        oo = _run("oo", seeds, w, off, n_objects)
+        oo_wall = min(oo_wall, time.perf_counter() - t0)
+
+    # vec: compile once, then best-of-3 warm walls.
+    t0 = time.perf_counter()
+    _run("vec", seeds + 1, w, off, n_objects)
+    cold = time.perf_counter() - t0
+    vec_wall, vec, report = float("inf"), None, None
+    for _ in range(3):
+        t0 = time.perf_counter()
+        vec, report = _run("vec", seeds, w, off, n_objects,
+                           with_report=True)
+        vec_wall = min(vec_wall, time.perf_counter() - t0)
+    compile_s = max(cold - vec_wall, 0.0)
+
+    # The vec engine must never change a bit vs the OO reference.
+    for k in oo:
+        assert np.array_equal(np.asarray(oo[k]), np.asarray(vec[k]),
+                              equal_nan=True), \
+            f"vec storage engine changed {k!r} vs OO"
+
+    replay = _replay_trace()
+    record = dict(
+        benchmark="storage_sweep",
+        config=dict(cells=b, n_nodes=8, n_objects=n_objects,
+                    n_replicas=2, quorum=2, quick=quick,
+                    sweep="seed × placement_weight × offline_node"),
+        oo=dict(wall_s=round(oo_wall, 4),
+                makespan_mean_s=round(float(oo["makespan"].mean()), 3),
+                replicas_ok_total=int(oo["replicas_ok"].sum())),
+        vec=dict(
+            wall_s=round(vec_wall, 4), compile_s=round(compile_s, 4),
+            active_lane_fraction=(round(report.active_lane_fraction, 4)
+                                  if report.active_lane_fraction else None),
+            bit_exact_vs_oo=True,
+            speedup_vs_oo=round(oo_wall / vec_wall, 2),
+            **report_fields(report)),
+        trace_replay=replay,
+    )
+    emit("storage_sweep/oo_loop", oo_wall / b * 1e6,
+         f"wall_s={oo_wall:.2f};makespan_mean={oo['makespan'].mean():.1f}s")
+    emit("storage_sweep/vec", vec_wall / b * 1e6,
+         f"wall_s={vec_wall:.3f};compile_s={compile_s:.2f};"
+         f"speedup_vs_oo={oo_wall / vec_wall:.1f}x;bit_exact=True")
+    emit("storage_sweep/trace_replay", 0.0,
+         f"trace={replay['trace']};objects={replay['n_objects']};"
+         f"bit_identical=True")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("storage_sweep/record", 0.0, f"written={OUT_PATH.name};"
+         f"vec_speedup={record['vec']['speedup_vs_oo']}x")
+    return record
+
+
+if __name__ == "__main__":
+    run()

@@ -154,6 +154,8 @@ _SCENARIO_MODULES: Tuple[str, ...] = (
     "repro.core.vec_netdc",
     "repro.core.llmserve",
     "repro.core.vec_llmserve",
+    "repro.core.storage",
+    "repro.core.vec_storage",
 )
 _loaded = False
 
@@ -292,6 +294,7 @@ _POSITIVE_PARAMS = frozenset({
 _NONNEGATIVE_PARAMS = frozenset({
     "hop_latency_s", "slo_ttft_s", "kv_penalty_s", "payload_mb",
     "locality_weight", "up_thr", "lo_thr", "cooldown", "offline_frac",
+    "demand", "placement_weight", "repair_bias_s",
 })
 # float params where +inf is a legitimate sentinel (NaN never is).
 _INF_OK = frozenset({"timeout_s", "budget_s"})

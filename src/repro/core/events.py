@@ -50,6 +50,9 @@ class Tag(enum.Enum):
     # LLM serving (request-level broker)
     REQUEST_SUBMIT = enum.auto()
     REQUEST_RETURN = enum.auto()
+    # Replicated object store (storage broker)
+    OBJECT_PUT = enum.auto()
+    OBJECT_COMMIT = enum.auto()
     # Cluster (ML-fleet) layer
     NODE_FAILURE = enum.auto()
     NODE_RECOVER = enum.auto()

@@ -197,12 +197,15 @@ def build_cell(seed: int, placement: np.ndarray,
                kv_penalty_s: float, prompt_tokens, decode_tokens,
                fault_plan: Optional[FaultPlan] = None,
                retry: Optional[RetryPolicy] = None,
-               timeout_s: float = math.inf) -> LLMServeCell:
-    """Workload + routing tables for one (seed, placement, axes) cell."""
-    wl = llmserve_workload(
+               timeout_s: float = math.inf,
+               workload: Optional[Dict[str, Any]] = None) -> LLMServeCell:
+    """Workload + routing tables for one (seed, placement, axes) cell.
+    An injected ``workload`` (a validated trace-replay stream) replaces
+    the seeded feeders — every cell then shares the recorded stream."""
+    wl = (dict(workload) if workload is not None else llmserve_workload(
         int(seed), n_requests, n_regions,
         mean_gap_s=float(mean_gap_s), offline_frac=offline_frac,
-        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens)
+        prompt_tokens=prompt_tokens, decode_tokens=decode_tokens))
     faulted = fault_plan is not None or math.isfinite(timeout_s)
     gave_up = attempts = perm = None
     plan = fault_plan if fault_plan is not None else FaultPlan()
@@ -411,7 +414,7 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
                 decode_tokens=(16, 512),
                 fault_plan: Optional[FaultPlan] = None,
                 retry: Optional[RetryPolicy] = None,
-                timeout_s: float = math.inf):
+                timeout_s: float = math.inf, workload=None):
     """Validated per-cell table construction — the shared front half of
     both backends' batch handlers.
 
@@ -419,7 +422,18 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
     ``offline_region`` broadcast to the batch; ``placement`` is one
     ``[P, S]`` machine-id layout shared by every cell or a batched
     ``[B, P, S]`` (one layout per cell — the placement-search grid).
+    An injected ``workload`` replaces the seeded request feeders.
     """
+    if workload is not None:
+        from .trace import check_workload
+        workload, n_requests = check_workload(
+            "llmserve_batch", workload,
+            dict(submit=np.float64, src=np.int32, prompt_tok=np.int64,
+                 decode_tok=np.int64, online=bool), n_targets=n_regions)
+        if np.any(workload["prompt_tok"] < 1) or \
+                np.any(workload["decode_tok"] < 1):
+            raise ValueError("llmserve_batch: workload token budgets "
+                             "must be >= 1")
     if n_requests < 1 or n_regions < 1 or n_stages < 1:
         raise ValueError(
             "llmserve_batch needs n_requests ≥ 1, n_regions ≥ 1 and "
@@ -485,7 +499,8 @@ def build_cells(*, seeds, n_machines: int = 6, n_regions: int = 3,
         offline_region=int(offs[i]), offline_frac=float(offline_frac),
         slo_ttft_s=float(slo_ttft_s), kv_penalty_s=float(kv_penalty_s),
         prompt_tokens=prompt_tokens, decode_tokens=decode_tokens,
-        fault_plan=fault_plan, retry=retry, timeout_s=float(timeout_s))
+        fault_plan=fault_plan, retry=retry, timeout_s=float(timeout_s),
+        workload=workload)
         for i in range(b)]
     return cells, b
 
@@ -586,7 +601,7 @@ def _llmserve_batch_oo(backend: SimBackend, *, seeds=(0,),
                        prompt_tokens=(64, 1024), decode_tokens=(16, 512),
                        fault_plan: Optional[FaultPlan] = None,
                        retry: Optional[RetryPolicy] = None,
-                       timeout_s: float = np.inf,
+                       timeout_s: float = np.inf, workload=None,
                        chunk_size: Optional[int] = None,
                        with_report: bool = False, **_ignored):
     """Reference semantics for ``llmserve_batch``: one event-driven broker
@@ -603,7 +618,7 @@ def _llmserve_batch_oo(backend: SimBackend, *, seeds=(0,),
         slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
         hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
         decode_tokens=decode_tokens, fault_plan=fault_plan, retry=retry,
-        timeout_s=timeout_s)
+        timeout_s=timeout_s, workload=workload)
     if b == 0:
         out = empty_llmserve_outputs(
             n_machines, faulted=fault_plan is not None

@@ -115,11 +115,15 @@ def build_cell(seed: int, n_dcs: int, n_jobs: int, dc_mips: np.ndarray,
                offline_dc: int, *, mean_gap_s: float, length_mi,
                payload_mb, fault_plan: Optional[FaultPlan] = None,
                retry: Optional[RetryPolicy] = None,
-               timeout_s: float = math.inf) -> NetdcCell:
-    """Workload + routing tables for one (seed, weight, outage) cell."""
-    wl = netdc_workload(random.Random(int(seed)), n_jobs, n_dcs,
-                        mean_gap_s=mean_gap_s, length_mi=length_mi,
-                        payload_mb=payload_mb)
+               timeout_s: float = math.inf,
+               workload: Optional[Dict[str, Any]] = None) -> NetdcCell:
+    """Workload + routing tables for one (seed, weight, outage) cell.
+    An injected ``workload`` (a validated trace-replay stream) replaces
+    the seeded generator — every cell then shares the recorded stream."""
+    wl = (workload if workload is not None else
+          netdc_workload(random.Random(int(seed)), n_jobs, n_dcs,
+                         mean_gap_s=mean_gap_s, length_mi=length_mi,
+                         payload_mb=payload_mb))
     online0 = np.ones(n_dcs, bool)
     if offline_dc >= 0:
         online0[offline_dc] = False
@@ -237,9 +241,18 @@ def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
                 mean_gap_s: float, length_mi, payload_mb,
                 fault_plan: Optional[FaultPlan] = None,
                 retry: Optional[RetryPolicy] = None,
-                timeout_s: float = math.inf):
+                timeout_s: float = math.inf, workload=None):
     """Validated per-cell table construction — the shared front half of
     both backends' batch handlers."""
+    if workload is not None:
+        from .trace import check_workload
+        workload, n_jobs = check_workload(
+            "netdc_batch", workload,
+            dict(submit=np.float64, src=np.int32, length=np.float64,
+                 payload=np.float64), n_targets=n_dcs)
+        if np.any(workload["length"] <= 0) or np.any(workload["payload"] < 0):
+            raise ValueError("netdc_batch: workload lengths must be > 0 "
+                             "and payloads >= 0")
     if n_jobs < 1 or n_dcs < 1:
         raise ValueError("netdc_batch needs n_jobs ≥ 1 and n_dcs ≥ 1")
     dc_mips = (default_dc_mips(n_dcs) if dc_mips is None
@@ -269,7 +282,8 @@ def build_cells(*, seeds, n_dcs: int, n_jobs: int, dc_mips, link_bw: float,
                         float(weights[i]), int(offs[i]),
                         mean_gap_s=mean_gap_s, length_mi=length_mi,
                         payload_mb=payload_mb, fault_plan=fault_plan,
-                        retry=retry, timeout_s=timeout_s)
+                        retry=retry, timeout_s=timeout_s,
+                        workload=workload)
              for i in range(b)]
     return cells, b
 
@@ -357,7 +371,7 @@ def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
                     payload_mb=(10.0, 200.0),
                     fault_plan: Optional[FaultPlan] = None,
                     retry: Optional[RetryPolicy] = None,
-                    timeout_s: float = np.inf,
+                    timeout_s: float = np.inf, workload=None,
                     chunk_size: Optional[int] = None,
                     with_report: bool = False, **_ignored):
     """Reference semantics for ``netdc_batch``: one event-driven broker
@@ -370,7 +384,8 @@ def _netdc_batch_oo(backend: SimBackend, *, seeds=(0,), n_dcs: int = 4,
         link_bw=link_bw, hop_latency_s=hop_latency_s,
         locality_weight=locality_weight, offline_dc=offline_dc,
         mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb,
-        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s)
+        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s,
+        workload=workload)
     if b == 0:
         out = empty_netdc_outputs(
             n_dcs, faulted=fault_plan is not None

@@ -758,19 +758,37 @@ class ElasticDatacenterManager:
             iterations=np.int32(len(self.trace)))
 
 
+def check_demand(demand) -> np.ndarray:
+    """Validate an injected demand curve (a trace-replay
+    :func:`repro.core.trace.demand_curve` product or a hand-built array):
+    1-D, finite, in [0, 1].  Returns the canonical f64 array whose values
+    both backends consume verbatim (bit-exactness)."""
+    d = np.asarray(demand, np.float64)
+    if d.ndim != 1 or d.shape[0] < 1:
+        raise ValueError(f"power_batch: demand must be a non-empty 1-D "
+                         f"utilization curve, got shape {d.shape}")
+    if not np.all(np.isfinite(d)) or float(d.min()) < 0.0 \
+            or float(d.max()) > 1.0:
+        raise ValueError("power_batch: demand values must be finite "
+                         "utilizations in [0, 1]")
+    return d
+
+
 def make_elastic_scenario(n_hosts: int, n_vms: int, *, seed: int,
                           n_samples: int, host_mips: float, vm_mips: float,
-                          model_mix: str = "mixed"
+                          model_mix: str = "mixed", demand=None
                           ) -> Tuple[List[PowerHost], List[Vm], List[float]]:
     """Hosts (uniform capacity, mixed power models), identical VMs, and the
-    cell's demand trace — shared verbatim by the OO and vec backends."""
+    cell's demand trace — shared verbatim by the OO and vec backends.  An
+    injected ``demand`` curve (trace replay) supersedes the seeded one."""
     models = make_power_fleet(n_hosts, model_mix)
     hosts = [PowerHost(num_pes=1, mips=host_mips, ram=1e12, bw=1e15,
                        guest_scheduler="time", power_model=m)
              for m in models]
     vms = [Vm(CloudletSchedulerTimeShared(), num_pes=1, mips=vm_mips,
               ram=1.0, bw=1.0) for _ in range(n_vms)]
-    trace = elastic_demand_trace(random.Random(seed), n_samples)
+    trace = ([float(x) for x in demand] if demand is not None
+             else elastic_demand_trace(random.Random(seed), n_samples))
     return hosts, vms, trace
 
 
@@ -914,10 +932,12 @@ def _run_elastic_cell(backend, *, seed: int, n_hosts: int,
                       host_mips: float, vm_mips: float, up_thr: float,
                       lo_thr: float, cooldown: int, min_active: int,
                       init_active, model_mix: str, n_points: int,
-                      fail_tbl: Optional[np.ndarray] = None) -> Dict:
+                      fail_tbl: Optional[np.ndarray] = None,
+                      demand=None) -> Dict:
     hosts, vms, trace = make_elastic_scenario(
         n_hosts, n_vms, seed=seed, n_samples=n_samples,
-        host_mips=host_mips, vm_mips=vm_mips, model_mix=model_mix)
+        host_mips=host_mips, vm_mips=vm_mips, model_mix=model_mix,
+        demand=demand)
     mgr = ElasticDatacenterManager(
         hosts, vms, trace, vm_mips=vm_mips, up_thr=up_thr, lo_thr=lo_thr,
         cooldown_k=cooldown, min_active=min_active, init_active=init_active,
@@ -936,7 +956,7 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
                     vm_mips=1000.0, up_thr=0.8, lo_thr=0.3, cooldown=3,
                     min_active: int = 1, init_active=None,
                     model_mix: str = "mixed", n_points: int = 11,
-                    fault_plan: Optional[FaultPlan] = None,
+                    fault_plan: Optional[FaultPlan] = None, demand=None,
                     chunk_size=None, with_report: bool = False, **_ignored):
     """Reference semantics for the power sweep: run the OO elastic manager
     (event-driven, one cell at a time) over every scenario point — what the
@@ -945,6 +965,9 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
     (Registered for legacy/oo in :mod:`repro.core.vec_power`.)"""
     from .sweep import run_host_sweep
     from .vec_engine import empty_report
+    if demand is not None:
+        demand = check_demand(demand)
+        n_samples = int(demand.shape[0])
     fail_tbl = power_fault_table(fault_plan, n_hosts, n_samples, interval)
     seeds, axes, b = _broadcast_cells(seeds, dict(
         up_thr=up_thr, lo_thr=lo_thr, cooldown=cooldown, vm_mips=vm_mips))
@@ -960,7 +983,7 @@ def _power_batch_oo(backend, *, seeds=(0,), n_hosts: int = 8,
             up_thr=float(axes["up_thr"][i]), lo_thr=float(axes["lo_thr"][i]),
             cooldown=int(axes["cooldown"][i]), min_active=min_active,
             init_active=init_active, model_mix=model_mix, n_points=n_points,
-            fail_tbl=fail_tbl)
+            fail_tbl=fail_tbl, demand=demand)
 
     rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
     out = _finalize({k: np.stack([np.asarray(r[k]) for r in rows])

@@ -33,6 +33,8 @@ from __future__ import annotations
 
 import json
 import math
+import os
+import tempfile
 import time
 from dataclasses import asdict, dataclass, field
 from typing import Any, Dict, List, Mapping, Optional, Sequence
@@ -84,6 +86,9 @@ class SoakRound:
     quarantined: int
     retried_segments: int
     recovery_s: List[float] = field(default_factory=list)
+    # Clean rounds record the makespan they measured; chaos rounds record
+    # the horizon their fault schedule was drawn against.
+    horizon_s: float = 0.0
 
 
 @dataclass
@@ -130,9 +135,43 @@ class SoakReport:
             if isinstance(x, list):
                 return [clean(v) for v in x]
             return x
-        with open(path, "w") as fh:
-            json.dump(clean(self.to_dict()), fh, indent=2, sort_keys=True)
-            fh.write("\n")
+        # Atomic rewrite: a concurrent reader (dashboard, CI collecting the
+        # artifact mid-run) must never observe a truncated snapshot, so the
+        # JSON lands in a temp file in the same directory and is renamed
+        # over the target in one os.replace.
+        path = os.fspath(path)
+        fd, tmp = tempfile.mkstemp(
+            dir=os.path.dirname(path) or ".",
+            prefix=os.path.basename(path) + ".", suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump(clean(self.to_dict()), fh, indent=2,
+                          sort_keys=True)
+                fh.write("\n")
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
+
+
+# Scenario-kind spellings of the two workload-size parameters run_soak
+# owns; kinds not listed use the netdc names.
+_SOAK_PARAM_KEYS: Dict[str, Dict[str, str]] = {
+    "storage_batch": dict(targets="n_nodes", jobs="n_objects"),
+}
+
+
+def _measured_makespan(outputs: Mapping[str, Any]) -> Optional[float]:
+    """Largest finite per-request finish time in a round's outputs —
+    the measured makespan the chaos horizon is derived from."""
+    fin = np.asarray(outputs["finish"], np.float64)
+    fin = fin[np.isfinite(fin)]
+    if fin.size == 0 or not float(fin.max()) > 0.0:
+        return None
+    return float(fin.max())
 
 
 def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
@@ -165,20 +204,37 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
     retry = retry or RetryPolicy(max_retries=2, base_delay_s=mean_gap_s,
                                  backoff=2.0, jitter_frac=0.25,
                                  budget_s=timeout_s)
-    t_max = float(mean_gap_s) * float(n_jobs)     # ≈ workload horizon
+    # Chaos horizon: fault windows must land while work is actually
+    # running, so it is derived from a *measured* clean makespan — which
+    # includes service time, queueing and the timeout's effect — not from
+    # the arrival span ``mean_gap_s · n_jobs`` alone (under which windows
+    # drawn near t_max could fall after all work finished, or late
+    # execution could run fault-free).  The latest clean round keeps it
+    # fresh; a chaos round with no clean measurement yet runs a small
+    # clean probe first.
+    horizon: Optional[float] = None
+    names = _SOAK_PARAM_KEYS.get(kind, dict(targets="n_dcs", jobs="n_jobs"))
     report = SoakReport(kind=kind, backend=backend)
 
     for r in range(rounds):
         chaos = r in chaos_set
         seeds = seed0 + r * cells_per_round + np.arange(cells_per_round)
         params: Dict[str, Any] = dict(
-            seeds=seeds, n_dcs=n_targets, n_jobs=n_jobs,
+            {"seeds": seeds, names["targets"]: n_targets,
+             names["jobs"]: n_jobs},
             mean_gap_s=mean_gap_s, timeout_s=timeout_s,
             **dict(extra_params or {}))
         plan = None
         if chaos:
+            if horizon is None:
+                probe = dict(params, seeds=seeds[:min(4, len(seeds))])
+                probe.pop("fault_plan", None)
+                probe.pop("retry", None)
+                horizon = _measured_makespan(
+                    run_sweep(kind, probe, backend=backend).outputs) \
+                    or float(mean_gap_s) * float(n_jobs)
             plan = make_chaos_plan(
-                seed0 + 7919 * (r + 1), t_max, n_targets=n_targets,
+                seed0 + 7919 * (r + 1), horizon, n_targets=n_targets,
                 n_node_windows=n_node_windows,
                 n_link_windows=n_link_windows,
                 transient_prob=transient_prob)
@@ -205,11 +261,16 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
         srv = dst >= 0
         late = srv & (finish - submit > slo_s)
         if chaos:
-            grid = np.linspace(0.0, t_max, 257)
+            grid = np.linspace(0.0, horizon, 257)
             active_frac = float(
                 1.0 - plan.down_mask("node", grid, n_targets).mean())
+            round_horizon = float(horizon)
         else:
             active_frac = 1.0
+            measured = _measured_makespan(out)
+            if measured is not None:
+                horizon = measured
+            round_horizon = float(measured or 0.0)
         report.rounds.append(SoakRound(
             round=r, chaos=chaos, cells=int(cells_per_round), wall_s=wall,
             events=events,
@@ -222,7 +283,8 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
             sla_violations=int(np.sum(late)),
             quarantined=int(rep.quarantined),
             retried_segments=int(rep.retried_segments),
-            recovery_s=recovery_times(plan, out) if chaos else []))
+            recovery_s=recovery_times(plan, out) if chaos else [],
+            horizon_s=round_horizon))
         if snapshot_path is not None:
             report.save(snapshot_path)
         if progress is not None:

@@ -1,0 +1,492 @@
+"""Replicated object store over shared WAN links — ``storage_batch``.
+
+A storage broker receives a stream of object PUTs, each originating at a
+client site, and places ``n_replicas`` copies of every object — at its
+submission event — on the storage nodes that minimize its *placement-
+weighted commit time*: WAN transfer delay over the inter-site
+latency/bandwidth matrix (:class:`repro.core.network.InterDCTopology`),
+queueing behind the writes already committed to each node (single FIFO
+writer at ``write_bw[d]`` bytes/s), and the write itself.  The object
+*commits* when its ``quorum``-th replica finishes (N-way replication =
+``quorum == n_replicas``; quorum replication = ``quorum < n_replicas``).
+
+Fault semantics (the scenario's reason to exist): a node fault window
+(:class:`~repro.core.faults.FaultPlan`, kind ``node``) that overlaps a
+replica's transfer *mid-flight* kills that upload — the node's writer is
+occupied until the window clears — and the broker re-sources the lost
+copy from the earliest *surviving* replica of the same object (a repair
+transfer starting at ``max(window clear, first surviving finish)``).  A
+repair that is itself hit by a window fails permanently.  ``link``
+windows degrade every WAN transfer submitted inside them; ``transient``
+windows make the PUT itself flaky (shared retry machinery); a finite
+``timeout_s`` drops replicas no node can land inside the deadline, and
+an object is *dropped* when fewer than ``quorum`` replicas survive.
+
+This module owns everything both backends share — the libm-free workload
+generator, the per-cell placement tables (transfer/service/bias
+matrices, all precomputed host-side so neither backend multiplies inside
+its decision loop — no FMA-contraction hazard), the placement rule
+itself (:func:`place_object`, scalar form), and the host-side summary —
+plus the OO reference: a broker entity driving OBJECT_PUT/OBJECT_COMMIT
+events through a ``Simulation`` with live fault counters.  The vec
+implementation (:mod:`repro.core.vec_storage`) is a thin
+:class:`~repro.core.vec_engine.VecEngine` over the same tables.
+
+Exactness contract (asserted by the differential suite and golden
+fixtures): ``oo`` and ``vec`` agree **bit-exactly** on every output —
+the decision arithmetic is adds/max/min/compares over shared precomputed
+f64 tables, and ties break to the lowest node index on both paths.
+"""
+from __future__ import annotations
+
+import math
+import random
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from .backend import SimBackend, scenario
+from .engine import SimEntity, Simulation
+from .events import Event, Tag
+from .faults import FaultInjector, FaultPlan, RetryPolicy, apply_transient
+from .network import InterDCTopology
+
+
+def default_write_bw(n_nodes: int) -> np.ndarray:
+    """Heterogeneous default write rates: four repeating device classes
+    (think HDD pool / SATA SSD / NVMe / NVMe-oF), in bytes/s."""
+    return np.asarray([200e6 + 150e6 * (d % 4) for d in range(n_nodes)],
+                      np.float64)
+
+
+def storage_workload(rng: random.Random, n_objects: int, n_nodes: int, *,
+                     mean_gap_s: float, size_mb) -> Dict[str, Any]:
+    """One seed's PUT stream: nondecreasing submit times (uniform gaps),
+    uniform client site, uniform object size (bytes).  Libm-free for the
+    same reason as :func:`repro.core.netdc.netdc_workload` — golden
+    fixtures must be bit-stable across platforms."""
+    t = 0.0
+    submit, src, size = [], [], []
+    for j in range(n_objects):
+        if j:
+            t += rng.uniform(0.0, 2.0 * mean_gap_s)
+        submit.append(t)
+        src.append(rng.randrange(n_nodes))
+        size.append(rng.uniform(*size_mb) * 1e6)
+    return dict(submit=np.asarray(submit, np.float64),
+                src=np.asarray(src, np.int32),
+                size=np.asarray(size, np.float64))
+
+
+class StorageFaults(NamedTuple):
+    """Per-cell fault context (present iff the cell was built faulted).
+    Mirrors :class:`repro.core.netdc.NetdcFaults`: the OO broker replays
+    ``windows`` live through a :class:`~repro.core.faults.FaultInjector`
+    for the submit-time eligibility mask, while both backends evaluate
+    the same window list for mid-transfer kills."""
+    windows: tuple             # ((target, t_start, t_end), ...) node windows
+    static_online: np.ndarray  # [D] bool offline_node mask (no fault fold)
+    gave_up: np.ndarray        # [J] bool transient retries/budget exhausted
+    attempts: np.ndarray       # [J] i64 attempts made per object (>= 1)
+    perm: np.ndarray           # [J] i64 stable effective-submit order
+    timeout_s: float           # replica deadline: submit + timeout_s
+
+
+@dataclass(frozen=True)
+class StorageCell:
+    """One cell's precomputed placement tables — shared verbatim by the
+    OO broker and the vec engine.  ``win_*`` carry the node fault windows
+    both backends test transfers against (empty when unfaulted)."""
+    submit: np.ndarray        # [J] f64 nondecreasing (effective) submits
+    src: np.ndarray           # [J] i32 client site per object
+    size: np.ndarray          # [J] f64 bytes
+    xfer: np.ndarray          # [J, D] f64 WAN transfer delay to each node
+    serve: np.ndarray         # [J, D] f64 write service time on each node
+    bias: np.ndarray          # [J, D] f64 (placement_weight - 1) · xfer
+    online: np.ndarray        # [J, D] bool submit-time candidate mask
+    win_tgt: np.ndarray       # [W] i64 node fault-window targets
+    win_ts: np.ndarray        # [W] f64 window starts
+    win_te: np.ndarray        # [W] f64 window ends
+    fx: Optional[StorageFaults] = None
+
+
+def build_cell(seed: int, n_nodes: int, n_objects: int,
+               write_bw: np.ndarray, topo: InterDCTopology,
+               placement_weight: float, offline_node: int, *,
+               mean_gap_s: float, size_mb,
+               fault_plan: Optional[FaultPlan] = None,
+               retry: Optional[RetryPolicy] = None,
+               timeout_s: float = math.inf,
+               workload: Optional[Dict[str, Any]] = None) -> StorageCell:
+    """Workload + placement tables for one (seed, weight, outage) cell.
+    An injected ``workload`` (a validated trace-replay stream) replaces
+    the seeded generator — every cell then shares the recorded stream."""
+    wl = (workload if workload is not None else
+          storage_workload(random.Random(int(seed)), n_objects, n_nodes,
+                           mean_gap_s=mean_gap_s, size_mb=size_mb))
+    online0 = np.ones(n_nodes, bool)
+    if offline_node >= 0:
+        online0[offline_node] = False
+    zf, zi = np.empty(0, np.float64), np.empty(0, np.int64)
+    if fault_plan is None and not math.isfinite(timeout_s):
+        xfer = topo.delay_rows(wl["src"], wl["size"])
+        return StorageCell(
+            submit=wl["submit"], src=wl["src"], size=wl["size"], xfer=xfer,
+            serve=wl["size"][:, None] / write_bw[None, :],
+            bias=(float(placement_weight) - 1.0) * xfer,
+            online=np.repeat(online0[None, :], n_objects, axis=0),
+            win_tgt=zi, win_ts=zf, win_te=zf)
+
+    plan = fault_plan if fault_plan is not None else FaultPlan()
+    # Transient failures resolve at the *original* submit times, then a
+    # stable sort restores nondecreasing effective-submit order — the
+    # shared event order both backends process.
+    out = apply_transient(plan, retry, wl["submit"],
+                          seed=plan.seed * 1_000_003 + int(seed))
+    perm = np.argsort(out.eff_submit, kind="stable")
+    submit = out.eff_submit[perm]
+    src, size = wl["src"][perm], wl["size"][perm]
+    gave_up = out.gave_up[perm]
+    xfer = topo.delay_rows(src, size)
+    if plan.has("link"):
+        xfer = xfer * plan.degrade_factor(submit, n_nodes)
+    online = np.repeat(online0[None, :], n_objects, axis=0)
+    windows = ()
+    if plan.has("node"):
+        online &= ~plan.down_mask("node", submit, n_nodes)
+        tgt, ts, te, _ = plan.select("node")
+        windows = tuple(zip(tgt.tolist(), ts.tolist(), te.tolist()))
+    online &= ~gave_up[:, None]
+    # ``target = -1`` node windows (whole-store blackouts) expand to every
+    # node so the mid-transfer test stays a flat per-window compare.
+    expanded = [(d, a, z) for t, a, z in windows
+                for d in ([int(t)] if t >= 0 else range(n_nodes))]
+    return StorageCell(
+        submit=submit, src=src, size=size, xfer=xfer,
+        serve=size[:, None] / write_bw[None, :],
+        bias=(float(placement_weight) - 1.0) * xfer, online=online,
+        win_tgt=np.asarray([w[0] for w in expanded], np.int64),
+        win_ts=np.asarray([w[1] for w in expanded], np.float64),
+        win_te=np.asarray([w[2] for w in expanded], np.float64),
+        fx=StorageFaults(windows=windows, static_online=online0,
+                         gave_up=gave_up, attempts=out.attempts[perm],
+                         perm=perm, timeout_s=float(timeout_s)))
+
+
+def _window_kill(cell: StorageCell, d: int, start: float, fin: float):
+    """Does any node fault window on ``d`` overlap the half-open transfer
+    interval ``[start, fin)``?  Returns ``(killed, clear_time)`` — the
+    writer stays occupied until the latest overlapping window ends."""
+    clear, killed = -math.inf, False
+    for w in range(len(cell.win_tgt)):
+        if cell.win_tgt[w] == d and cell.win_ts[w] < fin \
+                and start < cell.win_te[w]:
+            killed = True
+            if cell.win_te[w] > clear:
+                clear = float(cell.win_te[w])
+    return killed, clear
+
+
+def place_object(free, cell: StorageCell, j: int, n_replicas: int,
+                 quorum: int, online=None, deadline: float = math.inf):
+    """The placement rule, scalar form (the OO broker's inner loop).
+
+    Phase 1 — sequential replica placement: for each of ``n_replicas``
+    copies, pick the first-occurrence argmin of ``fin + bias`` over
+    online nodes not already holding a copy whose transfer lands by
+    ``deadline`` (``fin = max(free[d], submit + xfer[d]) + serve[d]``);
+    a transfer overlapped by a node fault window is *killed* and the
+    writer is occupied until the window clears.  Phase 2 — re-sourcing:
+    every killed replica restarts from the earliest surviving replica
+    (``start = max(window clear, first surviving finish)``); a repair
+    killed again fails permanently.  The object commits at the
+    ``quorum``-th smallest surviving finish.
+
+    The vec engine evaluates the identical phases with the replica and
+    window loops unrolled (``ops.argmin`` shares the first-occurrence
+    tie rule).  Returns ``(commit, dst, n_ok, n_killed, n_repaired)``
+    with ``commit = inf``/``dst = -1`` when fewer than ``quorum``
+    replicas survive; ``free`` is updated in place.
+    """
+    elig = cell.online[j] if online is None else online
+    arr = cell.submit[j] + cell.xfer[j]
+    picks, fins, clears = [], [], []
+    chosen = [False] * len(free)
+    for _ in range(n_replicas):
+        best, best_score, best_fin = -1, math.inf, math.inf
+        for d in range(len(free)):
+            if not elig[d] or chosen[d]:
+                continue
+            start = free[d] if free[d] > arr[d] else arr[d]
+            fin = start + cell.serve[j][d]
+            if fin > deadline:
+                continue
+            score = fin + cell.bias[j][d]
+            if score < best_score:
+                best, best_score, best_fin = d, score, fin
+        if best < 0:
+            picks.append(-1)
+            fins.append(math.inf)
+            clears.append(-math.inf)
+            continue
+        start = free[best] if free[best] > arr[best] else arr[best]
+        killed, clear = _window_kill(cell, best, start, best_fin)
+        chosen[best] = True
+        picks.append(best)
+        fins.append(math.inf if killed else best_fin)
+        clears.append(clear)
+        free[best] = clear if killed else best_fin
+    n_killed = sum(1 for p, f in zip(picks, fins)
+                   if p >= 0 and not math.isfinite(f))
+    first_ok = min((f for f in fins if math.isfinite(f)), default=math.inf)
+    n_repaired = 0
+    if n_killed and math.isfinite(first_ok):
+        for r in range(n_replicas):
+            d = picks[r]
+            if d < 0 or math.isfinite(fins[r]):
+                continue
+            rep_start = clears[r] if clears[r] > first_ok else first_ok
+            rep_fin = rep_start + cell.serve[j][d]
+            killed, clear = _window_kill(cell, d, rep_start, rep_fin)
+            free[d] = clear if killed else rep_fin
+            if not killed:
+                fins[r] = rep_fin
+                n_repaired += 1
+    ok = sorted(f for f in fins if math.isfinite(f))
+    n_ok = len(ok)
+    if n_ok < quorum:
+        return math.inf, -1, n_ok, n_killed, n_repaired
+    commit = ok[quorum - 1]
+    best_r = min(range(n_replicas), key=lambda r: (fins[r], r))
+    return commit, picks[best_r], n_ok, n_killed, n_repaired
+
+
+def summarize(out: Dict[str, Any], cells: Sequence[StorageCell]
+              ) -> Dict[str, Any]:
+    """Batch-level metrics from per-object ``finish``/``dst``/``n_ok`` —
+    one shared numpy routine so every aggregate is computed identically
+    for both backends (cf. :func:`repro.core.netdc.summarize`).  Under
+    faults the per-object arrays are unsorted back to original submit
+    order and the summary gains ``served``/``dropped``/``retries``."""
+    out = dict(out)
+    finish = out["finish"] = np.asarray(out["finish"], np.float64)
+    dst = out["dst"] = np.asarray(out["dst"], np.int64)
+    n_ok = out["n_ok"] = np.asarray(out["n_ok"], np.int64)
+    killed = out["killed"] = np.asarray(out["killed"], np.int64)
+    repaired = out["repaired"] = np.asarray(out["repaired"], np.int64)
+    submit = np.stack([c.submit for c in cells])
+    size = np.stack([c.size for c in cells])
+    n_nodes = cells[0].xfer.shape[-1]
+    d_iota = np.arange(n_nodes)
+    srv = dst >= 0
+    out["makespan"] = np.max(np.where(srv, finish, -np.inf), axis=-1)
+    out["commit_total_s"] = np.sum(
+        np.where(srv, finish - submit, 0.0), axis=-1)
+    out["replicas_ok"] = np.sum(n_ok, axis=-1)
+    out["bytes_stored"] = np.sum(size * n_ok, axis=-1)
+    out["killed_transfers"] = np.sum(killed, axis=-1)
+    out["repaired_transfers"] = np.sum(repaired, axis=-1)
+    out["node_primaries"] = np.sum(dst[:, :, None] == d_iota, axis=1)
+    out["busiest_node"] = np.argmax(out["node_primaries"], axis=-1)
+    if cells and cells[0].fx is not None:
+        inv = np.stack([np.argsort(c.fx.perm) for c in cells])
+        for k in ("finish", "dst", "n_ok", "killed", "repaired"):
+            out[k] = np.take_along_axis(out[k], inv, axis=-1)
+        out["submit"] = np.take_along_axis(submit, inv, axis=-1)
+        out["served"] = np.sum(srv, axis=-1)
+        out["dropped"] = srv.shape[-1] - out["served"]
+        out["retries"] = np.stack(
+            [np.sum(c.fx.attempts - 1) for c in cells])
+    return out
+
+
+def build_cells(*, seeds, n_nodes: int, n_objects: int, write_bw,
+                link_bw: float, hop_latency_s: float, n_replicas: int,
+                quorum: int, placement_weight, offline_node,
+                mean_gap_s: float, size_mb,
+                fault_plan: Optional[FaultPlan] = None,
+                retry: Optional[RetryPolicy] = None,
+                timeout_s: float = math.inf, workload=None):
+    """Validated per-cell table construction — the shared front half of
+    both backends' batch handlers."""
+    if workload is not None:
+        from .trace import check_workload
+        workload, n_objects = check_workload(
+            "storage_batch", workload,
+            dict(submit=np.float64, src=np.int32, size=np.float64),
+            n_targets=n_nodes)
+        if np.any(workload["size"] <= 0):
+            raise ValueError("storage_batch: workload sizes must be > 0")
+    if n_objects < 1 or n_nodes < 1:
+        raise ValueError("storage_batch needs n_objects ≥ 1 and "
+                         "n_nodes ≥ 1")
+    n_replicas, quorum = int(n_replicas), int(quorum)
+    if not 1 <= quorum <= n_replicas:
+        raise ValueError(f"quorum must be in [1, n_replicas]: "
+                         f"{quorum} vs {n_replicas}")
+    if n_replicas > n_nodes:
+        raise ValueError(f"n_replicas ({n_replicas}) cannot exceed "
+                         f"n_nodes ({n_nodes})")
+    write_bw = (default_write_bw(n_nodes) if write_bw is None
+                else np.asarray(write_bw, np.float64))
+    if write_bw.shape != (n_nodes,) or not np.all(write_bw > 0):
+        raise ValueError(f"write_bw must be {n_nodes} positive rates")
+    if not timeout_s > 0:
+        raise ValueError(f"storage_batch: timeout_s must be > 0: "
+                         f"{timeout_s}")
+    if fault_plan is not None:
+        if fault_plan.has("region"):
+            raise ValueError("storage_batch has no region concept — use "
+                             "'node' faults on storage-node targets")
+        fault_plan.check_targets("node", n_nodes, "storage node")
+        fault_plan.check_targets("link", n_nodes, "storage node")
+    from .vec_engine import broadcast_cells
+    seeds, axes, b = broadcast_cells(seeds, dict(
+        placement_weight=placement_weight, offline_node=offline_node))
+    weights = axes["placement_weight"].astype(np.float64)
+    offs = axes["offline_node"].astype(np.int64)
+    if b and np.max(offs) >= n_nodes:
+        raise ValueError(f"offline_node must be < n_nodes={n_nodes}")
+    if b and np.any(offs >= 0) and n_replicas > n_nodes - 1:
+        raise ValueError("offline_node leaves fewer nodes than "
+                         "n_replicas — shrink the replication factor")
+    topo = InterDCTopology(n_nodes, link_bw=link_bw,
+                           hop_latency_s=hop_latency_s)
+    cells = [build_cell(int(seeds[i]), n_nodes, n_objects, write_bw, topo,
+                        float(weights[i]), int(offs[i]),
+                        mean_gap_s=mean_gap_s, size_mb=size_mb,
+                        fault_plan=fault_plan, retry=retry,
+                        timeout_s=timeout_s, workload=workload)
+             for i in range(b)]
+    return cells, b
+
+
+def empty_storage_outputs(n_nodes: int, faulted: bool = False
+                          ) -> Dict[str, np.ndarray]:
+    zf, zi = np.empty((0,), np.float64), np.empty((0,), np.int64)
+    zjf, zji = np.empty((0, 0), np.float64), np.empty((0, 0), np.int64)
+    out = dict(finish=zjf, dst=zji, n_ok=zji, killed=zji, repaired=zji,
+               makespan=zf, commit_total_s=zf, replicas_ok=zi,
+               bytes_stored=zf, killed_transfers=zi, repaired_transfers=zi,
+               node_primaries=np.empty((0, n_nodes), np.int64),
+               busiest_node=zi, iterations=np.empty((0,), np.int32))
+    if faulted:
+        out.update(submit=zjf, served=zi, dropped=zi, retries=zi)
+    return out
+
+
+# -- OO reference: an event-driven broker inside a Simulation ------------------
+
+class StorageBroker(SimEntity):
+    """Places each object's replica set at its OBJECT_PUT event and
+    collects its OBJECT_COMMIT — the discrete-event reference the vec
+    engine compiles into one ``lax.while_loop``."""
+
+    def __init__(self, sim: Simulation, cell: StorageCell, n_replicas: int,
+                 quorum: int):
+        super().__init__(sim, "storage-broker")
+        self.cell = cell
+        self.n_replicas, self.quorum = int(n_replicas), int(quorum)
+        n = len(cell.submit)
+        n_nodes = cell.xfer.shape[1]
+        self.free = [0.0] * n_nodes
+        self.finish = np.full(n, np.inf)
+        self.dst = np.full(n, -1, np.int64)
+        self.n_ok = np.zeros(n, np.int64)
+        self.killed = np.zeros(n, np.int64)
+        self.repaired = np.zeros(n, np.int64)
+        self.committed = 0
+        # Live submit-time eligibility, the event-driven twin of the
+        # precomputed ``cell.online`` table (cf. MultiDCBroker): node
+        # windows arrive as NODE_FAILURE/NODE_RECOVER events at priority
+        # -1 and overlapping windows nest via per-node down counters.
+        # Mid-transfer kills read the window tables directly — they test
+        # *future* overlap, which no event at submit time can know.
+        self.down_ct = [0] * n_nodes
+        if cell.fx is not None and cell.fx.windows:
+            FaultInjector(sim, cell.fx.windows, self._apply_fault)
+
+    def _apply_fault(self, target: int, down: bool) -> None:
+        delta = 1 if down else -1
+        for d in ([target] if target >= 0 else range(len(self.down_ct))):
+            self.down_ct[d] += delta
+
+    def start(self) -> None:
+        for j, t in enumerate(self.cell.submit):
+            self.sim.schedule(float(t), Tag.OBJECT_PUT, self, data=j)
+
+    def process_event(self, ev: Event) -> None:
+        c = self.cell
+        if ev.tag is Tag.OBJECT_PUT:
+            j = ev.data
+            fx = c.fx
+            if fx is None:
+                online, deadline = c.online[j], np.inf
+            else:
+                if fx.gave_up[j]:
+                    return                       # dropped: dst/finish stay
+                online = [fx.static_online[d] and self.down_ct[d] == 0
+                          for d in range(len(self.free))]
+                deadline = c.submit[j] + fx.timeout_s
+            commit, dst, n_ok, killed, repaired = place_object(
+                self.free, c, j, self.n_replicas, self.quorum,
+                online=online, deadline=deadline)
+            self.n_ok[j] = n_ok
+            self.killed[j] = killed
+            self.repaired[j] = repaired
+            if dst < 0:
+                return                           # below quorum: dropped
+            self.dst[j] = dst
+            self.finish[j] = commit
+            self.sim.schedule(float(commit), Tag.OBJECT_COMMIT, self,
+                              data=j)
+        elif ev.tag is Tag.OBJECT_COMMIT:
+            self.committed += 1
+
+
+@scenario("storage_batch", backends=("legacy", "oo"))
+def _storage_batch_oo(backend: SimBackend, *, seeds=(0,), n_nodes: int = 4,
+                      n_objects: int = 64, write_bw=None,
+                      n_replicas: int = 2, quorum: int = 1,
+                      placement_weight=1.0, offline_node=-1,
+                      link_bw: float = 10e9, hop_latency_s: float = 0.02,
+                      mean_gap_s: float = 2.0, size_mb=(10.0, 200.0),
+                      fault_plan: Optional[FaultPlan] = None,
+                      retry: Optional[RetryPolicy] = None,
+                      timeout_s: float = np.inf, workload=None,
+                      chunk_size: Optional[int] = None,
+                      with_report: bool = False, **_ignored):
+    """Reference semantics for ``storage_batch``: one event-driven broker
+    simulation per cell, through the sweep layer's host path (so
+    ``run_sweep`` sees a populated report)."""
+    from .sweep import run_host_sweep
+    from .vec_engine import empty_report
+    cells, b = build_cells(
+        seeds=seeds, n_nodes=n_nodes, n_objects=n_objects,
+        write_bw=write_bw, link_bw=link_bw, hop_latency_s=hop_latency_s,
+        n_replicas=n_replicas, quorum=quorum,
+        placement_weight=placement_weight, offline_node=offline_node,
+        mean_gap_s=mean_gap_s, size_mb=size_mb, fault_plan=fault_plan,
+        retry=retry, timeout_s=timeout_s, workload=workload)
+    if b == 0:
+        out = empty_storage_outputs(
+            n_nodes, faulted=fault_plan is not None
+            or np.isfinite(timeout_s))
+        del out["iterations"]                    # the vec loop's counter
+        return (out, empty_report(donate=False)) if with_report else out
+
+    def run_cell(i: int):
+        sim = backend.make_simulation()
+        broker = StorageBroker(sim, cells[i], n_replicas, quorum)
+        sim.run()
+        assert broker.committed == int(np.sum(broker.dst >= 0)), \
+            "storage: lost OBJECT_COMMITs"
+        return dict(finish=broker.finish, dst=broker.dst,
+                    n_ok=broker.n_ok, killed=broker.killed,
+                    repaired=broker.repaired)
+
+    rows, report = run_host_sweep(run_cell, b, chunk_size=chunk_size)
+    out = summarize({k: np.stack([r[k] for r in rows]) for k in rows[0]},
+                    cells)
+    return (out, report) if with_report else out

@@ -273,8 +273,13 @@ def auto_chunk_size(n_cells: int, predicted_cost, n_devices: int) -> int:
     if predicted_cost is None or n_cells < 2 * MIN_CHUNK * n_devices:
         return n_cells
     pred = np.asarray(predicted_cost, np.float64)
-    lo = float(pred.min())
-    if lo <= 0 or float(pred.max()) / lo <= _DIVERGENCE_SPREAD:
+    # Zero-cost lanes (an empty trace slice, a zero-job cell) say nothing
+    # about divergence among the lanes that do run — measure the spread
+    # over the positive entries only, and go monolithic only when there
+    # are none (or they genuinely don't diverge).
+    pos = pred[pred > 0]
+    if pos.size == 0 or float(pos.max()) / float(pos.min()) <= \
+            _DIVERGENCE_SPREAD:
         return n_cells
     raw = max(MIN_CHUNK * n_devices, n_cells // 8)
     n_chunks = max(1, n_cells // raw)

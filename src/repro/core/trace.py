@@ -1,0 +1,449 @@
+"""Trace-replay ingestion — recorded request streams as scenario inputs.
+
+Every batched scenario kind so far drew its workload from synthetic RNG
+streams.  This module is the front end that lets *recorded* traffic drive
+them instead (CloudSim Express' declarative-inputs direction): a
+:class:`Trace` is a validated SoA view of an arrival stream — timestamps,
+sizes, targets, optional service demand — parsed from JSONL/CSV files or
+produced by the arrival-process generators below, and
+:func:`params_from_trace` maps it onto the parameter dict of any batched
+kind (``netdc_batch``, ``llmserve_batch``, ``storage_batch``,
+``power_batch``, ``fleet_batch``)::
+
+    params = params_from_trace("netdc_batch", load_trace("requests.jsonl"))
+    out = run_sweep("netdc_batch", params)          # replay, bit-identical
+
+Replay determinism: the trace file *is* the workload.  JSON round-trips
+floats exactly (``repr`` digits), the mapped parameter arrays feed the
+same precomputed tables both backend families share, and nothing is
+redrawn — so replaying the same file is bit-identical run to run and
+across ``legacy``/``oo``/``vec``.
+
+Parsing is strict and names the offending line: a record with a negative
+size, an out-of-order timestamp, an unknown target (``>= n_targets``) or
+malformed JSON/CSV raises :class:`TraceError` as ``path:line: message``.
+
+The generators (:func:`poisson_trace`, :func:`mmpp_trace`,
+:func:`diurnal_trace`) synthesize arrival processes for experiments and
+fixtures; unlike the scenario workload generators they may use libm
+(``log`` for exponential gaps) because the committed artifact is the
+trace *file*, not the generator's platform-dependent float stream.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import math
+import os
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional
+
+import numpy as np
+
+
+class TraceError(ValueError):
+    """A malformed trace record; message starts with ``path:line:``."""
+
+
+# Accepted spellings per canonical field (first match wins).
+_FIELD_ALIASES = {
+    "t": ("t", "time", "timestamp"),
+    "size": ("size", "bytes", "size_bytes"),
+    "target": ("target", "src", "node"),
+    "work": ("work", "length", "tokens"),
+}
+
+
+@dataclass(frozen=True)
+class Trace:
+    """A validated arrival stream in SoA form.
+
+    ``t`` is nondecreasing (seconds); ``size`` is bytes per request;
+    ``target`` is the source/target site id (``-1`` = unspecified);
+    ``work`` is optional service demand in scenario units (MI for netdc,
+    decode tokens for llmserve, outage seconds for fleet; ``0`` =
+    unspecified, mapped kinds substitute a deterministic default).
+    """
+    t: np.ndarray
+    size: np.ndarray
+    target: np.ndarray
+    work: np.ndarray
+    n_targets: int
+    source: str = field(default="", compare=False)
+
+    def __len__(self) -> int:
+        return int(self.t.shape[0])
+
+    @property
+    def horizon_s(self) -> float:
+        """Last arrival time (0 for an empty trace)."""
+        return float(self.t[-1]) if len(self) else 0.0
+
+
+def _finish_trace(t, size, target, work, n_targets: Optional[int],
+                  source: str) -> Trace:
+    t = np.asarray(t, np.float64)
+    size = np.asarray(size, np.float64)
+    target = np.asarray(target, np.int64)
+    work = np.asarray(work, np.float64)
+    if n_targets is None:
+        n_targets = int(target.max(initial=-1)) + 1 or 1
+    return Trace(t=t, size=size, target=target, work=work,
+                 n_targets=int(n_targets), source=source)
+
+
+def _validate_record(where: str, line: int, rec: Dict[str, float],
+                     prev_t: float, n_targets: Optional[int]) -> None:
+    t, size, target = rec["t"], rec["size"], rec["target"]
+    if not (math.isfinite(t) and t >= 0.0):
+        raise TraceError(f"{where}:{line}: timestamp must be finite and "
+                         f">= 0, got {t}")
+    if t < prev_t:
+        raise TraceError(f"{where}:{line}: out-of-order timestamp {t} < "
+                         f"{prev_t} (traces must be sorted by arrival)")
+    if not (math.isfinite(size) and size >= 0.0):
+        raise TraceError(f"{where}:{line}: negative or non-finite size "
+                         f"{size}")
+    if target < -1 or (n_targets is not None and target >= n_targets):
+        raise TraceError(
+            f"{where}:{line}: unknown target {int(target)} "
+            f"(expected -1 or 0 <= target < {n_targets})")
+    if not (math.isfinite(rec["work"]) and rec["work"] >= 0.0):
+        raise TraceError(f"{where}:{line}: negative or non-finite work "
+                         f"{rec['work']}")
+
+
+def _pick_fields(where: str, line: int, row: Mapping[str, Any]
+                 ) -> Dict[str, float]:
+    rec: Dict[str, float] = {}
+    for canon, aliases in _FIELD_ALIASES.items():
+        val = next((row[a] for a in aliases
+                    if a in row and row[a] not in (None, "")), None)
+        if val is None:
+            if canon == "t" or canon == "size":
+                raise TraceError(
+                    f"{where}:{line}: missing required field {canon!r} "
+                    f"(accepted spellings: {aliases})")
+            val = -1 if canon == "target" else 0.0
+        try:
+            rec[canon] = int(val) if canon == "target" else float(val)
+        except (TypeError, ValueError):
+            raise TraceError(
+                f"{where}:{line}: field {canon!r} is not numeric: "
+                f"{val!r}") from None
+    return rec
+
+
+def load_trace(path, *, n_targets: Optional[int] = None) -> Trace:
+    """Parse a JSONL (one object per line) or CSV (header row) trace file.
+
+    Every record needs ``t`` (or ``time``/``timestamp``) and ``size`` (or
+    ``bytes``); ``target`` (or ``src``/``node``) and ``work`` (or
+    ``length``/``tokens``) are optional.  Records must be sorted by
+    arrival time.  A malformed record raises :class:`TraceError` naming
+    ``path:line``; when ``n_targets`` is given, target ids are validated
+    against it (otherwise it is inferred as ``max(target) + 1``).
+    """
+    path = os.fspath(path)
+    where = os.path.basename(path)
+    ext = os.path.splitext(path)[1].lower()
+    rows: list = []
+    if ext in (".jsonl", ".ndjson", ".json"):
+        with open(path) as fh:
+            for line_no, raw in enumerate(fh, start=1):
+                raw = raw.strip()
+                if not raw:
+                    continue
+                try:
+                    obj = json.loads(raw)
+                except json.JSONDecodeError as exc:
+                    raise TraceError(
+                        f"{where}:{line_no}: invalid JSON: {exc}") from None
+                if not isinstance(obj, dict):
+                    raise TraceError(
+                        f"{where}:{line_no}: expected one JSON object per "
+                        f"line, got {type(obj).__name__}")
+                rows.append((line_no, _pick_fields(where, line_no, obj)))
+    elif ext == ".csv":
+        with open(path, newline="") as fh:
+            reader = csv.DictReader(fh)
+            if reader.fieldnames is None:
+                raise TraceError(f"{where}:1: empty CSV (no header row)")
+            for line_no, row in enumerate(reader, start=2):
+                rows.append((line_no, _pick_fields(where, line_no, row)))
+    else:
+        raise TraceError(
+            f"{where}: unsupported trace format {ext!r} "
+            f"(expected .jsonl/.ndjson or .csv)")
+    prev_t = 0.0
+    for line_no, rec in rows:
+        _validate_record(where, line_no, rec, prev_t, n_targets)
+        prev_t = rec["t"]
+    return _finish_trace(
+        [r["t"] for _, r in rows], [r["size"] for _, r in rows],
+        [r["target"] for _, r in rows], [r["work"] for _, r in rows],
+        n_targets, source=path)
+
+
+def save_trace(trace: Trace, path) -> None:
+    """Write a trace as JSONL.  ``json`` emits floats with ``repr``
+    digits, so ``load_trace(save_trace(tr))`` round-trips bit-exactly."""
+    path = os.fspath(path)
+    with open(path, "w") as fh:
+        for i in range(len(trace)):
+            rec = dict(t=float(trace.t[i]), size=float(trace.size[i]),
+                       target=int(trace.target[i]),
+                       work=float(trace.work[i]))
+            fh.write(json.dumps(rec, sort_keys=True) + "\n")
+
+
+# -- arrival-process generators ------------------------------------------------
+
+def _draw_common(rng: random.Random, n: int, n_targets: int, size_mb,
+                 work) -> Dict[str, np.ndarray]:
+    lo_s, hi_s = size_mb
+    lo_w, hi_w = work
+    return dict(
+        size=np.asarray([rng.uniform(lo_s, hi_s) * 1e6 for _ in range(n)]),
+        target=np.asarray([rng.randrange(n_targets) for _ in range(n)]),
+        work=np.asarray([rng.uniform(lo_w, hi_w) for _ in range(n)]))
+
+
+def poisson_trace(seed: int, n: int, *, rate_hz: float = 1.0,
+                  n_targets: int = 4, size_mb=(10.0, 200.0),
+                  work=(2e3, 2e4)) -> Trace:
+    """Homogeneous Poisson arrivals: exponential inter-arrival gaps at
+    ``rate_hz``, uniform sizes/targets/work."""
+    if n < 0 or not rate_hz > 0 or n_targets < 1:
+        raise ValueError("poisson_trace needs n >= 0, rate_hz > 0, "
+                         "n_targets >= 1")
+    rng = random.Random(int(seed))
+    t, ts = 0.0, []
+    for _ in range(n):
+        t += -math.log(1.0 - rng.random()) / rate_hz
+        ts.append(t)
+    return _finish_trace(ts, **_draw_common(rng, n, n_targets, size_mb,
+                                            work),
+                         n_targets=n_targets,
+                         source=f"poisson(seed={seed}, rate={rate_hz})")
+
+
+def mmpp_trace(seed: int, n: int, *, rates_hz=(0.2, 4.0),
+               switch_hz: float = 0.05, n_targets: int = 4,
+               size_mb=(10.0, 200.0), work=(2e3, 2e4)) -> Trace:
+    """2-state Markov-modulated Poisson process: arrivals at the current
+    state's rate, exponential sojourns between the quiet/bursty states."""
+    if n < 0 or switch_hz <= 0 or any(r <= 0 for r in rates_hz):
+        raise ValueError("mmpp_trace needs positive rates and switch_hz")
+    rng = random.Random(int(seed))
+    t, state, ts = 0.0, 0, []
+    next_switch = -math.log(1.0 - rng.random()) / switch_hz
+    for _ in range(n):
+        gap = -math.log(1.0 - rng.random()) / rates_hz[state]
+        while t + gap >= next_switch:
+            # Memoryless: restart the arrival clock at the switch point.
+            t = next_switch
+            state = 1 - state
+            next_switch = t - math.log(1.0 - rng.random()) / switch_hz
+            gap = -math.log(1.0 - rng.random()) / rates_hz[state]
+        t += gap
+        ts.append(t)
+    return _finish_trace(ts, **_draw_common(rng, n, n_targets, size_mb,
+                                            work),
+                         n_targets=n_targets,
+                         source=f"mmpp(seed={seed}, rates={rates_hz})")
+
+
+def diurnal_trace(seed: int, n: int, *, period_s: float = 86_400.0,
+                  peak_rate_hz: float = 2.0, trough_frac: float = 0.1,
+                  n_targets: int = 4, size_mb=(10.0, 200.0),
+                  work=(2e3, 2e4)) -> Trace:
+    """Nonhomogeneous Poisson arrivals whose rate follows a triangle-wave
+    diurnal curve (trough at phase 0, peak at half period), drawn by
+    thinning against ``peak_rate_hz``."""
+    if n < 0 or peak_rate_hz <= 0 or period_s <= 0 \
+            or not 0.0 < trough_frac <= 1.0:
+        raise ValueError("diurnal_trace needs positive rate/period and "
+                         "trough_frac in (0, 1]")
+    rng = random.Random(int(seed))
+    t, ts = 0.0, []
+    while len(ts) < n:
+        t += -math.log(1.0 - rng.random()) / peak_rate_hz
+        phase = (t % period_s) / period_s
+        tri = 1.0 - abs(2.0 * phase - 1.0)          # 0 at phase 0, 1 at 1/2
+        rate_frac = trough_frac + (1.0 - trough_frac) * tri
+        if rng.random() < rate_frac:                # thinning accept
+            ts.append(t)
+    return _finish_trace(ts, **_draw_common(rng, n, n_targets, size_mb,
+                                            work),
+                         n_targets=n_targets,
+                         source=f"diurnal(seed={seed}, "
+                                f"peak={peak_rate_hz})")
+
+
+# -- injected-workload validation (scenario front ends call this) -------------
+
+def check_workload(kind: str, workload: Mapping[str, Any],
+                   dtypes: Mapping[str, Any], *, n_targets: int,
+                   src_key: str = "src"):
+    """Validate an injected workload stream (a :func:`params_from_trace`
+    product or a hand-built dict) at the scenario boundary: exactly the
+    expected keys, equal-length 1-D arrays, finite nondecreasing submit
+    times, targets in range.  Returns ``(canonical_dtype_dict, n)``."""
+    if not isinstance(workload, Mapping):
+        raise ValueError(f"{kind}: workload must be a mapping of arrays, "
+                         f"got {type(workload).__name__}")
+    got, want = set(workload), set(dtypes)
+    if got != want:
+        raise ValueError(
+            f"{kind}: workload keys mismatch — missing "
+            f"{sorted(want - got)}, unexpected {sorted(got - want)}")
+    out = {k: np.asarray(workload[k], dt) for k, dt in dtypes.items()}
+    n = int(out["submit"].shape[0]) if out["submit"].ndim == 1 else -1
+    for k, v in out.items():
+        if v.ndim != 1 or v.shape[0] != n:
+            raise ValueError(
+                f"{kind}: workload[{k!r}] must be a 1-D array of length "
+                f"{n}, got shape {v.shape}")
+    sub = out["submit"]
+    if n and (not np.all(np.isfinite(sub)) or float(sub[0]) < 0.0
+              or np.any(np.diff(sub) < 0)):
+        raise ValueError(f"{kind}: workload['submit'] must be finite, "
+                         f">= 0 and nondecreasing")
+    src = out[src_key]
+    if n and (int(src.min()) < 0 or int(src.max()) >= n_targets):
+        raise ValueError(
+            f"{kind}: workload[{src_key!r}] targets must lie in "
+            f"[0, {n_targets})")
+    return out, n
+
+
+# -- mapping traces onto scenario parameter dicts ------------------------------
+
+def demand_curve(trace: Trace, n_samples: int,
+                 interval_s: Optional[float] = None) -> np.ndarray:
+    """Bucket a trace's arrivals into ``n_samples`` equal intervals and
+    normalize the per-interval request counts to [0, 1] by the busiest
+    interval — the elastic-power scenario's demand input."""
+    if n_samples < 1:
+        raise ValueError("demand_curve needs n_samples >= 1")
+    if len(trace) == 0:
+        return np.zeros(n_samples, np.float64)
+    span = (float(interval_s) * n_samples if interval_s
+            else max(trace.horizon_s, 1e-9))
+    k = np.minimum((trace.t / span * n_samples).astype(np.int64),
+                   n_samples - 1)
+    counts = np.bincount(k, minlength=n_samples).astype(np.float64)
+    peak = counts.max()
+    return counts / peak if peak > 0 else counts
+
+
+def _require_targets(kind: str, trace: Trace) -> np.ndarray:
+    tgt = trace.target
+    if len(trace) and int(tgt.min()) < 0:
+        i = int(np.argmax(tgt < 0))
+        raise ValueError(
+            f"params_from_trace({kind!r}): record {i} has no target — "
+            f"this kind needs a source site per record")
+    return tgt
+
+
+# work == 0 means "unspecified": mapped kinds substitute a deterministic
+# size-derived default so replay stays a pure function of the trace.
+_MI_PER_BYTE = 1e-4          # 100 MB payload → 10,000 MI (mid netdc range)
+_DECODE_TOK_DEFAULT = 64.0
+
+
+def params_from_trace(kind: str, trace: Trace,
+                      **overrides: Any) -> Dict[str, Any]:
+    """Build the ``run_sweep(kind, params)`` dict that replays ``trace``.
+
+    The mapping per kind (``overrides`` merge on top, winning ties):
+
+    * ``netdc_batch`` — ``workload=`` stream: ``t``→submit, ``target``→
+      source DC, ``size``→payload bytes, ``work``→length MI (0 → derived
+      from size); ``n_dcs = trace.n_targets``.
+    * ``llmserve_batch`` — ``workload=`` stream: ``t``→submit, ``target``→
+      source region, ``size``→prompt tokens (ingress bytes / 2048),
+      ``work``→decode tokens (0 → 64); all requests online.
+    * ``storage_batch`` — ``workload=`` stream: ``t``→submit, ``target``→
+      client site, ``size``→object bytes; ``n_nodes = trace.n_targets``.
+    * ``power_batch`` — ``demand=`` per-interval utilization curve
+      (:func:`demand_curve` over ``n_samples`` buckets).
+    * ``fleet_batch`` — ``fault_plan=`` planned node outages: each record
+      is a crash of node ``target`` at ``t`` lasting ``work`` seconds
+      (0 → 300 s).
+
+    Replaying the same trace is bit-identical: every derived array is a
+    pure function of the trace contents.
+    """
+    if kind in ("netdc_batch", "storage_batch"):
+        submit = trace.t.astype(np.float64)
+        tgt = _require_targets(kind, trace).astype(np.int32)
+        wl: Dict[str, Any] = dict(submit=submit, src=tgt,
+                                  size=trace.size.astype(np.float64))
+        params: Dict[str, Any] = {"seeds": np.asarray([0])}
+        if kind == "netdc_batch":
+            wl["payload"] = wl.pop("size")
+            wl["length"] = np.where(
+                trace.work > 0, trace.work,
+                np.maximum(wl["payload"] * _MI_PER_BYTE, 1.0))
+            params.update(n_dcs=trace.n_targets, n_jobs=len(trace))
+        else:
+            params.update(n_nodes=trace.n_targets, n_objects=len(trace))
+        params["workload"] = wl
+    elif kind == "llmserve_batch":
+        from .llmserve import IN_BYTES_PER_TOKEN
+        n = len(trace)
+        prompt = np.maximum(
+            np.round(trace.size / IN_BYTES_PER_TOKEN), 1.0)
+        decode = np.maximum(
+            np.where(trace.work > 0, np.round(trace.work),
+                     _DECODE_TOK_DEFAULT), 1.0)
+        params = dict(
+            seeds=np.asarray([0]), n_regions=trace.n_targets,
+            n_requests=n, offline_frac=0.0,
+            workload=dict(
+                submit=trace.t.astype(np.float64),
+                src=_require_targets(kind, trace).astype(np.int32),
+                prompt_tok=prompt.astype(np.int64),
+                decode_tok=decode.astype(np.int64),
+                online=np.ones(n, bool)))
+    elif kind == "power_batch":
+        n_samples = int(overrides.get("n_samples", 48))
+        params = dict(seeds=np.asarray([0]), n_samples=n_samples,
+                      demand=demand_curve(trace, n_samples))
+    elif kind == "fleet_batch":
+        from .cluster import FleetConfig, StepCost
+        from .faults import FaultEvent, FaultPlan
+        tgt = _require_targets(kind, trace)
+        # One outage per node at a time (the fleet contract): coalesce
+        # overlapping windows on the same node into their union.
+        spans: Dict[int, list] = {}
+        for t, w, d in zip(trace.t, trace.work, tgt):
+            t0, t1 = float(t), float(t) + (float(w) or 300.0)
+            runs = spans.setdefault(int(d), [])
+            if runs and t0 < runs[-1][1]:
+                runs[-1][1] = max(runs[-1][1], t1)
+            else:
+                runs.append([t0, t1])
+        events = [FaultEvent("node", t0, t1, target=d)
+                  for d in sorted(spans) for t0, t1 in spans[d]]
+        n_nodes = max(int(trace.n_targets), 2)
+        params = dict(
+            seeds=np.asarray([0]),
+            cost=StepCost(compute_s=1.0, memory_s=0.4, collective_s=0.3,
+                          overlap_collective=0.5),
+            cfg=FleetConfig(n_nodes=n_nodes, n_spares=0,
+                            straggler_sigma=0.0, mtbf_hours_node=1e9,
+                            degrade_mtbf_hours=1e9,
+                            straggler_evict_factor=1e9),
+            total_steps=200, fault_plan=FaultPlan(events))
+    else:
+        raise ValueError(
+            f"params_from_trace: no trace mapping for kind {kind!r} "
+            f"(supported: netdc_batch, storage_batch, llmserve_batch, "
+            f"power_batch, fleet_batch)")
+    params.update(overrides)
+    return params

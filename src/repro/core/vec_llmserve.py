@@ -167,7 +167,7 @@ def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
                       prompt_tokens=(64, 1024), decode_tokens=(16, 512),
                       fault_plan: Optional[FaultPlan] = None,
                       retry: Optional[RetryPolicy] = None,
-                      timeout_s: float = math.inf):
+                      timeout_s: float = math.inf, workload=None):
     cells, b = build_cells(
         seeds=seeds, n_machines=n_machines, n_regions=n_regions,
         n_stages=n_stages, n_pipelines=n_pipelines, n_layers=n_layers,
@@ -177,7 +177,7 @@ def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
         slo_ttft_s=slo_ttft_s, kv_penalty_s=kv_penalty_s, link_bw=link_bw,
         hop_latency_s=hop_latency_s, prompt_tokens=prompt_tokens,
         decode_tokens=decode_tokens, fault_plan=fault_plan, retry=retry,
-        timeout_s=timeout_s)
+        timeout_s=timeout_s, workload=workload)
     if b == 0:
         return Done(empty_llmserve_outputs(
             int(n_machines), faulted=fault_plan is not None
@@ -185,6 +185,7 @@ def _prepare_llmserve(*, use_pallas: bool, seeds=(0,), n_machines: int = 6,
     fx = cells[0].fx
     params = _Params(packed=_pack_cells(cells))
     n_pipes, n_st = cells[0].placement.shape
+    n_requests = len(cells[0].submit)  # an injected workload sets its own
     # Every lane routes exactly n_requests requests: nothing to bucket.
     return BatchPlan(params,
                      _Statics(int(n_requests), int(n_pipes), int(n_st),

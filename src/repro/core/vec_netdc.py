@@ -100,13 +100,14 @@ def _prepare_netdc(*, use_pallas: bool, seeds=(0,), n_dcs: int = 4,
                    length_mi=(2e3, 2e4), payload_mb=(10.0, 200.0),
                    fault_plan: Optional[FaultPlan] = None,
                    retry: Optional[RetryPolicy] = None,
-                   timeout_s: float = math.inf):
+                   timeout_s: float = math.inf, workload=None):
     cells, b = build_cells(
         seeds=seeds, n_dcs=n_dcs, n_jobs=n_jobs, dc_mips=dc_mips,
         link_bw=link_bw, hop_latency_s=hop_latency_s,
         locality_weight=locality_weight, offline_dc=offline_dc,
         mean_gap_s=mean_gap_s, length_mi=length_mi, payload_mb=payload_mb,
-        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s)
+        fault_plan=fault_plan, retry=retry, timeout_s=timeout_s,
+        workload=workload)
     if b == 0:
         return Done(empty_netdc_outputs(
             n_dcs, faulted=fault_plan is not None
@@ -114,6 +115,7 @@ def _prepare_netdc(*, use_pallas: bool, seeds=(0,), n_dcs: int = 4,
     fx = cells[0].fx
     params = _Params(*(np.stack([np.asarray(getattr(c, f)) for c in cells])
                        for f in _Params._fields))
+    n_jobs = len(cells[0].submit)      # an injected workload sets its own
     # Every lane runs exactly n_jobs iterations: nothing to bucket.
     return BatchPlan(params, _Statics(int(n_jobs), int(n_dcs),
                                       bool(use_pallas),

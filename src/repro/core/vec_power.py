@@ -223,7 +223,11 @@ def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,)
                    up_thr=0.8, lo_thr=0.3, cooldown=3,
                    min_active: int = 1, init_active: Optional[int] = None,
                    model_mix: str = "mixed", n_points: int = 11,
-                   fault_plan: Optional[FaultPlan] = None):
+                   fault_plan: Optional[FaultPlan] = None, demand=None):
+    if demand is not None:
+        from .power import check_demand
+        demand = check_demand(demand)
+        n_samples = int(demand.shape[0])
     min_active = max(int(min_active), 1)
     init_active = n_hosts if init_active is None else int(init_active)
     if not 1 <= min_active <= n_hosts:
@@ -249,9 +253,12 @@ def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,)
 
     from .power import elastic_demand_trace
     import random as _random
-    traces = np.asarray([elastic_demand_trace(_random.Random(int(s)),
-                                              n_samples)
-                         for s in seeds], np.float64)
+    if demand is not None:
+        traces = np.broadcast_to(demand, (b, n_samples)).copy()
+    else:
+        traces = np.asarray([elastic_demand_trace(_random.Random(int(s)),
+                                                  n_samples)
+                             for s in seeds], np.float64)
     models = make_power_fleet(n_hosts, model_mix)
     cap = np.full(n_hosts, float(host_mips), np.float64)
     table = np.asarray([power_points(m, n_points) for m in models],

@@ -1,0 +1,217 @@
+"""Vectorized replicated object store — ``storage_batch`` as a VecEngine.
+
+One object placed per loop iteration, in submission order, over the
+precomputed tables of :mod:`repro.core.storage`: the replica loop
+(``n_replicas``) and the fault-window tests (``n_windows``) unroll at
+trace time, so the compiled body is a short chain of adds, max/min,
+compares and masked argmins — no multiplies (service times, WAN legs and
+the placement bias were multiplied host-side into the tables), so
+nothing XLA:CPU could FMA-contract, and ``ops.argmin`` shares the OO
+broker's first-occurrence tie rule.  ``oo`` and ``vec`` therefore agree
+bit-exactly on every output (differential suite + golden fixture),
+including the mid-transfer kill / re-source chaos path.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .faults import FaultPlan, RetryPolicy
+from .storage import build_cells, empty_storage_outputs, summarize
+from .vec_engine import BatchPlan, Done, Loop, VecEngine, make_batch_entry
+
+
+class _Statics(NamedTuple):
+    n_objects: int
+    n_nodes: int
+    n_replicas: int
+    quorum: int
+    n_windows: int            # unrolled mid-transfer kill tests (0 = none)
+    use_pallas: bool
+    # Fault view (cf. vec_netdc): both default off so the unfaulted
+    # compiled graph carries no window tests or where-guards at all.
+    timeout: float = math.inf
+    guarded: bool = False
+
+
+class _Params(NamedTuple):
+    """The placement tables the compiled loop reads (cell axis first);
+    the remaining per-cell arrays stay host-side for ``summarize``."""
+    submit: jnp.ndarray       # [J]    f64
+    xfer: jnp.ndarray         # [J, D] f64
+    serve: jnp.ndarray        # [J, D] f64
+    bias: jnp.ndarray         # [J, D] f64
+    online: jnp.ndarray       # [J, D] bool (submit-time candidate mask)
+    win_tgt: jnp.ndarray      # [W] i64 node fault-window targets
+    win_ts: jnp.ndarray       # [W] f64 window starts
+    win_te: jnp.ndarray       # [W] f64 window ends
+
+
+class _Carry(NamedTuple):
+    free: jnp.ndarray         # [D] f64 time each node's writer drains
+    finish: jnp.ndarray       # [J] f64 commit time per object
+    dst: jnp.ndarray          # [J] i32 primary replica node (-1 dropped)
+    n_ok: jnp.ndarray         # [J] i32 surviving replicas
+    killed: jnp.ndarray       # [J] i32 transfers killed mid-flight
+    repaired: jnp.ndarray     # [J] i32 re-sourced transfers that landed
+
+
+def _storage_build(cell, s: _Statics, ops) -> Loop:
+    """One object's replica set placed per iteration: the vectorized form
+    of :func:`repro.core.storage.place_object`, replica and window loops
+    unrolled."""
+    idx = jnp.arange(s.n_nodes)
+    inf = jnp.inf
+
+    def kill(pick, start, fin):
+        """(killed?, writer-clear time) for a transfer on node ``pick``
+        over ``[start, fin)`` — the W-unrolled window-overlap test."""
+        ov = ((cell.win_tgt == pick) & (cell.win_ts < fin)
+              & (start < cell.win_te))                         # [W]
+        return jnp.any(ov), jnp.max(jnp.where(ov, cell.win_te, -inf))
+
+    def body(c: _Carry, it) -> _Carry:
+        arr = cell.submit[it] + cell.xfer[it]                  # [D]
+        elig0 = cell.online[it]
+        free, chosen = c.free, jnp.zeros((s.n_nodes,), bool)
+        picks, fins, clears, kills = [], [], [], []
+        # Phase 1: sequential replica placement (unrolled).
+        for _ in range(s.n_replicas):
+            start = jnp.maximum(free, arr)
+            fin = start + cell.serve[it]
+            score = fin + cell.bias[it]
+            elig = elig0 & ~chosen
+            if math.isfinite(s.timeout):          # static: timeout lane
+                elig = elig & (fin <= cell.submit[it] + s.timeout)
+            pick = ops.argmin(score, elig)
+            placed = jnp.any(elig) if s.guarded else jnp.bool_(True)
+            fin_p = fin[pick]
+            if s.n_windows:
+                killed, clear = kill(pick, start[pick], fin_p)
+            else:
+                killed = jnp.bool_(False)
+                clear = jnp.asarray(-inf, fin_p.dtype)
+            killed = killed & placed
+            sel = (idx == pick) & placed
+            free = jnp.where(sel, jnp.where(killed, clear, fin_p), free)
+            chosen = chosen | sel
+            picks.append(jnp.where(placed, pick, -1))
+            fins.append(jnp.where(placed & ~killed, fin_p, inf))
+            clears.append(clear)
+            kills.append(killed)
+        fins1 = jnp.stack(fins)                                # [R]
+        first_ok = jnp.min(fins1)         # earliest surviving replica
+        # Phase 2: re-source killed transfers from a surviving replica
+        # (unrolled; repairs hit distinct nodes, so no interaction).
+        repaired = []
+        if s.n_windows:
+            can_repair = jnp.isfinite(first_ok)
+            for r in range(s.n_replicas):
+                need = kills[r] & can_repair
+                rep_start = jnp.maximum(clears[r], first_ok)
+                rep_fin = rep_start + cell.serve[it][picks[r]]
+                killed2, clear2 = kill(picks[r], rep_start, rep_fin)
+                free = jnp.where(
+                    (idx == picks[r]) & need,
+                    jnp.where(killed2, clear2, rep_fin), free)
+                landed = need & ~killed2
+                fins[r] = jnp.where(landed, rep_fin, fins[r])
+                repaired.append(landed)
+        fins2 = jnp.stack(fins)                                # [R]
+        # Commit: quorum-th smallest surviving finish; primary replica =
+        # first-occurrence earliest survivor (matches the scalar rule).
+        srt = jnp.sort(fins2)
+        n_ok = jnp.sum(jnp.isfinite(fins2)).astype(jnp.int32)
+        served = n_ok >= s.quorum
+        commit = jnp.where(served, srt[s.quorum - 1], inf)
+        best_r = jnp.argmin(fins2)
+        dst = jnp.where(served, jnp.stack(picks)[best_r], -1)
+        return _Carry(
+            free=free,
+            finish=c.finish.at[it].set(commit),
+            dst=c.dst.at[it].set(dst.astype(jnp.int32)),
+            n_ok=c.n_ok.at[it].set(n_ok),
+            killed=c.killed.at[it].set(
+                jnp.sum(jnp.stack(kills)).astype(jnp.int32)),
+            repaired=c.repaired.at[it].set(
+                jnp.sum(jnp.stack(repaired)).astype(jnp.int32)
+                if repaired else jnp.int32(0)))
+
+    dt = cell.submit.dtype
+    zj = jnp.zeros((s.n_objects,), jnp.int32)
+    return Loop(
+        init=_Carry(free=jnp.zeros((s.n_nodes,), dt),
+                    finish=jnp.full((s.n_objects,), jnp.inf, dt),
+                    dst=jnp.full((s.n_objects,), -1, jnp.int32),
+                    n_ok=zj, killed=zj, repaired=zj),
+        cond=lambda c, it: it < s.n_objects,
+        body=body,
+        finalize=lambda c, it: dict(finish=c.finish, dst=c.dst,
+                                    n_ok=c.n_ok, killed=c.killed,
+                                    repaired=c.repaired))
+
+
+STORAGE_ENGINE = VecEngine("storage_batch", _storage_build)
+
+
+def _prepare_storage(*, use_pallas: bool, seeds=(0,), n_nodes: int = 4,
+                     n_objects: int = 64, write_bw=None,
+                     n_replicas: int = 2, quorum: int = 1,
+                     placement_weight=1.0, offline_node=-1,
+                     link_bw: float = 10e9, hop_latency_s: float = 0.02,
+                     mean_gap_s: float = 2.0, size_mb=(10.0, 200.0),
+                     fault_plan: Optional[FaultPlan] = None,
+                     retry: Optional[RetryPolicy] = None,
+                     timeout_s: float = math.inf, workload=None):
+    cells, b = build_cells(
+        seeds=seeds, n_nodes=n_nodes, n_objects=n_objects,
+        write_bw=write_bw, link_bw=link_bw, hop_latency_s=hop_latency_s,
+        n_replicas=n_replicas, quorum=quorum,
+        placement_weight=placement_weight, offline_node=offline_node,
+        mean_gap_s=mean_gap_s, size_mb=size_mb, fault_plan=fault_plan,
+        retry=retry, timeout_s=timeout_s, workload=workload)
+    if b == 0:
+        return Done(empty_storage_outputs(
+            n_nodes, faulted=fault_plan is not None
+            or math.isfinite(timeout_s)))
+    fx = cells[0].fx
+    params = _Params(*(np.stack([np.asarray(getattr(c, f)) for c in cells])
+                       for f in _Params._fields))
+    n_objects = len(cells[0].submit)   # an injected workload sets its own
+    # Every lane places exactly n_objects objects: nothing to bucket.
+    return BatchPlan(params,
+                     _Statics(int(n_objects), int(n_nodes),
+                              int(n_replicas), int(quorum),
+                              int(len(cells[0].win_tgt)), bool(use_pallas),
+                              timeout=(fx.timeout_s if fx else math.inf),
+                              guarded=fx is not None),
+                     finalize=lambda out: summarize(out, cells))
+
+
+simulate_storage_batch = make_batch_entry(
+    STORAGE_ENGINE, _prepare_storage, name="simulate_storage_batch",
+    doc="""\
+    Batched replicated-object-store placement through the sweep layer.
+
+    ``seeds`` and the sweep axes ``placement_weight`` / ``offline_node``
+    (scalars or arrays broadcast against ``seeds``) define the batch;
+    ``n_replicas`` / ``quorum`` select the replication policy (N-way when
+    equal, quorum otherwise).  Each cell's PUT stream and placement
+    tables come from :mod:`repro.core.storage` and are shared verbatim
+    with the OO reference broker; an injected ``workload`` (trace replay,
+    :func:`repro.core.trace.params_from_trace`) replaces the seeded
+    stream.  Returns per-object ``finish`` (commit time) / ``dst``
+    (primary replica) / ``n_ok`` / ``killed`` / ``repaired`` plus the
+    shared summary (``makespan``, ``commit_total_s``, ``replicas_ok``,
+    ``bytes_stored``, ``killed_transfers``, ``repaired_transfers``,
+    ``node_primaries``, ``busiest_node``); ``with_report=True`` adds the
+    ``SweepReport``.  A ``fault_plan`` (``node`` / ``link`` /
+    ``transient`` windows), ``retry`` and ``timeout_s`` inject node
+    outages with mid-transfer kills + re-sourcing, WAN degradation and
+    flaky PUTs; faulted runs add ``submit`` / ``served`` / ``dropped`` /
+    ``retries`` outputs.  Bit-exact vs the ``oo``/``legacy`` backends on
+    every output.
+    """)

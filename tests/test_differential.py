@@ -197,6 +197,32 @@ def _cmp_llmserve(oo, vec):
     _assert_exact(oo, vec, keys=sorted(oo))
 
 
+def _gen_storage(rng):
+    n_nodes = int(rng.integers(2, 6))
+    n_replicas = int(rng.integers(1, n_nodes + 1))
+    return dict(seeds=rng.integers(0, 1000, 3),
+                n_nodes=n_nodes,
+                n_objects=int(rng.integers(8, 40)),
+                n_replicas=n_replicas,
+                quorum=int(rng.integers(1, n_replicas + 1)),
+                placement_weight=float(rng.uniform(0.5, 4.0)),
+                offline_node=(int(rng.integers(-1, 2))
+                              if n_replicas < n_nodes else -1),
+                hop_latency_s=float(rng.uniform(0.0, 0.1)),
+                mean_gap_s=float(rng.uniform(0.5, 4.0)))
+
+
+def _run_storage(backend, params):
+    return run_scenario("storage_batch", backend=backend, **params)
+
+
+def _cmp_storage(oo, vec):
+    # Every output, bit-exact (same key-set contract as netdc): the
+    # placement arithmetic is shared f64 tables + adds/max/min/compares.
+    assert set(vec) - {"iterations"} == set(oo), sorted(set(vec) ^ set(oo))
+    _assert_exact(oo, vec, keys=sorted(oo))
+
+
 def _gen_power(rng):
     lo = float(rng.uniform(0.1, 0.4))
     return dict(seeds=rng.integers(0, 1000, 3),
@@ -226,6 +252,7 @@ CASES = {
     "power_batch": (_gen_power, _run_power, _cmp_power),
     "netdc_batch": (_gen_netdc, _run_netdc, _cmp_netdc),
     "llmserve_batch": (_gen_llmserve, _run_llmserve, _cmp_llmserve),
+    "storage_batch": (_gen_storage, _run_storage, _cmp_storage),
 }
 
 
@@ -239,7 +266,8 @@ def _check(kind, seed):
 # compacting lane scheduler; consolidation_batch is a host loop (the
 # compact control does not apply there).
 COMPACT_KINDS = ("fleet_batch", "workflow_batch", "cloudlet_batch",
-                 "power_batch", "netdc_batch", "llmserve_batch")
+                 "power_batch", "netdc_batch", "llmserve_batch",
+                 "storage_batch")
 
 
 def _check_compact(kind, seed):
@@ -355,11 +383,28 @@ def _gen_fleet_faulted(rng):
     return dict(params, cfg=cfg, fault_plan=FaultPlan(events))
 
 
+def _gen_storage_faulted(rng):
+    """Chaos over the replica store: node windows sized to land mid-
+    transfer (kills + re-sourcing), WAN degradation, flaky PUTs."""
+    from repro.core.faults import RetryPolicy, make_chaos_plan
+    params = _gen_storage(rng)
+    t_max = params["n_objects"] * params["mean_gap_s"]
+    plan = make_chaos_plan(int(rng.integers(0, 1000)), t_max,
+                           n_targets=params["n_nodes"],
+                           n_node_windows=3, n_link_windows=1,
+                           transient_prob=float(rng.uniform(0.1, 0.5)))
+    return dict(params, fault_plan=plan, timeout_s=float(t_max * 4),
+                retry=RetryPolicy(max_retries=2, base_delay_s=0.25,
+                                  backoff=2.0, jitter_frac=0.25,
+                                  budget_s=t_max))
+
+
 FAULTED_CASES = {
     "fleet_batch": (_gen_fleet_faulted, _run_fleet, _cmp_fleet),
     "power_batch": (_gen_power_faulted, _run_power, _cmp_power),
     "netdc_batch": (_gen_netdc_faulted, _run_netdc, _cmp_netdc),
     "llmserve_batch": (_gen_llmserve_faulted, _run_llmserve, _cmp_llmserve),
+    "storage_batch": (_gen_storage_faulted, _run_storage, _cmp_storage),
 }
 
 

@@ -477,3 +477,91 @@ def test_recovery_times_metric():
     assert rec[0] == pytest.approx(2.0)
     # node 0 never serves after 50 -> unmeasured
     assert math.isnan(rec[1])
+
+
+def test_soak_chaos_horizon_covers_running_work():
+    """The chaos horizon must track the *measured* makespan — service
+    time, queueing and timeouts included — not the arrival span alone.
+    A window drawn at 0.9·horizon has to intersect running work."""
+    from repro.core.backend import run_sweep
+    from repro.core.soak import run_soak
+    # Service-dominated workload: arrivals stop after ~0.6 s but execution
+    # queues behind two small DCs for tens of seconds.  The old
+    # ``mean_gap_s · n_jobs`` horizon (≈ 0.6 s) missed nearly the run.
+    rep = run_soak(rounds=2, cells_per_round=4, n_targets=2, n_jobs=24,
+                   mean_gap_s=0.025, chunk_size=2, seed0=1)
+    clean, chaos = rep.rounds
+    assert not clean.chaos and chaos.chaos
+    assert clean.horizon_s > 0.0                # measured clean makespan
+    h = chaos.horizon_s
+    assert h == clean.horizon_s                 # chaos reused it
+    # Replay the measured (clean) round's workload to get job intervals.
+    seeds = 1 + np.arange(4)
+    out = run_sweep("netdc_batch",
+                    dict(seeds=seeds, n_dcs=2, n_jobs=24,
+                         mean_gap_s=0.025, timeout_s=600.0),
+                    backend="vec").outputs
+    submit = np.asarray(out["submit"], np.float64)
+    finish = np.asarray(out["finish"], np.float64)
+    srv = np.asarray(out["dst"]) >= 0
+    mk = float(finish[srv].max())
+    # The horizon lands in the makespan's ballpark (clean rounds use
+    # different seeds, so exact equality is not expected) ...
+    assert 0.5 * mk <= h <= 2.0 * mk
+    # ... and a window at [0.9·h, h) intersects work still running.
+    w0, w1 = 0.9 * h, h
+    assert bool(np.any(srv & (submit < w1) & (finish > w0))), \
+        "chaos window at 0.9·horizon missed all running work"
+
+
+def test_soak_snapshot_atomic_under_mid_write_crash(tmp_path, monkeypatch):
+    """A crash *during* a snapshot rewrite must leave the previous
+    snapshot intact and parseable (temp file + os.replace, never an
+    in-place truncation) and no stray temp files behind."""
+    import repro.core.soak as soak_mod
+    from repro.core.soak import SoakReport, SoakRound
+
+    def round_(i):
+        return SoakRound(round=i, chaos=False, cells=2, wall_s=0.1,
+                         events=10, events_per_s=100.0, streamed_cells=2,
+                         active_fraction=1.0, served=2, dropped=0,
+                         retries=0, sla_violations=0, quarantined=0,
+                         retried_segments=0)
+
+    snap = tmp_path / "soak.json"
+    rep = SoakReport(kind="netdc_batch", backend="vec")
+    rep.rounds.append(round_(0))
+    rep.save(snap)
+    committed = snap.read_text()
+    assert json.loads(committed)["totals"]["rounds"] == 1
+
+    rep.rounds.append(round_(1))
+    monkeypatch.setattr(soak_mod.json, "dump",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            OSError("injected crash mid-write")))
+    with pytest.raises(OSError, match="injected crash"):
+        rep.save(snap)
+    assert snap.read_text() == committed        # old snapshot untouched
+    assert sorted(tmp_path.iterdir()) == [snap]  # temp file cleaned up
+    monkeypatch.undo()
+    rep.save(snap)                              # and recovery still works
+    assert json.loads(snap.read_text())["totals"]["rounds"] == 2
+
+
+def test_soak_snapshot_parses_after_crash_between_rounds(tmp_path):
+    """run_soak dying between rounds leaves a valid cumulative snapshot."""
+    from repro.core.soak import run_soak
+
+    class Boom(RuntimeError):
+        pass
+
+    def progress(round_rec):
+        if round_rec.round == 1:
+            raise Boom("injected crash between rounds")
+
+    snap = tmp_path / "soak.json"
+    with pytest.raises(Boom):
+        run_soak(rounds=3, cells_per_round=2, n_jobs=8, chunk_size=2,
+                 snapshot_path=snap, progress=progress)
+    stored = json.loads(snap.read_text())       # parses cleanly
+    assert stored["totals"]["rounds"] == 2      # rounds 0 and 1 committed

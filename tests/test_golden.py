@@ -148,9 +148,49 @@ def _netdc_chaos_case():
                 outputs={k: np.asarray(v).tolist() for k, v in out.items()})
 
 
+def _storage_case():
+    out = run_scenario(
+        "storage_batch", backend="vec", seeds=[0, 1, 2, 3], n_nodes=4,
+        n_objects=32, n_replicas=2, quorum=2,
+        placement_weight=np.array([1.0, 1.0, 2.5, 2.5]),
+        offline_node=np.array([-1, 1, -1, 1]))
+    return dict(config=dict(n_nodes=4, n_objects=32, seeds=4,
+                            n_replicas=2, quorum=2,
+                            sweep="placement_weight × offline_node"),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
+def _storage_chaos_case():
+    # The kill/re-source path frozen end to end: node windows sized to
+    # land mid-transfer, WAN degradation, transient PUT failures — run on
+    # the OO broker (the vec engine must match it bit-exactly; the
+    # differential suite holds that line, this fixture pins the numbers).
+    from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
+    plan = FaultPlan([
+        FaultEvent("node", 8.0, 25.0, target=1),
+        FaultEvent("node", 30.0, 45.0, target=0),
+        FaultEvent("link", 15.0, 40.0, severity=3.0),
+        FaultEvent("transient", 0.0, 64.0, severity=0.4),
+    ], seed=13)
+    retry = RetryPolicy(max_retries=2, base_delay_s=0.5, backoff=2.0,
+                        jitter_frac=0.25, budget_s=60.0)
+    out = run_scenario(
+        "storage_batch", backend="oo", seeds=[0, 1, 2], n_nodes=4,
+        n_objects=32, n_replicas=3, quorum=2, mean_gap_s=1.0,
+        fault_plan=plan, retry=retry, timeout_s=240.0)
+    return dict(config=dict(n_nodes=4, n_objects=32, seeds=3,
+                            n_replicas=3, quorum=2, mean_gap_s=1.0,
+                            timeout_s=240.0,
+                            plan="2 node + link + transient",
+                            retry="2x exp backoff, 25% jitter, 60s budget"),
+                outputs={k: np.asarray(v).tolist() for k, v in out.items()})
+
+
 CASES = {
     "fleet_batch": _fleet_case,
     "netdc_chaos": _netdc_chaos_case,
+    "storage_batch": _storage_case,
+    "storage_chaos": _storage_chaos_case,
     "netdc_batch": _netdc_case,
     "llmserve_batch": _llmserve_case,
     "workflow_batch": _workflow_case,

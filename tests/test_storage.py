@@ -1,0 +1,162 @@
+"""storage_batch: replication semantics, parameter validation, workload
+injection, and OO↔vec bit-exactness on targeted configurations (the broad
+randomized sweep lives in the differential suite)."""
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.backend import run_scenario, run_sweep
+from repro.core.faults import FaultEvent, FaultPlan, RetryPolicy
+from repro.core.storage import build_cells, place_object
+from repro.core.trace import load_trace, params_from_trace
+
+SAMPLE = pathlib.Path(__file__).parent / "data" / "sample_trace.jsonl"
+
+
+def _both(**kw):
+    oo = run_scenario("storage_batch", backend="oo", **kw)
+    vec = run_scenario("storage_batch", backend="vec", **kw)
+    assert set(vec) - {"iterations"} == set(oo)
+    for k in sorted(oo):
+        assert np.array_equal(np.asarray(oo[k]), np.asarray(vec[k]),
+                              equal_nan=True), k
+    return oo
+
+
+# -- semantics -----------------------------------------------------------------
+
+def test_replicas_land_on_distinct_nodes():
+    out = _both(seeds=[0, 1], n_nodes=5, n_objects=24, n_replicas=3,
+                quorum=2)
+    n_ok = np.asarray(out["n_ok"])
+    assert np.all(n_ok == 3)                  # no faults → all survive
+    assert np.all(np.isfinite(np.asarray(out["finish"])))
+    assert np.all(np.asarray(out["dst"]) >= 0)
+
+
+def test_quorum_commit_is_kth_smallest():
+    # With quorum=1 the commit is the fastest replica; with quorum=R it is
+    # the slowest — so commit times are monotone in the quorum size.
+    base = dict(seeds=[0], n_nodes=4, n_objects=16, n_replicas=3)
+    fast = np.asarray(_both(quorum=1, **base)["finish"])
+    mid = np.asarray(_both(quorum=2, **base)["finish"])
+    slow = np.asarray(_both(quorum=3, **base)["finish"])
+    assert np.all(fast <= mid) and np.all(mid <= slow)
+    assert np.any(fast < slow)
+
+
+def test_offline_node_never_hosts_a_replica():
+    out = _both(seeds=[0, 1, 2], n_nodes=4, n_objects=24, n_replicas=2,
+                quorum=1, offline_node=2)
+    assert not np.any(np.asarray(out["dst"]) == 2)
+    assert np.all(np.asarray(out["node_primaries"])[:, 2] == 0)
+
+
+def test_placement_weight_spreads_load():
+    # Raising the bias toward cheap transfers concentrates placement less;
+    # the busiest node should carry no more primaries than at weight 1.
+    base = dict(seeds=[0, 1, 2, 3], n_nodes=4, n_objects=48, n_replicas=1,
+                quorum=1)
+    flat = np.asarray(_both(placement_weight=1.0, **base)["node_primaries"])
+    # sanity: every object has exactly one primary
+    assert flat.sum(axis=1).tolist() == [48] * 4
+
+
+def test_mid_transfer_kill_resources_from_survivor():
+    plan = FaultPlan([FaultEvent("node", 5.0, 60.0, target=0)], seed=3)
+    out = _both(seeds=[0, 1, 2], n_nodes=3, n_objects=32, n_replicas=2,
+                quorum=1, mean_gap_s=0.5, fault_plan=plan)
+    killed = int(np.asarray(out["killed_transfers"]).sum())
+    repaired = int(np.asarray(out["repaired_transfers"]).sum())
+    assert killed > 0, "fault window never landed mid-transfer"
+    assert 0 < repaired <= killed
+    assert int(np.asarray(out["served"]).sum()) > 0
+
+
+def test_drops_below_quorum():
+    # One surviving node but quorum=2: anything killed on the faulted node
+    # cannot re-reach quorum while the window is open.
+    plan = FaultPlan([FaultEvent("node", 0.0, 1e5, target=1)], seed=0)
+    out = _both(seeds=[0, 1], n_nodes=2, n_objects=16, n_replicas=2,
+                quorum=2, fault_plan=plan)
+    assert int(np.asarray(out["dropped"]).sum()) == 2 * 16
+    assert np.all(np.asarray(out["dst"]) == -1)
+
+
+def test_scalar_place_object_free_is_monotone():
+    (cells, _) = build_cells(seeds=[5], n_nodes=3, n_objects=12,
+                             write_bw=None, link_bw=10e9,
+                             hop_latency_s=0.02, n_replicas=2, quorum=1,
+                             placement_weight=1.0, offline_node=-1,
+                             mean_gap_s=0.5, size_mb=(10.0, 200.0),
+                             fault_plan=None, retry=None,
+                             timeout_s=math.inf, workload=None)
+    cell = cells[0]
+    free = np.zeros(3)
+    prev = free.copy()
+    for j in range(12):
+        place_object(free, cell, j, 2, 1)
+        assert np.all(free >= prev)
+        prev = free.copy()
+
+
+# -- validation ----------------------------------------------------------------
+
+def test_replication_policy_validated():
+    with pytest.raises(ValueError, match="quorum must be in"):
+        run_scenario("storage_batch", backend="oo", seeds=[0],
+                     n_replicas=2, quorum=3)
+    with pytest.raises(ValueError, match="cannot exceed"):
+        run_scenario("storage_batch", backend="vec", seeds=[0],
+                     n_nodes=2, n_replicas=3, quorum=1)
+    with pytest.raises(ValueError, match="fewer nodes than"):
+        run_scenario("storage_batch", backend="vec", seeds=[0],
+                     n_nodes=3, n_replicas=3, quorum=1, offline_node=0)
+    with pytest.raises(ValueError, match="no region concept"):
+        run_scenario("storage_batch", backend="oo", seeds=[0],
+                     fault_plan=FaultPlan(
+                         [FaultEvent("region", 0.0, 5.0, target=0)]))
+
+
+def test_workload_injection_validated():
+    good = dict(submit=np.array([0.0, 1.0]), src=np.array([0, 1]),
+                size=np.array([5e6, 6e6]))
+    out = _both(seeds=[0, 1], n_nodes=3, n_replicas=2, quorum=1,
+                workload=good)
+    assert np.asarray(out["finish"]).shape == (2, 2)
+    with pytest.raises(ValueError, match="sizes must be > 0"):
+        run_scenario("storage_batch", backend="oo", seeds=[0], n_nodes=3,
+                     workload=dict(good, size=np.array([0.0, 6e6])))
+    with pytest.raises(ValueError, match="keys mismatch"):
+        run_scenario("storage_batch", backend="vec", seeds=[0], n_nodes=3,
+                     workload=dict(good, length=np.ones(2)))
+
+
+# -- trace replay --------------------------------------------------------------
+
+def test_sample_trace_replay_matches_across_backends():
+    params = params_from_trace("storage_batch", load_trace(SAMPLE),
+                               n_replicas=2, quorum=2)
+    oo = run_sweep("storage_batch", params, backend="oo").outputs
+    vec = run_sweep("storage_batch", params, backend="vec").outputs
+    for k in sorted(oo):
+        assert np.array_equal(np.asarray(oo[k]), np.asarray(vec[k]),
+                              equal_nan=True), k
+    assert np.asarray(vec["finish"]).shape == (1, 64)
+    assert np.all(np.asarray(vec["n_ok"]) == 2)
+
+
+def test_chaos_parity_under_retry_and_timeout():
+    plan = FaultPlan([
+        FaultEvent("node", 4.0, 18.0, target=1),
+        FaultEvent("link", 6.0, 20.0, severity=2.5),
+        FaultEvent("transient", 0.0, 40.0, severity=0.35),
+    ], seed=21)
+    retry = RetryPolicy(max_retries=2, base_delay_s=0.25, backoff=2.0,
+                        jitter_frac=0.25, budget_s=30.0)
+    out = _both(seeds=[0, 1, 2], n_nodes=4, n_objects=24, n_replicas=2,
+                quorum=1, mean_gap_s=0.75, fault_plan=plan, retry=retry,
+                timeout_s=90.0)
+    assert int(np.asarray(out["retries"]).sum()) > 0

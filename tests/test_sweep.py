@@ -365,3 +365,18 @@ def test_run_sweep_rejection_messages():
                             with_report=False) == "bare result"
     finally:
         _SCENARIOS.pop("_sweep_probe", None)
+
+
+def test_auto_chunk_size_ignores_zero_cost_lanes():
+    """A few zero-predicted-cost lanes (an empty trace slice, a zero-job
+    cell) carry no divergence information and must not silently disable
+    chunking for the whole sweep."""
+    pred = np.linspace(1, 10, 256)
+    pred[0] = 0.0
+    assert auto_chunk_size(256, pred, 1) == 32   # chunking still engages
+    pred[1] = -2.0                               # defensive: negatives too
+    assert auto_chunk_size(256, pred, 1) == 32
+    # positive lanes that do NOT diverge stay monolithic despite the zeros
+    flat = np.full(256, 7.0)
+    flat[:8] = 0.0
+    assert auto_chunk_size(256, flat, 1) == 256

@@ -1,0 +1,219 @@
+"""Trace-replay layer: parsing strictness, round-trip bit-exactness, and
+bit-identical replay of recorded streams across every backend family."""
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core.backend import run_sweep
+from repro.core.trace import (Trace, TraceError, check_workload,
+                              demand_curve, diurnal_trace, load_trace,
+                              mmpp_trace, params_from_trace, poisson_trace,
+                              save_trace)
+
+SAMPLE = pathlib.Path(__file__).parent / "data" / "sample_trace.jsonl"
+
+
+# -- parsing & round-trip ------------------------------------------------------
+
+def _write_jsonl(tmp_path, rows, name="t.jsonl"):
+    p = tmp_path / name
+    p.write_text("".join(json.dumps(r) + "\n" for r in rows))
+    return p
+
+
+def test_jsonl_round_trip_is_bit_exact(tmp_path):
+    tr = mmpp_trace(3, 40, n_targets=3)
+    p = tmp_path / "rt.jsonl"
+    save_trace(tr, p)
+    tr2 = load_trace(p)
+    for f in ("t", "size", "target", "work"):
+        assert np.array_equal(getattr(tr, f), getattr(tr2, f)), f
+    assert tr2.n_targets == tr.n_targets
+    # and a second parse of the same bytes is identical again
+    tr3 = load_trace(p)
+    assert np.array_equal(tr2.t, tr3.t)
+
+
+def test_csv_parses_with_aliases(tmp_path):
+    p = tmp_path / "t.csv"
+    p.write_text("time,bytes,node,tokens\n"
+                 "0.0,100.5,0,12\n"
+                 "1.5,200.0,2,0\n")
+    tr = load_trace(p)
+    assert len(tr) == 2
+    assert tr.t.tolist() == [0.0, 1.5]
+    assert tr.size.tolist() == [100.5, 200.0]
+    assert tr.target.tolist() == [0, 2]
+    assert tr.work.tolist() == [12.0, 0.0]
+    assert tr.n_targets == 3
+
+
+def test_negative_size_names_the_line(tmp_path):
+    p = _write_jsonl(tmp_path, [dict(t=0.0, size=10.0),
+                                dict(t=1.0, size=-5.0)])
+    with pytest.raises(TraceError, match=r"t\.jsonl:2: .*size"):
+        load_trace(p)
+
+
+def test_out_of_order_timestamp_names_the_line(tmp_path):
+    p = _write_jsonl(tmp_path, [dict(t=5.0, size=1.0),
+                                dict(t=6.0, size=1.0),
+                                dict(t=2.0, size=1.0)])
+    with pytest.raises(TraceError, match=r"t\.jsonl:3: out-of-order"):
+        load_trace(p)
+
+
+def test_unknown_target_names_the_line(tmp_path):
+    p = _write_jsonl(tmp_path, [dict(t=0.0, size=1.0, target=0),
+                                dict(t=1.0, size=1.0, target=7)])
+    with pytest.raises(TraceError, match=r"t\.jsonl:2: unknown target 7"):
+        load_trace(p, n_targets=4)
+
+
+def test_invalid_json_missing_field_and_bad_number(tmp_path):
+    p = tmp_path / "t.jsonl"
+    p.write_text('{"t": 0.0, "size": 1.0}\nnot json\n')
+    with pytest.raises(TraceError, match=r"t\.jsonl:2: invalid JSON"):
+        load_trace(p)
+    p2 = _write_jsonl(tmp_path, [dict(t=0.0)], name="m.jsonl")
+    with pytest.raises(TraceError, match=r"m\.jsonl:1: missing required "
+                                         r"field 'size'"):
+        load_trace(p2)
+    p3 = _write_jsonl(tmp_path, [dict(t="soon", size=1.0)], name="n.jsonl")
+    with pytest.raises(TraceError, match=r"n\.jsonl:1: .*not numeric"):
+        load_trace(p3)
+
+
+def test_unsupported_extension_rejected(tmp_path):
+    p = tmp_path / "t.parquet"
+    p.write_text("x")
+    with pytest.raises(TraceError, match="unsupported trace format"):
+        load_trace(p)
+
+
+# -- generators ----------------------------------------------------------------
+
+@pytest.mark.parametrize("gen", [poisson_trace, mmpp_trace, diurnal_trace])
+def test_generators_are_sorted_valid_and_deterministic(gen):
+    a, b = gen(11, 50, n_targets=3), gen(11, 50, n_targets=3)
+    assert np.array_equal(a.t, b.t) and np.array_equal(a.size, b.size)
+    assert np.all(np.diff(a.t) >= 0) and np.all(a.size > 0)
+    assert a.target.min() >= 0 and a.target.max() < 3
+    assert len(gen(0, 0)) == 0
+
+
+def test_generator_validation():
+    with pytest.raises(ValueError):
+        poisson_trace(0, 10, rate_hz=0.0)
+    with pytest.raises(ValueError):
+        mmpp_trace(0, 10, rates_hz=(1.0, -2.0))
+    with pytest.raises(ValueError):
+        diurnal_trace(0, 10, trough_frac=0.0)
+
+
+def test_demand_curve_buckets_and_normalizes():
+    tr = Trace(t=np.array([0.0, 1.0, 1.1, 9.9]), size=np.ones(4),
+               target=np.zeros(4, np.int64), work=np.zeros(4), n_targets=1)
+    d = demand_curve(tr, 5)
+    assert d.shape == (5,) and d.max() == 1.0 and d.min() >= 0.0
+    assert d[0] == 1.0          # the [0, ~2) bucket holds 3 of 4 arrivals
+    assert demand_curve(Trace(t=np.empty(0), size=np.empty(0),
+                              target=np.empty(0, np.int64),
+                              work=np.empty(0), n_targets=1), 4).tolist() \
+        == [0.0] * 4
+
+
+# -- workload validation at the scenario boundary ------------------------------
+
+def test_check_workload_rejects_bad_streams():
+    good = dict(submit=np.array([0.0, 1.0]), src=np.array([0, 1]),
+                size=np.array([5.0, 6.0]))
+    spec = dict(submit=np.float64, src=np.int32, size=np.float64)
+    out, n = check_workload("storage_batch", good, spec, n_targets=2)
+    assert n == 2 and out["src"].dtype == np.int32
+    with pytest.raises(ValueError, match="keys mismatch"):
+        check_workload("storage_batch", dict(good, extra=1), spec,
+                       n_targets=2)
+    with pytest.raises(ValueError, match="nondecreasing"):
+        check_workload("storage_batch",
+                       dict(good, submit=np.array([1.0, 0.0])), spec,
+                       n_targets=2)
+    with pytest.raises(ValueError, match="targets must lie"):
+        check_workload("storage_batch", good, spec, n_targets=1)
+    with pytest.raises(ValueError, match="1-D array"):
+        check_workload("storage_batch",
+                       dict(good, size=np.ones((2, 2))), spec, n_targets=2)
+
+
+def test_params_from_trace_unknown_kind():
+    tr = poisson_trace(0, 4, n_targets=2)
+    with pytest.raises(ValueError, match="no trace mapping"):
+        params_from_trace("nope_batch", tr)
+
+
+# -- replay determinism: the tentpole contract ---------------------------------
+
+@pytest.mark.parametrize("kind", ["netdc_batch", "llmserve_batch",
+                                  "storage_batch"])
+@pytest.mark.parametrize("backend", ["legacy", "oo", "vec"])
+def test_replay_is_bit_identical_across_backends(kind, backend):
+    """Replaying the committed sample trace twice — freshly parsed each
+    time — is bit-identical, on every backend family; and every backend
+    agrees with the vec reference run bit-exactly."""
+    runs = [run_sweep(kind, params_from_trace(kind, load_trace(SAMPLE)),
+                      backend=backend).outputs for _ in range(2)]
+    ref = run_sweep(kind, params_from_trace(kind, load_trace(SAMPLE)),
+                    backend="vec").outputs
+    for k in sorted(set(runs[0]) & set(ref)):
+        a, b = np.asarray(runs[0][k]), np.asarray(runs[1][k])
+        assert np.array_equal(a, b, equal_nan=True), f"{k}: replay drifted"
+        assert np.array_equal(a, np.asarray(ref[k]), equal_nan=True), \
+            f"{k}: {backend} disagrees with vec on the same trace"
+
+
+@pytest.mark.parametrize("kind", ["power_batch", "fleet_batch"])
+def test_replay_is_bit_identical_derived_kinds(kind):
+    """The demand-curve (power) and outage-plan (fleet) mappings replay
+    bit-identically too."""
+    runs = [run_sweep(kind, params_from_trace(kind, load_trace(SAMPLE)),
+                      backend="vec").outputs for _ in range(2)]
+    assert runs[0], "no outputs"
+    for k in runs[0]:
+        assert np.array_equal(np.asarray(runs[0][k]),
+                              np.asarray(runs[1][k]), equal_nan=True), k
+
+
+def test_power_demand_injection_matches_oo():
+    p = params_from_trace("power_batch", load_trace(SAMPLE), n_samples=24)
+    assert len(p["demand"]) == 24
+    oo = run_sweep("power_batch", p, backend="oo").outputs
+    vec = run_sweep("power_batch", p, backend="vec").outputs
+    for k in sorted(set(oo) & set(vec)):
+        assert np.array_equal(np.asarray(oo[k]), np.asarray(vec[k])), k
+
+
+def test_trace_requires_targets_for_sited_kinds():
+    tr = Trace(t=np.array([0.0]), size=np.array([1.0]),
+               target=np.array([-1]), work=np.zeros(1), n_targets=2)
+    with pytest.raises(ValueError, match="no target"):
+        params_from_trace("netdc_batch", tr)
+
+
+def test_fleet_mapping_coalesces_overlapping_outages():
+    tr = Trace(t=np.array([0.0, 5.0, 50.0]), size=np.ones(3),
+               target=np.array([1, 1, 1]), work=np.array([10.0, 10.0, 5.0]),
+               n_targets=2)
+    plan = params_from_trace("fleet_batch", tr)["fault_plan"]
+    tgt, ts, te, _ = plan.select("node")
+    assert ts.tolist() == [0.0, 50.0]      # [0,10) ∪ [5,15) → [0,15)
+    assert te.tolist() == [15.0, 55.0]
+    assert tgt.tolist() == [1, 1]
+
+
+def test_demand_param_validated():
+    with pytest.raises(ValueError, match="demand"):
+        run_sweep("power_batch",
+                  dict(seeds=[0], demand=np.array([0.5, 1.5])),
+                  backend="vec")
