@@ -20,6 +20,12 @@ Two compaction-specific gates ride along:
     the speedup ratios this is machine-dependent, so quick baselines must
     be regenerated when the runner class changes (the device-count match
     below catches topology changes, the threshold absorbs runner noise);
+    The same rate gate covers the kernel sections of
+    ``BENCH_kernels.json`` (scoped by their ``pallas_native`` flag instead
+    of the fraction field), with one extra like-for-like rule: rates are
+    only compared when current and baseline agree on ``pallas_native`` —
+    an interpret-mode CPU rate is never held to a natively lowered
+    baseline, or vice versa;
   * ``observed_active_lane_fraction`` — any *current* section with
     ``compacted: true`` must keep its observed fraction ≥ 0.95.  This is
     an absolute floor, not a baseline ratio: a dense resident batch is
@@ -63,6 +69,7 @@ TRACKED_KEYS = ("speedup_vs_oo", "speedup_vs_monolithic",
                 "speedup_vs_bucketed")
 RATE_KEY = "events_per_s"               # machine-dependent, ratio-gated
 FRACTION_KEY = "observed_active_lane_fraction"
+NATIVE_KEY = "pallas_native"            # kernel sections: lowering mode
 FRACTION_FLOOR = 0.95                   # absolute floor for compacted runs
 
 
@@ -83,13 +90,14 @@ def tracked_ratio(section: Dict) -> Tuple[str, float]:
 
 def rate_sections(record: Dict) -> Dict[str, Dict]:
     """flavour name -> section, for every section carrying ``events_per_s``
-    alongside the observed-fraction field — i.e. the sweep-schedule
-    sections written via ``_util.report_fields`` (older records carry
-    ad-hoc ``events_per_s`` figures that were never gated; scoping on the
-    field pair keeps them that way)."""
+    alongside either the observed-fraction field (the sweep-schedule
+    sections written via ``_util.report_fields``) or a ``pallas_native``
+    flag (the kernel sections in ``BENCH_kernels.json``).  Older records
+    carry ad-hoc ``events_per_s`` figures that were never gated; scoping
+    on a field *pair* keeps them that way."""
     return {name: section for name, section in record.items()
             if isinstance(section, dict) and RATE_KEY in section
-            and FRACTION_KEY in section}
+            and (FRACTION_KEY in section or NATIVE_KEY in section)}
 
 
 def tracked_ratios(record: Dict) -> Dict[str, float]:
@@ -154,6 +162,17 @@ def check_pair(current: Dict, baseline: Dict, threshold: float
                 and cur_dev != base_dev:
             notes.append(f"{bench}/{name}: device-count mismatch (current "
                          f"{cur_dev} vs baseline {base_dev}) — "
+                         f"{RATE_KEY} not gated")
+            continue
+        # Kernel rates are only comparable within one lowering mode: a
+        # natively lowered TPU/GPU rate vs an interpret-mode CPU baseline
+        # (either direction) measures the runner, not the kernel.
+        cur_nat = cur_r[name].get(NATIVE_KEY)
+        base_nat = base_sec.get(NATIVE_KEY)
+        if cur_nat is not None and base_nat is not None \
+                and cur_nat != base_nat:
+            notes.append(f"{bench}/{name}: {NATIVE_KEY} mismatch (current "
+                         f"{cur_nat} vs baseline {base_nat}) — "
                          f"{RATE_KEY} not gated")
             continue
         floor = base_rate * (1.0 - threshold)

@@ -1,0 +1,144 @@
+"""Kernel benchmark: the fused Pallas step kernels vs their jnp twins.
+
+Three sections, one per kernel surface (ISSUE 10):
+
+  * ``next_event``      — the row-tiled masked min/argmin reduction over a
+    wide-sweep shape, kernel vs the two-reduction jnp oracle;
+  * ``step_fleet``      — the fleet engine end to end, ``use_pallas="force"``
+    (every ``cond/body`` iteration one fused pallas_call) vs the plain path;
+  * ``step_power``      — the power engine end to end, ``use_pallas="force"``
+    (the whole static-trip-count loop as ONE pallas_call with VMEM scratch
+    carry) vs the plain ``lax.fori_loop`` path.
+
+Every section records ``events_per_s`` for the kernel path and a
+``pallas_native`` flag taken truthfully from the runtime backend: on the
+CPU CI runner the kernels execute in **interpret mode**, so the recorded
+rates measure semantics + dispatch overhead, not silicon — the gate in
+``check_regression.py`` therefore only compares rates whose
+``pallas_native`` flags match (a TPU record is never held to a CPU
+baseline, or vice versa).
+
+Both step sections assert the fused outputs **bit-identical** to the
+plain path before recording anything — the benchmark is also the kernel
+parity check, like ``power_sweep``'s OO-vs-vec assertion.
+
+Writes ``BENCH_kernels.json`` at the repo root; emits the usual CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from ._util import emit, time_call
+
+OUT_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_kernels.json"
+
+
+def _bit_exact(a: dict, b: dict, what: str) -> None:
+    for k in a:
+        assert np.array_equal(np.asarray(a[k]), np.asarray(b[k])), \
+            f"{what}: fused kernel changed {k!r} vs plain path"
+
+
+def _bench_next_event(quick: bool, interpret: bool) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.next_event import next_event, next_event_ref
+    R, M = (1024, 8) if quick else (8192, 16)
+    t = jax.random.uniform(jax.random.PRNGKey(0), (R, M)) * 1e6
+    mask = jax.random.uniform(jax.random.PRNGKey(1), (R, M)) > 0.1
+
+    ker = jax.jit(lambda t, m: next_event(t, m, interpret=interpret))
+    ref = jax.jit(next_event_ref)
+    kv, ki = ker(t, mask)
+    rv, ri = ref(t, mask)
+    assert jnp.array_equal(kv, rv) and jnp.array_equal(ki, ri)
+
+    k_wall, _ = time_call(lambda: jax.block_until_ready(ker(t, mask)), 5)
+    r_wall, _ = time_call(lambda: jax.block_until_ready(ref(t, mask)), 5)
+    return dict(events_per_s=round(R * M / k_wall, 1),
+                pallas_native=not interpret,
+                wall_us_kernel=round(k_wall * 1e6, 1),
+                wall_us_jnp=round(r_wall * 1e6, 1),
+                shape=[R, M], parity=True)
+
+
+def _bench_step_fleet(quick: bool, interpret: bool) -> dict:
+    from repro.core.cluster import FleetConfig, StepCost
+    from repro.core.vec_cluster import simulate_fleet_batch
+    cost = StepCost(compute_s=1.0, memory_s=0.4, collective_s=0.3,
+                    overlap_collective=0.5)
+    cfg = FleetConfig(n_nodes=8, n_spares=2, straggler_sigma=0.25,
+                      mtbf_hours_node=4.0)
+    lanes, steps = (8, 40) if quick else (64, 200)
+    kw = dict(seeds=list(range(lanes)), max_wallclock_s=1e9)
+
+    def run(up):
+        return simulate_fleet_batch(cost, cfg, steps, use_pallas=up, **kw)
+
+    plain = run(False)
+    p_wall, _ = time_call(lambda: run(False), 2)
+    fused = run("force")
+    f_wall, _ = time_call(lambda: run("force"), 2)
+    _bit_exact(plain, fused, "step_fleet")
+    return dict(events_per_s=round(lanes * steps / f_wall, 1),
+                pallas_native=not interpret,
+                wall_s_plain=round(p_wall, 4), wall_s_fused=round(f_wall, 4),
+                lanes=lanes, steps=steps, bit_exact_vs_plain=True)
+
+
+def _bench_step_power(quick: bool, interpret: bool) -> dict:
+    from repro.core.vec_power import simulate_power_batch
+    lanes, n_samples = (16, 48) if quick else (64, 288)
+    kw = dict(seeds=list(range(lanes)), n_hosts=8, n_vms=24,
+              n_samples=n_samples)
+
+    def run(up):
+        return simulate_power_batch(use_pallas=up, **kw)
+
+    plain = run(False)
+    p_wall, _ = time_call(lambda: run(False), 2)
+    fused = run("force")
+    f_wall, _ = time_call(lambda: run("force"), 2)
+    _bit_exact(plain, fused, "step_power")
+    return dict(events_per_s=round(lanes * n_samples / f_wall, 1),
+                pallas_native=not interpret,
+                wall_s_plain=round(p_wall, 4), wall_s_fused=round(f_wall, 4),
+                lanes=lanes, steps=n_samples, bit_exact_vs_plain=True)
+
+
+def run(quick: bool = False) -> dict:
+    import jax
+    from repro.kernels.ops import pallas_native
+    native = pallas_native()
+    interpret = not native
+
+    t0 = time.perf_counter()
+    ne = _bench_next_event(quick, interpret)
+    fl = _bench_step_fleet(quick, interpret)
+    pw = _bench_step_power(quick, interpret)
+
+    record = dict(
+        benchmark="kernel_bench",
+        config=dict(quick=quick, backend=jax.default_backend(),
+                    pallas_native=native, interpret=interpret,
+                    wall_s=round(time.perf_counter() - t0, 2)),
+        next_event=ne, step_fleet=fl, step_power=pw,
+    )
+    mode = "native" if native else "interpret"
+    emit("kernel_bench/next_event", ne["wall_us_kernel"],
+         f"events_per_s={ne['events_per_s']:.0f};mode={mode};parity=True")
+    emit("kernel_bench/step_fleet", fl["wall_s_fused"] * 1e6,
+         f"events_per_s={fl['events_per_s']:.0f};mode={mode};bit_exact=True")
+    emit("kernel_bench/step_power", pw["wall_s_fused"] * 1e6,
+         f"events_per_s={pw['events_per_s']:.0f};mode={mode};bit_exact=True")
+    OUT_PATH.write_text(json.dumps(record, indent=2) + "\n")
+    emit("kernel_bench/record", 0.0, f"written={OUT_PATH.name};mode={mode}")
+    return record
+
+
+if __name__ == "__main__":
+    run()

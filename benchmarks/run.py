@@ -18,6 +18,7 @@ Benchmarks (paper artifact → module):
   beyond    → llmserve_sweep     (geo LLM-serving sweep vs OO loop → BENCH_llmserve.json)
   beyond    → storage_sweep      (replicated-store sweep + trace replay vs OO loop → BENCH_storage.json)
   beyond    → compaction_sweep   (compacting lane scheduler vs bucketing → BENCH_compaction.json)
+  beyond    → kernel_bench       (fused Pallas step kernels vs jnp twins → BENCH_kernels.json)
   roofline  → dryrun_report      (reads artifacts from launch/dryrun runs)
 
 ``--lanes`` overrides the lane-count curve for benches that sweep batch
@@ -44,9 +45,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (batch_sweep, case_study, cluster_sim, compaction_sweep,
-                   consolidation, engine_micro, llmserve_sweep, netdc_sweep,
-                   power_sweep, storage_sweep, sweep_runner, vec_speedup,
-                   workflow_sweep)
+                   consolidation, engine_micro, kernel_bench, llmserve_sweep,
+                   netdc_sweep, power_sweep, storage_sweep, sweep_runner,
+                   vec_speedup, workflow_sweep)
     suites = {
         "engine_micro": engine_micro.run,
         "case_study": case_study.run,
@@ -61,6 +62,7 @@ def main() -> None:
         "llmserve_sweep": llmserve_sweep.run,
         "storage_sweep": storage_sweep.run,
         "compaction_sweep": compaction_sweep.run,
+        "kernel_bench": kernel_bench.run,
     }
     try:
         from . import dryrun_report

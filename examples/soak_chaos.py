@@ -32,6 +32,10 @@ def main():
     ap.add_argument("--lanes", type=int, default=None)
     ap.add_argument("--jobs", type=int, default=None)
     ap.add_argument("--dcs", type=int, default=6)
+    ap.add_argument("--trace", type=pathlib.Path, default=None,
+                    help="replay a recorded JSONL/CSV trace as every "
+                         "round's workload (--jobs/--dcs then come from "
+                         "the trace)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", type=pathlib.Path,
                     default=pathlib.Path("BENCH_chaos.json"))
@@ -52,9 +56,13 @@ def main():
               f"quarantined {r.quarantined}"
               + (f"  recovery [{rec}]" if r.chaos else ""))
 
+    if args.trace is not None:
+        print(f"replaying trace {args.trace} (workload shape from trace; "
+              f"--jobs/--dcs ignored)")
     report = run_soak(
         backend=args.backend, rounds=rounds, cells_per_round=lanes,
         n_targets=args.dcs, n_jobs=jobs, seed0=args.seed,
+        trace=args.trace,
         chunk_size=min(lanes, 16), snapshot_path=args.out, progress=show)
 
     t = report.totals()

@@ -184,6 +184,7 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
              n_node_windows: int = 2, n_link_windows: int = 1,
              transient_prob: float = 0.1,
              extra_params: Optional[Mapping[str, Any]] = None,
+             trace=None,
              snapshot_path=None, progress=None) -> SoakReport:
     """Soak ``kind`` for ``rounds`` rounds of ``cells_per_round`` lanes.
 
@@ -194,11 +195,29 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
     the same streaming path a million-lane sweep uses.  Returns the
     :class:`SoakReport`; when ``snapshot_path`` is given the cumulative
     JSON snapshot is rewritten after *every* round.
+
+    ``trace`` (a :class:`~repro.core.trace.Trace` or a path to a
+    JSONL/CSV trace file) replays a **recorded** request stream as every
+    round's workload instead of the synthetic RNG stream:
+    :func:`~repro.core.trace.params_from_trace` maps the trace onto the
+    kind's parameter dict (``n_targets``/``n_jobs`` then come from the
+    trace and the same-named arguments are ignored), fresh per-round
+    seeds keep the *service-side* randomness moving, and chaos schedules
+    are drawn against the replayed stream's measured makespan.  Only
+    kinds whose faulted outputs carry the per-request ``submit``/``dst``/
+    ``finish`` keys (``netdc_batch``, ``storage_batch``) can soak.
     """
     from .backend import run_sweep
     from .sweep import SweepConfig
     if rounds < 1:
         raise ValueError("rounds must be ≥ 1")
+    trace_params: Dict[str, Any] = {}
+    if trace is not None:
+        from .trace import Trace, load_trace, params_from_trace
+        if not isinstance(trace, Trace):
+            trace = load_trace(trace)
+        trace_params = params_from_trace(kind, trace)
+        trace_params.pop("seeds", None)     # per-round seeds win below
     chaos_set = (set(range(1, rounds, 2)) if chaos_rounds is None
                  else {int(r) for r in chaos_rounds})
     retry = retry or RetryPolicy(max_retries=2, base_delay_s=mean_gap_s,
@@ -214,6 +233,11 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
     # clean probe first.
     horizon: Optional[float] = None
     names = _SOAK_PARAM_KEYS.get(kind, dict(targets="n_dcs", jobs="n_jobs"))
+    if trace_params:
+        # The trace defines the workload shape; the same-named arguments
+        # are superseded (chaos targeting below needs the real counts).
+        n_targets = int(trace_params.get(names["targets"], n_targets))
+        n_jobs = int(trace_params.get(names["jobs"], n_jobs))
     report = SoakReport(kind=kind, backend=backend)
 
     for r in range(rounds):
@@ -222,8 +246,10 @@ def run_soak(kind: str = "netdc_batch", *, rounds: int = 4,
         params: Dict[str, Any] = dict(
             {"seeds": seeds, names["targets"]: n_targets,
              names["jobs"]: n_jobs},
-            mean_gap_s=mean_gap_s, timeout_s=timeout_s,
-            **dict(extra_params or {}))
+            mean_gap_s=mean_gap_s, timeout_s=timeout_s)
+        params.update(trace_params)
+        params["seeds"] = seeds                 # per-round seeds always win
+        params.update(extra_params or {})
         plan = None
         if chaos:
             if horizon is None:

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.ops import masked_argmax
+from ..kernels.step import StepSpec, body_from_step
 from .backend import SimBackend, scenario
 from .cluster import FleetConfig, RunStats, StepCost, fleet_fault_windows
 from .faults import FaultPlan
@@ -173,7 +174,12 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
     def cond(c: _Carry, it):
         return (c.step < params.total_steps) & (c.t < params.max_wall_s)
 
-    def body(c: _Carry, it) -> _Carry:
+    def step(c: _Carry, sl, it) -> _Carry:
+        # Fusion-eligible step (StepSpec contract): the whole body as a
+        # pure function of (state, stream slices, it).  The fleet has no
+        # per-iteration stream tables — everything per-step (RNG draws,
+        # schedule lookups) derives from ``it`` — so ``sl`` is empty.
+        del sl
         # Current renewal round = number of fully completed outages; the
         # count form needs no carried pointer and is always caught up.
         ended = jnp.sum(fail_start + params.repair_s <= c.t, axis=1,
@@ -370,10 +376,15 @@ def _fleet_build(args, s: _Statics, ops) -> Loop:
         watch_from=jnp.asarray(-jnp.inf, fail_start.dtype),
         failures=zi, restarts=zi, evictions=zi,
         lost_steps=zf, stall_s=zf, ckpt_s=zf)
-    return Loop(init=init, cond=cond, body=body, finalize=finalize)
+    spec = StepSpec(step=step)
+    # The loop is a genuine while-loop (steps/wall-clock race ⇒ data-
+    # dependent cond), so fusion runs one kernel per iteration
+    # (fused_step_body) with the cond outside — never a whole-loop scan.
+    return Loop(init=init, cond=cond, body=body_from_step(spec),
+                finalize=finalize, step_kernel=spec)
 
 
-FLEET_ENGINE = VecEngine("fleet_batch", _fleet_build)
+FLEET_ENGINE = VecEngine("fleet_batch", _fleet_build, step_fusable=True)
 
 
 def _predicted_iters(params: _Params, n_total: int) -> np.ndarray:

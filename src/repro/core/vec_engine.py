@@ -62,7 +62,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..kernels.ops import MaskedOps, resolve_use_pallas
+from ..kernels.ops import MaskedOps, pallas_native, resolve_use_pallas
+from ..kernels.step import StepSpec, fused_scan, fused_step_body
 from .backend import scenario
 from .sweep import (MIN_CHUNK, SweepReport, compact_sweep, execute_sweep,
                     resolve_devices)
@@ -85,6 +86,13 @@ class Loop(NamedTuple):
     lanes provably run the same count.  The body sequence is identical
     either way, so outputs stay bit-exact; the compacting scheduler keeps
     the while-loop form (its lanes genuinely pause mid-stream).
+
+    ``step_kernel`` (optional) declares the body fusion-eligible: a
+    :class:`repro.kernels.step.StepSpec` whose ``step`` the engine also
+    derived its jnp ``body`` from (``body_from_step``), so the monolithic
+    driver may execute the whole iteration as one Pallas kernel
+    (``fused_step_body``) — or, with ``trip_count`` set, the whole loop as
+    one ``pallas_call`` (``fused_scan``) — with bit-identical outputs.
     """
 
     init: Any
@@ -92,34 +100,62 @@ class Loop(NamedTuple):
     body: Callable[[Any, Any], Any]
     finalize: Callable[[Any, Any], Dict[str, Any]]
     trip_count: Optional[int] = None
+    step_kernel: Optional[StepSpec] = None
 
 
 @dataclass(frozen=True)
 class VecEngine:
-    """A scenario kind as a declarative SoA event-loop definition."""
+    """A scenario kind as a declarative SoA event-loop definition.
+
+    ``step_fusable`` promises that the engine's ``build`` returns a
+    ``Loop.step_kernel`` spec whenever fusion could apply — the driver
+    must know *before* calling ``build`` whether the whole body becomes
+    the kernel, because the ``MaskedOps`` it hands in must then stay on
+    the plain-jnp path (a nested ``pallas_call`` can't lower from inside
+    the step kernel).
+    """
 
     kind: str
     build: Callable[[Any, Any, MaskedOps], Loop]
+    step_fusable: bool = False
 
 
 def run_one(engine: VecEngine, params: Any, statics: Any) -> Dict[str, Any]:
     """One cell, start to finish, as a single ``lax.while_loop``."""
-    ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
+    use_pallas = bool(getattr(statics, "use_pallas", False))
+    # Whole-body fusion supersedes the per-reduction kernel: when the step
+    # itself is the pallas_call, the masked reductions inside it must be
+    # plain jnp (they run *inside* the kernel either way).
+    fuse = use_pallas and engine.step_fusable
+    ops = MaskedOps(use_pallas and not fuse)
     loop = engine.build(params, statics, ops)
+    spec = loop.step_kernel if fuse else None
+    interpret = not pallas_native()
 
     if loop.trip_count is not None:
-        # Static trip count → fori_loop (lowers to scan): vmap batches the
-        # body directly, with none of while_loop's per-leaf select masking.
-        state = jax.lax.fori_loop(
-            0, int(loop.trip_count),
-            lambda i, s: loop.body(s, jnp.asarray(i, jnp.int32)), loop.init)
+        if spec is not None:
+            # Whole loop as ONE pallas_call: VMEM-resident state across
+            # grid steps, per-iteration streams prefetched per block.
+            state = fused_scan(spec, loop.init, int(loop.trip_count),
+                               interpret=interpret)
+        else:
+            # Static trip count → fori_loop (lowers to scan): vmap batches
+            # the body directly, with none of while_loop's per-leaf select
+            # masking.
+            state = jax.lax.fori_loop(
+                0, int(loop.trip_count),
+                lambda i, s: loop.body(s, jnp.asarray(i, jnp.int32)),
+                loop.init)
         it = jnp.asarray(int(loop.trip_count), jnp.int32)
     else:
+        step = (fused_step_body(spec, interpret=interpret)
+                if spec is not None else loop.body)
+
         def cond(c):
             return loop.cond(c[0], c[1])
 
         def body(c):
-            return loop.body(c[0], c[1]), c[1] + 1
+            return step(c[0], c[1]), c[1] + 1
 
         state, it = jax.lax.while_loop(cond, body,
                                        (loop.init, jnp.asarray(0, jnp.int32)))
@@ -154,7 +190,15 @@ def _emit_progress(sink_id, done, j) -> None:
 @functools.lru_cache(maxsize=64)
 def _segment_sim(engine: VecEngine, statics: Any, budget: int) -> Callable:
     """vmapped segment body: resume/merge, advance ≤ ``budget`` iterations,
-    report termination + finalized outputs."""
+    report termination + finalized outputs.
+
+    The compacting path always runs the jnp ``Loop.body`` — segments
+    pause/resume lanes mid-stream, which the whole-loop ``fused_scan``
+    cannot express, and the per-step fused body buys nothing under the
+    segment budget's extra select masking.  ``use_pallas`` still routes
+    the *reductions* through the next-event kernel here; outputs stay
+    bit-identical to the monolithic (fused or not) run either way.
+    """
     ops = MaskedOps(bool(getattr(statics, "use_pallas", False)))
 
     def seg_one(params, state, it, fresh):

@@ -37,6 +37,7 @@ from typing import Any, Dict, NamedTuple, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.step import StepSpec, body_from_step
 from .backend import scenario
 from .faults import FaultPlan
 from .power import (_broadcast_cells, _empty_outputs, _finalize,
@@ -105,12 +106,24 @@ def _even_counts(active, n_vms: int):
 
 def _power_build(params: _Params, s: _Statics, ops) -> Loop:
     """One elastic-datacenter cell: one loop iteration per trace interval
-    (the driver's counter ``it`` is the interval index ``k``)."""
+    (the driver's counter ``it`` is the interval index ``k``).
+
+    The body is declared as a fusion-eligible *step* over per-interval
+    streams (the demand trace, and the crash table when faulted): the jnp
+    ``body`` is :func:`~repro.kernels.step.body_from_step` of the same
+    step, and the returned ``Loop`` carries ``trip_count`` +
+    ``step_kernel`` so the driver may run the whole trace as one Pallas
+    scan kernel (streams double-buffered HBM→VMEM per interval) with
+    bit-identical outputs.
+    """
     H = s.n_hosts
     idx = jnp.arange(H)
     seg_iota = jnp.arange(s.n_points - 1)
+    streams = dict(trace=params.trace)
+    if s.faults:
+        streams["fail_tbl"] = params.fail_tbl
 
-    def body(c: _Carry, it) -> _Carry:
+    def step(c: _Carry, sl, it) -> _Carry:
         # -- host crashes (start of interval; static gate) -----------------
         # Applying the table every interval is equivalent to the OO side's
         # changed-rows-only events: at an unchanged interval the block is
@@ -118,7 +131,7 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
         # so ``active & ~failed == active`` between changes).  Mirrors
         # ``ElasticDatacenterManager.apply_fault_mask`` op for op.
         if s.faults:
-            failed = params.fail_tbl[it]                # [H] bool
+            failed = sl["fail_tbl"]                     # [H] bool
             act = c.active & ~failed
             keep = ops.argmin(params.eff, ~failed)      # keep-alive pick
             act = jnp.where(jnp.any(act), act, act | (idx == keep))
@@ -135,7 +148,7 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
         # -- demand, utilization, energy, SLA (current placement) ----------
         # Multiplies here feed only divides, min/max, and compares — never
         # an add/sub, so XLA cannot FMA-contract (module docstring).
-        d = params.trace[it] * params.vm_mips           # per-VM MIPS demand
+        d = sl["trace"] * params.vm_mips                # per-VM MIPS demand
         demand = cnt.astype(params.cap.dtype) * d       # [H]
         util = jnp.minimum(demand / params.cap, 1.0)
         # Exact energy accounting: which table segment, how far into it
@@ -209,11 +222,16 @@ def _power_build(params: _Params, s: _Statics, ops) -> Loop:
                   over_count=jnp.zeros((H,), jnp.int32),
                   unserved=jnp.zeros((H,), params.cap.dtype),
                   migrations=zi, scale_out=zi, scale_in=zi)
+    spec = StepSpec(step=step, streams=streams)
+    # trip_count: every lane runs exactly n_intervals iterations (the cond
+    # is a pure counter check), so the driver lowers to fori_loop/scan —
+    # identical body sequence, bit-identical outputs (Loop docstring).
     return Loop(init=init, cond=lambda c, it: it < s.n_intervals,
-                body=body, finalize=finalize)
+                body=body_from_step(spec), finalize=finalize,
+                trip_count=s.n_intervals, step_kernel=spec)
 
 
-POWER_ENGINE = VecEngine("power_batch", _power_build)
+POWER_ENGINE = VecEngine("power_batch", _power_build, step_fusable=True)
 
 
 def _prepare_power(*, use_pallas: bool, seeds: Sequence[int] | np.ndarray = (0,),

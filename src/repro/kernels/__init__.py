@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# Kernels in the tree (see ARCHITECTURE.md "Kernels"):
+#   next_event.py — fused masked (min, argmin) next-event reduction
+#   step.py       — whole VecEngine loop iterations as single kernels
+#                   (per-step fused body + static-trip-count scan)
+#   flash_attention.py / rwkv6_scan.py — model-stack kernels
+#   ops.py        — public adapters + the use_pallas resolution switch
+from .step import (StepSpec, body_from_step, fused_scan,  # noqa: F401
+                   fused_step_body)

@@ -14,9 +14,15 @@ outputs ``[R]`` min values and ``[R]`` int32 argmins (first occurrence on
 ties, matching ``jnp.argmin``).  Masked-out / padded slots are ``+inf``; an
 all-inf row returns ``(inf, 0)`` exactly like ``jnp.argmin``.
 
+Tiling: each program reduces a ``(rows_per_block, block)`` tile; the grid's
+minor axis walks the M tiles sequentially so the per-row ``[rows, 1]``
+accumulators carry across tiles.  ``rows_per_block`` is picked from the
+input shape — one row per program when M fills a whole tile, many rows when
+M is small (the common sweep shape, R ≫ M, where one-row programs would
+waste nearly every vector lane).
+
 CPU runs interpret mode (tests, the x64 bit-exact scheduler path — f64 is
-interpreter-only; TPU lowering targets f32).  The grid's minor axis walks
-the M tiles sequentially so the scalar accumulators carry across tiles.
+interpreter-only; TPU lowering targets f32).
 """
 from __future__ import annotations
 
@@ -34,27 +40,37 @@ def _next_event_kernel(t_ref, vmin_ref, imin_ref, *, block: int):
 
     @pl.when(j == 0)
     def _init():
-        vmin_ref[0, 0] = jnp.asarray(jnp.inf, vmin_ref.dtype)
-        imin_ref[0, 0] = jnp.asarray(0, jnp.int32)
+        vmin_ref[...] = jnp.full(vmin_ref.shape, jnp.inf, vmin_ref.dtype)
+        imin_ref[...] = jnp.zeros(imin_ref.shape, jnp.int32)
 
-    t = t_ref[0, :]                                   # [block]
-    bmin = jnp.min(t)
-    barg = jnp.argmin(t).astype(jnp.int32)            # first-occurrence tie rule
-    bidx = j * block + barg
-    cur = vmin_ref[0, 0]
-    better = bmin < cur                               # strict ⇒ earliest block wins ties
-    imin_ref[0, 0] = jnp.where(better, bidx, imin_ref[0, 0])
-    vmin_ref[0, 0] = jnp.where(better, bmin, cur)
+    t = t_ref[...]                                    # [rows, block]
+    bmin = jnp.min(t, axis=1, keepdims=True)          # [rows, 1]
+    barg = jnp.argmin(t, axis=1).astype(jnp.int32)    # first-occurrence ties
+    bidx = j * block + barg[:, None]
+    cur = vmin_ref[...]
+    better = bmin < cur                # strict ⇒ earliest block wins ties
+    imin_ref[...] = jnp.where(better, bidx, imin_ref[...])
+    vmin_ref[...] = jnp.where(better, bmin, cur)
+
+
+def _auto_rows(r: int, blk: int, block: int) -> int:
+    """Rows per program tile: target ~``block`` elements of work per
+    program.  M ≥ block ⇒ one row (the tile is already full); small M ⇒
+    ``block // M`` rows so wide sweeps don't run one near-empty program
+    per row."""
+    return max(1, min(block // max(blk, 1), max(r, 1)))
 
 
 def next_event(times: jax.Array, mask: jax.Array | None = None, *,
-               block: int = DEFAULT_BLOCK, interpret: bool = True):
+               block: int = DEFAULT_BLOCK,
+               rows_per_block: int | None = None, interpret: bool = True):
     """Fused masked (min, argmin) over the last axis.
 
     ``times [..., M]`` (+ optional boolean ``mask``, False ⇒ ignore slot)
     → ``(vmin [...], argmin [...] int32)``.  Equivalent to
     ``(jnp.min(where(mask, t, inf), -1), jnp.argmin(where(mask, t, inf), -1))``
-    but as one fused pass.
+    but as one fused pass.  ``rows_per_block=None`` picks the row tiling
+    from the input shape (see :func:`_auto_rows`).
     """
     if mask is not None:
         times = jnp.where(mask, times, jnp.asarray(jnp.inf, times.dtype))
@@ -63,21 +79,27 @@ def next_event(times: jax.Array, mask: jax.Array | None = None, *,
     t2 = times.reshape((-1, m))
     r = t2.shape[0]
     blk = min(block, max(m, 1))
-    pad = (-m) % blk
-    if pad:
-        t2 = jnp.pad(t2, ((0, 0), (0, pad)),
+    rows = (_auto_rows(r, blk, block) if rows_per_block is None
+            else max(1, min(int(rows_per_block), max(r, 1))))
+    pad_m = (-m) % blk
+    pad_r = (-r) % rows
+    if pad_m or pad_r:
+        # Row/column padding is +inf: padded columns never win a row's
+        # reduction; padded rows reduce to (inf, 0) and are sliced off.
+        t2 = jnp.pad(t2, ((0, pad_r), (0, pad_m)),
                      constant_values=jnp.asarray(jnp.inf, times.dtype))
+    r_pad = r + pad_r
     vmin, imin = pl.pallas_call(
         functools.partial(_next_event_kernel, block=blk),
-        out_shape=(jax.ShapeDtypeStruct((r, 1), times.dtype),
-                   jax.ShapeDtypeStruct((r, 1), jnp.int32)),
-        grid=(r, t2.shape[1] // blk),
-        in_specs=[pl.BlockSpec((1, blk), lambda i, j: (i, j))],
-        out_specs=(pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
-                   pl.BlockSpec((1, 1), lambda i, j: (i, 0))),
+        out_shape=(jax.ShapeDtypeStruct((r_pad, 1), times.dtype),
+                   jax.ShapeDtypeStruct((r_pad, 1), jnp.int32)),
+        grid=(r_pad // rows, t2.shape[1] // blk),
+        in_specs=[pl.BlockSpec((rows, blk), lambda i, j: (i, j))],
+        out_specs=(pl.BlockSpec((rows, 1), lambda i, j: (i, 0)),
+                   pl.BlockSpec((rows, 1), lambda i, j: (i, 0))),
         interpret=interpret,
     )(t2)
-    return vmin[:, 0].reshape(lead), imin[:, 0].reshape(lead)
+    return vmin[:r, 0].reshape(lead), imin[:r, 0].reshape(lead)
 
 
 def next_event_ref(times: jax.Array, mask: jax.Array | None = None):

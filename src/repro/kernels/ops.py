@@ -25,7 +25,17 @@ from .next_event import next_event
 from .rwkv6_scan import wkv6
 
 _PALLAS_BACKENDS = ("tpu", "gpu")
-_warned_pallas_fallback = False
+# Backends we have already warned about falling back on — per backend, so
+# a CPU fallback warning in a long session doesn't suppress a later,
+# genuinely different warning after the process switches default backend
+# (e.g. tests flipping JAX_PLATFORMS, a host driving mixed clients).
+_warned_pallas_fallback: set = set()
+
+
+def reset_pallas_warning() -> None:
+    """Test helper: forget which backends the fallback warning fired for,
+    so the next :func:`resolve_use_pallas` fallback warns again."""
+    _warned_pallas_fallback.clear()
 
 
 def pallas_native() -> bool:
@@ -38,16 +48,17 @@ def resolve_use_pallas(use_pallas) -> bool:
 
     ``False`` stays off.  ``True`` enables the fused kernels only where
     they lower natively; on CPU (interpret mode — slower than the plain
-    reduction) it falls back to the jnp path with a one-time warning.
+    reduction) it falls back to the jnp path with a warning (once per
+    backend; :func:`reset_pallas_warning` re-arms it).
     ``"force"`` always enables them (interpret mode on CPU).
     """
-    global _warned_pallas_fallback
     if not use_pallas:
         return False
     if use_pallas == "force" or pallas_native():
         return True
-    if not _warned_pallas_fallback:
-        _warned_pallas_fallback = True
+    backend = jax.default_backend()
+    if backend not in _warned_pallas_fallback:
+        _warned_pallas_fallback.add(backend)
         warnings.warn(
             "use_pallas=True requested on the "
             f"{jax.default_backend()!r} backend, where the Pallas "

@@ -1,0 +1,268 @@
+"""Fused Pallas *step* kernels — whole event-loop iterations as one kernel.
+
+The next-event kernel (:mod:`repro.kernels.next_event`) fuses one reduction;
+XLA still materializes the *rest* of each ``VecEngine`` loop iteration —
+candidate-time gather, winner select via branchless ``where`` over the
+(small, static) event-type set, SoA state scatter-update — as separate
+fused loops with HBM round-trips between them.  This module fuses the
+**entire** ``body`` of a :class:`repro.core.vec_engine.Loop` into a single
+``pallas_call``, the same fuse-the-loop-body move that separates
+flash-attention from naive attention:
+
+  * :func:`fused_step_body` — one kernel invocation per iteration, for
+    engines whose loop is a genuine ``lax.while_loop`` (data-dependent
+    ``cond``, e.g. the fleet's wall-clock/steps race).  The surrounding
+    ``cond`` stays outside; every op of the body runs inside the kernel.
+  * :func:`fused_scan` — the whole static-trip-count loop as **one**
+    ``pallas_call`` with ``grid=(trip_count,)``: the state pytree lives in
+    VMEM scratch across grid steps (the ``rwkv6_scan`` chunked-recurrence
+    pattern — init at step 0, emit at the last step), and per-iteration
+    *stream* inputs (demand traces, fault tables) are blocked
+    ``(1, ...)``-per-step, which Pallas double-buffers into VMEM ahead of
+    the compute on real hardware — the HBM→VMEM prefetch for large tables.
+
+An engine opts in declaratively: its ``build`` returns the loop with a
+:class:`StepSpec` in ``Loop.step_kernel`` and derives its jnp ``body`` from
+the *same* step function via :func:`body_from_step` — both paths execute
+one op sequence, so bit-exactness vs the jnp path holds by construction
+(asserted by ``tests/test_step_kernel.py``).
+
+Mechanics worth knowing:
+
+  * **Closure conversion** — engine bodies close over traced values
+    (pre-drawn schedules, PRNG keys, parameter leaves).  Pallas rejects
+    kernels capturing array constants, and ``jax.closure_convert`` only
+    hoists *differentiable* consts (its ``_maybe_perturbed`` partition
+    leaves e.g. uint32 PRNG keys baked in), so
+    :func:`closure_convert_all` re-implements the hoist with the same
+    tracing machinery but lifts **every** const into a kernel operand.
+  * **Scalar padding** — Pallas refs are at least rank 1; 0-d state
+    leaves/consts are padded to ``(1,)`` at the call boundary and
+    reshaped back inside the kernel and after the call.
+  * **Interpret vs native** — on CPU the kernels only run in interpret
+    mode (strictly slower than the XLA loop; reached via
+    ``use_pallas="force"`` — see ``resolve_use_pallas``); on TPU/GPU
+    (``pallas_native()``) they lower natively.  f64 state is
+    interpreter-only; native lowering targets f32 engines.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Private-API imports for closure_convert_all: the public
+# jax.closure_convert drops non-differentiable consts (see module
+# docstring); these are the exact pieces it is itself built from.
+from jax._src import core as _jcore
+from jax._src import linear_util as _lu
+from jax._src.api_util import flatten_fun_nokwargs, shaped_abstractify
+from jax._src.interpreters import partial_eval as _pe
+
+
+class StepSpec(NamedTuple):
+    """An engine's fusion-eligible step declaration (``Loop.step_kernel``).
+
+    ``step(state, stream_slices, it) -> state`` is the *whole* loop body
+    as a pure function of the carried state pytree, this iteration's
+    stream slices, and the driver's int32 counter ``it``.  ``streams`` is
+    a pytree of per-iteration input arrays with the iteration axis first
+    (``[T, ...]``) — empty for engines whose body needs no per-step table
+    (the jnp path reads ``leaf[it]``; the scan kernel blocks the leaf
+    per-step so Pallas prefetches it HBM→VMEM ahead of the compute).
+
+    The contract (what a ``Loop`` must declare for fusion eligibility):
+    ``step`` must be the single source of truth for the body — the jnp
+    ``Loop.body`` must be :func:`body_from_step` of the same spec — and
+    must hold the substrate's SoA invariants: fixed-shape state leaves,
+    no data-dependent shapes, and any nested masked reductions in plain
+    jnp (``MaskedOps(False)`` — a nested ``pallas_call`` cannot lower
+    from inside a kernel; the driver hands fused builds a jnp ``ops``).
+    """
+
+    step: Callable[[Any, Any, Any], Any]
+    streams: Any = ()
+
+
+def body_from_step(spec: StepSpec) -> Callable[[Any, Any], Any]:
+    """The canonical jnp ``Loop.body`` for a :class:`StepSpec`: slice each
+    stream at ``it`` and apply ``step``.  Engines derive their body from
+    this so the fused and jnp paths share one op sequence."""
+    def body(state, it):
+        sl = jax.tree_util.tree_map(lambda a: a[it], spec.streams)
+        return spec.step(state, sl, it)
+    return body
+
+
+def closure_convert_all(fun: Callable, *example_args):
+    """Like :func:`jax.closure_convert`, but hoists **every** captured
+    constant — not just differentiable ones — so the returned function is
+    Pallas-kernel-clean.  Returns ``(converted, consts)`` where
+    ``converted(*flat_args, *consts)`` replays the traced computation."""
+    flat_args, in_tree = jax.tree_util.tree_flatten(example_args)
+    in_avals = tuple(shaped_abstractify(x) for x in flat_args)
+    wrapped, out_tree = flatten_fun_nokwargs(_lu.wrap_init(fun), in_tree)
+    jaxpr, _, consts, () = _pe.trace_to_jaxpr_dynamic(wrapped, in_avals)
+    otree = out_tree()
+    n_args = len(flat_args)
+
+    def converted(*args_consts):
+        args, cs = args_consts[:n_args], args_consts[n_args:]
+        out = _jcore.eval_jaxpr(jaxpr, list(cs), *args)
+        return jax.tree_util.tree_unflatten(otree, out)
+
+    return converted, list(consts)
+
+
+def _pad(a):
+    """Rank-≥1 view for the pallas_call boundary (refs can't be 0-d)."""
+    a = jnp.asarray(a)
+    return a.reshape((1,)) if a.ndim == 0 else a
+
+
+def _pad_shape(s):
+    return (1,) if s == () else tuple(s)
+
+
+def fused_step_body(spec: StepSpec, *, interpret: bool = True
+                    ) -> Callable[[Any, Any], Any]:
+    """One whole loop iteration as a single ``pallas_call`` —
+    drop-in replacement for :func:`body_from_step`'s jnp body inside the
+    driver's ``lax.while_loop`` (the ``cond`` stays outside as jnp).
+
+    State leaves, this iteration's stream slices, ``it`` and every
+    closed-over constant enter as kernel operands; the body's op sequence
+    runs inside the kernel; the new state leaves are the outputs.
+    Bit-exact vs the jnp body (min/select/integer ops are exact; float
+    ops execute the same sequence on the same values).
+    """
+    def body(state, it):
+        sl = jax.tree_util.tree_map(lambda a: a[it], spec.streams)
+        args = (state, sl, it)
+        flat, treedef = jax.tree_util.tree_flatten(args)
+        shapes = [jnp.shape(x) for x in flat]
+        conv, consts = closure_convert_all(
+            lambda s, z, i: spec.step(s, z, i), *args)
+        out_sd = jax.eval_shape(lambda s, z, i: spec.step(s, z, i), *args)
+        out_flat, out_tree = jax.tree_util.tree_flatten(out_sd)
+        n_in = len(flat)
+        cshapes = [jnp.shape(c) for c in consts]
+
+        def kernel(*refs):
+            in_refs, out_refs = refs[:n_in + len(consts)], \
+                refs[n_in + len(consts):]
+            flat_args = [r[...].reshape(s)
+                         for r, s in zip(in_refs[:n_in], shapes)]
+            cs = [r[...].reshape(s)
+                  for r, s in zip(in_refs[n_in:], cshapes)]
+            new = conv(*flat_args, *cs)
+            for r, leaf in zip(out_refs, jax.tree_util.tree_leaves(new)):
+                r[...] = _pad(leaf)
+
+        outs = pl.pallas_call(
+            kernel,
+            out_shape=tuple(jax.ShapeDtypeStruct(_pad_shape(o.shape),
+                                                 o.dtype)
+                            for o in out_flat),
+            interpret=interpret,
+        )(*[_pad(x) for x in flat], *[_pad(c) for c in consts])
+        outs = [o.reshape(s.shape) for o, s in zip(outs, out_flat)]
+        return jax.tree_util.tree_unflatten(out_tree, outs)
+    return body
+
+
+def fused_scan(spec: StepSpec, init: Any, trip_count: int, *,
+               interpret: bool = True):
+    """The whole static-trip-count loop as **one** ``pallas_call``.
+
+    ``grid=(trip_count,)`` walks the iterations sequentially (the grid's
+    minor axis, so VMEM scratch carries across steps — the ``rwkv6_scan``
+    pattern): step 0 copies the initial state into scratch, every step
+    applies ``spec.step`` to the scratch state and this step's stream
+    block, and the last step emits scratch to the outputs.  Stream leaves
+    use ``(1, ...)`` per-step BlockSpecs — on real hardware Pallas
+    double-buffers the next step's block HBM→VMEM while the current one
+    computes, which is the whole-table prefetch story for large host/VM
+    tables.  Returns the final state pytree; bit-exact vs the equivalent
+    ``lax.fori_loop`` over :func:`body_from_step`.
+    """
+    if trip_count <= 0:
+        return init
+    flat_init, treedef = jax.tree_util.tree_flatten(init)
+    ishapes = [jnp.shape(x) for x in flat_init]
+    s_flat, s_tree = jax.tree_util.tree_flatten(spec.streams)
+    for a in s_flat:
+        if jnp.shape(a)[0] < trip_count:
+            raise ValueError(
+                f"fused_scan: stream leaf {jnp.shape(a)} shorter than "
+                f"trip_count={trip_count}")
+    ex_slices = jax.tree_util.tree_unflatten(
+        s_tree, [jax.ShapeDtypeStruct(jnp.shape(a)[1:],
+                                      jnp.asarray(a).dtype)
+                 for a in s_flat])
+    conv, consts = closure_convert_all(
+        lambda s, z, i: spec.step(s, z, i),
+        init, ex_slices, jnp.asarray(0, jnp.int32))
+    n_state, n_stream = len(flat_init), len(s_flat)
+    cshapes = [jnp.shape(c) for c in consts]
+    sshapes = [jnp.shape(a)[1:] for a in s_flat]
+
+    def kernel(*refs):
+        it = pl.program_id(0)
+        k = n_state + n_stream + len(consts)
+        in_refs, out_refs, scratch = refs[:k], refs[k:k + n_state], \
+            refs[k + n_state:]
+
+        @pl.when(it == 0)
+        def _init():
+            for s, r in zip(scratch, in_refs[:n_state]):
+                s[...] = r[...]
+
+        st = jax.tree_util.tree_unflatten(
+            treedef, [s[...].reshape(sh)
+                      for s, sh in zip(scratch, ishapes)])
+        sl = jax.tree_util.tree_unflatten(
+            s_tree, [r[...].reshape(sh) for r, sh in
+                     zip(in_refs[n_state:n_state + n_stream], sshapes)])
+        cs = [r[...].reshape(sh)
+              for r, sh in zip(in_refs[n_state + n_stream:], cshapes)]
+        flat_args = jax.tree_util.tree_leaves((st, sl, it))
+        new = conv(*flat_args, *cs)
+        for s, leaf in zip(scratch, jax.tree_util.tree_leaves(new)):
+            s[...] = _pad(leaf)
+
+        @pl.when(it == trip_count - 1)
+        def _emit():
+            for o, s in zip(out_refs, scratch):
+                o[...] = s[...]
+
+    def full(a):
+        a = _pad(a)
+        nd = a.ndim
+        return pl.BlockSpec(a.shape, lambda i, nd=nd: (0,) * nd)
+
+    def stream_spec(a):
+        nd = jnp.asarray(a).ndim
+        return pl.BlockSpec((1,) + tuple(jnp.shape(a)[1:]),
+                            lambda i, nd=nd: (i,) + (0,) * (nd - 1))
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(trip_count,),
+        in_specs=[full(a) for a in flat_init]
+        + [stream_spec(a) for a in s_flat]
+        + [full(c) for c in consts],
+        out_specs=tuple(full(a) for a in flat_init),
+        out_shape=tuple(jax.ShapeDtypeStruct(_pad_shape(jnp.shape(a)),
+                                             jnp.asarray(a).dtype)
+                        for a in flat_init),
+        scratch_shapes=[pltpu.VMEM(_pad_shape(jnp.shape(a)),
+                                   jnp.asarray(a).dtype)
+                        for a in flat_init],
+        interpret=interpret,
+    )(*[_pad(x) for x in flat_init], *s_flat, *[_pad(c) for c in consts])
+    outs = [o.reshape(sh) for o, sh in zip(outs, ishapes)]
+    return jax.tree_util.tree_unflatten(treedef, outs)

@@ -152,6 +152,33 @@ def test_events_per_s_without_fraction_field_not_gated():
     assert failures == []
 
 
+def _kernel_record(eps, native=False):
+    return {"benchmark": "kernel_bench", "config": {"quick": True},
+            "step_power": {"events_per_s": eps, "pallas_native": native,
+                           "bit_exact_vs_plain": True}}
+
+
+def test_kernel_rate_sections_gated():
+    """BENCH_kernels.json sections (events_per_s + pallas_native, no
+    fraction field) are in the rate gate's scope."""
+    base = _kernel_record(100_000.0)
+    ok, _ = check_pair(_kernel_record(80_000.0), base, 0.25)
+    assert ok == []
+    bad, _ = check_pair(_kernel_record(60_000.0), base, 0.25)
+    assert len(bad) == 1 and "events_per_s" in bad[0]
+
+
+def test_kernel_rate_native_mismatch_not_gated():
+    """An interpret-mode CPU rate is never held to a natively lowered
+    baseline (or vice versa) — the rate measures the runner, not the
+    kernel."""
+    base = _kernel_record(10_000_000.0, native=True)
+    failures, notes = check_pair(_kernel_record(100_000.0, native=False),
+                                 base, 0.25)
+    assert failures == []
+    assert any("pallas_native mismatch" in n for n in notes)
+
+
 def test_compacted_fraction_floor():
     """A compacted section below 0.95 observed occupancy fails outright —
     an absolute floor, independent of any baseline value."""
@@ -209,3 +236,12 @@ def test_committed_baselines_are_consistent():
                          .read_text())
         assert tracked_ratios(rec), name
         assert rec["config"]["quick"] == name.endswith("_quick.json"), name
+    # The kernel baseline carries gated rates (no speedup ratios) and an
+    # honest lowering flag per section.
+    from benchmarks.check_regression import rate_sections
+    rec = json.loads((root / "benchmarks" / "baselines" /
+                      "kernels_quick.json").read_text())
+    secs = rate_sections(rec)
+    assert set(secs) == {"next_event", "step_fleet", "step_power"}
+    assert all("pallas_native" in s for s in secs.values())
+    assert rec["config"]["quick"] is True

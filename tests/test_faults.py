@@ -466,6 +466,25 @@ def test_run_soak_smoke(tmp_path):
         assert r is None or r >= 0.0
 
 
+def test_run_soak_trace_replay(tmp_path):
+    """``trace=`` replays a recorded workload as every round's cells: the
+    job/target counts come from the trace (caller values overridden) and
+    every lane serves exactly the trace's jobs."""
+    import pathlib
+    from repro.core.soak import run_soak
+    sample = pathlib.Path(__file__).parent / "data" / "sample_trace.jsonl"
+    rep = run_soak(rounds=2, cells_per_round=4, n_targets=17, n_jobs=999,
+                   chunk_size=2, seed0=3, trace=sample,
+                   snapshot_path=tmp_path / "soak.json")
+    t = rep.totals()
+    assert [r.chaos for r in rep.rounds] == [False, True]
+    # the trace holds 64 jobs over 4 DCs — n_jobs/n_targets overridden
+    assert t["served"] + t["dropped"] == 2 * 4 * 64
+    assert t["clean_quarantined"] == 0
+    assert rep.rounds[0].active_fraction == 1.0
+    assert 0.0 < rep.rounds[1].active_fraction < 1.0
+
+
 def test_recovery_times_metric():
     from repro.core.soak import recovery_times
     plan = FaultPlan([FaultEvent("node", 0.0, 10.0, target=1),

@@ -115,6 +115,37 @@ def test_next_event_all_masked_matches_argmin_convention():
     assert jnp.all(jnp.isinf(v)) and jnp.array_equal(i, ir)
 
 
+@pytest.mark.parametrize("shape,rows", [
+    ((4096, 8), None),       # wide-sweep shape: auto row tiling kicks in
+    ((1000, 3), None),       # ragged rows → +inf row padding
+    ((100, 6), 7),           # explicit rows_per_block, non-dividing
+    ((5, 2048), None),       # M > block: one row per program, M tiled
+    ((1, 1), 16),            # rows_per_block clamped to R
+])
+def test_next_event_row_tiling(shape, rows):
+    """The (rows_per_block, block) tiling — auto-picked from the input
+    shape or explicit — must not change any result: same values, same
+    first-occurrence tie indices, padded rows sliced off."""
+    t = jax.random.uniform(RNG, shape) * 1e3
+    # Duplicate minima across the row-tile boundary exercise tie-breaking
+    # under the widened accumulators.
+    t = t.at[..., 0].set(0.5).at[..., -1].set(0.5)
+    mask = jax.random.uniform(jax.random.fold_in(RNG, 1), shape) > 0.2
+    v, i = next_event(t, mask, rows_per_block=rows, interpret=True)
+    vr, ir = next_event_ref(t, mask)
+    assert jnp.array_equal(v, vr) and jnp.array_equal(i, ir)
+
+
+def test_next_event_auto_rows_heuristic():
+    """Auto tiling targets ~block elements per program: many rows when M
+    is small, one row when M fills the tile."""
+    from repro.kernels.next_event import DEFAULT_BLOCK, _auto_rows
+    assert _auto_rows(4096, 8, DEFAULT_BLOCK) == DEFAULT_BLOCK // 8
+    assert _auto_rows(4096, DEFAULT_BLOCK, DEFAULT_BLOCK) == 1
+    assert _auto_rows(2, 8, DEFAULT_BLOCK) == 2          # clamped to R
+    assert _auto_rows(0, 8, DEFAULT_BLOCK) == 1          # degenerate floor
+
+
 def test_next_event_f64_and_vmap():
     """The engine paths run the kernel under x64 (bit-exact scheduler) and
     under vmap (batched fleet sweeps)."""

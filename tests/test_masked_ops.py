@@ -13,7 +13,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.ops import (MaskedOps, masked_argmax, masked_argmin,
-                               masked_min, resolve_use_pallas)
+                               masked_min, pallas_native,
+                               reset_pallas_warning, resolve_use_pallas)
 
 
 def _x64():
@@ -99,3 +100,37 @@ def test_resolve_use_pallas_cpu_fallback():
         resolved = resolve_use_pallas(True)
     import jax as _jax
     assert resolved is (_jax.default_backend() in ("tpu", "gpu"))
+
+
+@pytest.mark.skipif(pallas_native(),
+                    reason="fallback warning only fires off-TPU/GPU")
+def test_pallas_fallback_warning_once_per_backend_and_reset():
+    """The fallback warning fires once per *backend* (not once per
+    process) and ``reset_pallas_warning`` re-arms it — so a CPU warning
+    in a long session can't suppress a later distinct-backend warning."""
+    reset_pallas_warning()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert resolve_use_pallas(True) is False
+        assert resolve_use_pallas(True) is False    # suppressed repeat
+        assert len(caught) == 1
+        assert issubclass(caught[0].category, RuntimeWarning)
+        reset_pallas_warning()                      # re-armed
+        assert resolve_use_pallas(True) is False
+        assert len(caught) == 2
+    # Per-backend memory: a different default backend warns independently
+    # even though this backend already did.
+    import repro.kernels.ops as ops_mod
+    reset_pallas_warning()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        assert resolve_use_pallas(True) is False    # warns for real backend
+        real = ops_mod.jax.default_backend
+        try:
+            ops_mod.jax.default_backend = lambda: "other_cpu"
+            assert resolve_use_pallas(True) is False    # warns again
+            assert resolve_use_pallas(True) is False    # but only once
+        finally:
+            ops_mod.jax.default_backend = real
+        assert len(caught) == 2
+    reset_pallas_warning()

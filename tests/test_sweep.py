@@ -272,7 +272,7 @@ def test_pallas_cpu_auto_fallback_warns_once_and_matches():
     if ops.pallas_native():                   # on TPU/GPU there is no fallback
         pytest.skip("Pallas lowers natively here")
     plain = _fleet(chunk_size=B)
-    ops._warned_pallas_fallback = False
+    ops.reset_pallas_warning()
     with warnings.catch_warnings(record=True) as rec:
         warnings.simplefilter("always")
         first = _fleet(chunk_size=B, use_pallas=True)
